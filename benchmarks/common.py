@@ -1,0 +1,339 @@
+"""Shared benchmark substrate: the trained sim-scale ViTDet server model,
+profiling clips, estimator fitting, and the simulation runner.
+
+Everything expensive is cached under benchmarks/artifacts/cache so the
+harness is fast on re-runs; delete the cache directory to rebuild.
+"""
+from __future__ import annotations
+
+import time
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.vitdet_l import SIM
+from repro.core import det_head as dh
+from repro.core import vit_backbone as vb
+from repro.data import synthetic_video as sv
+from repro.data.network_traces import make_trace
+from repro.offload import baselines as bl
+from repro.offload import motion as mo
+from repro.offload.codec import CodecDelayModel, MixedResCodec
+from repro.offload.estimator import (InferenceDelayModel, LinearEstimator,
+                                     MLPEstimator, OfflineMean,
+                                     ThroughputEstimator, feature_vector)
+from repro.offload.optimizer import (DelayModels, OffloadOptimizer,
+                                     candidate_configs)
+from repro.offload.simulator import ServerModel, Simulation
+from repro.optim import adam
+from repro.train import checkpoint as ckpt
+
+ART = Path(__file__).resolve().parent / "artifacts"
+CACHE = ART / "cache"
+PATCH = SIM.vit.patch_size
+SIZE = SIM.vit.img_size[0]
+FPS = 10
+
+# benchmark workload (kept small enough for CPU; the structure — videos x
+# traces x policies — matches the paper's 300-pair evaluation)
+SIM_VIDEOS = ("walkS", "cycleS", "driveN")
+SIM_TRACES = (("4g", 0), ("5g", 0))
+SIM_FRAMES = 48
+PROFILE_VIDEOS = ("walkS", "walkB", "cycleS")
+PROFILE_FRAMES = 12
+
+
+def timer(fn, *args, reps: int = 5, warmup: int = 1) -> float:
+    """Median wall-time per call in microseconds."""
+    for _ in range(warmup):
+        fn(*args)
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn(*args)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+# ---------------------------------------------------------------------------
+# server model (trained once on the synthetic domain, checkpointed)
+
+
+def train_server_params(steps: int = 1800, peak_lr: float = 1e-3,
+                        batch: int = 2, log_every: int = 200):
+    """Train the sim ViTDet on synthetic clips (analytic GT targets)."""
+    from repro.optim.schedules import warmup_cosine
+    params = registry_init()
+    opt = adam.init_adam(params)
+
+    def loss_fn(p, img, tgt):
+        outs = vb.forward_det(SIM, p, img)
+        return dh.det_loss(SIM, outs, tgt)[0]
+
+    step_fn = jax.jit(jax.value_and_grad(loss_fn))
+
+    # training pool: frames + targets from the profiling scenarios
+    frames, targets = [], []
+    for name in PROFILE_VIDEOS:
+        fs, gts = sv.make_clip(name, 16, size=SIZE, seed=7)
+        for f, g in zip(fs, gts):
+            frames.append(f)
+            targets.append(sv.render_targets(g, SIZE))
+    frames = np.stack(frames)
+    rng = np.random.default_rng(0)
+
+    for s in range(steps):
+        idx = rng.integers(0, len(frames), batch)
+        img = jnp.asarray(frames[idx])
+        tgt = [{k: jnp.asarray(np.stack([targets[i][lv][k] for i in idx]))
+                for k in ("cls", "box", "pos")}
+               for lv in range(len(targets[0]))]
+        loss, grads = step_fn(params, img, tgt)
+        lr = warmup_cosine(jnp.asarray(s), peak_lr=peak_lr,
+                           warmup_steps=50, total_steps=steps)
+        params, opt, _ = adam.adam_update(grads, opt, params, lr=lr,
+                                          grad_clip=1.0)
+        if log_every and s % log_every == 0:
+            print(f"[server-train] step {s} loss {float(loss):.3f} "
+                  f"lr {float(lr):.1e}", flush=True)
+    flat = jax.tree_util.tree_leaves(params)
+    assert all(np.isfinite(np.asarray(l)).all() for l in flat), \
+        "server training diverged"
+    return params
+
+
+def registry_init():
+    from repro.models import registry
+    return registry.init_params(SIM, jax.random.PRNGKey(0))
+
+
+_SERVER: Optional[ServerModel] = None
+
+
+def get_server(train_steps: int = 1200) -> ServerModel:
+    """The (cached) trained sim server model."""
+    global _SERVER
+    if _SERVER is not None:
+        return _SERVER
+    ckdir = str(CACHE / "server_model")
+    like = registry_init()
+    if ckpt.latest_step(ckdir) is not None:
+        params = ckpt.restore(like, ckdir)
+    else:
+        params = train_server_params(train_steps)
+        ckpt.save(params, ckdir, step=train_steps)
+    _SERVER = ServerModel(SIM, params, top_k=32, score_thresh=0.4)
+    return _SERVER
+
+
+def get_part():
+    return vb.vit_partition(SIM)
+
+
+def paper_delay_model() -> InferenceDelayModel:
+    """LM^inf_beta(N_d) from the FULL ViTDet-L FLOP curve, anchored to the
+    paper's measured 281 ms full-res inference delay."""
+    cfg = get_config("vitdet-l")
+    part = vb.vit_partition(cfg)
+    return InferenceDelayModel.fit_from_flops(
+        lambda n, b: vb.backbone_flops(cfg, n, b), part.n_regions,
+        betas=(0, 1, 2, 3, 4), full_res_delay_s=0.281)
+
+
+# ---------------------------------------------------------------------------
+# profiling dataset -> estimators (paper §IV-D / Table II)
+
+
+def build_profile_dataset(server: ServerModel,
+                          n_frames: int = PROFILE_FRAMES) -> Dict:
+    """Offline profiling: (features, size, accuracy) samples across the
+    profiling clips and a spread of configs.  Cached."""
+    cache = CACHE / "profile_dataset.npz"
+    if cache.exists():
+        z = np.load(cache)
+        return {k: z[k] for k in z.files}
+
+    part = get_part()
+    codec = MixedResCodec(part, PATCH, part.downsample)
+    sample_cfgs = [c for c in candidate_configs()
+                   if c.quality in (70, 85, 100)
+                   and c.beta in (0, 1, 2, 4)]
+    X, y_size, y_acc = [], [], []
+    for name in PROFILE_VIDEOS:
+        frames, gts = sv.make_clip(name, n_frames, size=SIZE, seed=11)
+        analyzer = mo.RegionMotionAnalyzer(part, PATCH)
+        for fi, frame in enumerate(frames):
+            m, m_f = analyzer.update(frame)
+            if fi < 2:                 # background model warm-up
+                continue
+            gt_dets = server.infer(frame)          # full-res reference
+            rho = mo.region_density(gts[fi], part, PATCH)
+            phi = mo.classify_regions(m, rho)
+            mu_r, sg_r = float(rho.mean()), float(rho.std())
+            for c in sample_cfgs:
+                mask = mo.downsample_mask(phi, c.tau_d)
+                n_d = int(mask.sum())
+                m_d = float((mask * m).sum())
+                enc, decoded = codec.encode(frame, mask, c.quality)
+                from repro.offload import detection as det
+                dets = server.infer(decoded, mask if n_d > 0 else None,
+                                    c.beta if n_d > 0 else 0)
+                f1 = det.frame_f1(dets, gt_dets)
+                X.append(feature_vector(c.tau_d, n_d, m_d, m_f, c.quality,
+                                        mu_r, sg_r, c.beta))
+                y_size.append(enc.payload_bytes / 1024.0)    # KiB
+                y_acc.append(f1)
+    out = {"X": np.stack(X), "y_size": np.array(y_size, np.float32),
+           "y_acc": np.array(y_acc, np.float32)}
+    CACHE.mkdir(parents=True, exist_ok=True)
+    np.savez(cache, **out)
+    return out
+
+
+def fit_estimators(data: Dict) -> Dict[str, Dict]:
+    """Fit {MLP, Linear, OfflineMean} x {size, acc} with a split."""
+    X, ys, ya = data["X"], data["y_size"], data["y_acc"]
+    n = len(X)
+    rng = np.random.default_rng(0)
+    idx = rng.permutation(n)
+    tr, te = idx[:int(n * 0.8)], idx[int(n * 0.8):]
+    out = {}
+    for name, cls in (("MLP", MLPEstimator), ("Linear", LinearEstimator),
+                      ("OfflineMean", OfflineMean)):
+        size_e, acc_e = cls(), cls()
+        size_e.fit(X[tr], ys[tr], steps=1500)
+        acc_e.fit(X[tr], ya[tr], steps=1500)
+        out[name] = {"size": size_e, "acc": acc_e, "test_idx": te,
+                     "train_idx": tr}
+    out["data"] = data
+    return out
+
+
+_ESTIMATORS: Optional[Dict] = None
+
+
+def get_estimators() -> Dict:
+    global _ESTIMATORS
+    if _ESTIMATORS is None:
+        _ESTIMATORS = fit_estimators(build_profile_dataset(get_server()))
+    return _ESTIMATORS
+
+
+# ---------------------------------------------------------------------------
+# simulation runner
+
+
+def make_optimizer(size_est, acc_est) -> OffloadOptimizer:
+    part = get_part()
+    delays = DelayModels(enc=CodecDelayModel(), inf=paper_delay_model(),
+                         net=ThroughputEstimator())
+    return OffloadOptimizer(part, size_est, acc_est, delays)
+
+
+def make_policies() -> List[bl.Policy]:
+    est = get_estimators()
+    return [
+        bl.Back2Back(),
+        bl.TrackB2B(),
+        bl.TrackRoI(),
+        bl.TrackUD(fps=FPS, n_subsets=SIM.vit.n_subsets),
+        bl.ViTMAlis(make_optimizer(est["MLP"]["size"], est["MLP"]["acc"])),
+    ]
+
+
+def make_ablations() -> List[bl.Policy]:
+    est = get_estimators()
+    return [
+        bl.ViTMAlisNoRegType(make_optimizer(est["MLP"]["size"],
+                                            est["MLP"]["acc"])),
+        _no_mlps_policy(est),
+        bl.ViTMAlisNoDynaRes(make_optimizer(est["MLP"]["size"],
+                                            est["MLP"]["acc"]),
+                             n_subsets=SIM.vit.n_subsets),
+    ]
+
+
+def _no_mlps_policy(est) -> bl.Policy:
+    p = bl.ViTMAlis(make_optimizer(est["OfflineMean"]["size"],
+                                   est["OfflineMean"]["acc"]))
+    p.name = "w/o MLPs"
+    return p
+
+
+_GT_CACHE: Dict[str, Tuple[np.ndarray, List]] = {}
+
+
+def video_with_gt(name: str, n_frames: int = SIM_FRAMES):
+    """Frames + the full-res model outputs (= the paper's ground truth)."""
+    key = f"{name}_{n_frames}"
+    if key not in _GT_CACHE:
+        server = get_server()
+        frames, _ = sv.make_clip(name, n_frames, size=SIZE, seed=23)
+        gt = [server.infer(f) for f in frames]
+        _GT_CACHE[key] = (frames, gt)
+    return _GT_CACHE[key]
+
+
+def run_sims(policies: Sequence[bl.Policy]) -> List:
+    """Run every (policy x video x trace) simulation.  Returns SimResults."""
+    server = get_server()
+    part = get_part()
+    inf_delay = paper_delay_model()
+    results = []
+    for vname in SIM_VIDEOS:
+        frames, gt = video_with_gt(vname)
+        for (kind, seed) in SIM_TRACES:
+            trace = make_trace(kind, seed,
+                               duration_s=int(SIM_FRAMES / FPS) + 60)
+            for policy in policies:
+                # fresh policy state per run
+                pol = policy.__class__.__new__(policy.__class__)
+                pol.__dict__.update(policy.__dict__)
+                if hasattr(pol, "opt"):
+                    pol.opt.delays.net = ThroughputEstimator()
+                if hasattr(pol, "last_e2e"):
+                    pol.last_e2e = None
+                s = Simulation(frames, gt, trace, pol, server, part, PATCH,
+                               fps=FPS, inf_delay=inf_delay)
+                results.append(s.run(video_name=vname))
+    return results
+
+
+_SIM_RESULTS: Optional[List] = None
+
+
+def get_sim_results() -> List:
+    """The fig-8/9/10 simulation grid (shared across benchmarks)."""
+    global _SIM_RESULTS
+    if _SIM_RESULTS is None:
+        _SIM_RESULTS = run_sims(make_policies())
+    return _SIM_RESULTS
+
+
+def by_policy(results) -> Dict[str, List]:
+    out: Dict[str, List] = {}
+    for r in results:
+        out.setdefault(r.policy, []).append(r)
+    return out
+
+
+def pooled(results, attr: str) -> np.ndarray:
+    vals: List[float] = []
+    for r in results:
+        vals.extend(getattr(r, attr))
+    return np.asarray(vals, np.float64)
+
+
+def pooled_delay(results, key: str) -> np.ndarray:
+    vals = []
+    for r in results:
+        for d in r.delay_parts:
+            if key == "codec":
+                vals.append(d["enc"] + d["dec"])
+            else:
+                vals.append(d[key])
+    return np.asarray(vals, np.float64)

@@ -1,0 +1,27 @@
+"""Paper Fig. 10 — encoding/decoding delays per policy.
+
+Median modelled codec delay (Eq. 2 terms) per policy plus the measured
+wall time of our actual DCT+zlib codec on this host.  Expected (paper):
+mixed-resolution policies pay a small encode overhead but win on decode;
+totals stay within a few ms of the baselines (~30-39 ms at 1080p scale).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common as C
+
+
+def run(ctx: dict) -> list:
+    groups = C.by_policy(C.get_sim_results())
+    rows = []
+    for name, rs in groups.items():
+        codec = C.pooled_delay(rs, "codec")
+        walls = []
+        for r in rs:
+            walls.extend(r.overhead.get("codec_wall", []))
+        rows.append((f"fig10/{name}",
+                     float(np.median(walls) * 1e6) if walls else 0.0,
+                     f"median_codec_ms={np.median(codec)*1e3:.1f} "
+                     f"(modelled, 1080p scale)"))
+    return rows

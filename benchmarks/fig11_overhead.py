@@ -1,0 +1,40 @@
+"""Paper Fig. 11 — on-device system overhead.
+
+Measured wall time of the three device-side components on this host:
+Region Motion Analyzer (per frame), Performance Estimator (all candidate
+configs), Offload Optimizer (Algorithm 1 end-to-end).  The paper's
+Jetson numbers are 10 / 9 / 2 ms — ours are CPU-host analogues.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common as C
+from repro.data import synthetic_video as sv
+from repro.offload import motion as mo
+from repro.offload.optimizer import SystemState
+
+
+def run(ctx: dict) -> list:
+    part = C.get_part()
+    est = C.get_estimators()
+    opt = C.make_optimizer(est["MLP"]["size"], est["MLP"]["acc"])
+    frames, gts = sv.make_clip("walkB", 8, size=C.SIZE, seed=5)
+    analyzer = mo.RegionMotionAnalyzer(part, C.PATCH)
+    for f in frames[:-1]:
+        m, m_f = analyzer.update(f)
+    rho = mo.region_density(gts[-1], part, C.PATCH)
+
+    us_motion = C.timer(lambda: analyzer.update(frames[-1]), reps=10)
+    us_est = C.timer(lambda: opt.evaluate(m, m_f, rho), reps=10)
+    us_alg1 = C.timer(lambda: opt.select(m, m_f, rho, SystemState()),
+                      reps=10)
+
+    return [
+        ("fig11/motion_analyzer", us_motion,
+         f"per-frame {us_motion/1e3:.1f}ms (paper: 10ms on Jetson GPU)"),
+        ("fig11/perf_estimator", us_est,
+         f"all {len(opt.configs)} configs {us_est/1e3:.1f}ms (paper: 9ms)"),
+        ("fig11/offload_optimizer", us_alg1,
+         f"Algorithm 1 {us_alg1/1e3:.1f}ms (paper: 2ms)"),
+    ]

@@ -1,0 +1,41 @@
+"""Paper Fig. 8 — overall performance of all solutions.
+
+Per policy, pooled over the (video x trace) grid: median rendering F1,
+mean inference F1, median E2E offloading latency, median offload
+interval.  Expected (paper): ViTMAlis has the highest rendering accuracy
+and the lowest E2E latency; Back2Back the lowest rendering accuracy
+despite the highest inference accuracy.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common as C
+
+
+def run(ctx: dict) -> list:
+    results = C.get_sim_results()
+    groups = C.by_policy(results)
+    rows = []
+    summary = {}
+    for name, rs in groups.items():
+        rend = C.pooled(rs, "rendering_f1")
+        inf = C.pooled(rs, "inference_f1")
+        e2e = C.pooled(rs, "e2e_latency")
+        itv = C.pooled(rs, "offload_interval")
+        summary[name] = dict(rend=float(np.median(rend)),
+                             inf=float(np.mean(inf)),
+                             e2e=float(np.median(e2e)),
+                             itv=float(np.median(itv)))
+        rows.append((f"fig8/{name}", float(np.median(e2e) * 1e6),
+                     f"median_rend_f1={np.median(rend):.3f} "
+                     f"mean_inf_f1={np.mean(inf):.3f} "
+                     f"median_e2e_s={np.median(e2e):.3f} "
+                     f"median_interval={np.median(itv):.1f}"))
+
+    vit = summary.get("ViTMAlis", {})
+    others = [v for k, v in summary.items() if k != "ViTMAlis"]
+    best_rend = vit and all(vit["rend"] >= o["rend"] - 1e-9 for o in others)
+    rows.append(("fig8/vitmalis_best_rendering", 0.0, f"holds={best_rend}"))
+    ctx["fig8_summary"] = summary
+    return rows

@@ -1,0 +1,118 @@
+"""Render the §Dry-run / §Roofline sections of EXPERIMENTS.md from the
+dry-run artifacts.
+
+  PYTHONPATH=src python -m benchmarks.report > /tmp/roofline.md
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+ART = Path(__file__).resolve().parent / "artifacts" / "dryrun"
+
+ARCH_ORDER = ["mamba2-370m", "qwen3-4b", "mistral-nemo-12b",
+              "phi4-mini-3.8b", "deepseek-7b", "llava-next-mistral-7b",
+              "dbrx-132b", "deepseek-v2-236b", "zamba2-1.2b",
+              "whisper-medium"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(arch, shape, mesh, opt="base"):
+    tag = f"{arch}__{shape}__{mesh}"
+    if opt != "base":
+        tag += f"__{opt}"
+    p = ART / f"{tag}.json"
+    if not p.exists():
+        return None
+    return json.loads(p.read_text())
+
+
+def _fix(rec):
+    r = rec["roofline"]
+    t_max = max(r["t_compute"], r["t_memory"], r["t_collective"])
+    return r["t_compute"] / t_max if t_max > 0 else 0.0
+
+
+def one_liner(rec) -> str:
+    """What would move the dominant term down."""
+    r = rec["roofline"]
+    b = r["bound"]
+    shape = rec["shape"]
+    if b == "memory":
+        if shape.startswith("decode") or shape.startswith("long"):
+            return ("KV/state reads dominate: quantize cache to int8 or "
+                    "shrink via MLA/GQA ratio")
+        return ("materialised attention + activation traffic: Pallas "
+                "flash/window kernels keep logits in VMEM (see §Perf)")
+    if b == "collective":
+        if rec["arch"].startswith("phi4"):
+            return ("24 heads % TP16 != 0: GSPMD full-tensor reshard per "
+                    "layer — fix: TP=8 (measured in §Perf)")
+        return ("TP activation all-reduce dominates: sequence-parallel "
+                "reduce-scatter layout (sp variant)")
+    return "MXU-bound: raise per-chip batch or quantise weights to int8"
+
+
+def roofline_table(mesh="pod1", opt="base") -> str:
+    lines = [
+        "| arch | shape | t_comp (ms) | t_mem (ms) | t_coll (ms) | bound "
+        "| frac | useful | note |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            rec = load(arch, shape, mesh, opt)
+            if rec is None:
+                lines.append(f"| {arch} | {shape} | - | - | - | missing "
+                             f"| - | - | |")
+                continue
+            if rec["status"] == "skipped":
+                lines.append(
+                    f"| {arch} | {shape} | — | — | — | SKIP | — | — | "
+                    f"{rec['reason'][:60]} |")
+                continue
+            if rec["status"] != "ok":
+                lines.append(f"| {arch} | {shape} | - | - | - | ERROR | "
+                             f"- | - | {rec.get('error', '')[:50]} |")
+                continue
+            r = rec["roofline"]
+            u = rec.get("useful_flop_ratio")
+            lines.append(
+                f"| {arch} | {shape} "
+                f"| {r['t_compute']*1e3:.1f} | {r['t_memory']*1e3:.1f} "
+                f"| {r['t_collective']*1e3:.1f} | {r['bound']} "
+                f"| {_fix(rec):.2f} "
+                f"| {(f'{u:.2f}' if u is not None else 'n/a')} "
+                f"| {one_liner(rec)} |")
+    return "\n".join(lines)
+
+
+def memory_table(mesh="pod2") -> str:
+    lines = ["| arch | shape | status | mem/dev (GiB) | compile (s) |",
+             "|---|---|---|---|---|"]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            rec = load(arch, shape, mesh)
+            if rec is None:
+                lines.append(f"| {arch} | {shape} | missing | - | - |")
+            elif rec["status"] == "skipped":
+                lines.append(f"| {arch} | {shape} | skip | — | — |")
+            elif rec["status"] != "ok":
+                lines.append(f"| {arch} | {shape} | ERROR | - | - |")
+            else:
+                gib = rec["memory"]["total_with_donation"] / 2 ** 30
+                lines.append(f"| {arch} | {shape} | ok | {gib:.2f} "
+                             f"| {rec['compile_s']:.0f} |")
+    return "\n".join(lines)
+
+
+def main():
+    print("### Roofline table (single pod, 256 chips, base)\n")
+    print(roofline_table("pod1"))
+    print("\n### Multi-pod compile proof (512 chips)\n")
+    print(memory_table("pod2"))
+
+
+if __name__ == "__main__":
+    sys.exit(main())

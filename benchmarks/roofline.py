@@ -1,0 +1,67 @@
+"""Roofline table — reads the dry-run artifacts (benchmarks/artifacts/
+dryrun/*.json) and prints the three roofline terms, the dominant bound,
+and the useful-FLOP ratio per (arch x shape x mesh x opt) cell.
+
+This is the §Roofline deliverable; EXPERIMENTS.md is generated from the
+same artifacts (benchmarks.report).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ART = Path(__file__).resolve().parent / "artifacts" / "dryrun"
+
+
+def load_records(mesh: str = None, opt: str = None) -> list:
+    recs = []
+    for p in sorted(ART.glob("*.json")):
+        r = json.loads(p.read_text())
+        r["_file"] = p.name
+        if mesh and r.get("mesh") != mesh:
+            continue
+        if opt and r.get("opt", "base") != opt:
+            continue
+        recs.append(r)
+    return recs
+
+
+def fraction_of_roofline(rec: dict) -> float:
+    """Achievable fraction: ideal (compute-bound) time / bound time."""
+    r = rec["roofline"]
+    t_bound = max(r["t_compute"], r["t_memory"], r["t_collective"])
+    return r["t_compute"] / t_bound if t_bound > 0 else 0.0
+
+
+def run(ctx: dict) -> list:
+    rows = []
+    n_ok = n_skip = n_err = 0
+    for rec in load_records():
+        tag = f"roofline/{rec['arch']}/{rec['shape']}/{rec['mesh']}"
+        if rec.get("opt", "base") != "base":
+            tag += f"/{rec['opt']}"
+        if rec["status"] == "skipped":
+            n_skip += 1
+            rows.append((tag, 0.0, f"SKIP {rec['reason'][:50]}"))
+            continue
+        if rec["status"] != "ok":
+            n_err += 1
+            rows.append((tag, 0.0, f"ERROR {rec.get('error', '?')[:60]}"))
+            continue
+        n_ok += 1
+        r = rec["roofline"]
+        ufr = rec.get("useful_flop_ratio")
+        useful = f"{ufr:.2f}" if ufr is not None else "n/a"
+        rows.append((
+            tag, r[max(("t_compute", "t_memory", "t_collective"),
+                       key=lambda k: r[k])] * 1e6,
+            f"t_comp={r['t_compute']*1e3:.2f}ms "
+            f"t_mem={r['t_memory']*1e3:.2f}ms "
+            f"t_coll={r['t_collective']*1e3:.2f}ms "
+            f"bound={r['bound']} "
+            f"frac={fraction_of_roofline(rec):.2f} "
+            f"useful={useful}"))
+    rows.append(("roofline/summary", 0.0,
+                 f"ok={n_ok} skipped={n_skip} errors={n_err}"))
+    ctx["roofline_ok"] = n_err == 0
+    return rows

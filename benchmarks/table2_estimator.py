@@ -1,0 +1,40 @@
+"""Paper Table II — performance-estimation quality.
+
+MLP vs Linear Regression vs Offline Mean on the held-out profiling split,
+for both targets (compressed size KiB, inference accuracy F1), reporting
+MAE / RMSE / MAPE / R^2.  Expected ordering (paper): MLP best on all
+metrics; Linear worst R^2.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common as C
+from repro.offload.estimator import regression_metrics
+
+
+def run(ctx: dict) -> list:
+    est = C.get_estimators()
+    data = est["data"]
+    te = est["MLP"]["test_idx"]
+    X, ys, ya = data["X"][te], data["y_size"][te], data["y_acc"][te]
+
+    rows = []
+    metrics = {}
+    for name in ("Linear", "OfflineMean", "MLP"):
+        us = C.timer(lambda: est[name]["size"].predict(X), reps=3)
+        m_s = regression_metrics(ys, est[name]["size"].predict(X))
+        m_a = regression_metrics(ya, est[name]["acc"].predict(X))
+        metrics[name] = (m_s, m_a)
+        rows.append((f"table2/{name}/size", us,
+                     f"MAE={m_s['MAE']:.1f}KiB RMSE={m_s['RMSE']:.1f} "
+                     f"MAPE={m_s['MAPE']:.1f}% R2={m_s['R2']:.3f}"))
+        rows.append((f"table2/{name}/acc", us,
+                     f"MAE={m_a['MAE']:.3f} RMSE={m_a['RMSE']:.3f} "
+                     f"MAPE={m_a['MAPE']:.1f}% R2={m_a['R2']:.3f}"))
+
+    ok = (metrics["MLP"][0]["RMSE"] <= metrics["Linear"][0]["RMSE"] and
+          metrics["MLP"][1]["RMSE"] <= metrics["Linear"][1]["RMSE"])
+    rows.append(("table2/mlp_beats_linear", 0.0, f"holds={ok}"))
+    ctx["table2"] = metrics
+    return rows

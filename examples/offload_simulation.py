@@ -1,0 +1,57 @@
+"""End-to-end ViTMAlis offloading simulation — the paper's C2 system
+(Fig. 6) against the TrackB2B baseline on one synthetic video and one
+emulated 4G trace.
+
+  PYTHONPATH=src python examples/offload_simulation.py [--frames 40]
+
+Uses the trained benchmark server model if its cache exists (run
+``python -m benchmarks.run fig8`` once to build it); otherwise trains a
+quick one (~2 min on CPU).
+"""
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--frames", type=int, default=40)
+    ap.add_argument("--video", default="cycleS")
+    ap.add_argument("--trace", default="4g")
+    args = ap.parse_args()
+
+    from benchmarks import common as C
+    from repro.data.network_traces import make_trace
+    from repro.offload.simulator import Simulation
+
+    server = C.get_server()
+    part = C.get_part()
+    frames, gt = C.video_with_gt(args.video, args.frames)
+    trace = make_trace(args.trace, 0, duration_s=args.frames // C.FPS + 60)
+    inf_delay = C.paper_delay_model()
+
+    print(f"video={args.video} ({args.frames} frames @ {C.FPS} FPS), "
+          f"trace={args.trace} (mean {trace.mean_mbps:.1f} Mbps)\n")
+    for policy in C.make_policies():
+        if policy.name not in ("TrackB2B", "ViTMAlis"):
+            continue
+        sim = Simulation(frames, gt, trace, policy, server, part, C.PATCH,
+                         fps=C.FPS, inf_delay=inf_delay)
+        res = sim.run(video_name=args.video)
+        s = res.summary()
+        print(f"{policy.name:>10}: rendering_f1={s['median_rendering_f1']:.3f} "
+              f"inference_f1={s['mean_inference_f1']:.3f} "
+              f"e2e={s['median_e2e_latency']*1e3:.0f}ms "
+              f"net={s['median_net_delay']*1e3:.0f}ms "
+              f"inf={s['median_inf_delay']*1e3:.0f}ms "
+              f"interval={s['median_interval']:.0f} frames")
+    print("\nViTMAlis should cut both net and inference delay while "
+          "holding rendering accuracy (paper Figs. 8-9).")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,82 @@
+"""Quickstart: the paper's C1 — dynamic mixed-resolution inference for a
+ViTDet-style dense-prediction model — in ~60 lines of public API.
+
+  PYTHONPATH=src python examples/quickstart.py
+
+Builds the sim-scale ViTDet, packs a synthetic frame into a
+mixed-resolution token sequence (object-free regions downsampled 2x),
+runs inference at several restoration points (RPs), and prints the
+token-count / FLOP savings and detection agreement per RP.
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.vitdet_l import SIM
+from repro.core import vit_backbone as vb
+from repro.core.partition import mask_to_region_ids
+from repro.data import synthetic_video as sv
+from repro.models import registry
+from repro.offload import detection as det
+from repro.offload import motion as mo
+from repro.offload.simulator import ServerModel
+
+
+def main() -> int:
+    part = vb.vit_partition(SIM)
+    print(f"model: {SIM.name}-sim  patch grid {part.grid_h}x{part.grid_w}, "
+          f"window {part.window}, downsample {part.downsample} -> "
+          f"{part.n_regions} decision regions of r={part.region} patches")
+
+    # use the benchmark-trained weights when the cache exists (run
+    # ``python -m benchmarks.run fig8`` once); random init otherwise
+    params = registry.init_params(SIM, jax.random.PRNGKey(0))
+    ckdir = (Path(__file__).resolve().parents[1] / "benchmarks" /
+             "artifacts" / "cache" / "server_model")
+    try:
+        from repro.train import checkpoint as ckpt
+        if ckpt.latest_step(str(ckdir)) is not None:
+            params = ckpt.restore(params, str(ckdir))
+            print("(loaded trained sim weights from the benchmark cache)")
+    except Exception:
+        pass
+    server = ServerModel(SIM, params, score_thresh=0.3)
+
+    frames, gts = sv.make_clip("walkS", 3, size=SIM.vit.img_size[0], seed=1)
+    frame, gt = frames[-1], gts[-1]
+
+    # region selection: downsample regions with no objects (paper Fig. 5
+    # pilot); rho comes from ground truth here, from the tracker at runtime
+    rho = mo.region_density(gt, part, SIM.vit.patch_size)
+    mask = (rho == 0).astype(np.int32)
+    n_low = int(mask.sum())
+    full_tok = part.grid_h * part.grid_w
+    mixed_tok = part.n_tokens(n_low)
+    print(f"\nframe: {len(gt)} objects; {n_low}/{part.n_regions} regions "
+          f"downsampled -> {mixed_tok}/{full_tok} tokens "
+          f"({1 - mixed_tok / full_tok:.0%} fewer)")
+
+    # FLOP savings per restoration point, from the FULL ViTDet-L curve
+    cfg_l = get_config("vitdet-l")
+    f_full = vb.backbone_flops(cfg_l, 0, 0)
+    ref = server.infer(frame)
+    print(f"\n{'beta':>4} {'backbone FLOPs':>15} {'saved':>6} "
+          f"{'agreement F1':>13}")
+    for beta in range(SIM.vit.n_subsets + 1):
+        f_mix = vb.backbone_flops(cfg_l, n_low, beta)
+        dets = server.infer(frame, mask, beta)
+        f1 = det.frame_f1(dets, ref)
+        print(f"{beta:>4} {f_mix / 1e9:>13.1f}G {1 - f_mix / f_full:>6.0%} "
+              f"{f1:>13.3f}")
+    print("\nbeta=0 restores at the input (no savings); deeper RPs save "
+          "more compute (paper Fig. 5).")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,75 @@
+"""Serving example: wave-batched KV-cache serving with the paper's
+technique transposed to sequences — mixed-granularity prefill (pool
+low-relevance prompt spans for the first beta backbone subsets, restore
+before the rest, decode from a full-resolution cache).
+
+  PYTHONPATH=src python examples/serve_mixed_prefill.py
+
+Runs the same request batch with and without the technique and reports
+prefill FLOP savings and output agreement.
+"""
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.core import seq_mixed_res as smr
+from repro.models import registry
+from repro.serve.engine import ServeConfig, ServeEngine
+from repro.serve.request import Request
+
+ARCH = "qwen3-4b"
+PROMPT_LEN = 256
+MAX_NEW = 12
+N_REQ = 8
+
+
+def main() -> int:
+    cfg = get_reduced(ARCH)
+    params = registry.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, (PROMPT_LEN,))
+               .astype(np.int32) for _ in range(N_REQ)]
+
+    span = cfg.mixed_res.window * cfg.mixed_res.downsample
+    n_spans = PROMPT_LEN // span
+    span_mask = np.zeros((n_spans,), np.int32)
+    span_mask[: n_spans // 2] = 1          # pool the oldest half
+    beta = 2
+
+    results = {}
+    for name, mask, b in (("full", None, 0), ("mixed", span_mask, beta)):
+        engine = ServeEngine(cfg, params, ServeConfig(
+            max_batch=N_REQ, max_len=PROMPT_LEN + MAX_NEW + 8,
+            buckets=(PROMPT_LEN,)))
+        for rid, p in enumerate(prompts):
+            engine.submit(Request(rid=rid, prompt=p, max_new_tokens=MAX_NEW,
+                                  low_span_mask=mask, beta=b))
+        t0 = time.time()
+        rs = engine.run()
+        results[name] = {r.rid: r.tokens for r in rs}
+        print(f"{name:>6}: {len(rs)} requests in {time.time()-t0:.2f}s")
+
+    agree = np.mean([
+        np.mean(np.asarray(results["full"][i]) ==
+                np.asarray(results["mixed"][i][:len(results['full'][i])]))
+        for i in range(N_REQ)])
+    n_low = int(span_mask.sum())
+    f_full = smr.prefill_flops(cfg, PROMPT_LEN, 0, 0)
+    f_mix = smr.prefill_flops(cfg, PROMPT_LEN, n_low, beta)
+    print(f"\nprefill FLOPs: {f_full/1e6:.1f}M -> {f_mix/1e6:.1f}M "
+          f"({1 - f_mix/f_full:.0%} saved at beta={beta}, "
+          f"{n_low}/{n_spans} spans pooled)")
+    print(f"token agreement with full prefill: {agree:.0%} "
+          f"(untrained weights; trained models retain task accuracy per "
+          f"the paper's §III)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,59 @@
+"""End-to-end training driver: a ~100M-parameter qwen3-family LM trained
+for a few hundred steps on the synthetic token pipeline, with sharded
+checkpointing and resume.
+
+  PYTHONPATH=src python examples/train_lm_100m.py [--steps 300]
+  PYTHONPATH=src python examples/train_lm_100m.py --resume   # restart
+
+The config is the qwen3-4b architecture scaled to ~100M params (same
+family: GQA + qk_norm + SwiGLU); loss must fall (the pipeline has a
+learnable bigram structure).
+"""
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.train import train
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm100m")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config("qwen3-4b").replace(
+        name="qwen3-100m",
+        n_layers=12,
+        d_model=640,
+        n_heads=10,
+        n_kv_heads=2,
+        head_dim=64,
+        d_ff=2048,
+        vocab_size=32768,
+        max_seq_len=4096,
+    )
+    n = cfg.param_count()
+    print(f"config: {cfg.name}  params={n/1e6:.0f}M  "
+          f"({cfg.n_layers}L d={cfg.d_model} GQA {cfg.n_heads}/"
+          f"{cfg.n_kv_heads})")
+
+    out = train(cfg, steps=args.steps, batch=args.batch, seq=args.seq,
+                ckpt_dir=args.ckpt_dir, resume=args.resume,
+                save_every=100, log_every=20)
+    improved = out["mean_last10"] < out["first_loss"] - 0.1
+    print(f"loss improved: {improved} "
+          f"({out['first_loss']:.3f} -> {out['mean_last10']:.3f})")
+    return 0 if improved and np.isfinite(out["final_loss"]) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,11 @@
+"""Paper C1: dynamic mixed-resolution inference for dense-prediction ViTs
+(partition, mixed_res, vit_backbone, det_head) and its 1-D sequence
+adaptation for decoder LMs (seq_mixed_res)."""
+from repro.core.partition import (Partition, bucket_n_low, bucket_set,
+                                  make_partition, mask_to_region_ids,
+                                  region_ids_to_mask)
+
+__all__ = [
+    "Partition", "make_partition", "bucket_n_low", "bucket_set",
+    "mask_to_region_ids", "region_ids_to_mask",
+]

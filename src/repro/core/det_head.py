@@ -1,0 +1,161 @@
+"""Dense prediction head: simple ViTDet-style feature pyramid + an
+anchor-free (FCOS-lite) detection head.
+
+The pyramid is built from the backbone's single-scale stride-16 map
+(ViTDet's key observation): stride 8 by 2x nearest upsample, stride 16
+identity, stride 32 by 2x average pool — each followed by a 1x1 lateral
+projection and a 3x3 conv.  The shared head predicts per-location class
+logits, ltrb box offsets (in stride units), and centerness.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+STRIDES = (8, 16, 32)
+
+
+def _conv_init(key, k, cin, cout, dtype):
+    fan_in = k * k * cin
+    w = jax.random.truncated_normal(key, -2, 2, (k, k, cin, cout),
+                                    jnp.float32) / jnp.sqrt(fan_in)
+    return w.astype(dtype)
+
+
+def conv2d(x, w, b=None):
+    """NHWC conv, SAME padding."""
+    out = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return out if b is None else out + b
+
+
+def init_det_head(cfg: ModelConfig, key, dtype=jnp.float32) -> Dict:
+    v = cfg.vit
+    D, C = cfg.d_model, v.out_channels
+    ks = jax.random.split(key, 12)
+    p = {"lateral": [], "smooth": []}
+    for i in range(len(STRIDES)):
+        p["lateral"].append({"w": _conv_init(ks[2 * i], 1, D, C, dtype),
+                             "b": jnp.zeros((C,), dtype)})
+        p["smooth"].append({"w": _conv_init(ks[2 * i + 1], 3, C, C, dtype),
+                            "b": jnp.zeros((C,), dtype)})
+    p["tower"] = {"w": _conv_init(ks[6], 3, C, C, dtype),
+                  "b": jnp.zeros((C,), dtype)}
+    p["cls"] = {"w": _conv_init(ks[7], 3, C, v.n_classes, dtype),
+                "b": jnp.full((v.n_classes,), -4.0, dtype)}   # focal prior
+    p["box"] = {"w": _conv_init(ks[8], 3, C, 4, dtype),
+                "b": jnp.zeros((4,), dtype)}
+    p["ctr"] = {"w": _conv_init(ks[9], 3, C, 1, dtype),
+                "b": jnp.zeros((1,), dtype)}
+    return p
+
+
+def _resize2x_up(x):
+    B, H, W, C = x.shape
+    x = jnp.repeat(jnp.repeat(x, 2, axis=1), 2, axis=2)
+    return x
+
+
+def _pool2x(x):
+    B, H, W, C = x.shape
+    return jnp.mean(x.reshape(B, H // 2, 2, W // 2, 2, C), axis=(2, 4))
+
+
+def det_head_forward(cfg: ModelConfig, p, feats: jnp.ndarray
+                     ) -> List[Dict[str, jnp.ndarray]]:
+    """feats: (B, Hp, Wp, D) stride-16 map -> per-level head outputs."""
+    levels = [_resize2x_up(feats), feats, _pool2x(feats)]
+    outs = []
+    for i, x in enumerate(levels):
+        x = conv2d(x, p["lateral"][i]["w"], p["lateral"][i]["b"])
+        x = jax.nn.relu(conv2d(x, p["smooth"][i]["w"], p["smooth"][i]["b"]))
+        t = jax.nn.relu(conv2d(x, p["tower"]["w"], p["tower"]["b"]))
+        outs.append({
+            "cls": conv2d(t, p["cls"]["w"], p["cls"]["b"]),
+            "box": jax.nn.softplus(conv2d(t, p["box"]["w"], p["box"]["b"])),
+            "ctr": conv2d(t, p["ctr"]["w"], p["ctr"]["b"]),
+            "stride": STRIDES[i],
+        })
+    return outs
+
+
+# ---------------------------------------------------------------------------
+# loss (FCOS-lite): focal BCE on class, L1 on ltrb at positives, BCE ctr
+
+
+def _focal_bce(logits, targets, alpha=0.25, gamma=2.0):
+    # stable form: log-sigmoid everywhere and pt = exp(-ce) — the naive
+    # log(p + eps) variant is value-stable but its fused XLA backward
+    # produces NaN for saturated logits (0 * inf in the chain rule)
+    x = logits.astype(jnp.float32)
+    log_p = jax.nn.log_sigmoid(x)
+    log_1mp = jax.nn.log_sigmoid(-x)
+    ce = -(targets * log_p + (1 - targets) * log_1mp)
+    pt = jnp.exp(-ce)
+    w = (targets * alpha + (1 - targets) * (1 - alpha)) * (1 - pt) ** gamma
+    return w * ce
+
+
+def det_loss(cfg: ModelConfig, outputs, targets) -> Tuple[jnp.ndarray, Dict]:
+    """targets: per-level dicts {"cls": (B,H,W,nc), "box": (B,H,W,4),
+    "pos": (B,H,W,1)} produced by data.synthetic_video.render_targets."""
+    total_cls = total_box = total_ctr = 0.0
+    n_pos = 0.0
+    for out, tgt in zip(outputs, targets):
+        total_cls += jnp.sum(_focal_bce(out["cls"], tgt["cls"]))
+        pos = tgt["pos"].astype(jnp.float32)
+        n_pos += jnp.sum(pos)
+        total_box += jnp.sum(jnp.abs(out["box"] - tgt["box"]) * pos)
+        ctr_t = tgt.get("ctr", pos)
+        total_ctr += jnp.sum(
+            _focal_bce(out["ctr"], ctr_t, alpha=0.5, gamma=0.0) * pos)
+    # clamp the normaliser at 1: frames whose objects all fall outside the
+    # stride bands have zero positives, and dividing by ~0 explodes the
+    # focal term (one such frame poisons training with NaN grads)
+    n_pos = jnp.maximum(n_pos, 1.0)
+    loss = (total_cls + total_box + total_ctr) / n_pos
+    return loss, {"cls": total_cls / n_pos, "box": total_box / n_pos,
+                  "n_pos": n_pos}
+
+
+# ---------------------------------------------------------------------------
+# decode: head outputs -> (boxes, scores, classes) with static top-k
+
+
+def decode_detections(cfg: ModelConfig, outputs, top_k: int = 64,
+                      score_thresh: float = 0.3):
+    """Returns boxes (B,K,4) xyxy in pixels, scores (B,K), classes (B,K).
+    Slots below ``score_thresh`` have score 0 (static shapes; no NMS —
+    synthetic scenes are sparse and locations are near-unique)."""
+    all_scores, all_boxes, all_cls = [], [], []
+    for out in outputs:
+        B, H, W, nc = out["cls"].shape
+        stride = out["stride"]
+        prob = jax.nn.sigmoid(out["cls"].astype(jnp.float32)) * \
+            jax.nn.sigmoid(out["ctr"].astype(jnp.float32))
+        ys, xs = jnp.meshgrid(jnp.arange(H), jnp.arange(W), indexing="ij")
+        cx = (xs.astype(jnp.float32) + 0.5) * stride
+        cy = (ys.astype(jnp.float32) + 0.5) * stride
+        ltrb = out["box"].astype(jnp.float32) * stride
+        boxes = jnp.stack([cx[None] - ltrb[..., 0], cy[None] - ltrb[..., 1],
+                           cx[None] + ltrb[..., 2], cy[None] + ltrb[..., 3]],
+                          axis=-1)                      # (B,H,W,4)
+        score = jnp.max(prob, axis=-1)                  # (B,H,W)
+        cls = jnp.argmax(prob, axis=-1)
+        all_scores.append(score.reshape(B, H * W))
+        all_boxes.append(boxes.reshape(B, H * W, 4))
+        all_cls.append(cls.reshape(B, H * W))
+    scores = jnp.concatenate(all_scores, axis=1)
+    boxes = jnp.concatenate(all_boxes, axis=1)
+    classes = jnp.concatenate(all_cls, axis=1)
+    top_s, top_i = jax.lax.top_k(scores, top_k)
+    top_b = jnp.take_along_axis(boxes, top_i[..., None], axis=1)
+    top_c = jnp.take_along_axis(classes, top_i, axis=1)
+    top_s = jnp.where(top_s >= score_thresh, top_s, 0.0)
+    return top_b, top_s, top_c

@@ -1,0 +1,161 @@
+"""Mixed-resolution tokenization + flexible restoration (paper §III).
+
+2-D (ViT-native) implementation.  All functions keep shapes static given
+the bucketed number of low-resolution regions ``n_low`` (static python
+int); WHICH regions are low is runtime data (``full_ids`` / ``low_ids``
+int32 arrays produced by ``partition.mask_to_region_ids``).
+
+Layout invariant (window-blocked, see partition.py):
+  token sequence = [ full-region windows (n_full * d^2 of them)
+                   | low-region windows  (n_low of them) ]
+  each window = w*w tokens, row-major within the window.
+
+With ``r = w*d`` every low region is exactly one window and every full
+region is exactly d^2 windows, so window attention over the mixed
+sequence is ``reshape -> sdpa -> reshape`` with NO gather (TPU-native
+adaptation recorded in DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.partition import Partition
+
+
+# ---------------------------------------------------------------------------
+# grid <-> window-blocked reshapes (pure layout, no compute)
+
+
+def grid_to_region_windows(x: jnp.ndarray, part: Partition) -> jnp.ndarray:
+    """(B, Hp, Wp, C) -> (B, nR, d^2, w^2, C) region-major window blocks."""
+    B, Hp, Wp, C = x.shape
+    r, w, d = part.region, part.window, part.downsample
+    nRh, nRw = part.regions_h, part.regions_w
+    x = x.reshape(B, nRh, d, w, nRw, d, w, C)
+    # region index = (nRh, nRw); window-in-region = (d, d); token = (w, w)
+    x = x.transpose(0, 1, 4, 2, 5, 3, 6, 7)        # B,nRh,nRw,d,d,w,w,C
+    return x.reshape(B, nRh * nRw, d * d, w * w, C)
+
+
+def region_windows_to_grid(x: jnp.ndarray, part: Partition) -> jnp.ndarray:
+    """Inverse of :func:`grid_to_region_windows`."""
+    B = x.shape[0]
+    C = x.shape[-1]
+    r, w, d = part.region, part.window, part.downsample
+    nRh, nRw = part.regions_h, part.regions_w
+    x = x.reshape(B, nRh, nRw, d, d, w, w, C)
+    x = x.transpose(0, 1, 3, 5, 2, 4, 6, 7)        # B,nRh,d,w,nRw,d,w,C
+    return x.reshape(B, part.grid_h, part.grid_w, C)
+
+
+def low_grid_to_windows(x_low: jnp.ndarray, part: Partition) -> jnp.ndarray:
+    """(B, Hp/d, Wp/d, C) low-res grid -> (B, nR, w^2, C) one window/region."""
+    B = x_low.shape[0]
+    C = x_low.shape[-1]
+    w = part.window
+    nRh, nRw = part.regions_h, part.regions_w
+    x = x_low.reshape(B, nRh, w, nRw, w, C)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(B, nRh * nRw, w * w, C)
+
+
+# ---------------------------------------------------------------------------
+# packing
+
+
+def downsample_grid(x: jnp.ndarray, d: int) -> jnp.ndarray:
+    """Average-pool a (B, Hp, Wp, C) grid by d (pixel/patch downsampling)."""
+    B, Hp, Wp, C = x.shape
+    x = x.reshape(B, Hp // d, d, Wp // d, d, C)
+    return jnp.mean(x.astype(jnp.float32), axis=(2, 4)).astype(x.dtype)
+
+
+def pack_mixed(x_grid: jnp.ndarray, part: Partition,
+               full_ids: jnp.ndarray, low_ids: jnp.ndarray,
+               x_low_grid: Optional[jnp.ndarray] = None
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Build the mixed-resolution window sequence.
+
+    x_grid: (B, Hp, Wp, C) full-res patch grid (embeddings or raw patch
+    pixels).  x_low_grid: optional precomputed (B, Hp/d, Wp/d, C) low-res
+    grid (e.g. patchified from device-downsampled pixels); derived by
+    average pooling when omitted.
+
+    Returns (tokens (B, n_tokens, C), windows (B, n_windows, w^2, C) view).
+    """
+    w = part.window
+    regions = grid_to_region_windows(x_grid, part)        # B,nR,d^2,w^2,C
+    if x_low_grid is None:
+        x_low_grid = downsample_grid(x_grid, part.downsample)
+    low_windows = low_grid_to_windows(x_low_grid, part)   # B,nR,w^2,C
+
+    full_part = regions[:, full_ids]                      # B,nF,d^2,w^2,C
+    B, nF = full_part.shape[0], full_part.shape[1]
+    full_part = full_part.reshape(B, -1, w * w, full_part.shape[-1])
+    low_part = low_windows[:, low_ids]                    # B,nL,w^2,C
+    windows = jnp.concatenate([full_part, low_part], axis=1)
+    tokens = windows.reshape(B, -1, windows.shape[-1])
+    return tokens, windows
+
+
+def pack_positions(pos_grid: jnp.ndarray, part: Partition,
+                   full_ids: jnp.ndarray, low_ids: jnp.ndarray
+                   ) -> jnp.ndarray:
+    """Positional embeddings for the mixed sequence.
+
+    pos_grid: (Hp, Wp, D).  Low-res tokens receive the mean embedding of
+    the d x d patch group they represent (paper: global positional
+    embeddings added to both sets of tokens).
+    """
+    tokens, _ = pack_mixed(pos_grid[None], part, full_ids, low_ids)
+    return tokens[0]
+
+
+# ---------------------------------------------------------------------------
+# restoration (paper §III-B)
+
+
+def restore_full(tokens: jnp.ndarray, part: Partition,
+                 full_ids: jnp.ndarray, low_ids: jnp.ndarray) -> jnp.ndarray:
+    """Restore the full-resolution window-blocked sequence at an RP.
+
+    tokens: (B, n_tokens, D) mixed sequence (window-blocked layout).
+    Low-region windows are upsampled nearest-neighbour: each low token
+    broadcasts to the d x d patches it summarised.  Output: (B, Hp*Wp, D)
+    window-blocked full sequence (region-major, d^2 windows per region).
+    """
+    B, _, D = tokens.shape
+    w, d = part.window, part.downsample
+    nF = part.n_regions - low_ids.shape[0]
+    n_full_tok = nF * part.tokens_full_region
+    full_part = tokens[:, :n_full_tok].reshape(B, nF, d * d, w * w, D)
+    low_part = tokens[:, n_full_tok:].reshape(B, -1, w, w, D)
+
+    # nearest-neighbour upsample low windows: (w, w) -> (r, r) -> (d^2, w^2)
+    up = jnp.repeat(jnp.repeat(low_part, d, axis=2), d, axis=3)  # B,nL,r,r,D
+    up = up.reshape(B, up.shape[1], d, w, d, w, D)
+    up = up.transpose(0, 1, 2, 4, 3, 5, 6).reshape(
+        B, up.shape[1], d * d, w * w, D)
+
+    out = jnp.zeros((B, part.n_regions, d * d, w * w, D), tokens.dtype)
+    out = out.at[:, full_ids].set(full_part)
+    out = out.at[:, low_ids].set(up)        # dup padded ids: last write wins
+    return out.reshape(B, part.grid_h * part.grid_w, D)
+
+
+def full_seq_to_grid(tokens: jnp.ndarray, part: Partition) -> jnp.ndarray:
+    """Window-blocked full sequence (B, Hp*Wp, D) -> (B, Hp, Wp, D)."""
+    B, _, D = tokens.shape
+    x = tokens.reshape(B, part.n_regions, part.windows_per_full_region,
+                       part.window * part.window, D)
+    return region_windows_to_grid(x, part)
+
+
+def grid_to_full_seq(grid: jnp.ndarray, part: Partition) -> jnp.ndarray:
+    """(B, Hp, Wp, D) -> window-blocked full sequence (B, Hp*Wp, D)."""
+    x = grid_to_region_windows(grid, part)
+    B, nR, dd, ww, D = x.shape
+    return x.reshape(B, nR * dd * ww, D)

@@ -1,0 +1,155 @@
+"""Inference-compatible region partitioning (paper §III-A).
+
+The frame is tiled into *decision regions* of ``r x r`` image patches with
+``r = w * d`` (w = window size of the backbone's window attention, d = the
+downsampling factor).  This guarantees:
+
+  * a FULL-resolution region contributes exactly ``d**2`` attention windows
+    of ``w x w`` patch tokens;
+  * a DOWNSAMPLED region (pixels shrunk by d, then patchified) contributes
+    exactly ONE ``w x w`` window.
+
+so any mixed-resolution token sequence tiles perfectly into windows — the
+key structural invariant that lets a *pre-trained* windowed ViT process it
+with no architecture change (paper Fig. 3).
+
+Token layout convention used throughout this repo (TPU-native, DESIGN.md):
+sequences are **window-blocked** — a sequence of whole windows, each
+flattened row-major to ``w*w`` tokens.  Window attention is then a pure
+reshape (no gather); gathers appear only at pack (input) and restoration.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Partition:
+    """Static geometry of the decision-region grid."""
+    grid_h: int          # patch-grid height  (e.g. 64 for 1024px / 16)
+    grid_w: int          # patch-grid width
+    window: int          # w: attention window size in patches
+    downsample: int      # d
+
+    @property
+    def region(self) -> int:                       # r = w * d, in patches
+        return self.window * self.downsample
+
+    @property
+    def regions_h(self) -> int:
+        return self.grid_h // self.region
+
+    @property
+    def regions_w(self) -> int:
+        return self.grid_w // self.region
+
+    @property
+    def n_regions(self) -> int:
+        return self.regions_h * self.regions_w
+
+    @property
+    def tokens_full_region(self) -> int:           # r*r patches
+        return self.region * self.region
+
+    @property
+    def tokens_low_region(self) -> int:            # one w*w window
+        return self.window * self.window
+
+    @property
+    def windows_per_full_region(self) -> int:
+        return self.downsample * self.downsample
+
+    def validate(self) -> None:
+        if self.grid_h % self.region or self.grid_w % self.region:
+            raise ValueError(
+                f"patch grid {self.grid_h}x{self.grid_w} not divisible by "
+                f"decision region r={self.region} (= w{self.window} * "
+                f"d{self.downsample})")
+
+    # ------------------------------------------------------------------
+    def n_tokens(self, n_low: int) -> int:
+        """Total mixed-resolution token count for ``n_low`` low regions."""
+        n_full = self.n_regions - n_low
+        return (n_full * self.tokens_full_region
+                + n_low * self.tokens_low_region)
+
+    def n_windows(self, n_low: int) -> int:
+        n_full = self.n_regions - n_low
+        return n_full * self.windows_per_full_region + n_low
+
+
+def make_partition(grid_h: int, grid_w: int, window: int,
+                   downsample: int) -> Partition:
+    p = Partition(grid_h, grid_w, window, downsample)
+    p.validate()
+    return p
+
+
+# ---------------------------------------------------------------------------
+# token bucketing (DESIGN.md: XLA cannot retrace per frame — N_d is rounded
+# to a small static bucket set so the server compiles a handful of shapes)
+
+
+def bucket_n_low(n_low: int, n_regions: int, n_buckets: int = 4) -> int:
+    """Round ``n_low`` DOWN to the nearest bucket edge.
+
+    Rounding down downsamples *fewer* regions than requested — the safe
+    direction for accuracy (some regions selected for downsampling stay
+    full-res).  Buckets: 0, R/n, 2R/n, ..., R (R = n_regions).
+    """
+    if n_low <= 0:
+        return 0
+    step = max(n_regions // n_buckets, 1)
+    return min((n_low // step) * step, n_regions)
+
+
+def bucket_set(n_regions: int, n_buckets: int = 4) -> Tuple[int, ...]:
+    step = max(n_regions // n_buckets, 1)
+    edges = list(range(0, n_regions + 1, step))
+    if edges[-1] != n_regions:
+        edges.append(n_regions)
+    return tuple(edges)
+
+
+# ---------------------------------------------------------------------------
+# mask <-> region-id packing helpers (host-side, numpy: these produce the
+# *data* gather indices; shapes depend only on the static bucket)
+
+
+def mask_to_region_ids(mask: np.ndarray, n_low: int) -> Tuple[np.ndarray,
+                                                              np.ndarray]:
+    """Split region ids into (full_ids, low_ids) with static sizes.
+
+    ``mask``: (n_regions,) binary; 1 = downsample.  ``n_low`` is the static
+    bucket: if the mask selects more, the extras (highest ids) stay full;
+    if fewer, low_ids is padded by *repeating* its last entry — repeated
+    regions are packed twice but restored once (harmless duplicates cost
+    only their window of compute).
+    """
+    mask = np.asarray(mask).reshape(-1).astype(bool)
+    n_regions = mask.shape[0]
+    low = np.nonzero(mask)[0]
+    if len(low) >= n_low:
+        kept_low = low[:n_low]
+    else:
+        pad = np.full((n_low - len(low),), low[-1] if len(low) else 0,
+                      dtype=np.int64)
+        kept_low = np.concatenate([low, pad]) if len(low) else pad
+    low_set = set(kept_low[:min(len(low), n_low)].tolist())
+    full = np.array([i for i in range(n_regions) if i not in low_set],
+                    dtype=np.int64)
+    assert len(full) == n_regions - min(len(low), n_low)
+    # static size: n_regions - n_low full slots; if mask had fewer lows,
+    # trim extras from the tail (they are covered by the padded low dups).
+    full = full[:n_regions - n_low]
+    return full.astype(np.int32), kept_low.astype(np.int32)
+
+
+def region_ids_to_mask(low_ids: np.ndarray, n_regions: int) -> np.ndarray:
+    m = np.zeros((n_regions,), np.int32)
+    m[np.asarray(low_ids, np.int64)] = 1
+    return m

@@ -1,0 +1,352 @@
+"""1-D sequence adaptation of the paper's mixed-resolution technique
+(DESIGN.md §4): **mixed-granularity prefill** for decoder LMs.
+
+Transposition of §III to sequences:
+  decision region  -> span of r = w*d consecutive tokens
+  low-res region   -> the span's d-token groups mean-pooled (r -> w tokens)
+  window attention -> (causal attention over the shorter mixed sequence)
+  restoration (RP) -> broadcast pooled hidden states back to all covered
+                      positions between backbone subsets; KV-cache entries
+                      of pre-RP layers are restored the same way, so decode
+                      continues with a full-resolution cache.
+
+Shapes are static given the bucketed ``n_low`` (how many spans are pooled);
+WHICH spans is runtime data carried by three gather-index arrays built
+host-side by :func:`build_seq_pack`.
+
+The mixed sequence preserves temporal order, so index-causality inside the
+standard causal attention == position-causality, and pre-trained weights
+apply unchanged — the 1-D analogue of the paper's "no retraining" claim.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+from repro.models.transformer import LOCAL, ParallelCtx
+
+
+@dataclass(frozen=True)
+class SeqPartition:
+    seq_len: int
+    window: int            # w: tokens per pooled span after pooling
+    downsample: int        # d: pooling factor
+
+    @property
+    def span(self) -> int:                    # r = w * d tokens per span
+        return self.window * self.downsample
+
+    @property
+    def n_spans(self) -> int:
+        return self.seq_len // self.span
+
+    def validate(self):
+        if self.seq_len % self.span:
+            raise ValueError(f"seq_len {self.seq_len} % span {self.span}")
+
+    def n_tokens(self, n_low: int) -> int:
+        return self.seq_len - n_low * (self.span - self.window)
+
+
+def seq_partition(cfg: ModelConfig, seq_len: int) -> SeqPartition:
+    m = cfg.mixed_res
+    p = SeqPartition(seq_len, m.window, m.downsample)
+    p.validate()
+    return p
+
+
+def layers_before_rp(cfg: ModelConfig, beta: int, n_layers: int) -> int:
+    """Number of leading backbone layers run at mixed granularity."""
+    n_sub = cfg.mixed_res.n_subsets
+    assert 0 <= beta <= n_sub
+    return (beta * n_layers) // n_sub
+
+
+# ---------------------------------------------------------------------------
+# host-side pack-plan construction (numpy; outputs are DATA for the jitted fn)
+
+
+def build_seq_pack(span_mask: np.ndarray, n_low: int, part: SeqPartition
+                   ) -> Dict[str, np.ndarray]:
+    """Build gather plans for a given span downsampling mask.
+
+    span_mask: (n_spans,) binary, 1 = pool this span.  ``n_low`` is the
+    static bucket; extra selections are dropped (first n_low kept), missing
+    ones are filled from the EARLIEST unselected spans (old context is the
+    least fresh — the 1-D analogue of preferring background regions).
+
+    Returns int32 arrays:
+      mix_idx     (T_mix,) index into concat([tokens (T), pooled (T/d)])
+      pos_mix     (T_mix,) RoPE position of each mixed slot
+      restore_idx (T,)     mixed slot covering each full position
+      low_spans   (n_low,) the spans actually pooled
+    """
+    part.validate()
+    mask = np.asarray(span_mask).reshape(-1).astype(bool).copy()
+    assert mask.shape[0] == part.n_spans
+    sel = np.nonzero(mask)[0]
+    if len(sel) > n_low:
+        mask[sel[n_low:]] = False
+    elif len(sel) < n_low:
+        unsel = np.nonzero(~mask)[0]
+        mask[unsel[:n_low - len(sel)]] = True
+    low_spans = np.nonzero(mask)[0].astype(np.int32)
+
+    r, w, d = part.span, part.window, part.downsample
+    T = part.seq_len
+    mix_idx, pos_mix, restore_idx = [], [], np.zeros((T,), np.int32)
+    for s in range(part.n_spans):
+        t0 = s * r
+        if mask[s]:
+            g0 = t0 // d
+            for g in range(w):
+                slot = len(mix_idx)
+                mix_idx.append(T + g0 + g)               # pooled source
+                pos_mix.append(t0 + g * d + (d - 1) // 2)
+                restore_idx[t0 + g * d: t0 + (g + 1) * d] = slot
+        else:
+            for t in range(t0, t0 + r):
+                slot = len(mix_idx)
+                mix_idx.append(t)
+                pos_mix.append(t)
+                restore_idx[t] = slot
+    assert len(mix_idx) == part.n_tokens(n_low)
+    return {
+        "mix_idx": np.asarray(mix_idx, np.int32),
+        "pos_mix": np.asarray(pos_mix, np.int32),
+        "restore_idx": restore_idx,
+        "low_spans": low_spans,
+    }
+
+
+# ---------------------------------------------------------------------------
+# jitted packing / restoration primitives
+
+
+def pool_groups(x: jnp.ndarray, d: int) -> jnp.ndarray:
+    """Mean-pool groups of d along time: (B, T, D) -> (B, T/d, D)."""
+    B, T, D = x.shape
+    return jnp.mean(x.reshape(B, T // d, d, D).astype(jnp.float32),
+                    axis=2).astype(x.dtype)
+
+
+def pack_sequence(x: jnp.ndarray, mix_idx: jnp.ndarray, d: int) -> jnp.ndarray:
+    """(B, T, D) -> (B, T_mix, D) mixed-granularity sequence."""
+    z = jnp.concatenate([x, pool_groups(x, d)], axis=1)
+    return jnp.take(z, mix_idx, axis=1)
+
+
+def restore_sequence(x_mix: jnp.ndarray, restore_idx: jnp.ndarray
+                     ) -> jnp.ndarray:
+    """Broadcast-restore: (B, T_mix, D) -> (B, T, D)."""
+    return jnp.take(x_mix, restore_idx, axis=1)
+
+
+def _restore_cache_time(leaf: jnp.ndarray, restore_idx: jnp.ndarray,
+                        time_axis: int) -> jnp.ndarray:
+    """Rewrite cache leaf so [0, T) holds restored entries.
+
+    leaf holds mixed-granularity entries at [0, T_mix) along time_axis.
+    """
+    T = restore_idx.shape[0]
+    gathered = jnp.take(leaf, restore_idx, axis=time_axis)     # len T
+    return jax.lax.dynamic_update_slice_in_dim(leaf, gathered, 0, time_axis)
+
+
+def restore_kv_caches(caches, restore_idx, n_restore_layers: Dict[str, int]):
+    """Restore the time axis of pre-RP layers' cache entries.
+
+    caches: {"<kind>_blocks": stacked cache pytree (L, B, S, ...)} — the
+    time axis is 2 for GQA k/v (L,B,S,KV,Dh) and MLA (L,B,S,rank).
+    n_restore_layers: per stack name, how many leading layers are pre-RP.
+    """
+    out = {}
+    for name, tree in caches.items():
+        k = n_restore_layers.get(name, 0)
+        if k <= 0:
+            out[name] = tree
+            continue
+
+        def fix(leaf):
+            head = _restore_cache_time(leaf[:k], restore_idx, time_axis=2)
+            return jax.lax.dynamic_update_slice_in_dim(
+                leaf, head.astype(leaf.dtype), 0, 0)
+
+        out[name] = jax.tree_util.tree_map(fix, tree)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# generic mixed-granularity forward / prefill for scanned-decoder families
+# (dense / moe / vlm / mla all go through transformer.run_blocks)
+
+
+def _split_layers(cfg: ModelConfig, params, beta: int) -> int:
+    return layers_before_rp(cfg, beta, cfg.n_layers)
+
+
+def mixed_forward_hidden(cfg: ModelConfig, params, tokens, pack, beta: int,
+                         ctx: ParallelCtx = LOCAL, image_embeds=None):
+    """Training/eval forward with mixed-granularity lower layers.
+
+    pack: dict of device arrays from build_seq_pack.  beta=0 -> identical
+    to the plain forward (restore-at-input degenerates to full res).
+    """
+    x = tfm.embed_inputs(cfg, params, tokens, image_embeds)
+    B, T, _ = x.shape
+    Lb = _split_layers(cfg, params, beta)
+    d = cfg.mixed_res.downsample
+    aux = jnp.zeros((), jnp.float32)
+    if Lb > 0:
+        xm = pack_sequence(x, pack["mix_idx"], d)
+        pos = jnp.broadcast_to(pack["pos_mix"][None], (B, xm.shape[1]))
+        xm = ctx.hidden(xm)
+        xm, _, a1 = tfm.run_blocks(cfg, params, xm, pos, 0, Lb, ctx)
+        aux = aux + a1
+        x = restore_sequence(xm, pack["restore_idx"])
+    positions = jnp.broadcast_to(jnp.arange(T)[None, :], (B, T))
+    x = ctx.hidden(x)
+    x, _, a2 = tfm.run_blocks(cfg, params, x, positions, Lb, cfg.n_layers, ctx)
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    return x, aux + a2
+
+
+def mixed_prefill(cfg: ModelConfig, params, tokens, pack, beta: int, caches,
+                  ctx: ParallelCtx = LOCAL, image_embeds=None):
+    """Serving prefill with mixed-granularity lower layers.
+
+    Pre-RP layers attend over the pooled sequence (the latency win) and
+    write pooled K/V; those cache entries are then broadcast-restored so
+    the returned caches are FULL-resolution for every layer — decode
+    proceeds exactly as after a normal prefill.
+    """
+    x = tfm.embed_inputs(cfg, params, tokens, image_embeds)
+    B, T, _ = x.shape
+    Lb = _split_layers(cfg, params, beta)
+    d = cfg.mixed_res.downsample
+    aux = jnp.zeros((), jnp.float32)
+
+    if Lb > 0:
+        xm = pack_sequence(x, pack["mix_idx"], d)
+        pos = jnp.broadcast_to(pack["pos_mix"][None], (B, xm.shape[1]))
+        xm = ctx.hidden(xm)
+        xm, caches, a1 = tfm.run_blocks(cfg, params, xm, pos, 0, Lb, ctx,
+                                        caches=caches)
+        aux = aux + a1
+        x = restore_sequence(xm, pack["restore_idx"])
+        # how many leading layers of each homogeneous stack are pre-RP
+        n_restore = {}
+        off = 0
+        for kind, stack, n in tfm._block_stacks(cfg, params):
+            n_restore[f"{kind}_blocks"] = max(min(Lb - off, n), 0)
+            off += n
+        caches = restore_kv_caches(caches, pack["restore_idx"], n_restore)
+
+    positions = jnp.broadcast_to(jnp.arange(T)[None, :], (B, T))
+    x = ctx.hidden(x)
+    x, caches, a2 = tfm.run_blocks(cfg, params, x, positions, Lb,
+                                   cfg.n_layers, ctx, caches=caches)
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    return x, caches, aux + a2
+
+
+# ---------------------------------------------------------------------------
+# SSM family (linear-time backbone: pooling gives LINEAR savings only —
+# recorded as technique_gain="linear" in DESIGN.md §Arch-applicability)
+
+
+def mixed_forward_ssm(cfg: ModelConfig, params, tokens, pack, beta: int,
+                      ctx: ParallelCtx = LOCAL):
+    from repro.models import mamba2 as m2
+
+    x = L.embed_tokens(params["embed"], tokens)
+    B, T, _ = x.shape
+    Lb = _split_layers(cfg, params, beta)
+    d = cfg.mixed_res.downsample
+
+    def body(x, p):
+        h = L.apply_norm(cfg, p["ln"], x)
+        x = x + m2.mamba2_forward(cfg, p["mamba"], h)
+        x = ctx.hidden(x)
+        return x, None
+
+    if Lb > 0:
+        xm = pack_sequence(x, pack["mix_idx"], d)
+        sliced = jax.tree_util.tree_map(lambda a: a[:Lb],
+                                        params["mamba_blocks"])
+        xm, _ = jax.lax.scan(body, xm, sliced)
+        x = restore_sequence(xm, pack["restore_idx"])
+    rest = jax.tree_util.tree_map(lambda a: a[Lb:], params["mamba_blocks"])
+    x, _ = jax.lax.scan(body, x, rest)
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    return x, jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# whisper: encoder frame pooling (non-causal 1-D regions) — the decoder is
+# untouched; mixed-res applies to the 1500-frame encoder (DESIGN.md §4).
+
+
+def encode_mixed(cfg: ModelConfig, params, frames, pack, beta: int,
+                 ctx: ParallelCtx = LOCAL):
+    from repro.models import attention as attn
+
+    n_enc = cfg.encdec.n_encoder_layers
+    Lb = layers_before_rp(cfg, beta, n_enc)
+    d = cfg.mixed_res.downsample
+    B, T, D = frames.shape
+    pos_emb = L.sinusoidal_positions(T, D).astype(frames.dtype)
+    x = frames + pos_emb[None]
+
+    def body(x, p):
+        B_, T_, _ = x.shape
+        positions = jnp.zeros((B_, T_), jnp.int32)
+        h = L.apply_norm(cfg, p["ln1"], x)
+        x = x + attn.attention_forward(cfg, p["attn"], h, positions,
+                                       causal=False, rope=False)
+        x = x + L.apply_mlp(cfg, p["ffn"], L.apply_norm(cfg, p["ln2"], x))
+        x = ctx.hidden(x)
+        return x, None
+
+    if Lb > 0:
+        xm = pack_sequence(x, pack["mix_idx"], d)
+        head = jax.tree_util.tree_map(lambda a: a[:Lb], params["enc_blocks"])
+        xm, _ = jax.lax.scan(body, xm, head)
+        x = restore_sequence(xm, pack["restore_idx"])
+    tail = jax.tree_util.tree_map(lambda a: a[Lb:], params["enc_blocks"])
+    x, _ = jax.lax.scan(body, x, tail)
+    return L.apply_norm(cfg, params["enc_norm"], x)
+
+
+# ---------------------------------------------------------------------------
+# analytic FLOPs of the mixed prefill (latency model input, paper §IV-D)
+
+
+def prefill_flops(cfg: ModelConfig, seq_len: int, n_low: int,
+                  beta: int) -> float:
+    """Attention+MLP FLOPs for a mixed-granularity prefill (per batch el)."""
+    part = seq_partition(cfg, seq_len)
+    Lb = layers_before_rp(cfg, beta, cfg.n_layers)
+    Tm = part.n_tokens(n_low)
+    D, F = cfg.d_model, cfg.d_ff
+
+    def layer_flops(T):
+        proj = 2 * T * D * (cfg.q_dim + 2 * cfg.kv_dim) + \
+            2 * T * cfg.q_dim * D
+        att = 2 * 2 * T * T * cfg.q_dim / 2          # causal: half the pairs
+        if cfg.moe is not None:
+            f_eff = cfg.moe.top_k * cfg.moe.d_ff_expert + \
+                cfg.moe.n_shared_experts * cfg.moe.d_ff_expert
+            mlp = 3 * 2 * T * D * f_eff
+        else:
+            mlp = 3 * 2 * T * D * F
+        return proj + att + mlp
+
+    return Lb * layer_flops(Tm) + (cfg.n_layers - Lb) * layer_flops(seq_len)

@@ -1,0 +1,223 @@
+"""ViTDet-style dense-prediction backbone with dynamic mixed-resolution
+inference (the paper's case-study model, §III).
+
+Structure (ViTDet, Li et al. 2022): ``n_layers`` pre-norm ViT blocks split
+into N subsets of M blocks; within a subset the first M-1 blocks use
+non-overlapping window attention, the last uses global attention.
+
+Mixed-resolution inference: the image is packed into a window-blocked
+mixed sequence (core.mixed_res).  At restoration point ``beta``:
+  beta = 0          restore immediately after patch embedding (paper's
+                    "Subset 0" special case — upsampled input);
+  beta = k (1..N)   restore inside subset k (1-indexed), between its last
+                    window block and its global block.
+The output is always a full-resolution (B, Hp, Wp, D) feature map, so the
+dense head is untouched — the paper's key compatibility property.
+
+Simplification vs. the released ViTDet (recorded in DESIGN.md): no
+relative-position bias inside attention (absolute learned pos-emb only).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import det_head as dh
+from repro.core import mixed_res as mr
+from repro.core.partition import Partition, make_partition
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+
+def vit_partition(cfg: ModelConfig) -> Partition:
+    v = cfg.vit
+    grid_h = v.img_size[0] // v.patch_size
+    grid_w = v.img_size[1] // v.patch_size
+    d = cfg.mixed_res.downsample if cfg.mixed_res else 2
+    return make_partition(grid_h, grid_w, v.window_size, d)
+
+
+def blocks_per_subset(cfg: ModelConfig) -> int:
+    assert cfg.n_layers % cfg.vit.n_subsets == 0
+    return cfg.n_layers // cfg.vit.n_subsets
+
+
+# ---------------------------------------------------------------------------
+# params
+
+
+def init_vitdet_params(cfg: ModelConfig, key, dtype=jnp.float32) -> Dict:
+    v = cfg.vit
+    part = vit_partition(cfg)
+    ks = jax.random.split(key, cfg.n_layers + 3)
+    patch_dim = v.patch_size * v.patch_size * 3
+
+    def block(k):
+        kk = jax.random.split(k, 2)
+        return {
+            "ln1": L.init_norm(cfg, dtype),
+            "attn": attn.init_attention(cfg, kk[0], dtype),
+            "ln2": L.init_norm(cfg, dtype),
+            "ffn": L.init_mlp(cfg, kk[1], dtype),
+        }
+
+    return {
+        "patch_embed": {
+            "w": L.dense_init(ks[0], (patch_dim, cfg.d_model), dtype),
+            "b": jnp.zeros((cfg.d_model,), dtype),
+        },
+        "pos_emb": L.embed_init(ks[1], (part.grid_h, part.grid_w,
+                                        cfg.d_model), dtype),
+        "blocks": [block(ks[2 + i]) for i in range(cfg.n_layers)],
+        "final_norm": L.init_norm(cfg, dtype),
+        "head": dh.init_det_head(cfg, ks[-1], dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# patchify (conv-free: reshape + matmul, MXU-friendly)
+
+
+def patchify(image: jnp.ndarray, patch: int) -> jnp.ndarray:
+    """(B, H, W, 3) -> (B, H/p, W/p, p*p*3) raw patch grid."""
+    B, H, W, C = image.shape
+    x = image.reshape(B, H // patch, patch, W // patch, patch, C)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(B, H // patch, W // patch, patch * patch * C)
+
+
+def embed_patches(cfg: ModelConfig, params, image: jnp.ndarray,
+                  downsample: int = 1) -> jnp.ndarray:
+    """Patchify (optionally pixel-downsampled) image and project to D."""
+    if downsample > 1:
+        image = mr.downsample_grid(image, downsample)
+    p = params["patch_embed"]
+    patches = patchify(image, cfg.vit.patch_size)
+    return patches @ p["w"] + p["b"]
+
+
+# ---------------------------------------------------------------------------
+# blocks
+
+
+def _vit_block(cfg: ModelConfig, p, x, *, window: int) -> jnp.ndarray:
+    """x: (B, T, D) window-blocked.  window=0 -> global attention."""
+    B, T, D = x.shape
+    h = L.apply_norm(cfg, p["ln1"], x)
+    positions = jnp.zeros((B, T), jnp.int32)      # no RoPE in ViT
+    a = attn.attention_forward(cfg, p["attn"], h, positions,
+                               causal=False, window=window, rope=False)
+    x = x + a
+    h = L.apply_norm(cfg, p["ln2"], x)
+    return x + L.apply_mlp(cfg, p["ffn"], h)
+
+
+def forward_features(cfg: ModelConfig, params, image: jnp.ndarray,
+                     full_ids: Optional[jnp.ndarray] = None,
+                     low_ids: Optional[jnp.ndarray] = None,
+                     beta: int = 0) -> jnp.ndarray:
+    """Backbone forward.  Returns the (B, Hp, Wp, D) full-res feature map.
+
+    full_ids/low_ids: static-length region id arrays (see core.partition);
+    None or empty low_ids -> plain full-resolution inference.
+    beta: restoration point, 0..n_subsets (static).
+    """
+    part = vit_partition(cfg)
+    v = cfg.vit
+    M = blocks_per_subset(cfg)
+    N = v.n_subsets
+    w2 = part.window * part.window
+    mixed = low_ids is not None and low_ids.shape[0] > 0 and beta > 0
+    assert 0 <= beta <= N
+
+    x_full = embed_patches(cfg, params, image)                # B,Hp,Wp,D
+    pos = params["pos_emb"]
+    if mixed:
+        x_low = embed_patches(cfg, params, image, part.downsample)
+        tokens, _ = mr.pack_mixed(x_full, part, full_ids, low_ids,
+                                  x_low_grid=x_low)
+        tokens = tokens + mr.pack_positions(pos, part, full_ids, low_ids)
+    else:
+        if low_ids is not None and low_ids.shape[0] > 0:      # beta == 0
+            x_low = embed_patches(cfg, params, image, part.downsample)
+            packed, _ = mr.pack_mixed(x_full, part, full_ids, low_ids,
+                                      x_low_grid=x_low)
+            tokens = mr.restore_full(packed, part, full_ids, low_ids)
+        else:
+            tokens = mr.grid_to_full_seq(x_full, part)
+        tokens = tokens + mr.grid_to_full_seq(pos[None], part)[0]
+
+    def win_attn(x):
+        return _vit_block(cfg, params_blk, x, window=w2)
+
+    restored = not mixed
+    for s in range(N):
+        for m in range(M):
+            idx = s * M + m
+            params_blk = params["blocks"][idx]
+            is_global = m == M - 1
+            if is_global and not restored and beta == s + 1:
+                tokens = mr.restore_full(tokens, part, full_ids, low_ids)
+                restored = True
+            tokens = _vit_block(cfg, params_blk, tokens,
+                                window=0 if is_global else w2)
+    if not restored:      # beta == N restores before the LAST global block,
+        raise AssertionError("unreachable: beta <= N always restores")
+
+    tokens = L.apply_norm(cfg, params["final_norm"], tokens)
+    return mr.full_seq_to_grid(tokens, part)
+
+
+def forward_det(cfg: ModelConfig, params, image,
+                full_ids=None, low_ids=None, beta: int = 0):
+    """Full model: backbone + dense head.  Returns det_head outputs."""
+    feats = forward_features(cfg, params, image, full_ids, low_ids, beta)
+    return dh.det_head_forward(cfg, params["head"], feats)
+
+
+# ---------------------------------------------------------------------------
+# FLOP accounting (used by the latency model and Fig. 5 benchmark)
+
+
+def backbone_flops(cfg: ModelConfig, n_low: int, beta: int) -> float:
+    """Analytic attention+MLP FLOPs of the backbone for a given config.
+
+    Mirrors forward_features' block schedule; used to parameterise the
+    inference-delay linear models LM^inf_beta(N_d) (paper §IV-D).
+    """
+    part = vit_partition(cfg)
+    D, F = cfg.d_model, cfg.d_ff
+    M = blocks_per_subset(cfg)
+    N = cfg.vit.n_subsets
+    w2 = part.window * part.window
+
+    n_mixed = part.n_tokens(n_low)
+    n_full = part.grid_h * part.grid_w
+    nw_mixed = part.n_windows(n_low)
+    nw_full = part.n_regions * part.windows_per_full_region
+
+    def block_flops(n_tok, n_win):
+        proj = 4 * 2 * n_tok * D * D                     # qkvo projections
+        if n_win:                                        # window attention
+            att = 2 * 2 * n_win * w2 * w2 * D
+        else:                                            # global attention
+            att = 2 * 2 * n_tok * n_tok * D
+        mlp = 2 * 2 * n_tok * D * F
+        return proj + att + mlp
+
+    total = 0.0
+    restored = not (n_low > 0 and beta > 0)
+    for s in range(N):
+        for m in range(M):
+            is_global = m == M - 1
+            if is_global and not restored and beta == s + 1:
+                restored = True
+            if restored:
+                total += block_flops(n_full, 0 if is_global else nw_full)
+            else:
+                total += block_flops(n_mixed, 0 if is_global else nw_mixed)
+    return total

@@ -1,0 +1,72 @@
+"""Synthetic 4G/5G uplink traces matching the paper's trace statistics
+(§VI-A): 300 s at 1 s resolution; 4G mean uplink 10.4–36.4 Mbps, 5G
+12.2–135.5 Mbps; mean RTT ~39 ms (4G) / ~34 ms (5G).
+
+AR(1) log-throughput with occasional deep fades (handover/blockage),
+deterministic per (kind, index).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Tuple
+
+import numpy as np
+
+
+@dataclass
+class NetworkTrace:
+    name: str
+    kind: str                 # "4g" | "5g"
+    tput_bps: np.ndarray      # (T,) per-second uplink throughput
+    rtt_s: np.ndarray         # (T,) per-second RTT
+
+    def at(self, t: float) -> Tuple[float, float]:
+        i = min(int(t), len(self.tput_bps) - 1)
+        return float(self.tput_bps[i]), float(self.rtt_s[i])
+
+    @property
+    def mean_mbps(self) -> float:
+        return float(self.tput_bps.mean() / 1e6)
+
+
+def make_trace(kind: str, index: int, duration_s: int = 300) -> NetworkTrace:
+    rng = np.random.default_rng(hash((kind, index)) % 2 ** 32)
+    if kind == "4g":
+        mean_mbps = rng.uniform(10.4, 36.4)
+        rtt_mean = 0.039
+        vol = 0.25
+    else:
+        mean_mbps = rng.uniform(12.2, 135.5)
+        rtt_mean = 0.034
+        vol = 0.35
+
+    # AR(1) in log space around the mean
+    log_mu = np.log(mean_mbps)
+    x = np.empty(duration_s)
+    x[0] = log_mu
+    phi = 0.92
+    sigma = vol * np.sqrt(1 - phi ** 2)
+    for t in range(1, duration_s):
+        x[t] = log_mu + phi * (x[t - 1] - log_mu) + rng.normal(0, sigma)
+    tput = np.exp(x)
+
+    # deep fades: 1-4 events of 2-6 s at 10-30% capacity
+    for _ in range(rng.integers(1, 5)):
+        t0 = rng.integers(0, duration_s - 6)
+        dur = rng.integers(2, 7)
+        tput[t0:t0 + dur] *= rng.uniform(0.1, 0.3)
+
+    rtt = np.clip(rtt_mean * (1.0 + 0.5 * (mean_mbps / tput - 1.0)),
+                  0.015, 0.5)
+    return NetworkTrace(name=f"{kind}-{index:02d}", kind=kind,
+                        tput_bps=tput * 1e6, rtt_s=rtt)
+
+
+def trace_set(n_per_kind: int = 30, duration_s: int = 300
+              ) -> List[NetworkTrace]:
+    """The evaluation trace set: n 4G + n 5G traces (paper: 30 + 30)."""
+    out = []
+    for kind in ("4g", "5g"):
+        out.extend(make_trace(kind, i, duration_s)
+                   for i in range(n_per_kind))
+    return out

@@ -1,0 +1,136 @@
+"""GPipe-style pipeline parallelism over a ``stage`` mesh axis.
+
+Alternative layout to the FSDP+TP production mesh (DESIGN.md §5): layers
+are partitioned into S contiguous stages; microbatches flow through the
+stages with activations handed off by ``lax.ppermute`` under shard_map.
+
+Schedule (GPipe, fill-drain): T = M + S - 1 ticks for M microbatches on
+S stages.  At tick t, stage s computes microbatch (t - s) when it is in
+range; activations move s -> s+1 between ticks.  Everything is a dense
+``lax.fori_loop`` over ticks — stages that would idle in the fill/drain
+phase compute on zeros and mask the result, which keeps the step a
+static-shape SPMD program (the TPU-native formulation; a dynamic
+schedule would retrace).
+
+Bubble fraction = (S - 1) / (M + S - 1) — the classic GPipe overhead,
+reported in the §Perf notes.
+
+The module is self-contained (used by its own test + benchmark); the
+40-cell dry-run keeps the FSDP+TP layout per DESIGN.md.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def stage_layers(n_layers: int, n_stages: int, stage: int) -> Tuple[int, int]:
+    """[lo, hi) layer range of ``stage`` under near-even partitioning."""
+    base = n_layers // n_stages
+    extra = n_layers % n_stages
+    lo = stage * base + min(stage, extra)
+    hi = lo + base + (1 if stage < extra else 0)
+    return lo, hi
+
+
+def bubble_fraction(n_micro: int, n_stages: int) -> float:
+    return (n_stages - 1) / (n_micro + n_stages - 1)
+
+
+def make_pipeline_fn(layer_fn: Callable, n_layers: int, n_stages: int,
+                     n_micro: int, axis: str = "stage") -> Callable:
+    """Build the shard_map body for a GPipe forward pass.
+
+    ``layer_fn(params_for_layer, x) -> x`` applies ONE layer; stacked
+    layer params have leading axis ``n_layers`` and are sharded over the
+    stage axis OUTSIDE this function (see ``pipeline_forward``).
+
+    Returns ``body(stage_params, x_micro) -> y_micro`` to be wrapped in
+    shard_map; ``x_micro``: (M, mb, T, D) microbatched input, sharded
+    over stages only virtually (every stage sees the full input but only
+    stage 0 consumes it; outputs are emitted by the last stage).
+    """
+    S, M = n_stages, n_micro
+
+    def body(stage_params, x_micro):
+        sid = jax.lax.axis_index(axis)
+        mb_shape = x_micro.shape[1:]
+
+        def apply_stage(x):
+            def layer_body(i, x):
+                p_i = jax.tree_util.tree_map(lambda a: a[i], stage_params)
+                return layer_fn(p_i, x)
+            n_local = jax.tree_util.tree_leaves(stage_params)[0].shape[0]
+            return jax.lax.fori_loop(0, n_local, layer_body, x)
+
+        def tick(t, carry):
+            inflight, outputs = carry
+            # stage s works on microbatch m = t - s when 0 <= m < M
+            m = t - sid
+            active = (m >= 0) & (m < M)
+            # stage 0 ingests microbatch m from the input; others use the
+            # handed-off activation
+            x_in = jnp.where(
+                sid == 0,
+                x_micro[jnp.clip(m, 0, M - 1)],
+                inflight)
+            y = apply_stage(x_in)
+            y = jnp.where(active, y, jnp.zeros_like(y))
+            # last stage emits its finished microbatch
+            is_last = sid == S - 1
+            emit = active & is_last
+            outputs = jax.lax.cond(
+                emit,
+                lambda o: jax.lax.dynamic_update_slice_in_dim(
+                    o, y[None], jnp.clip(m, 0, M - 1), axis=0),
+                lambda o: o,
+                outputs)
+            # hand activations s -> s+1 (ring permute; the wrap-around
+            # edge S-1 -> 0 carries zeros which stage 0 ignores)
+            inflight = jax.lax.ppermute(
+                y, axis, [(i, (i + 1) % S) for i in range(S)])
+            return (inflight, outputs)
+
+        inflight0 = jnp.zeros(mb_shape, x_micro.dtype)
+        outputs0 = jnp.zeros((M,) + mb_shape, x_micro.dtype)
+        _, outputs = jax.lax.fori_loop(0, M + S - 1, tick,
+                                       (inflight0, outputs0))
+        # only the last stage ever writes into `outputs` (emit masks the
+        # rest to zeros), so a psum over the stage axis broadcasts the
+        # finished microbatches back to every stage (replicated output)
+        return jax.lax.psum(outputs, axis)
+
+    return body
+
+
+def pipeline_forward(mesh: Mesh, layer_fn: Callable, stacked_params: Any,
+                     x: jnp.ndarray, n_micro: int,
+                     axis: str = "stage") -> jnp.ndarray:
+    """Run a GPipe forward pass of ``n_layers`` stacked layers.
+
+    stacked_params: pytree with leading layer axis L (sharded over
+    ``axis``); x: (B, T, D) with B % n_micro == 0.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    S = mesh.shape[axis]
+    L = jax.tree_util.tree_leaves(stacked_params)[0].shape[0]
+    assert L % S == 0, (L, S)
+    B = x.shape[0]
+    assert B % n_micro == 0, (B, n_micro)
+    mb = B // n_micro
+    x_micro = x.reshape((n_micro, mb) + x.shape[1:])
+
+    body = make_pipeline_fn(layer_fn, L, S, n_micro, axis)
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(axis), P()),       # params split by stage; x replicated
+        out_specs=P(),                 # replicated output
+        check_rep=False)
+    y_micro = fn(stacked_params, x_micro)
+    return y_micro.reshape((B,) + x.shape[1:])

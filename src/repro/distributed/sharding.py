@@ -1,0 +1,218 @@
+"""Parameter / activation / cache PartitionSpecs for every arch family.
+
+Layout (DESIGN.md §5):
+  * ``model`` axis: Megatron-style TP — attention heads & FFN hidden,
+    vocab-parallel embedding/logits, expert-parallel MoE slabs.
+  * ``data`` axis: FSDP — the non-TP dim of every large matrix is sharded
+    over data; XLA all-gathers per layer inside the scan body (overlapped).
+  * ``pod`` axis (multi-pod): pure data parallelism; batch is sharded over
+    ("pod", "data"), parameters are REPLICATED across pods so cross-pod
+    traffic is gradient all-reduce only (the term gradient compression
+    attacks).
+
+Uneven dims (e.g. phi-4's 24 heads on a 16-way model axis) are handled by
+GSPMD padding — divisibility is not required under pjit.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+STACK_KEYS = ("dense_blocks", "moe_blocks", "mamba_blocks", "enc_blocks",
+              "dec_blocks", "blocks")
+
+
+def fsdp_axis(mesh: Mesh) -> str:
+    return "data"
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Axes carrying the global batch."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def dp_size(mesh: Mesh) -> int:
+    return int(jnp.prod(jnp.array([mesh.shape[a] for a in dp_axes(mesh)])))
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+
+
+def _leaf_spec(names: Tuple[str, ...], ndim: int, cfg: ModelConfig) -> P:
+    """Spec for an UNSTACKED leaf identified by its path names."""
+    nm = names[-1]
+    ctx = names[:-1]
+    F, D_ = "data", "model"          # fsdp axis / tensor axis shorthands
+
+    if ndim <= 1:
+        # vectors: shard hidden-sized ones over model where unambiguous
+        if nm in ("conv_b",):
+            return P(D_)
+        return P()
+
+    if "moe" in ctx or nm == "router" or ndim == 3:
+        # MoE expert slabs (E, D, F') / (E, F', D): experts over model
+        if nm == "router":
+            return P(F, None)
+        if nm == "w_down":
+            return P(D_, None, F)
+        if nm in ("w_gate", "w_up"):
+            return P(D_, F, None)
+
+    if "shared" in ctx:              # deepseek shared experts = dense TP FFN
+        if nm == "w_down":
+            return P(D_, F)
+        return P(F, D_)
+
+    table = {
+        # embeddings
+        "tok": P(D_, F),                      # vocab-parallel
+        "dec_pos": P(None, F),
+        "pos_emb": P(None, None, None),
+        # attention (GQA)
+        "w_q": P(F, D_), "w_k": P(F, D_), "w_v": P(F, D_),
+        "w_o": P(D_, F),
+        # MLA
+        "w_dq": P(F, None), "w_uq": P(None, D_),
+        "w_dkv": P(F, None), "w_uk": P(None, D_), "w_uv": P(None, D_),
+        # MLP
+        "w_gate": P(F, D_), "w_up": P(F, D_), "w_down": P(D_, F),
+        # mamba
+        "w_in": P(F, D_), "w_out": P(D_, F), "conv_w": P(None, D_),
+        # heads / projectors
+        "w": P(F, D_),                        # lm_head.w (D, V)
+        "w1": P(None, D_), "w2": P(D_, F),
+        "b": P(),
+    }
+    if nm in table:
+        spec = table[nm]
+        return spec if len(spec) == ndim else P(*([None] * ndim))
+    return P(*([None] * ndim))
+
+
+def _axes_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        n = 1
+        for a in entry:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[entry]
+
+
+def fix_spec(mesh: Mesh, spec: P, shape: Tuple[int, ...]) -> P:
+    """Make ``spec`` valid for ``shape``: pjit in_shardings require every
+    sharded dim divisible by its axis size.  Offending axes are moved to
+    another (currently unsharded, divisible) dim, else dropped."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    homeless = []
+    for i, e in enumerate(entries):
+        if e is not None and shape[i] % _axes_size(mesh, e):
+            homeless.append(e)
+            entries[i] = None
+    for e in homeless:
+        # prefer TRAILING dims (contiguous minor axes reshard cheaply) and
+        # never dim 0 of >=4-d leaves — that is the scanned layer-stack
+        # dim, and sharding it forces a full remat copy every iteration
+        lo = 1 if len(shape) >= 4 else 0
+        for i in reversed(range(lo, len(entries))):
+            if entries[i] is None and shape[i] % _axes_size(mesh, e) == 0 \
+                    and shape[i] >= _axes_size(mesh, e):
+                entries[i] = e
+                break
+    return P(*entries)
+
+
+def fix_specs(mesh: Mesh, spec_tree: Any, shape_tree: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s, l: fix_spec(mesh, s, l.shape), spec_tree, shape_tree,
+        is_leaf=lambda s: isinstance(s, P))
+
+
+def param_specs(cfg: ModelConfig, params: Any,
+                mesh: Optional[Mesh] = None) -> Any:
+    """PartitionSpec pytree matching ``params`` (works on shapes too)."""
+
+    def walk(path, leaf):
+        names = tuple(
+            k.key if isinstance(k, jax.tree_util.DictKey) else str(k)
+            for k in path if not isinstance(k, jax.tree_util.SequenceKey))
+        shape = leaf.shape
+        stacked = any(n in STACK_KEYS for n in names) and \
+            cfg.family != "vit"
+        ndim = len(shape) - (1 if stacked else 0)
+        spec = _leaf_spec(names, ndim, cfg)
+        if stacked:
+            spec = P(None, *spec)
+        if mesh is not None:
+            spec = fix_spec(mesh, spec, shape)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(walk, params)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache specs
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, batch: Dict[str, Any],
+                shard_batch: bool = True) -> Dict[str, P]:
+    dp = dp_axes(mesh)
+    bspec = dp if shard_batch else None
+    out = {}
+    for k, v in batch.items():
+        out[k] = P(bspec, *([None] * (v.ndim - 1)))
+    return out
+
+
+def decode_state_specs(cfg: ModelConfig, mesh: Mesh, state: Any,
+                       shard_batch: bool = True) -> Any:
+    """Specs for KV caches / SSM states.
+
+    Layout: (L, B, S, KV, Dh) GQA; (L, B, S, rank) MLA; mamba states
+    (L, B, H, N, P) / conv (L, B, K-1, C).  Batch over dp axes when it is
+    large enough (decode_32k), otherwise (long_500k, B=1) the SEQUENCE
+    axis of attention caches is sharded over data — context-parallel
+    decode — and SSM states shard their head/channel axis over model.
+    """
+    dp = dp_axes(mesh)
+    bspec = dp if shard_batch else None
+    seq_spec = None if shard_batch else "data"   # context-parallel fallback
+
+    def walk(path, l):
+        names = tuple(
+            k.key if isinstance(k, jax.tree_util.DictKey) else ""
+            for k in path)
+        nd = l.ndim
+        if "ssm" in names and nd == 5:   # (L, B, H, N, P) mamba state
+            return P(None, bspec, "model", None, None)
+        if "conv" in names and nd == 4:  # (L, B, K-1, C)
+            return P(None, bspec, None, "model")
+        if names and names[-1] in ("k", "v") and nd == 5:
+            return P(None, bspec, seq_spec, "model", None)
+        if names and names[-1] == "c_kv" and nd == 4:   # MLA latent
+            return P(None, bspec, seq_spec, "model")
+        if names and names[-1] == "k_rope" and nd == 4:
+            return P(None, bspec, seq_spec, None)
+        if nd == 3:                      # whisper enc_out (B, S, D)
+            return P(bspec, None, None)
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(walk, state)
+
+
+# ---------------------------------------------------------------------------
+
+
+def to_named(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda s: isinstance(s, P))

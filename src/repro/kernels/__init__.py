@@ -1,0 +1,25 @@
+"""Pallas TPU kernels for the compute hot-spots of the system.
+
+Five kernels, each a package ``<name>/{kernel.py, ops.py, ref.py}``:
+
+  window_attention   ViTDet window attention over the window-blocked
+                     mixed-resolution sequence — the paper's §III hot path.
+  flash_attention    global attention (ViTDet global blocks, LM prefill):
+                     online-softmax tiling, GQA-aware.
+  decode_attention   one-token GQA decode against a long KV cache
+                     (flash-decode style blocked reduction over the cache).
+  ssd_scan           Mamba-2 SSD: intra-chunk quadratic form + carried
+                     inter-chunk state, sequential grid over chunks.
+  mixed_res_pool     d x d average-pool patch downsampling (mixed-res
+                     packing hot spot, §III-A).
+
+TPU is the TARGET (pl.pallas_call + BlockSpec VMEM tiling, MXU-aligned
+block shapes); on this CPU container every kernel is validated with
+``interpret=True`` against its ``ref.py`` pure-jnp oracle
+(tests/test_kernels.py sweeps shapes and dtypes).
+
+The jnp model code paths remain the default for dry-run lowering (XLA
+cost analysis reads the jnp HLO); ``ops.py`` wrappers are the swap-in
+entry points on real TPU hardware (e.g. ``mamba2_forward(...,
+use_kernel=True)``).
+"""

@@ -1,0 +1,52 @@
+"""jit'd entry point for the decode attention kernel.
+
+Folds the H = KV x G query heads into per-kv-head groups (the kernel's
+matmul rows), pads G to sublane granularity and S to the cache block,
+and dispatches with interpret mode off-TPU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention import kernel as K
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "bs", "interpret"))
+def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     kv_len: jnp.ndarray, *, scale: Optional[float] = None,
+                     bs: int = K.DEFAULT_BS,
+                     interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Drop-in for the decode path of models.attention (sdpa with kv_len).
+
+    q: (B, 1, H, Dh) single-token queries; k/v: (B, S, KV, Dh) cache;
+    kv_len: (B,) int32 valid lengths.  Returns (B, 1, H, Dh).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, _, H, Dh = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = Dh ** -0.5 if scale is None else scale
+
+    Gp = max(8, ((G + 7) // 8) * 8)
+    bs_ = min(bs, max(8, S))
+    pad_s = (-S) % bs_
+
+    qg = q.reshape(B, KV, G, Dh)
+    if Gp != G:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, Gp - G), (0, 0)))
+    kt = jnp.moveaxis(k, 2, 1)                        # (B, KV, S, Dh)
+    vt = jnp.moveaxis(v, 2, 1)
+    if pad_s:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_s), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_s), (0, 0)))
+    # padded cache rows sit beyond kv_len so the in-kernel mask drops them
+
+    out = K.decode_attention_kernel(qg, kt, vt, kv_len.astype(jnp.int32),
+                                    scale=scale, bs=bs_,
+                                    interpret=interpret)
+    return out[:, :, :G, :].reshape(B, 1, H, Dh)

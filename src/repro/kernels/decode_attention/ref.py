@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for decode attention (dense masked softmax)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+def decode_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                         kv_len: jnp.ndarray,
+                         scale: Optional[float] = None) -> jnp.ndarray:
+    """q: (B, 1, H, Dh); k/v: (B, S, KV, Dh); kv_len: (B,) valid lengths.
+    Returns (B, 1, H, Dh)."""
+    B, _, H, Dh = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = Dh ** -0.5 if scale is None else scale
+    qg = q.reshape(B, KV, G, Dh).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k.astype(jnp.float32)) * scale
+    valid = jnp.arange(S)[None, :] < kv_len[:, None]            # (B, S)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, 1, H, Dh).astype(q.dtype)

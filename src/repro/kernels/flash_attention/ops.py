@@ -1,0 +1,61 @@
+"""jit'd entry point for the flash attention kernel.
+
+Handles the (B, T, H, Dh) <-> (B, H, T, Dh) layout swap, pads T/S up to
+the block size (padded keys are masked in-kernel via the static
+``kv_valid`` length), and picks interpret mode automatically off-TPU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import kernel as K
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "scale", "bq", "bk",
+                                             "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = False, scale: Optional[float] = None,
+                    bq: int = K.DEFAULT_BQ, bk: int = K.DEFAULT_BK,
+                    interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Drop-in for models.attention.sdpa (training/prefill path).
+
+    q: (B, T, H, Dh); k/v: (B, S, KV, Dh).  Returns (B, T, H, Dh).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, T, H, Dh = q.shape
+    S = k.shape[1]
+    scale = Dh ** -0.5 if scale is None else scale
+
+    bq_ = min(bq, _round8(T))
+    bk_ = min(bk, _round8(S))
+    pad_t = (-T) % bq_
+    pad_s = (-S) % bk_
+
+    qt = jnp.moveaxis(q, 2, 1)                       # (B, H, T, Dh)
+    kt = jnp.moveaxis(k, 2, 1)
+    vt = jnp.moveaxis(v, 2, 1)
+    if pad_t:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad_t), (0, 0)))
+    if pad_s:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_s), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_s), (0, 0)))
+
+    out = K.flash_attention_kernel(qt, kt, vt, causal=causal, scale=scale,
+                                   bq=bq_, bk=bk_, kv_valid=S,
+                                   interpret=interpret)
+    out = out[:, :, :T, :]
+    return jnp.moveaxis(out, 1, 2)
+
+
+def _round8(n: int) -> int:
+    """Smallest multiple of 8 >= n (sublane granularity)."""
+    return max(8, ((n + 7) // 8) * 8)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the flash attention kernel (no tiling)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        causal: bool = False,
+                        scale: Optional[float] = None) -> jnp.ndarray:
+    """q: (B, T, H, Dh); k/v: (B, S, KV, Dh) with H = KV*G.
+    Dense fp32 softmax attention.  Returns (B, T, H, Dh) in q.dtype."""
+    B, T, H, Dh = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = Dh ** -0.5 if scale is None else scale
+    qg = q.reshape(B, T, KV, G, Dh).astype(jnp.float32)
+    s = jnp.einsum("btkgd,bskd->bkgts", qg, k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.arange(T)[:, None] >= jnp.arange(S)[None, :]
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgts,bskd->btkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, T, H, Dh).astype(q.dtype)

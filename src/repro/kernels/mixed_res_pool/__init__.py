@@ -1,0 +1,1 @@
+from repro.kernels.mixed_res_pool.ops import avg_pool_2d, nn_upsample_2d  # noqa: F401

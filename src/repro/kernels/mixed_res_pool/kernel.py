@@ -1,0 +1,76 @@
+"""Mixed-resolution pooling / restoration Pallas TPU kernels.
+
+Two small data-movement kernels backing the paper's §III hot spots:
+
+  avg_pool      d x d average pooling of a (B, H, W, C) patch/pixel grid —
+                the device-side downsampling step of §III-A (pack_mixed /
+                downsample_grid).
+  nn_upsample   d x d nearest-neighbour broadcast — the restoration-point
+                upsample of §III-B (restore_full).
+
+Both are bandwidth-bound reshapes+reductions; the kernels exist to keep
+the op on-chip when fused into the packing pipeline (HBM -> VMEM once),
+with channel tiles of 128 lanes and row blocks sized to the VMEM budget.
+
+    avg_pool grid = (B, Hout / RB, C / BC)
+      in  block (RB*d, W,   BC)      out block (RB, W/d, BC)
+    upsample grid = (B, Hin / RB, C / BC)
+      in  block (RB,   W,   BC)      out block (RB*d, W*d, BC)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BC = 128
+DEFAULT_RB = 8
+
+
+def _avg_pool_kernel(x_ref, o_ref, *, d: int):
+    x = x_ref[...].astype(jnp.float32)                # (RB*d, W, BC)
+    RBd, W, BC = x.shape
+    x = x.reshape(RBd // d, d, W // d, d, BC)
+    o_ref[...] = jnp.mean(x, axis=(1, 3)).astype(o_ref.dtype)
+
+
+def _nn_upsample_kernel(x_ref, o_ref, *, d: int):
+    x = x_ref[...]                                    # (RB, W, BC)
+    RB, W, BC = x.shape
+    x = jnp.broadcast_to(x[:, None, :, None, :], (RB, d, W, d, BC))
+    o_ref[...] = x.reshape(RB * d, W * d, BC)
+
+
+def avg_pool_kernel(x: jnp.ndarray, d: int, *, rb: int = DEFAULT_RB,
+                    bc: int = DEFAULT_BC, interpret: bool = True):
+    """x: (B, H, W, C) with H % (rb*d) == 0, W % d == 0, C % bc == 0."""
+    B, H, W, C = x.shape
+    Ho, Wo = H // d, W // d
+    return pl.pallas_call(
+        functools.partial(_avg_pool_kernel, d=d),
+        grid=(B, Ho // rb, C // bc),
+        in_specs=[pl.BlockSpec((None, rb * d, W, bc),
+                               lambda b, i, c: (b, i, 0, c))],
+        out_specs=pl.BlockSpec((None, rb, Wo, bc),
+                               lambda b, i, c: (b, i, 0, c)),
+        out_shape=jax.ShapeDtypeStruct((B, Ho, Wo, C), x.dtype),
+        interpret=interpret,
+    )(x)
+
+
+def nn_upsample_kernel(x: jnp.ndarray, d: int, *, rb: int = DEFAULT_RB,
+                       bc: int = DEFAULT_BC, interpret: bool = True):
+    """x: (B, H, W, C) with H % rb == 0, C % bc == 0 -> (B, H*d, W*d, C)."""
+    B, H, W, C = x.shape
+    return pl.pallas_call(
+        functools.partial(_nn_upsample_kernel, d=d),
+        grid=(B, H // rb, C // bc),
+        in_specs=[pl.BlockSpec((None, rb, W, bc),
+                               lambda b, i, c: (b, i, 0, c))],
+        out_specs=pl.BlockSpec((None, rb * d, W * d, bc),
+                               lambda b, i, c: (b, i, 0, c)),
+        out_shape=jax.ShapeDtypeStruct((B, H * d, W * d, C), x.dtype),
+        interpret=interpret,
+    )(x)

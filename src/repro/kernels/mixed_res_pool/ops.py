@@ -1,0 +1,63 @@
+"""jit'd entry points for the mixed-res pooling kernels.
+
+Pads channels to the 128-lane tile and picks a row block that divides
+the grid; interpret mode off-TPU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mixed_res_pool import kernel as K
+
+
+def _plan(n: int, want: int) -> int:
+    rb = min(want, n)
+    while n % rb:
+        rb -= 1
+    return rb
+
+
+def _pad_c(x: jnp.ndarray, bc: int):
+    C = x.shape[-1]
+    pad = (-C) % bc
+    if pad:
+        x = jnp.pad(x, ((0, 0),) * (x.ndim - 1) + ((0, pad),))
+    return x, C
+
+
+@functools.partial(jax.jit, static_argnames=("d", "rb", "bc", "interpret"))
+def avg_pool_2d(x: jnp.ndarray, d: int, *, rb: int = K.DEFAULT_RB,
+                bc: int = K.DEFAULT_BC,
+                interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Drop-in for core.mixed_res.downsample_grid.  x: (B, H, W, C)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if d == 1:
+        return x
+    B, H, W, C0 = x.shape
+    bc_ = min(bc, ((C0 + 7) // 8) * 8)
+    x, C0 = _pad_c(x, bc_)
+    rb_ = _plan(H // d, rb)
+    out = K.avg_pool_kernel(x, d, rb=rb_, bc=bc_, interpret=interpret)
+    return out[..., :C0]
+
+
+@functools.partial(jax.jit, static_argnames=("d", "rb", "bc", "interpret"))
+def nn_upsample_2d(x: jnp.ndarray, d: int, *, rb: int = K.DEFAULT_RB,
+                   bc: int = K.DEFAULT_BC,
+                   interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Nearest-neighbour upsample (restoration §III-B).  x: (B, H, W, C)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if d == 1:
+        return x
+    B, H, W, C0 = x.shape
+    bc_ = min(bc, ((C0 + 7) // 8) * 8)
+    x, C0 = _pad_c(x, bc_)
+    rb_ = _plan(H, rb)
+    out = K.nn_upsample_kernel(x, d, rb=rb_, bc=bc_, interpret=interpret)
+    return out[..., :C0]

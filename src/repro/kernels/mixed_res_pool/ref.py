@@ -1,0 +1,16 @@
+"""Pure-jnp oracles for the mixed-res pooling kernels."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def avg_pool_2d_ref(x: jnp.ndarray, d: int) -> jnp.ndarray:
+    """(B, H, W, C) -> (B, H/d, W/d, C) mean over d x d tiles (fp32)."""
+    B, H, W, C = x.shape
+    x = x.reshape(B, H // d, d, W // d, d, C)
+    return jnp.mean(x.astype(jnp.float32), axis=(2, 4)).astype(x.dtype)
+
+
+def nn_upsample_2d_ref(x: jnp.ndarray, d: int) -> jnp.ndarray:
+    """(B, H, W, C) -> (B, H*d, W*d, C) nearest-neighbour broadcast."""
+    return jnp.repeat(jnp.repeat(x, d, axis=1), d, axis=2)

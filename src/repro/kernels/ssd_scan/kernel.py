@@ -1,0 +1,153 @@
+"""Mamba-2 SSD (state-space duality) Pallas TPU kernel.
+
+The SSD decomposition (arXiv:2405.21060) splits the sequence into chunks:
+inside a chunk the recurrence is a *quadratic* masked-decay form (three
+MXU matmuls), across chunks it is a *linear* state recurrence.  The
+kernel maps this directly onto the Pallas grid:
+
+    grid = (batch, heads / BH, n_chunks)   —  chunk axis sequential
+    state scratch (BH, N, P) f32          —  carried across chunks
+
+Per program (one chunk of BH heads), VMEM working set with the default
+Q = 128, BH = 8, N = 128, P = 64:
+
+    xbar (Q, BH, P)   dt-scaled inputs          256 KiB (f32)
+    dA   (Q, BH)      per-step log decays       —
+    B, C (Q, N)       group-shared projections  128 KiB
+    decay (Q, Q, BH)  masked pairwise decays    512 KiB
+    state (BH, N, P)  carried SSM state         256 KiB
+
+~1.2 MiB total, far inside the ~16 MiB VMEM budget; Q, N, P are all
+MXU-aligned (128 / 128 / 64).  The three matmuls per chunk-head are
+(QxQ)@(QxP) [intra-chunk], (QxN)@(NxP) [state out], (NxQ)@(QxP) [state
+update] — each batched over the BH head axis.
+
+The wrapper pre-scales x by dt and pre-multiplies dt by A, so the kernel
+sees only ``xbar`` and ``dA`` (no SMEM scalars needed).  Head blocks are
+chosen to divide the B/C group size, so each program reads exactly one
+group's B/C block (no head-indexed gather).
+
+Zero-padded tail rows are state-neutral by construction: dt = 0 gives
+dA = 0 (decay 1) and xbar = 0.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BH = 8
+
+
+def _ssd_kernel(xbar_ref, dA_ref, b_ref, c_ref, s0_ref, y_ref, sfin_ref,
+                state_ref, *, nc: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = s0_ref[...].astype(jnp.float32)
+
+    xbar = xbar_ref[...].astype(jnp.float32)          # (Q, BH, P)
+    dA = dA_ref[...].astype(jnp.float32)              # (Q, BH)
+    Bm = b_ref[...].astype(jnp.float32)               # (Q, N)
+    Cm = c_ref[...].astype(jnp.float32)               # (Q, N)
+    Q, BH, P = xbar.shape
+
+    cum = jnp.cumsum(dA, axis=0)                      # (Q, BH) log decay
+
+    # ---- intra-chunk quadratic form -----------------------------------
+    scores = jax.lax.dot_general(                     # (Q, Q): C_i . B_j
+        Cm, Bm, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    ldec = cum[:, None, :] - cum[None, :, :]          # (Q, Q, BH)
+    i_pos = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    j_pos = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    tril = (i_pos >= j_pos)[:, :, None]
+    M = jnp.where(tril, scores[:, :, None] * jnp.exp(ldec), 0.0)
+
+    Mb = jnp.moveaxis(M, 2, 0)                        # (BH, Q, Q)
+    xb = jnp.moveaxis(xbar, 1, 0)                     # (BH, Q, P)
+    y = jax.lax.dot_general(                          # (BH, Q, P)
+        Mb, xb, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)
+
+    # ---- contribution of the carried inter-chunk state ----------------
+    state = state_ref[...]                            # (BH, N, P) f32
+    c_scaled = Cm[None, :, :] * jnp.moveaxis(
+        jnp.exp(cum), 1, 0)[:, :, None]               # (BH, Q, N)
+    y = y + jax.lax.dot_general(
+        c_scaled, state, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)
+
+    y_ref[...] = jnp.moveaxis(y, 0, 1).astype(y_ref.dtype)   # (Q, BH, P)
+
+    # ---- state update --------------------------------------------------
+    dec_end = jnp.exp(cum[-1, :][None, :] - cum + dA * 0.0)  # (Q, BH)
+    # exp(cum_Q - cum_j): decay from step j to the chunk end
+    b_scaled = Bm[None, :, :] * jnp.moveaxis(
+        dec_end, 1, 0)[:, :, None]                    # (BH, Q, N)
+    s_inc = jax.lax.dot_general(                      # (BH, N, P)
+        jnp.moveaxis(b_scaled, 1, 2), xb,
+        (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)
+    chunk_dec = jnp.exp(cum[-1, :])                   # (BH,)
+    state_ref[...] = state * chunk_dec[:, None, None] + s_inc
+
+    @pl.when(ci == nc - 1)
+    def _emit_final():
+        sfin_ref[...] = state_ref[...].astype(sfin_ref.dtype)
+
+
+def ssd_scan_kernel(xbar: jnp.ndarray, dA: jnp.ndarray, Bm: jnp.ndarray,
+                    Cm: jnp.ndarray, s0: jnp.ndarray, *, chunk: int,
+                    bh: int = DEFAULT_BH, interpret: bool = True):
+    """xbar: (b, T, H, P); dA: (b, T, H); Bm/Cm: (b, T, G, N);
+    s0: (b, H, N, P) initial state.  T % chunk == 0; bh divides H and the
+    group size H/G.  Returns (Y (b,T,H,P) f32, final_state (b,H,N,P) f32).
+    """
+    b, T, H, P = xbar.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    hpg = H // G
+    nc = T // chunk
+    nh = H // bh
+    assert hpg % bh == 0 or bh % hpg == 0 or G == 1, (H, G, bh)
+
+    kernel = functools.partial(_ssd_kernel, nc=nc)
+    grid = (b, nh, nc)
+
+    def grp(hi):
+        # head-block hi covers heads [hi*bh, (hi+1)*bh) — one group since
+        # bh divides hpg (asserted by ops.py)
+        return (hi * bh) // hpg
+
+    y_shape = jax.ShapeDtypeStruct((b, T, H, P), jnp.float32)
+    s_shape = jax.ShapeDtypeStruct((b, H, N, P), jnp.float32)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, chunk, bh, P),
+                         lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((None, chunk, bh),
+                         lambda bi, hi, ci: (bi, ci, hi)),
+            pl.BlockSpec((None, chunk, None, N),
+                         lambda bi, hi, ci: (bi, ci, grp(hi), 0)),
+            pl.BlockSpec((None, chunk, None, N),
+                         lambda bi, hi, ci: (bi, ci, grp(hi), 0)),
+            pl.BlockSpec((None, bh, N, P),
+                         lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, chunk, bh, P),
+                         lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((None, bh, N, P),
+                         lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[y_shape, s_shape],
+        scratch_shapes=[pltpu.VMEM((bh, N, P), jnp.float32)],
+        interpret=interpret,
+    )(xbar, dA, Bm, Cm, s0)

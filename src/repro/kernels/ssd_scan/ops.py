@@ -1,0 +1,65 @@
+"""jit'd entry point for the SSD scan kernel.
+
+Pre-scales inputs (xbar = dt*x, dA = dt*A — zero-padding is then
+state-neutral), pads T to the chunk length, picks a head block that
+divides the B/C group size, and dispatches the Pallas kernel.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan import kernel as K
+
+
+def _pick_bh(H: int, hpg: int, want: int) -> int:
+    bh = min(want, hpg, H)
+    while hpg % bh or H % bh:
+        bh -= 1
+    return max(bh, 1)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk", "bh", "return_final_state",
+                                    "interpret"))
+def ssd(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray, Bm: jnp.ndarray,
+        Cm: jnp.ndarray, chunk: int, *,
+        init_state: Optional[jnp.ndarray] = None,
+        return_final_state: bool = False,
+        bh: int = K.DEFAULT_BH, interpret: Optional[bool] = None):
+    """Drop-in for models.mamba2.ssd_chunked (use_kernel=True path).
+
+    x: (b, T, H, P); dt: (b, T, H) post-softplus; A: (H,) negative rates;
+    Bm/Cm: (b, T, G, N).  Returns Y (b, T, H, P) f32 — and the final
+    state (b, H, N, P) when ``return_final_state``.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, T, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    hpg = H // G
+    bh_ = _pick_bh(H, hpg, bh)
+
+    chunk = min(chunk, T)
+    pad = (-T) % chunk
+    f32 = jnp.float32
+    xbar = x.astype(f32) * dt[..., None].astype(f32)
+    dA = dt.astype(f32) * A.astype(f32)[None, None, :]
+    if pad:
+        xbar = jnp.pad(xbar, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    s0 = (jnp.zeros((b, H, N, P), f32) if init_state is None
+          else init_state.astype(f32))
+    y, s_fin = K.ssd_scan_kernel(xbar, dA, Bm.astype(f32), Cm.astype(f32),
+                                 s0, chunk=chunk, bh=bh_,
+                                 interpret=interpret)
+    y = y[:, :T]
+    if return_final_state:
+        return y, s_fin
+    return y

@@ -1,0 +1,46 @@
+"""Pure-jnp oracle for the SSD scan: the naive sequential recurrence.
+
+Deliberately NOT the chunked formulation (models.mamba2.ssd_chunked is
+itself chunked) — this is the O(T) step-by-step state recurrence, the
+definitionally-correct semantics both chunked versions must match:
+
+    S_t = exp(dt_t * A) * S_{t-1} + B_t (dt_t x_t)^T
+    y_t = C_t . S_t
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+            Bm: jnp.ndarray, Cm: jnp.ndarray,
+            init_state: Optional[jnp.ndarray] = None
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (b, T, H, P); dt: (b, T, H); A: (H,); Bm/Cm: (b, T, G, N).
+    Returns (y (b, T, H, P) f32, final_state (b, H, N, P) f32)."""
+    b, T, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    hpg = H // G
+    f32 = jnp.float32
+
+    xb = (x.astype(f32) * dt[..., None].astype(f32))          # (b,T,H,P)
+    dA = jnp.exp(dt.astype(f32) * A.astype(f32)[None, None, :])
+    Bh = jnp.repeat(Bm.astype(f32), hpg, axis=2)              # (b,T,H,N)
+    Ch = jnp.repeat(Cm.astype(f32), hpg, axis=2)
+
+    s0 = (jnp.zeros((b, H, N, P), f32) if init_state is None
+          else init_state.astype(f32))
+
+    def step(s, inp):
+        xb_t, dA_t, B_t, C_t = inp                            # (b,H,*) each
+        s = s * dA_t[..., None, None] + \
+            jnp.einsum("bhn,bhp->bhnp", B_t, xb_t)
+        y = jnp.einsum("bhn,bhnp->bhp", C_t, s)
+        return s, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (xb, dA, Bh, Ch))
+    s_fin, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1), s_fin

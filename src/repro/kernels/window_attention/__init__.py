@@ -1,0 +1,1 @@
+from repro.kernels.window_attention.ops import window_attention  # noqa: F401

@@ -1,0 +1,51 @@
+"""jit'd entry point for the window attention kernel.
+
+Reshapes the window-blocked (B, T, H, Dh) stream into per-window blocks,
+pads w^2 to the sublane granularity and the window count to WB, and
+dispatches the Pallas kernel (interpret mode off-TPU).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.window_attention import kernel as K
+
+
+@functools.partial(jax.jit, static_argnames=("window", "scale", "wb",
+                                             "interpret"))
+def window_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     window: int, *, scale: Optional[float] = None,
+                     wb: int = K.DEFAULT_WB,
+                     interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Drop-in for models.attention.window_sdpa.
+
+    q: (B, T, H, Dh); k/v: (B, T, KV, Dh); T % window == 0.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, T, H, Dh = q.shape
+    KV = k.shape[2]
+    W = T // window
+    scale = Dh ** -0.5 if scale is None else scale
+
+    w2p = ((window + 7) // 8) * 8
+    wb = min(wb, B * W)
+    while (B * W) % wb:
+        wb //= 2
+
+    def to_blocks(x, heads):
+        x = x.reshape(B * W, window, heads, Dh)
+        x = jnp.moveaxis(x, 2, 1)                    # (BW, heads, w2, Dh)
+        if w2p != window:
+            x = jnp.pad(x, ((0, 0), (0, 0), (0, w2p - window), (0, 0)))
+        return x
+
+    out = K.window_attention_kernel(
+        to_blocks(q, H), to_blocks(k, KV), to_blocks(v, KV),
+        scale=scale, w2_valid=window, wb=wb, interpret=interpret)
+    out = jnp.moveaxis(out[:, :, :window, :], 1, 2)  # (BW, w2, H, Dh)
+    return out.reshape(B, T, H, Dh)

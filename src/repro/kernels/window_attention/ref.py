@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for window attention: dense attention per window."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def window_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                         window: int,
+                         scale: Optional[float] = None) -> jnp.ndarray:
+    """q: (B, T, H, Dh); k/v: (B, T, KV, Dh); T % window == 0.
+    Each contiguous ``window``-token block attends only to itself."""
+    B, T, H, Dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    W = T // window
+    scale = Dh ** -0.5 if scale is None else scale
+
+    qw = q.reshape(B, W, window, KV, G, Dh).astype(jnp.float32)
+    kw = k.reshape(B, W, window, KV, Dh).astype(jnp.float32)
+    vw = v.reshape(B, W, window, KV, Dh).astype(jnp.float32)
+    s = jnp.einsum("bwikgd,bwjkd->bwkgij", qw, kw) * scale
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bwkgij,bwjkd->bwikgd", p, vw)
+    return o.reshape(B, T, H, Dh).astype(q.dtype)

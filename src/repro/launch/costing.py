@@ -1,0 +1,434 @@
+"""Trip-count-exact cost accounting via probe-and-extrapolate.
+
+XLA's HloCostAnalysis counts every while-loop (lax.scan) body ONCE, so
+flops / bytes / collective traffic read off a compiled scanned model are
+low by ~the trip count (layers x grad-accum microbatches).  Verified on
+this container:
+
+    scan(length=8) over a 512^3 matmul  -> cost_analysis flops = 1 matmul
+
+Unrolling the full model for costing is intractable at depth (compile
+blows up), so we measure SMALL fully-unrolled probes on the SAME mesh
+and extrapolate linearly — the model is exactly linear in layer count
+and microbatch count by construction:
+
+  step cost = O + Sum_k L_k * o_k  +  A * (F + Sum_k L_k * f_k)
+
+    O   once-per-step cost at zero extra layers (optimizer update, data
+        movement outside the accum loop)
+    o_k once-per-step marginal cost of one layer of stack k (its Adam
+        update, grad finalisation)
+    F   per-microbatch fwd+bwd cost at base layers (embedding, logits, CE)
+    f_k per-microbatch marginal cost of one layer of stack k
+    A   grad-accum trip count;  L_k  extra layers of stack k vs the base
+
+Probes (all with every scan unrolled via models.layers.SCAN_UNROLL, all
+at the true microbatch size so data-dependent scans — attention q-blocks,
+SSD chunks, CE chunks — have their real trip counts):
+
+  P1      base layers, accum=1
+  P2_k    base + 1 layer of stack k, accum=1        (one per stack)
+  P3      base layers, accum=2                      (train cells only)
+  P4_k    base + 1 layer of stack k, accum=2        (train cells only)
+
+  F  = P3 - P1          f_k = (P4_k - P2_k) - F
+  O  = P1 - F           o_k = (P2_k - P1) - f_k
+
+Prefill/decode cells have no accum loop: cost = P1 + Sum_k L_k*(P2_k-P1).
+
+Peak-memory figures still come from the FULL rolled lowering (XLA's
+buffer assignment is exact); only flops / bytes / collective bytes are
+extrapolated.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import jax
+
+from repro.configs import SHAPES, ShapeSpec, get_config
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.roofline import collectives as coll
+
+
+@dataclass(frozen=True)
+class Stack:
+    """One homogeneous layer stack of an architecture."""
+    name: str
+    n_layers: int                  # layer count in the full config
+    base: int                      # layer count in the base probe
+    bump: Dict[str, int]           # config overrides adding ONE layer
+
+
+def stacks_for(cfg: ModelConfig) -> Tuple[Dict[str, int], List[Stack]]:
+    """(base-config overrides, stacks).  The base probe keeps exactly
+    ``base`` layers of each stack; each stack's ``bump`` adds one."""
+    if cfg.family == "encdec":
+        base = {"n_layers": 1,
+                "encdec": dataclasses.replace(cfg.encdec,
+                                              n_encoder_layers=1)}
+        return base, [
+            Stack("enc", cfg.encdec.n_encoder_layers, 1,
+                  {"encdec": dataclasses.replace(cfg.encdec,
+                                                 n_encoder_layers=2)}),
+            Stack("dec", cfg.n_layers, 1, {"n_layers": 2}),
+        ]
+    if cfg.family == "hybrid":
+        if cfg.layer_pattern is not None:
+            pat = cfg.layer_pattern
+            kinds = list(dict.fromkeys(pat))      # e.g. ['m', 'A']
+            base_pat = tuple(kinds)
+            base = {"layer_pattern": base_pat, "n_layers": len(base_pat)}
+            stacks = []
+            for k in kinds:
+                bump_pat = base_pat + (k,)
+                stacks.append(
+                    Stack(f"pat_{k}", sum(1 for p in pat if p == k), 1,
+                          {"layer_pattern": bump_pat,
+                           "n_layers": len(bump_pat)}))
+            return base, stacks
+        # zamba2-style shared block applied via lax.cond inside the mamba
+        # scan: the cond branch is counted once per layer by the cost
+        # model, a conservative (upper-bound) accounting of the shared
+        # attention — recorded in the artifact's method string.
+        return {"n_layers": 1}, [Stack("mamba", cfg.n_layers, 1,
+                                       {"n_layers": 2})]
+    if cfg.moe is not None and cfg.moe.first_dense_layers > 0:
+        d = cfg.moe.first_dense_layers
+        base = {"n_layers": 2,
+                "moe": dataclasses.replace(cfg.moe, first_dense_layers=1)}
+        return base, [
+            Stack("dense", d, 1,
+                  {"n_layers": 3,
+                   "moe": dataclasses.replace(cfg.moe,
+                                              first_dense_layers=2)}),
+            Stack("moe", cfg.n_layers - d, 1,
+                  {"n_layers": 3,
+                   "moe": dataclasses.replace(cfg.moe,
+                                              first_dense_layers=1)}),
+        ]
+    # dense / moe(all-moe) / ssm / vlm: one homogeneous stack
+    return {"n_layers": 1}, [Stack("blocks", cfg.n_layers, 1,
+                                   {"n_layers": 2})]
+
+
+def _op_merge(a: Optional[Dict], b: Optional[Dict], f) -> Dict:
+    a, b = a or {}, b or {}
+    return {k: f(a.get(k, 0.0), b.get(k, 0.0)) for k in set(a) | set(b)}
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: float = 0.0
+    coll_by_op: Optional[Dict[str, float]] = None
+
+    def __sub__(self, o):
+        return Cost(self.flops - o.flops, self.bytes - o.bytes,
+                    self.coll - o.coll,
+                    _op_merge(self.coll_by_op, o.coll_by_op,
+                              lambda x, y: x - y))
+
+    def __add__(self, o):
+        return Cost(self.flops + o.flops, self.bytes + o.bytes,
+                    self.coll + o.coll,
+                    _op_merge(self.coll_by_op, o.coll_by_op,
+                              lambda x, y: x + y))
+
+    def __mul__(self, k: float):
+        return Cost(self.flops * k, self.bytes * k, self.coll * k,
+                    {kk: v * k for kk, v in (self.coll_by_op or {}).items()})
+
+    __rmul__ = __mul__
+
+    def clamped(self):
+        return Cost(max(self.flops, 0.0), max(self.bytes, 0.0),
+                    max(self.coll, 0.0),
+                    {k: max(v, 0.0)
+                     for k, v in (self.coll_by_op or {}).items()})
+
+
+# ---------------------------------------------------------------------------
+# Pallas flash-attention byte correction (§Perf hillclimb, opt="flash")
+#
+# XLA (and the cost model) materialises the (B, H, T, S) attention logits
+# and probabilities in HBM; the Pallas flash/decode kernels keep them in
+# VMEM.  We measure the materialised traffic with a single-device
+# micro-probe of the exact local attention shapes and replace it with the
+# kernel's analytic HBM traffic:
+#
+#   fwd   reads q,k,v; writes o (+O(T) lse)          ~ 2*QB + 2*KB
+#   bwd   reads q,k,v,o,do; writes dq,dk,dv          ~ 3*QB + 4*KB
+#   remat re-runs fwd inside bwd                     + fwd again
+#
+#   QB = B*T*H*Dh*bytes,  KB = B*S*KV*Dh*bytes
+#
+# FLOPs are untouched (the kernel computes the same matmuls).
+
+
+def _attn_local_shapes(cfg: ModelConfig, shape: ShapeSpec, mesh,
+                       accum: int) -> Optional[Dict]:
+    """Per-device attention operand shapes under the production sharding."""
+    if cfg.family in ("ssm",):
+        return None
+    from repro.distributed import sharding as shd
+    dp = shd.dp_size(mesh)
+    tp = mesh.shape["model"]
+    if shape.kind == "train":
+        b_loc = max(shape.global_batch // accum // dp, 1)
+        T = S = shape.seq_len
+        mode = "train"
+    elif shape.kind == "prefill":
+        b_loc = max(shape.global_batch // dp, 1)
+        T = S = shape.seq_len
+        mode = "prefill"
+    else:
+        b_loc = max(shape.global_batch // dp, 1)
+        T, S = 1, shape.seq_len
+        mode = "decode"
+    h_loc = max(cfg.n_heads // tp, 1)
+    kv_loc = max(cfg.n_kv_heads // tp, 1)
+    return dict(b=b_loc, t=T, s=S, h=h_loc, kv=kv_loc, dh=cfg.head_dim,
+                mode=mode)
+
+
+def _attn_site_saving(mode: str, b: int, t: int, s: int, h: int, kv: int,
+                      dh: int, dtype_bytes: int) -> Dict:
+    """Measured XLA traffic minus analytic kernel traffic for ONE
+    attention site at the given local lengths."""
+    import jax.numpy as jnp
+    from repro.models.attention import sdpa
+
+    dt = jnp.bfloat16 if dtype_bytes == 2 else jnp.float32
+    q = jax.ShapeDtypeStruct((b, t, h, dh), dt)
+    k = jax.ShapeDtypeStruct((b, s, kv, dh), dt)
+    v = jax.ShapeDtypeStruct((b, s, kv, dh), dt)
+
+    prev = L.SCAN_UNROLL
+    L.SCAN_UNROLL = True
+    try:
+        if mode == "train":
+            def f(q, k, v):
+                out = jax.remat(lambda a, b_, c: sdpa(a, b_, c, causal=True)
+                                )(q, k, v)
+                return jnp.sum(out.astype(jnp.float32))
+            probe = jax.jit(jax.value_and_grad(f, argnums=(0, 1, 2)))
+        elif mode == "prefill":
+            probe = jax.jit(lambda q, k, v: sdpa(q, k, v, causal=True))
+        else:
+            probe = jax.jit(lambda q, k, v: sdpa(
+                q, k, v, kv_len=jnp.full((q.shape[0],), s)))
+        ca = probe.lower(q, k, v).compile().cost_analysis() or {}
+    finally:
+        L.SCAN_UNROLL = prev
+    xla_bytes = float(ca.get("bytes accessed", 0.0))
+
+    QB = b * t * h * dh * dtype_bytes
+    KB = b * s * kv * dh * dtype_bytes
+    if mode == "train":                 # fwd + remat-fwd + bwd
+        kernel_bytes = (2 * QB + 2 * KB) * 2 + (3 * QB + 4 * KB)
+    else:                               # fwd only
+        kernel_bytes = 2 * QB + 2 * KB
+    return {"xla": xla_bytes, "kernel": kernel_bytes,
+            "saved": max(xla_bytes - kernel_bytes, 0.0)}
+
+
+def flash_correction(cfg: ModelConfig, shape: ShapeSpec, mesh,
+                     accum: int, n_attn_layers: int,
+                     dtype_bytes: int = 2,
+                     mixed_lb: int = 0, t_mix: int = 0) -> Dict:
+    """Per-device bytes saved by the Pallas attention kernels for one
+    step of this cell.
+
+    ``mixed_lb``/``t_mix``: with the mixed-granularity prefill variant,
+    the first ``mixed_lb`` layers attend over ``t_mix`` tokens — the
+    correction is computed per length segment so it never over-subtracts.
+    """
+    loc = _attn_local_shapes(cfg, shape, mesh, accum)
+    if loc is None or cfg.mla is not None:
+        # SSD has no attention; MLA needs its own kernel (future work)
+        return {"bytes_saved_per_device": 0.0, "sites": 0,
+                "note": "no GQA attention sites (ssm/mla)"}
+    b, t, s, h, kv, dh = (loc[k] for k in ("b", "t", "s", "h", "kv", "dh"))
+    reps = accum if shape.kind == "train" else 1
+
+    segments = []
+    if mixed_lb > 0 and t_mix > 0 and loc["mode"] == "prefill":
+        segments.append((mixed_lb * reps, t_mix, t_mix))
+        segments.append(((n_attn_layers - mixed_lb) * reps, t, s))
+    else:
+        segments.append((n_attn_layers * reps, t, s))
+
+    saved = 0.0
+    details = []
+    for n_sites, tt, ss in segments:
+        site = _attn_site_saving(loc["mode"], b, tt, ss, h, kv, dh,
+                                 dtype_bytes)
+        saved += site["saved"] * n_sites
+        details.append({"sites": n_sites, "t": tt, "s": ss, **site})
+    return {"bytes_saved_per_device": saved,
+            "segments": details,
+            "sites": sum(d["sites"] for d in details),
+            "local_shapes": loc}
+
+
+def min_traffic_floor(cfg: ModelConfig, shape: ShapeSpec, mesh,
+                      accum: int, mixed_lb: int = 0,
+                      t_mix: int = 0) -> Dict:
+    """Analytic lower bound on per-device HBM traffic for one step:
+    parameters streamed once per pass (x3 for fwd+remat+bwd in training,
+    + optimizer state), ~8 residual-stream tensors per layer, and the
+    flash kernel's attention IO.  Used as a floor under the byte
+    substitution so §Perf numbers never over-claim."""
+    from repro.distributed import sharding as shd
+    dp = shd.dp_size(mesh)
+    tp = mesh.shape["model"]
+    N = cfg.param_count()
+    L_n = cfg.n_layers
+    D = cfg.d_model
+    is_train = shape.kind == "train"
+    reps = accum if is_train else 1
+    b_loc = max(shape.global_batch // (accum if is_train else 1) // dp, 1)
+    T = 1 if shape.kind == "decode" else shape.seq_len
+    if cfg.family == "vlm" and shape.kind == "prefill":
+        T += cfg.vlm.n_image_tokens
+
+    param_bytes = 2 * N / tp                    # bf16, TP-sharded stream
+    passes = 3 if is_train else 1               # fwd + remat + bwd
+    opt_bytes = (N / (dp * tp)) * (4 + 4 + 4 + 2) * 2 if is_train else 0
+
+    def act(t_eff, n_layers):
+        return n_layers * 8 * b_loc * t_eff * D * 2
+
+    if mixed_lb > 0 and t_mix > 0:
+        act_bytes = act(t_mix, mixed_lb) + act(T, L_n - mixed_lb)
+    else:
+        act_bytes = act(T, L_n)
+    # kv-cache write (prefill) / read (decode)
+    cache_bytes = 0
+    if shape.kind == "prefill":
+        cache_bytes = 2 * b_loc * shape.seq_len * cfg.kv_dim * 2
+    elif shape.kind == "decode":
+        cache_bytes = 2 * b_loc * shape.seq_len * \
+            max(cfg.kv_dim // tp, cfg.head_dim) * 2 * L_n
+
+    total = (reps * (passes * param_bytes + act_bytes) + opt_bytes
+             + cache_bytes)
+    return {"bytes_per_device": float(total),
+            "parts": {"params": passes * param_bytes * reps,
+                      "acts": act_bytes * reps, "opt": opt_bytes,
+                      "cache": cache_bytes}}
+
+
+def attn_layer_count(cfg: ModelConfig) -> int:
+    """Attention layers per step (0 for pure SSM)."""
+    if cfg.family == "ssm":
+        return 0
+    if cfg.family == "hybrid":
+        return sum(1 for p in (cfg.layer_pattern or ()) if p != "m")
+    if cfg.family == "encdec":
+        # enc self + dec self + dec cross
+        return cfg.encdec.n_encoder_layers + 2 * cfg.n_layers
+    return cfg.n_layers
+
+
+def _lower_cost(build_cell, arch_cfg: ModelConfig, shape: ShapeSpec,
+                mesh, opt: str, accum: int) -> Cost:
+    """Lower+compile one probe and read its (per-device) cost."""
+    cell = build_cell(arch_cfg, shape, mesh, opt, accum)
+    with mesh:
+        jf = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                     out_shardings=cell.out_shardings,
+                     donate_argnums=cell.donate_argnums)
+        compiled = jf.lower(*cell.args).compile()
+    ca = compiled.cost_analysis() or {}
+    cstats = coll.collective_bytes(compiled.as_text())
+    return Cost(float(ca.get("flops", 0.0)),
+                float(ca.get("bytes accessed", 0.0)),
+                cstats["bytes_per_device"], cstats["by_op_bytes"])
+
+
+def probe_costs(arch: str, shape_name: str, mesh, build_cell,
+                accum: int, opt: str = "base", fast: bool = True,
+                verbose: bool = False) -> Dict:
+    """Run the probe set and extrapolate the full-cell per-device cost.
+
+    ``build_cell(cfg_override, shape, mesh, opt, accum)`` must honour the
+    probe config and the forced accum.
+
+    ``fast``: skip the accum-separation probes (P3/P4) and use
+        total ~= A * (P1 + Sum_k extra_k * B_k)
+    which over-counts only the once-per-step part (Adam update + grad
+    finalisation) by (A-1)x — sub-1% for every assigned cell, since the
+    optimizer touches the (sharded) parameter tree once while each
+    microbatch moves the full activation set.
+    """
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    base_over, stacks = stacks_for(cfg)
+
+    is_train = shape.kind == "train"
+    A = accum if is_train else 1
+    # probes run ONE microbatch: shrink the global batch by the accum
+    mb_batch = max(shape.global_batch // A, 1)
+    pshape = dataclasses.replace(shape, global_batch=mb_batch)
+    p2shape = dataclasses.replace(shape, global_batch=2 * mb_batch)
+
+    prev_unroll = L.SCAN_UNROLL
+    L.SCAN_UNROLL = True
+    try:
+        base_cfg = cfg.replace(**base_over)
+        P1 = _lower_cost(build_cell, base_cfg, pshape, mesh, opt, 1)
+        P2 = {s.name: _lower_cost(build_cell, cfg.replace(**s.bump),
+                                  pshape, mesh, opt, 1) for s in stacks}
+        if is_train and A > 1 and not fast:
+            P3 = _lower_cost(build_cell, base_cfg, p2shape, mesh, opt, 2)
+            P4 = {s.name: _lower_cost(build_cell, cfg.replace(**s.bump),
+                                      p2shape, mesh, opt, 2)
+                  for s in stacks}
+        else:
+            P3, P4 = None, None
+    finally:
+        L.SCAN_UNROLL = prev_unroll
+
+    if P3 is not None:
+        F = (P3 - P1).clamped()
+        O = (P1 - F).clamped()
+        total = O + A * F
+        for s in stacks:
+            f_k = ((P4[s.name] - P2[s.name]) - F).clamped()
+            o_k = ((P2[s.name] - P1) - f_k).clamped()
+            extra = s.n_layers - s.base
+            total = total + extra * o_k + (A * extra) * f_k
+        method = "probe-extrapolate exact (unrolled scans, accum split)"
+    else:
+        per_mb = P1
+        for s in stacks:
+            B_k = (P2[s.name] - P1).clamped()
+            per_mb = per_mb + (s.n_layers - s.base) * B_k
+        total = A * per_mb
+        method = ("probe-extrapolate fast (unrolled scans; optimizer "
+                  "counted A times, <1% error)")
+
+    out = {
+        "flops_per_device": total.flops,
+        "bytes_per_device": total.bytes,
+        "collective_bytes_per_device": total.coll,
+        "collective_by_op": total.coll_by_op,
+        "probes": {
+            "P1": dataclasses.asdict(P1),
+            **{f"P2_{k}": dataclasses.asdict(v) for k, v in P2.items()},
+        },
+        "accum": A,
+        "stacks": {s.name: s.n_layers for s in stacks},
+        "method": method,
+    }
+    if P3 is not None:
+        out["probes"]["P3"] = dataclasses.asdict(P3)
+        out["probes"].update({f"P4_{k}": dataclasses.asdict(v)
+                              for k, v in P4.items()})
+    return out

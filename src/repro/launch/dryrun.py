@@ -1,0 +1,237 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: AOT lower + compile every (arch x shape) cell on the
+production mesh, record memory/cost analyses and the collective schedule.
+
+This file MUST set XLA_FLAGS before any other import (jax locks the host
+device count on first initialisation) — hence the two lines above.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b \
+      --shape train_4k [--multi-pod] [--out benchmarks/artifacts/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import SHAPES, cells, get_config, shape_runnable
+from repro.launch import specs as sp
+from repro.launch.mesh import make_production_mesh
+from repro.roofline import collectives as coll
+from repro.roofline import model as rm
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             opt_level: str = "base", probe_cost: bool = True) -> dict:
+    cfg = get_config(arch)
+    ok, reason = shape_runnable(cfg, shape_name)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "pod2" if multi_pod else "pod1",
+           "opt": opt_level}
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        return rec
+
+    if "tp8" in opt_level.split("+"):
+        # §Perf sharding variant: TP degree 8 (divides every head count —
+        # phi4's 24 heads on TP=16 force GSPMD full-tensor resharding)
+        shape_ = (2, 32, 8) if multi_pod else (32, 8)
+        axes_ = ("pod", "data", "model") if multi_pod else ("data", "model")
+        mesh = jax.make_mesh(shape_, axes_)
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    t0 = time.time()
+    cell = sp.build_cell(arch, shape_name, mesh, opt=opt_level)
+    with mesh:
+        jf = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                     out_shardings=cell.out_shardings,
+                     donate_argnums=cell.donate_argnums)
+        lowered = jf.lower(*cell.args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll_stats = coll.collective_bytes(hlo)
+
+    # cost_analysis counts scan bodies ONCE — probe-and-extrapolate gives
+    # trip-count-exact flops/bytes/collectives (launch/costing.py)
+    cost_src = "hlo-rolled (scan bodies counted once: UNDERESTIMATE)"
+    flops_dev = float(ca.get("flops", 0.0))
+    bytes_dev = float(ca.get("bytes accessed", 0.0))
+    coll_dev = coll_stats["bytes_per_device"]
+    if probe_cost:
+        from repro.launch import costing
+        accum = sp.accum_for_cell(arch, shape_name, mesh, opt_level)
+
+        def bc(cfg_, shp_, mesh_, opt_, accum_):
+            return sp.build_cell_from(cfg_, shp_, mesh_, opt=opt_,
+                                      accum=accum_, arch_name=arch)
+
+        t0 = time.time()
+        probe = costing.probe_costs(arch, shape_name, mesh, bc, accum,
+                                    opt_level)
+        rec["probe_cost"] = {**probe, "wall_s": round(time.time() - t0, 1)}
+        flops_dev = probe["flops_per_device"]
+        bytes_dev = probe["bytes_per_device"]
+        coll_dev = probe["collective_bytes_per_device"]
+        cost_src = "probe-extrapolate (trip-count exact)"
+
+        if "flash" in opt_level.split("+"):
+            mixed_lb = t_mix = 0
+            if "mixed" in opt_level.split("+") and \
+                    SHAPES[shape_name].kind == "prefill" and \
+                    cfg.mixed_res is not None:
+                from repro.core import seq_mixed_res as smr
+                n_img = (cfg.vlm.n_image_tokens
+                         if cfg.family == "vlm" else 0)
+                part1d = smr.seq_partition(
+                    cfg, SHAPES[shape_name].seq_len + n_img)
+                t_mix = part1d.n_tokens(part1d.n_spans // 2)
+                mixed_lb = smr.layers_before_rp(cfg, 2, cfg.n_layers)
+            corr = costing.flash_correction(
+                cfg, SHAPES[shape_name], mesh, accum,
+                costing.attn_layer_count(cfg),
+                mixed_lb=mixed_lb, t_mix=t_mix)
+            rec["flash_correction"] = corr
+            # floor: real traffic can never go below reading the params
+            # once per pass + one activation write per layer + the
+            # kernel's own attention IO (guards the micro-probe
+            # substitution against over-subtraction)
+            floor = costing.min_traffic_floor(
+                cfg, SHAPES[shape_name], mesh, accum,
+                mixed_lb=mixed_lb, t_mix=t_mix)
+            rec["byte_floor"] = floor
+            bytes_dev = max(bytes_dev - corr["bytes_saved_per_device"],
+                            floor["bytes_per_device"])
+            cost_src += " + pallas-flash byte substitution (floored)"
+
+        if "zero2" in opt_level.split("+") and accum > 1:
+            # gather params once per step instead of per microbatch
+            # (ZeRO-2 layout).  Feasible only if the gathered bf16 params
+            # fit next to the existing per-device peak.
+            ag = (probe.get("collective_by_op") or {}).get("all-gather",
+                                                           0.0)
+            tp = mesh.shape["model"]
+            gathered_bytes = cfg.param_count() * 2 / tp
+            peak = (ma.argument_size_in_bytes + ma.temp_size_in_bytes
+                    + gathered_bytes)
+            feasible = peak < 16e9          # v5e HBM
+            saved = ag * (accum - 1) / accum if feasible else 0.0
+            rec["zero2"] = {
+                "allgather_bytes": ag, "saved_bytes": saved,
+                "gathered_param_bytes": gathered_bytes,
+                "projected_peak_bytes": peak, "feasible": feasible,
+            }
+            coll_dev = max(coll_dev - saved, 0.0)
+            cost_src += (" + zero2 gather-once"
+                         if feasible else " (zero2 INFEASIBLE: params "
+                         "don't fit gathered)")
+
+    terms = rm.roofline_terms(
+        flops_per_device=flops_dev,
+        bytes_per_device=bytes_dev,
+        collective_bytes_per_device=coll_dev,
+        n_chips=n_chips)
+    shape = SHAPES[shape_name]
+    model_fl = rm.model_flops(cfg, shape)
+
+    rec.update(
+        status="ok",
+        n_chips=int(n_chips),
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        memory=dict(
+            argument_bytes=int(ma.argument_size_in_bytes),
+            output_bytes=int(ma.output_size_in_bytes),
+            temp_bytes=int(ma.temp_size_in_bytes),
+            alias_bytes=int(ma.alias_size_in_bytes),
+            total_per_device=int(ma.argument_size_in_bytes
+                                 + ma.output_size_in_bytes
+                                 + ma.temp_size_in_bytes
+                                 - ma.alias_size_in_bytes),
+            # CPU backend does not implement buffer donation, so outputs
+            # that WOULD alias donated inputs on TPU are double-counted;
+            # this is the donation-adjusted figure (args + temps).
+            total_with_donation=int(ma.argument_size_in_bytes
+                                    + ma.temp_size_in_bytes),
+        ),
+        cost=dict(flops_per_device=flops_dev,
+                  bytes_per_device=bytes_dev,
+                  source=cost_src,
+                  hlo_rolled_flops=float(ca.get("flops", 0.0)),
+                  hlo_rolled_bytes=float(ca.get("bytes accessed", 0.0))),
+        collectives={**coll_stats, "bytes_per_device": coll_dev,
+                     "hlo_rolled_bytes_per_device":
+                         coll_stats["bytes_per_device"]},
+        roofline=terms,
+        model_flops=model_fl,
+        useful_flop_ratio=(model_fl / (terms["total_flops"] + 1e-30)
+                           if terms["total_flops"] else None),
+    )
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--opt", default="base",
+                    help="optimization variant label for §Perf iterations")
+    ap.add_argument("--no-probe-cost", action="store_true",
+                    help="skip probe-extrapolated exact costing")
+    ap.add_argument("--out", default="benchmarks/artifacts/dryrun")
+    args = ap.parse_args(argv)
+
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    todo = cells() if args.all else [(args.arch, args.shape)]
+
+    n_fail = 0
+    for arch, shape in todo:
+        tag = f"{arch}__{shape}__{'pod2' if args.multi_pod else 'pod1'}"
+        if args.opt != "base":
+            tag += f"__{args.opt}"
+        path = out / f"{tag}.json"
+        try:
+            rec = run_cell(arch, shape, args.multi_pod, args.opt,
+                           probe_cost=not args.no_probe_cost)
+        except Exception as e:          # a failure here is a bug in our system
+            rec = {"arch": arch, "shape": shape, "status": "error",
+                   "mesh": "pod2" if args.multi_pod else "pod1",
+                   "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-4000:]}
+            n_fail += 1
+        path.write_text(json.dumps(rec, indent=2))
+        status = rec["status"]
+        extra = ""
+        if status == "ok":
+            r = rec["roofline"]
+            extra = (f" compile={rec['compile_s']:.0f}s"
+                     f" mem/dev={rec['memory']['total_with_donation']/2**30:.2f}GiB"
+                     f" t_comp={r['t_compute']*1e3:.2f}ms"
+                     f" t_mem={r['t_memory']*1e3:.2f}ms"
+                     f" t_coll={r['t_collective']*1e3:.2f}ms"
+                     f" bound={r['bound']}")
+        elif status == "skipped":
+            extra = f" ({rec['reason'][:60]})"
+        print(f"[dryrun] {tag}: {status}{extra}", flush=True)
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,282 @@
+"""Per-cell step functions and ShapeDtypeStruct input specs.
+
+``build_cell(arch, shape, mesh)`` returns everything the dry-run needs:
+the step callable, its example-argument shapes (no allocation), and the
+in/out sharding trees — for every (architecture x input-shape) cell.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, ShapeSpec, get_config
+from repro.distributed import sharding as shd
+from repro.models import registry
+from repro.models.config import ModelConfig
+from repro.optim import adam
+from repro.train import trainer as tr
+
+PARAM_DTYPE = jnp.bfloat16
+CACHE_DTYPE = jnp.bfloat16
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), dtype)
+
+
+# ---------------------------------------------------------------------------
+# input ShapeDtypeStructs
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Model inputs for a training/prefill step (ShapeDtypeStructs)."""
+    B, T = shape.global_batch, shape.seq_len
+    batch = {"tokens": sds((B, T), jnp.int32)}
+    if shape.kind == "train":
+        batch["labels"] = sds((B, T), jnp.int32)
+    if cfg.family == "encdec":
+        batch["frames"] = sds((B, cfg.encdec.encoder_seq_len, cfg.d_model),
+                              PARAM_DTYPE)
+    if cfg.family == "vlm":
+        batch["image_embeds"] = sds(
+            (B, cfg.vlm.n_image_tokens, cfg.vlm.vision_hidden), PARAM_DTYPE)
+    return batch
+
+
+def params_shape(cfg: ModelConfig) -> Any:
+    return jax.eval_shape(
+        lambda: registry.init_params(cfg, jax.random.PRNGKey(0),
+                                     PARAM_DTYPE))
+
+
+def decode_state_shape(cfg: ModelConfig, batch: int, max_len: int) -> Any:
+    state = jax.eval_shape(
+        lambda: registry.init_decode_state(cfg, batch, max_len, CACHE_DTYPE))
+    if cfg.family == "encdec":      # whisper decode state = (enc_out, caches)
+        enc = sds((batch, cfg.encdec.encoder_seq_len, cfg.d_model),
+                  PARAM_DTYPE)
+        state = (enc, state)
+    return state
+
+
+# ---------------------------------------------------------------------------
+# cell construction
+
+
+@dataclass
+class Cell:
+    arch: str
+    shape: ShapeSpec
+    fn: Callable
+    args: Tuple[Any, ...]             # ShapeDtypeStructs
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...] = ()
+
+
+def _accum_for(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+               scale: int = 1) -> int:
+    """Microbatch count keeping per-device live tokens ~<= 8k.
+
+    The scan-over-layers carry is one microbatch activation per layer;
+    8k tokens/device keeps that under ~1 GiB even for d_model 6k x 60L."""
+    dp = shd.dp_size(mesh)
+    local_tokens = shape.global_batch * shape.seq_len / max(dp, 1)
+    accum = max(1, int(local_tokens // 8192)) * scale
+    # accumulate only in powers of two dividing the local batch
+    while shape.global_batch % (accum * dp) and accum > 1:
+        accum //= 2
+    return accum
+
+
+OPT_VARIANTS = {
+    "base": {},
+    "sp": {"train": {"sp": True}},
+    "accum2x": {"accum_scale": 2},
+    "accum4x": {"accum_scale": 4},
+    "sp_accum2x": {"train": {"sp": True}, "accum_scale": 2},
+    # pure-accounting variants (graph unchanged; §Perf applies a measured
+    # byte correction): "flash" — Pallas attention kernels keep the
+    # (B,H,T,S) logits in VMEM.  Compose tokens with '+': "flash+sp".
+    "flash": {},
+}
+
+
+def _opt_variant(opt: str) -> dict:
+    var: dict = {"train": {}}
+    for tok in opt.split("+"):
+        v = OPT_VARIANTS.get(tok, {})
+        var["train"].update(v.get("train", {}))
+        if "accum_scale" in v:
+            var["accum_scale"] = v["accum_scale"]
+    return var
+
+
+def accum_for_cell(arch: str, shape_name: str, mesh: Mesh,
+                   opt: str = "base") -> int:
+    """The grad-accum trip count the real cell uses (costing needs it)."""
+    shape = SHAPES[shape_name]
+    if shape.kind != "train":
+        return 1
+    scale = _opt_variant(opt).get("accum_scale", 1)
+    return _accum_for(get_config(arch), shape, mesh, scale)
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh,
+               train_overrides: Optional[dict] = None,
+               opt: str = "base") -> Cell:
+    return build_cell_from(get_config(arch), SHAPES[shape_name], mesh,
+                           train_overrides, opt, arch_name=arch)
+
+
+def _strip_data_axis(spec: P) -> P:
+    """Replicate over the data axis (TP-only layout for serving)."""
+    def fix(e):
+        if e == "data":
+            return None
+        if isinstance(e, (tuple, list)):
+            kept = tuple(x for x in e if x != "data")
+            return kept if kept else None
+        return e
+    return P(*[fix(e) for e in spec])
+
+
+def build_cell_from(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                    train_overrides: Optional[dict] = None,
+                    opt: str = "base", accum: Optional[int] = None,
+                    arch_name: Optional[str] = None) -> Cell:
+    """Cell from explicit config/shape (costing probes pass overridden
+    configs and forced accum counts)."""
+    arch = arch_name or cfg.name
+    var = _opt_variant(opt)
+    train_overrides = {**var.get("train", {}), **(train_overrides or {})}
+    accum_scale = var.get("accum_scale", 1)
+    p_shape = params_shape(cfg)
+    pspecs = shd.param_specs(cfg, p_shape, mesh)
+    if "tponly" in opt.split("+") and shape.kind != "train":
+        # §Perf serving-layout variant: replicate params over data —
+        # inference has no optimizer state, so FSDP buys nothing and its
+        # per-layer all-gathers dominate the collective term
+        pspecs = jax.tree_util.tree_map(
+            _strip_data_axis, pspecs,
+            is_leaf=lambda s: isinstance(s, P))
+    p_shard = shd.to_named(mesh, pspecs)
+
+    if shape.kind == "train":
+        accum = accum if accum is not None else \
+            _accum_for(cfg, shape, mesh, accum_scale)
+        tc = tr.TrainConfig(accum_steps=accum, **(train_overrides or {}))
+        step = tr.make_train_step(cfg, mesh, tc)
+        batch = input_specs(cfg, shape)
+        opt_shape = jax.eval_shape(lambda p: adam.init_adam(p), p_shape)
+        opt_specs = adam.AdamState(step=P(), m=pspecs, v=pspecs)
+        opt_shard = shd.to_named(mesh, opt_specs)
+        b_shard = shd.to_named(mesh, shd.batch_specs(cfg, mesh, batch))
+        metrics_shard = shd.to_named(mesh, P())
+        return Cell(
+            arch=arch, shape=shape, fn=step,
+            args=(p_shape, opt_shape, batch),
+            in_shardings=(p_shard, opt_shard, b_shard),
+            out_shardings=(p_shard, opt_shard, metrics_shard),
+            donate_argnums=(0, 1),
+        )
+
+    if shape.kind == "prefill":
+        ctx = tr.make_ctx(cfg, mesh, remat=False)
+        batch = input_specs(cfg, shape)
+        n_img = cfg.vlm.n_image_tokens if cfg.family == "vlm" else 0
+        max_len = shape.seq_len + n_img
+        state = decode_state_shape(cfg, shape.global_batch, max_len)
+        if cfg.family == "encdec":
+            state = state[1]          # prefill builds enc_out itself
+
+        mixed_pack = None
+        if "mixed" in opt.split("+") and cfg.mixed_res is not None and \
+                cfg.family in ("dense", "moe", "vlm"):
+            # §Perf variant: the paper's technique — pool HALF the prompt
+            # spans (oldest context) for the first beta=2 of 4 subsets
+            import numpy as np
+            from repro.core import seq_mixed_res as smr
+            T_total = shape.seq_len + n_img
+            part1d = smr.seq_partition(cfg, T_total)
+            span_mask = np.zeros((part1d.n_spans,), np.int32)
+            n_low = part1d.n_spans // 2
+            span_mask[:n_low] = 1
+            plan = smr.build_seq_pack(span_mask, n_low, part1d)
+            mixed_pack = {k: jnp.asarray(v) for k, v in plan.items()
+                          if k != "low_spans"}
+
+        def prefill_step(params, batch, state):
+            if mixed_pack is not None:
+                from repro.core import seq_mixed_res as smr
+                hidden, new_state, _ = smr.mixed_prefill(
+                    cfg, params, batch["tokens"], mixed_pack, 2, state,
+                    ctx, image_embeds=batch.get("image_embeds"))
+            else:
+                hidden, new_state, _ = registry.prefill(
+                    cfg, params, batch, state, ctx)
+            logits = _last_logits(cfg, params, hidden, ctx)
+            return logits, new_state
+
+        s_specs = shd.fix_specs(
+            mesh, shd.decode_state_specs(cfg, mesh, state,
+                                         shard_batch=True), state)
+        b_shard = shd.to_named(mesh, shd.batch_specs(cfg, mesh, batch))
+        s_shard = shd.to_named(mesh, s_specs)
+        dp = shd.dp_axes(mesh)
+        logits_sds = sds((shape.global_batch, 1, cfg.vocab_size),
+                         PARAM_DTYPE)
+        logits_shard = shd.to_named(
+            mesh, shd.fix_spec(mesh, P(dp, None, "model"), logits_sds.shape))
+        out_state_shard = s_shard
+        if cfg.family == "encdec":
+            enc_spec = shd.to_named(mesh, P(dp, None, None))
+            out_state_shard = (enc_spec, s_shard)
+        return Cell(
+            arch=arch, shape=shape, fn=prefill_step,
+            args=(p_shape, batch, state),
+            in_shardings=(p_shard, b_shard, s_shard),
+            out_shardings=(logits_shard, out_state_shard),
+            donate_argnums=(2,),
+        )
+
+    # decode
+    shard_batch = shape.global_batch >= shd.dp_size(mesh)
+    ctx = tr.make_ctx(cfg, mesh, remat=False)
+    max_len = shape.seq_len
+    state = decode_state_shape(cfg, shape.global_batch, max_len)
+    token = sds((shape.global_batch, 1), jnp.int32)
+    pos = shape.seq_len - 1
+
+    def decode_fn(params, token, state):
+        logits, new_state = registry.decode_step(cfg, params, token, pos,
+                                                 state, ctx)
+        return logits, new_state
+
+    s_specs = shd.fix_specs(
+        mesh, shd.decode_state_specs(cfg, mesh, state,
+                                     shard_batch=shard_batch), state)
+    dp = shd.dp_axes(mesh)
+    bspec = dp if shard_batch else None
+    t_shard = shd.to_named(mesh, P(bspec, None))
+    s_shard = shd.to_named(mesh, s_specs)
+    logits_shard = shd.to_named(
+        mesh, shd.fix_spec(mesh, P(bspec, None, "model"),
+                           (shape.global_batch, 1, cfg.vocab_size)))
+    return Cell(
+        arch=arch, shape=shape, fn=decode_fn,
+        args=(p_shape, token, state),
+        in_shardings=(p_shard, t_shard, s_shard),
+        out_shardings=(logits_shard, s_shard),
+        donate_argnums=(2,),
+    )
+
+
+def _last_logits(cfg: ModelConfig, params, hidden, ctx):
+    from repro.models import transformer as tfm
+    return tfm.logits_from_hidden(cfg, params, hidden[:, -1:, :], ctx)

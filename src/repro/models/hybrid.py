@@ -1,0 +1,216 @@
+"""Zamba2-style hybrid: a Mamba-2 backbone with one SHARED attention
+block invoked periodically (weight reuse is the Zamba hallmark).
+
+Implementation: the mamba layers are scanned; inside the scan body a
+``lax.cond`` applies the shared transformer block (captured by closure,
+not scanned) whenever ``layer_idx % period == period - 1``.  This keeps
+the compiled HLO at one mamba body + one shared block regardless of
+depth.
+
+Simplification vs. the released checkpoints (noted in DESIGN.md): the
+shared block consumes the hidden state directly (no concat-with-embedding
+or per-invocation LoRA).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import mamba2 as m2
+from repro.models.config import ModelConfig
+from repro.models.transformer import ParallelCtx, LOCAL
+
+SHARED_PERIOD = 6
+
+
+def init_hybrid_params(cfg: ModelConfig, key, dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, 5)
+
+    def one_mamba(k):
+        kk = jax.random.split(k, 2)
+        return {"ln": L.init_norm(cfg, dtype),
+                "mamba": m2.init_mamba2(cfg, kk[0], dtype)}
+
+    keys = jax.random.split(ks[0], cfg.n_layers)
+    params = {
+        "embed": L.init_embedding(cfg, ks[1], dtype),
+        "mamba_blocks": jax.vmap(one_mamba)(keys),
+        "shared": {
+            "ln1": L.init_norm(cfg, dtype),
+            "attn": attn.init_attention(cfg, ks[2], dtype),
+            "ln2": L.init_norm(cfg, dtype),
+            "ffn": L.init_mlp(cfg, ks[3], dtype),
+        },
+        "final_norm": L.init_norm(cfg, dtype),
+        "lm_head": L.init_lm_head(cfg, ks[4], dtype),
+    }
+    return params
+
+
+def _shared_block(cfg, p, x, positions, cache=None, pos=None):
+    h = L.apply_norm(cfg, p["ln1"], x)
+    if cache is None:
+        a = attn.attention_forward(cfg, p["attn"], h, positions)
+        new_cache = None
+    elif pos is None:
+        a, new_cache = attn.attention_prefill(cfg, p["attn"], h, positions,
+                                              cache)
+    else:
+        a, new_cache = attn.attention_decode(cfg, p["attn"], h, pos, cache)
+    x = x + a
+    x = x + L.apply_mlp(cfg, p["ffn"], L.apply_norm(cfg, p["ln2"], x))
+    return x, new_cache
+
+
+def n_shared_calls(cfg: ModelConfig) -> int:
+    return cfg.n_layers // SHARED_PERIOD
+
+
+def init_hybrid_caches(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    """SSM/conv state per mamba layer + KV cache per shared-attn call."""
+    n_attn = max(n_shared_calls(cfg), 1)
+    ssm = m2.init_mamba2_state(cfg, batch, dtype)
+    ssm = jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape), ssm)
+    kv = attn.init_kv_cache(cfg, batch, max_len, dtype)
+    kv = jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (n_attn,) + a.shape), kv)
+    return {"ssm": ssm, "kv": kv}
+
+
+def forward_hidden(cfg: ModelConfig, params, tokens, ctx: ParallelCtx = LOCAL,
+                   image_embeds=None):
+    x = L.embed_tokens(params["embed"], tokens)
+    B, T, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(T)[None, :], (B, T))
+    x = ctx.hidden(x)
+    shared = params["shared"]
+
+    def body(carry, layer_in):
+        x, idx = carry
+        p = layer_in
+        h = L.apply_norm(cfg, p["ln"], x)
+        x = x + m2.mamba2_forward(cfg, p["mamba"], h)
+        x = jax.lax.cond(
+            (idx % SHARED_PERIOD) == SHARED_PERIOD - 1,
+            lambda x: _shared_block(cfg, shared, x, positions)[0],
+            lambda x: x, x)
+        x = ctx.hidden(x)
+        return (x, idx + 1), None
+
+    body_fn = jax.checkpoint(body) if ctx.remat else body
+    (x, _), _ = L.scan(body_fn, (x, jnp.zeros((), jnp.int32)),
+                             params["mamba_blocks"])
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    return x, jnp.zeros((), jnp.float32)
+
+
+def prefill(cfg: ModelConfig, params, tokens, caches, ctx: ParallelCtx = LOCAL,
+            image_embeds=None):
+    """Prefill: mamba states fast-forwarded, shared-attn KV caches filled.
+
+    Shared-attn caches are indexed by call number (layer // period), so
+    they are updated inside the scan with a dynamic slice on axis 0.
+    """
+    x = L.embed_tokens(params["embed"], tokens)
+    B, T, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(T)[None, :], (B, T))
+    x = ctx.hidden(x)
+    shared = params["shared"]
+
+    def body(carry, layer_in):
+        x, idx, kv = carry
+        p = layer_in
+        h = L.apply_norm(cfg, p["ln"], x)
+        # run full-sequence mamba, also emit final ssm/conv state
+        x2, ssm_state = _mamba_prefill(cfg, p["mamba"], h)
+        x = x + x2
+
+        def with_attn(args):
+            x, kv = args
+            call = idx // SHARED_PERIOD
+            c = jax.tree_util.tree_map(lambda a: a[call % a.shape[0]], kv)
+            x, c2 = _shared_block(cfg, shared, x, positions, cache=c)
+            kv = jax.tree_util.tree_map(
+                lambda full, part: jax.lax.dynamic_update_index_in_dim(
+                    full, part.astype(full.dtype), call % full.shape[0], 0),
+                kv, c2)
+            return x, kv
+
+        x, kv = jax.lax.cond((idx % SHARED_PERIOD) == SHARED_PERIOD - 1,
+                             with_attn, lambda a: a, (x, kv))
+        x = ctx.hidden(x)
+        return (x, idx + 1, kv), ssm_state
+
+    (x, _, kv), ssm_states = L.scan(
+        body, (x, jnp.zeros((), jnp.int32), caches["kv"]),
+        params["mamba_blocks"])
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    return x, {"ssm": ssm_states, "kv": kv}, jnp.zeros((), jnp.float32)
+
+
+def _mamba_prefill(cfg: ModelConfig, p, x):
+    """Mamba forward that also returns the end-of-sequence state."""
+    s = cfg.ssm
+    d_inner, H, conv_ch = m2.ssm_dims(cfg)
+    B_, T, D = x.shape
+    gN = s.n_groups * s.d_state
+    z, xBC, dt_raw = m2._split_proj(cfg, x @ p["w_in"])
+    xBC_conv = jax.nn.silu(m2.causal_conv1d(xBC, p["conv_w"], p["conv_b"]))
+    conv_state = xBC[:, T - (s.d_conv - 1):, :] if T >= s.d_conv - 1 else \
+        jnp.pad(xBC, ((0, 0), (s.d_conv - 1 - T, 0), (0, 0)))
+    xs, Bm, Cm = jnp.split(xBC_conv, [d_inner, d_inner + gN], axis=-1)
+    xs = xs.reshape(B_, T, H, s.head_dim)
+    Bm = Bm.reshape(B_, T, s.n_groups, s.d_state)
+    Cm = Cm.reshape(B_, T, s.n_groups, s.d_state)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    chunk = min(s.chunk_size, T)
+    y, final_state = m2.ssd_chunked(xs, dt, A, Bm, Cm, chunk,
+                                    return_final_state=True)
+    y = y + xs.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(B_, T, d_inner).astype(x.dtype)
+    y = L.rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    return y @ p["w_out"], {"conv": conv_state.astype(x.dtype),
+                            "ssm": final_state}
+
+
+def decode_step(cfg: ModelConfig, params, token, pos, caches,
+                ctx: ParallelCtx = LOCAL):
+    x = L.embed_tokens(params["embed"], token)
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos)
+    shared = params["shared"]
+
+    def body(carry, layer_in):
+        x, idx, kv = carry
+        p, state = layer_in
+        h = L.apply_norm(cfg, p["ln"], x)
+        dx, new_state = m2.mamba2_decode(cfg, p["mamba"], h, state)
+        x = x + dx
+
+        def with_attn(args):
+            x, kv = args
+            call = idx // SHARED_PERIOD
+            c = jax.tree_util.tree_map(lambda a: a[call % a.shape[0]], kv)
+            x, c2 = _shared_block(cfg, shared, x, positions, cache=c, pos=pos)
+            kv = jax.tree_util.tree_map(
+                lambda full, part: jax.lax.dynamic_update_index_in_dim(
+                    full, part.astype(full.dtype), call % full.shape[0], 0),
+                kv, c2)
+            return x, kv
+
+        x, kv = jax.lax.cond((idx % SHARED_PERIOD) == SHARED_PERIOD - 1,
+                             with_attn, lambda a: a, (x, kv))
+        return (x, idx + 1, kv), new_state
+
+    (x, _, kv), ssm_states = L.scan(
+        body, (x, jnp.zeros((), jnp.int32), caches["kv"]),
+        (params["mamba_blocks"], caches["ssm"]))
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = L.lm_logits(cfg, params["lm_head"], params["embed"], x)
+    return logits, {"ssm": ssm_states, "kv": kv}

@@ -1,0 +1,178 @@
+"""Shared building blocks: norms, RoPE, MLPs, embeddings.
+
+Everything is a pure function over explicit parameter pytrees (nested
+dicts of jnp arrays).  Initializers return (params) and the forward
+functions take (params, x, ...).  No framework dependency.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+# ---------------------------------------------------------------------------
+# scan with a global unroll switch (cost-probe mode)
+#
+# XLA's HloCostAnalysis counts a while-loop body ONCE regardless of trip
+# count, so FLOP/byte/collective numbers read from a compiled scanned
+# model are wrong by ~the trip count.  launch/costing.py lowers tiny
+# fully-unrolled probe configs and extrapolates; it flips this flag so
+# every model/trainer scan unrolls (normal runs keep rolled scans — that
+# is what makes compile times tractable at depth).
+
+SCAN_UNROLL = False
+
+
+def scan(body, init, xs, length=None):
+    return jax.lax.scan(body, init, xs, length=length,
+                        unroll=True if SCAN_UNROLL else 1)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    """Truncated-normal fan-in init (matches common LM inits)."""
+    fan_in = shape[0] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+
+
+def rms_norm(x, weight, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    out = x * weight.astype(jnp.float32)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    return out.astype(dt)
+
+
+def init_norm(cfg: ModelConfig, dtype):
+    if cfg.norm == "layernorm":
+        return {"w": jnp.ones((cfg.d_model,), dtype),
+                "b": jnp.zeros((cfg.d_model,), dtype)}
+    return {"w": jnp.ones((cfg.d_model,), dtype)}
+
+
+def apply_norm(cfg: ModelConfig, p, x):
+    if cfg.norm == "layernorm":
+        return layer_norm(x, p["w"], p.get("b"), cfg.norm_eps)
+    return rms_norm(x, p["w"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+
+
+def rope_frequencies(head_dim: int, theta: float,
+                     partial_factor: float = 1.0) -> jnp.ndarray:
+    """Inverse frequencies for the rotated sub-dimension."""
+    rot_dim = int(head_dim * partial_factor) // 2 * 2
+    exponent = jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / max(rot_dim, 1)
+    return 1.0 / (theta ** exponent)          # (rot_dim // 2,)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+               partial_factor: float = 1.0) -> jnp.ndarray:
+    """Rotate the leading ``partial_factor`` fraction of the head dim.
+
+    x: (..., T, H, Dh); positions: broadcastable to (..., T).
+    """
+    head_dim = x.shape[-1]
+    rot_dim = int(head_dim * partial_factor) // 2 * 2
+    if rot_dim == 0:
+        return x
+    inv_freq = rope_frequencies(head_dim, theta, partial_factor)
+    ang = positions.astype(jnp.float32)[..., None] * inv_freq  # (...,T,rot/2)
+    cos = jnp.cos(ang)[..., None, :]    # (..., T, 1, rot/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x_rot, x_pass = x[..., :rot_dim], x[..., rot_dim:]
+    x1, x2 = jnp.split(x_rot.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), x_pass], axis=-1)
+
+
+def sinusoidal_positions(n_pos: int, dim: int) -> jnp.ndarray:
+    """Whisper-style sinusoidal positional embeddings."""
+    inv = jnp.exp(-jnp.arange(dim // 2) * (math.log(10000.0) / (dim // 2 - 1)))
+    pos = jnp.arange(n_pos, dtype=jnp.float32)[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(pos), jnp.cos(pos)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+
+
+def init_mlp(cfg: ModelConfig, key, dtype, d_ff: Optional[int] = None):
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.activation == "silu":          # SwiGLU: gate + up + down
+        return {
+            "w_gate": dense_init(ks[0], (cfg.d_model, d_ff), dtype),
+            "w_up": dense_init(ks[1], (cfg.d_model, d_ff), dtype),
+            "w_down": dense_init(ks[2], (d_ff, cfg.d_model), dtype),
+        }
+    return {                               # plain GELU MLP (whisper)
+        "w_up": dense_init(ks[0], (cfg.d_model, d_ff), dtype),
+        "b_up": jnp.zeros((d_ff,), dtype),
+        "w_down": dense_init(ks[1], (d_ff, cfg.d_model), dtype),
+        "b_down": jnp.zeros((cfg.d_model,), dtype),
+    }
+
+
+def apply_mlp(cfg: ModelConfig, p, x):
+    if "w_gate" in p:
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+        return h @ p["w_down"]
+    h = jax.nn.gelu(x @ p["w_up"] + p["b_up"], approximate=True)
+    return h @ p["w_down"] + p["b_down"]
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding
+
+
+def init_embedding(cfg: ModelConfig, key, dtype):
+    p = {"tok": embed_init(key, (cfg.vocab_size, cfg.d_model), dtype)}
+    return p
+
+
+def embed_tokens(p, tokens):
+    return p["tok"][tokens]
+
+
+def init_lm_head(cfg: ModelConfig, key, dtype):
+    if cfg.tied_embeddings:
+        return {}
+    return {"w": dense_init(key, (cfg.d_model, cfg.vocab_size), dtype)}
+
+
+def lm_logits(cfg: ModelConfig, head_p, embed_p, x):
+    if cfg.tied_embeddings:
+        return x @ embed_p["tok"].T
+    return x @ head_p["w"]

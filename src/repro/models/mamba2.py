@@ -1,0 +1,238 @@
+"""Mamba-2 block (state-space duality / SSD, arXiv:2405.21060).
+
+Chunked SSD: within-chunk quadratic form (MXU-friendly matmuls) +
+inter-chunk linear state recurrence (lax.scan).  Decode is an O(1)
+recurrent state update — the reason ``long_500k`` is runnable for
+SSM/hybrid archs while pure-attention archs are skipped.
+
+All SSD math in fp32; projections in the model dtype.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, rms_norm
+
+
+def ssm_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_ch = d_inner + 2 * s.n_groups * s.d_state
+    return d_inner, n_heads, conv_ch
+
+
+def init_mamba2(cfg: ModelConfig, key, dtype):
+    s = cfg.ssm
+    d_inner, H, conv_ch = ssm_dims(cfg)
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * d_inner + 2 * s.n_groups * s.d_state + H
+    # dt bias st. softplus(dt_bias) spans [dt_min, dt_max]
+    u = jax.random.uniform(ks[2], (H,), jnp.float32)
+    dt = jnp.exp(u * (jnp.log(s.dt_max) - jnp.log(s.dt_min)) + jnp.log(s.dt_min))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))          # inverse softplus
+    return {
+        "w_in": dense_init(ks[0], (cfg.d_model, proj_out), dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.d_conv, conv_ch), jnp.float32)
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm_w": jnp.ones((d_inner,), dtype),
+        "w_out": dense_init(ks[3], (d_inner, cfg.d_model), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv1d
+
+
+def causal_conv1d(x, w, b):
+    """x: (B, T, C); w: (K, C) depthwise; left-padded causal."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    # sum_k w[k] * x[t - (K-1) + k]
+    out = jnp.zeros_like(x)
+    for k in range(K):
+        out = out + xp[:, k:k + x.shape[1], :] * w[k][None, None, :]
+    return out + b[None, None, :]
+
+
+def conv1d_step(x_t, conv_state, w, b):
+    """One-step conv: x_t (B, C); conv_state (B, K-1, C) of past inputs."""
+    K = w.shape[0]
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B,K,C)
+    out = jnp.einsum("bkc,kc->bc", window, w) + b[None, :]
+    new_state = window[:, 1:, :]
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# chunked SSD core (pure jnp; the Pallas kernel mirrors the intra-chunk part)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int,
+                init_state: Optional[jnp.ndarray] = None,
+                return_final_state: bool = False):
+    """SSD over a full sequence.
+
+    x:  (b, T, H, P) — dt-scaled inputs are formed internally
+    dt: (b, T, H)    — post-softplus step sizes
+    A:  (H,)         — negative decay rates
+    Bm/Cm: (b, T, G, N)
+    """
+    b, T, H, Pd = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    hpg = H // G
+    T0 = T
+    if T % chunk:
+        # zero-pad to a chunk multiple: dt=0 rows are state-neutral
+        # (dA=0 -> decay 1, xbar=0) so the recurrence is unaffected.
+        pad = chunk - T % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        T = T + pad
+    nc = T // chunk
+
+    f32 = jnp.float32
+    xc = x.reshape(b, nc, chunk, H, Pd).astype(f32)
+    dtc = dt.reshape(b, nc, chunk, H).astype(f32)
+    Bh = jnp.repeat(Bm.reshape(b, nc, chunk, G, N), hpg, axis=3).astype(f32)
+    Ch = jnp.repeat(Cm.reshape(b, nc, chunk, G, N), hpg, axis=3).astype(f32)
+
+    dA = dtc * A[None, None, None, :]                 # (b,nc,Q,H), negative
+    cum = jnp.cumsum(dA, axis=2)                      # within-chunk log decay
+    xbar = xc * dtc[..., None]
+
+    # intra-chunk: Y[i] = sum_{j<=i} exp(cum_i - cum_j) (C_i.B_j) xbar_j
+    Lmask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    ldec = cum[:, :, :, None, :] - cum[:, :, None, :, :]     # (b,nc,i,j,H)
+    ldec = jnp.where(Lmask[None, None, :, :, None], ldec, -jnp.inf)
+    scores = jnp.einsum("bnihd,bnjhd->bnijh", Ch, Bh)
+    Y = jnp.einsum("bnijh,bnjhp->bnihp", scores * jnp.exp(ldec), xbar)
+
+    # chunk-local end states: S_loc = sum_j exp(cum_Q - cum_j) B_j xbar_j^T
+    dec_to_end = jnp.exp(cum[:, :, -1:, :] - cum)            # (b,nc,Q,H)
+    S_loc = jnp.einsum("bnjhd,bnjhp->bnhdp", Bh * dec_to_end[..., None], xbar)
+
+    # inter-chunk recurrence over nc
+    chunk_dec = jnp.exp(cum[:, :, -1, :])                    # (b,nc,H)
+    s0 = (jnp.zeros((b, H, N, Pd), f32) if init_state is None
+          else init_state.astype(f32))
+
+    def step(s_prev, inp):
+        dec, s_l = inp                                       # (b,H),(b,H,N,P)
+        s_new = s_prev * dec[:, :, None, None] + s_l
+        return s_new, s_prev
+
+    from repro.models.layers import scan as _scan
+    s_final, s_prevs = _scan(
+        step, s0, (jnp.moveaxis(chunk_dec, 1, 0), jnp.moveaxis(S_loc, 1, 0)))
+    s_prevs = jnp.moveaxis(s_prevs, 0, 1)                    # (b,nc,H,N,P)
+
+    Y = Y + jnp.einsum("bnihd,bnhdp->bnihp",
+                       Ch * jnp.exp(cum)[..., None], s_prevs)
+    Y = Y.reshape(b, T, H, Pd)[:, :T0]
+    if return_final_state:
+        return Y, s_final
+    return Y
+
+
+def ssd_decode_step(x_t, dt_t, A, B_t, C_t, state):
+    """One-token SSD: x_t (b,H,P), dt_t (b,H), B_t/C_t (b,G,N),
+    state (b,H,N,P) -> (y_t, new_state)."""
+    b, H, Pd = x_t.shape
+    G, N = B_t.shape[1], B_t.shape[2]
+    hpg = H // G
+    f32 = jnp.float32
+    Bh = jnp.repeat(B_t, hpg, axis=1).astype(f32)            # (b,H,N)
+    Ch = jnp.repeat(C_t, hpg, axis=1).astype(f32)
+    dA = jnp.exp(dt_t.astype(f32) * A[None, :])              # (b,H)
+    xbar = x_t.astype(f32) * dt_t[..., None].astype(f32)
+    new_state = state * dA[:, :, None, None] + \
+        jnp.einsum("bhd,bhp->bhdp", Bh, xbar)
+    y = jnp.einsum("bhd,bhdp->bhp", Ch, new_state)
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# full block
+
+
+def _split_proj(cfg: ModelConfig, z_all):
+    s = cfg.ssm
+    d_inner, H, _ = ssm_dims(cfg)
+    gN = s.n_groups * s.d_state
+    z, xBC_dt = jnp.split(z_all, [d_inner], axis=-1)
+    xBC, dt_raw = jnp.split(xBC_dt, [d_inner + 2 * gN], axis=-1)
+    return z, xBC, dt_raw
+
+
+def mamba2_forward(cfg: ModelConfig, p, x, *, use_kernel: bool = False):
+    """Full-sequence Mamba-2 block.  x: (B, T, D) -> (B, T, D)."""
+    s = cfg.ssm
+    d_inner, H, conv_ch = ssm_dims(cfg)
+    B_, T, D = x.shape
+    gN = s.n_groups * s.d_state
+
+    z, xBC, dt_raw = _split_proj(cfg, x @ p["w_in"])
+    xBC = jax.nn.silu(causal_conv1d(xBC, p["conv_w"], p["conv_b"]))
+    xs, Bm, Cm = jnp.split(xBC, [d_inner, d_inner + gN], axis=-1)
+    xs = xs.reshape(B_, T, H, s.head_dim)
+    Bm = Bm.reshape(B_, T, s.n_groups, s.d_state)
+    Cm = Cm.reshape(B_, T, s.n_groups, s.d_state)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    chunk = min(s.chunk_size, T)
+    if use_kernel:
+        from repro.kernels.ssd_scan import ops as ssd_ops
+        y = ssd_ops.ssd(xs, dt, A, Bm, Cm, chunk)
+    else:
+        y = ssd_chunked(xs, dt, A, Bm, Cm, chunk)
+    y = y + xs.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(B_, T, d_inner).astype(x.dtype)
+
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    return y @ p["w_out"]
+
+
+def init_mamba2_state(cfg: ModelConfig, batch: int, dtype):
+    s = cfg.ssm
+    d_inner, H, conv_ch = ssm_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_ch), dtype),
+        "ssm": jnp.zeros((batch, H, s.d_state, s.head_dim), jnp.float32),
+    }
+
+
+def mamba2_decode(cfg: ModelConfig, p, x_t, state):
+    """One-token recurrent step.  x_t: (B, 1, D)."""
+    s = cfg.ssm
+    d_inner, H, _ = ssm_dims(cfg)
+    gN = s.n_groups * s.d_state
+    B_ = x_t.shape[0]
+
+    z, xBC, dt_raw = _split_proj(cfg, x_t[:, 0, :] @ p["w_in"])
+    xBC, conv_state = conv1d_step(xBC, state["conv"], p["conv_w"], p["conv_b"])
+    xBC = jax.nn.silu(xBC)
+    xs, Bm, Cm = jnp.split(xBC, [d_inner, d_inner + gN], axis=-1)
+    xs = xs.reshape(B_, H, s.head_dim)
+    Bm = Bm.reshape(B_, s.n_groups, s.d_state)
+    Cm = Cm.reshape(B_, s.n_groups, s.d_state)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    y, ssm_state = ssd_decode_step(xs, dt, A, Bm, Cm, state["ssm"])
+    y = y + xs.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(B_, d_inner).astype(x_t.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    out = (y @ p["w_out"])[:, None, :]
+    return out, {"conv": conv_state, "ssm": ssm_state}

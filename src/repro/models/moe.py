@@ -1,0 +1,208 @@
+"""Mixture-of-Experts FFN (DBRX, DeepSeek-V2 style).
+
+Expert parallelism strategy (TPU-native, see DESIGN.md §5):
+activations arrive replicated over the ``model`` mesh axis (standard
+Megatron TP layout), expert weights are sharded over ``model`` on the
+expert axis.  Each model rank locally gathers the tokens routed to *its*
+experts (no dispatch all-to-all needed — the token buffer is already
+resident), computes them, scatter-adds partial outputs, and a single
+``psum`` over ``model`` combines — the same collective a dense TP FFN
+would need.  Dispatch uses static capacity buffers so serving/training
+graphs never retrace.
+
+Two entry points share the inner math:
+  * ``moe_local``   — single-device (smoke tests, CPU benchmarks)
+  * ``moe_sharded`` — shard_map over the model axis (EP)
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init
+
+
+# ---------------------------------------------------------------------------
+
+
+def init_moe(cfg: ModelConfig, key, dtype):
+    m = cfg.moe
+    ks = jax.random.split(key, 5)
+    E, D, F = m.n_experts, cfg.d_model, m.d_ff_expert
+    p = {
+        "router": dense_init(ks[0], (D, E), dtype, scale=0.02),
+        "w_gate": dense_init(ks[1], (E, D, F), dtype),
+        "w_up": dense_init(ks[2], (E, D, F), dtype),
+        "w_down": dense_init(ks[3], (E, F, D), dtype),
+    }
+    if m.n_shared_experts > 0:
+        Fs = m.d_ff_expert * m.n_shared_experts
+        sks = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": dense_init(sks[0], (D, Fs), dtype),
+            "w_up": dense_init(sks[1], (D, Fs), dtype),
+            "w_down": dense_init(sks[2], (Fs, D), dtype),
+        }
+    return p
+
+
+def expert_capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    m = cfg.moe
+    cap = int(math.ceil(m.top_k * n_tokens / m.n_experts * m.capacity_factor))
+    return max(8, -(-cap // 8) * 8)      # round up to a multiple of 8
+
+
+# ---------------------------------------------------------------------------
+# inner per-device dispatch/compute (works for full or sharded expert slabs)
+
+
+def _route(cfg: ModelConfig, router_w, x_flat):
+    """Top-k routing.  Returns (top_idx, top_gate, aux_loss)."""
+    m = cfg.moe
+    logits = (x_flat @ router_w).astype(jnp.float32)        # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_gate, top_idx = jax.lax.top_k(probs, m.top_k)        # (N, k)
+    top_gate = top_gate / jnp.sum(top_gate, axis=-1, keepdims=True)
+    # load-balance aux: E * sum_e( frac_tokens_e * mean_prob_e )
+    counts = jnp.sum(jax.nn.one_hot(top_idx, m.n_experts, dtype=jnp.float32),
+                     axis=(0, 1))
+    frac = counts / (x_flat.shape[0] * m.top_k)
+    mean_p = jnp.mean(probs, axis=0)
+    aux = m.n_experts * jnp.sum(frac * mean_p)
+    return top_idx, top_gate, aux
+
+
+def _dispatch_tables(cfg: ModelConfig, top_idx, top_gate, e0: int,
+                     n_local: int, capacity: int):
+    """Static-capacity dispatch tables for experts [e0, e0+n_local).
+
+    Returns idx_table (E_loc, C) int32 token ids and gate_table (E_loc, C)
+    f32 gates (0 for padding slots).
+    """
+    m = cfg.moe
+    N = top_idx.shape[0]
+    flat_e = top_idx.reshape(-1)                         # (N*k,)
+    flat_g = top_gate.reshape(-1)
+    tok_of = jnp.arange(N * m.top_k, dtype=jnp.int32) // m.top_k
+    local_e = flat_e - e0                                # (N*k,)
+    is_local = (local_e >= 0) & (local_e < n_local)
+    # position within each local expert, computed on a (N*k, E_loc) one-hot
+    onehot = (local_e[:, None] == jnp.arange(n_local)[None, :]) & \
+        is_local[:, None]                                # (N*k, E_loc)
+    pos = jnp.cumsum(onehot.astype(jnp.int32), axis=0) - 1
+    slot = jnp.sum(jnp.where(onehot, pos, 0), axis=1)    # (N*k,)
+    keep = is_local & (slot < capacity)
+    e_ids = jnp.where(keep, local_e, n_local)            # drop row
+    s_ids = jnp.where(keep, slot, capacity)
+    idx_table = jnp.zeros((n_local, capacity), jnp.int32).at[
+        e_ids, s_ids].set(tok_of, mode="drop")
+    gate_table = jnp.zeros((n_local, capacity), jnp.float32).at[
+        e_ids, s_ids].set(flat_g, mode="drop")
+    return idx_table, gate_table
+
+
+def _expert_ffn(weights, xs):
+    """xs: (E_loc, C, D); per-expert SwiGLU."""
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xs, weights["w_gate"])) * \
+        jnp.einsum("ecd,edf->ecf", xs, weights["w_up"])
+    return jnp.einsum("ecf,efd->ecd", h, weights["w_down"])
+
+
+def _shared_ffn(p_shared, x_flat):
+    h = jax.nn.silu(x_flat @ p_shared["w_gate"]) * (x_flat @ p_shared["w_up"])
+    return h @ p_shared["w_down"]
+
+
+def _moe_inner(cfg: ModelConfig, p, x_flat, e0: int, n_local: int,
+               capacity: int):
+    """Partial MoE output for the local expert slab.  (N, D) partial sum."""
+    top_idx, top_gate, aux = _route(cfg, p["router"], x_flat)
+    idx_table, gate_table = _dispatch_tables(cfg, top_idx, top_gate,
+                                             e0, n_local, capacity)
+    xs = x_flat[idx_table]                                    # (E_loc, C, D)
+    local_w = {k: p[k] for k in ("w_gate", "w_up", "w_down")}
+    ys = _expert_ffn(local_w, xs)
+    ys = ys * gate_table[..., None].astype(ys.dtype)
+    out = jnp.zeros_like(x_flat).at[idx_table.reshape(-1)].add(
+        ys.reshape(-1, x_flat.shape[-1]), mode="drop")
+    if "shared" in p:
+        out = out + _shared_ffn(p["shared"], x_flat)
+    return out, aux
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+
+
+def moe_local(cfg: ModelConfig, p, x):
+    """Single-device MoE: all experts resident."""
+    B, S, D = x.shape
+    x_flat = x.reshape(B * S, D)
+    cap = expert_capacity(cfg, B * S)
+    out, aux = _moe_inner(cfg, p, x_flat, 0, cfg.moe.n_experts, cap)
+    return out.reshape(B, S, D), aux
+
+
+def moe_sharded(cfg: ModelConfig, p, x, mesh, *, data_axes=("data",),
+                model_axis: str = "model"):
+    """Expert-parallel MoE under shard_map.
+
+    x is sharded (batch over data axes, replicated over model); expert
+    weights sharded over ``model`` on the expert axis; one psum over
+    ``model`` combines partial outputs (same cost as a dense TP FFN
+    all-reduce).
+    """
+    m = cfg.moe
+    ep = mesh.shape[model_axis]
+    assert m.n_experts % ep == 0, (m.n_experts, ep)
+    n_local = m.n_experts // ep
+    B, S, D = x.shape
+
+    specs_p = moe_param_specs(cfg, data_axes, model_axis)
+
+    def body(p_loc, x_loc):
+        b, s, _ = x_loc.shape
+        x_flat = x_loc.reshape(b * s, D)
+        cap = expert_capacity(cfg, b * s)
+        rank = jax.lax.axis_index(model_axis)
+        e0 = rank * n_local
+        if "shared" in p_loc:
+            # shared expert hidden dim is sharded over model -> contributes
+            # a partial product combined by the same psum below.
+            pass
+        out, aux = _moe_inner(cfg, p_loc, x_flat, e0, n_local, cap)
+        out = jax.lax.psum(out, model_axis)
+        aux = jax.lax.psum(aux, model_axis) / ep
+        return out.reshape(b, s, D), aux
+
+    out, aux = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(specs_p, P(data_axes, None, None)),
+        out_specs=(P(data_axes, None, None), P()),
+        check_vma=False,
+    )(p, x)
+    return out, aux
+
+
+def moe_param_specs(cfg: ModelConfig, data_axes=("data",),
+                    model_axis: str = "model"):
+    """PartitionSpecs matching init_moe's tree (expert axis over model)."""
+    specs = {
+        "router": P(None, None),
+        "w_gate": P(model_axis, None, None),
+        "w_up": P(model_axis, None, None),
+        "w_down": P(model_axis, None, None),
+    }
+    if cfg.moe.n_shared_experts > 0:
+        specs["shared"] = {
+            "w_gate": P(None, model_axis),
+            "w_up": P(None, model_axis),
+            "w_down": P(model_axis, None),
+        }
+    return specs

@@ -1,0 +1,231 @@
+"""Architecture registry: one dispatch surface over every model family.
+
+Entry points (all pure functions over (cfg, params, ...)):
+  init_params(cfg, key, dtype)
+  forward_hidden(cfg, params, batch, ctx)      -> (hidden, aux)   training
+  init_decode_state(cfg, batch, max_len, dtype)                    serving
+  prefill(cfg, params, batch, state, ctx)      -> (hidden, state, aux)
+  decode_step(cfg, params, token, pos, state, ctx) -> (logits, state)
+  count_params_analytic(cfg)                   analytic N for 6·N·D rooflines
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import hybrid as hyb
+from repro.models import ssm_lm
+from repro.models import transformer as tfm
+from repro.models import whisper as whs
+from repro.models.config import ModelConfig
+from repro.models.transformer import LOCAL, ParallelCtx
+
+
+# ---------------------------------------------------------------------------
+# init
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32) -> Dict:
+    if cfg.family == "ssm":
+        return ssm_lm.init_ssm_params(cfg, key, dtype)
+    if cfg.family == "hybrid":
+        return hyb.init_hybrid_params(cfg, key, dtype)
+    if cfg.family == "encdec":
+        return whs.init_whisper_params(cfg, key, dtype)
+    if cfg.family == "vit":
+        from repro.core import vit_backbone
+        return vit_backbone.init_vitdet_params(cfg, key, dtype)
+    return tfm.init_lm_params(cfg, key, dtype)            # dense / moe / vlm
+
+
+# ---------------------------------------------------------------------------
+# training forward
+
+
+def forward_hidden(cfg: ModelConfig, params, batch: Dict[str, Any],
+                   ctx: ParallelCtx = LOCAL):
+    """batch: {"tokens": (B,T)} plus family extras ("frames"/"image_embeds")."""
+    if cfg.family == "ssm":
+        return ssm_lm.forward_hidden(cfg, params, batch["tokens"], ctx)
+    if cfg.family == "hybrid":
+        return hyb.forward_hidden(cfg, params, batch["tokens"], ctx)
+    if cfg.family == "encdec":
+        return whs.decode_train(cfg, params, batch["tokens"], batch["frames"],
+                                ctx)
+    return tfm.forward_hidden(cfg, params, batch["tokens"], ctx,
+                              image_embeds=batch.get("image_embeds"))
+
+
+CE_CHUNK_ELEMS = 64 * 2 ** 20      # chunk the CE when T*V exceeds this
+
+
+def _ce_nll_dense(logits, targets):
+    # vocab-parallel-friendly CE: lse + masked pick (no gather over the
+    # model-sharded vocab axis — GSPMD lowers this to one small psum)
+    logits32 = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits32, axis=-1)
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits32.shape,
+                                    logits32.ndim - 1)
+    picked = jnp.sum(jnp.where(iota == targets[..., None], logits32, 0.0),
+                     axis=-1)
+    return lse - picked
+
+
+def _ce_nll(logits, targets):
+    """Per-token NLL, time-chunked when the f32 logits buffer would be
+    large (odd vocabs can't always shard over model — e.g. whisper's
+    51865 — so the buffer must be bounded explicitly)."""
+    B, T, V = logits.shape
+    chunk = max(CE_CHUNK_ELEMS // max(V, 1), 128)
+    chunk = 1 << (chunk.bit_length() - 1)       # floor to a power of two
+    while chunk > 128 and T % chunk:            # ...that divides T
+        chunk //= 2
+    if T <= chunk or T % chunk:
+        return _ce_nll_dense(logits, targets)
+    nb = T // chunk
+
+    def body(_, inp):
+        lg, tg = inp
+        return None, _ce_nll_dense(lg, tg)
+
+    lg = jnp.moveaxis(logits.reshape(B, nb, chunk, V), 1, 0)
+    tg = jnp.moveaxis(targets.reshape(B, nb, chunk), 1, 0)
+    from repro.models.layers import scan as _scan
+    _, nll = _scan(body, None, (lg, tg))
+    return jnp.moveaxis(nll, 0, 1).reshape(B, T)
+
+
+def lm_loss(cfg: ModelConfig, params, batch, ctx: ParallelCtx = LOCAL):
+    """Next-token cross entropy (+ MoE aux). Returns (loss, metrics)."""
+    hidden, aux = forward_hidden(cfg, params, batch, ctx)
+    logits = tfm.logits_from_hidden(cfg, params, hidden, ctx)
+    tokens = batch["tokens"]
+    # VLM prepends image tokens to the sequence: only score the text tail.
+    T_text = tokens.shape[1]
+    logits = logits[:, -T_text:, :]
+    targets = batch.get("labels")
+    if targets is None:
+        targets = jnp.concatenate(
+            [tokens[:, 1:], jnp.zeros_like(tokens[:, :1])], axis=1)
+    nll = _ce_nll(logits, targets)
+    mask = jnp.ones_like(nll)
+    if "loss_mask" in batch:
+        mask = batch["loss_mask"].astype(nll.dtype)
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    aux_coef = cfg.moe.router_aux_coef if cfg.moe is not None else 0.0
+    total = loss + aux_coef * aux
+    return total, {"ce": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    if cfg.family == "ssm":
+        return ssm_lm.init_states(cfg, batch, dtype)
+    if cfg.family == "hybrid":
+        return hyb.init_hybrid_caches(cfg, batch, max_len, dtype)
+    if cfg.family == "encdec":
+        # (enc_out placeholder, decoder self-attn caches); enc_out is
+        # produced at prefill.
+        return whs.init_dec_caches(cfg, batch, max_len, dtype)
+    return tfm.init_caches(cfg, batch, max_len, dtype)
+
+
+def prefill(cfg: ModelConfig, params, batch: Dict[str, Any], state,
+            ctx: ParallelCtx = LOCAL):
+    if cfg.family == "ssm":
+        return ssm_lm.prefill(cfg, params, batch["tokens"], state, ctx)
+    if cfg.family == "hybrid":
+        return hyb.prefill(cfg, params, batch["tokens"], state, ctx)
+    if cfg.family == "encdec":
+        return whs.prefill(cfg, params, batch["tokens"], batch["frames"],
+                           state, ctx)
+    return tfm.prefill(cfg, params, batch["tokens"], state, ctx,
+                       image_embeds=batch.get("image_embeds"))
+
+
+def decode_step(cfg: ModelConfig, params, token, pos, state,
+                ctx: ParallelCtx = LOCAL):
+    if cfg.family == "ssm":
+        return ssm_lm.decode_step(cfg, params, token, pos, state, ctx)
+    if cfg.family == "hybrid":
+        return hyb.decode_step(cfg, params, token, pos, state, ctx)
+    if cfg.family == "encdec":
+        return whs.decode_step(cfg, params, token, pos, state, ctx)
+    return tfm.decode_step(cfg, params, token, pos, state, ctx)
+
+
+# ---------------------------------------------------------------------------
+# analytic parameter counts (for MODEL_FLOPS = 6 N D rooflines)
+
+
+def _attn_params(cfg: ModelConfig) -> int:
+    if cfg.mla is not None:
+        m = cfg.mla
+        qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+        return (cfg.d_model * m.q_lora_rank
+                + m.q_lora_rank * cfg.n_heads * qk_head
+                + cfg.d_model * (m.kv_lora_rank + m.qk_rope_head_dim)
+                + m.kv_lora_rank * cfg.n_heads * m.qk_nope_head_dim
+                + m.kv_lora_rank * cfg.n_heads * m.v_head_dim
+                + cfg.n_heads * m.v_head_dim * cfg.d_model)
+    return cfg.d_model * (cfg.q_dim + 2 * cfg.kv_dim) + cfg.q_dim * cfg.d_model
+
+
+def _mlp_params(cfg: ModelConfig, d_ff: int) -> int:
+    if cfg.activation == "silu":
+        return 3 * cfg.d_model * d_ff
+    return 2 * cfg.d_model * d_ff
+
+
+def _mamba_params(cfg: ModelConfig) -> int:
+    s = cfg.ssm
+    from repro.models.mamba2 import ssm_dims
+    d_inner, H, conv_ch = ssm_dims(cfg)
+    proj_out = 2 * d_inner + 2 * s.n_groups * s.d_state + H
+    return (cfg.d_model * proj_out + s.d_conv * conv_ch + conv_ch
+            + 3 * H + d_inner + d_inner * cfg.d_model)
+
+
+def count_params_analytic(cfg: ModelConfig, active_only: bool = False) -> int:
+    D = cfg.d_model
+    embed = cfg.vocab_size * D
+    head = 0 if cfg.tied_embeddings else D * cfg.vocab_size
+    total = embed + head
+
+    if cfg.family == "ssm":
+        return total + cfg.n_layers * _mamba_params(cfg)
+
+    if cfg.family == "hybrid":
+        per_mamba = _mamba_params(cfg)
+        shared = _attn_params(cfg) + _mlp_params(cfg, cfg.d_ff)
+        return total + cfg.n_layers * per_mamba + shared
+
+    if cfg.family == "encdec":
+        enc = cfg.encdec.n_encoder_layers * (
+            _attn_params(cfg) + _mlp_params(cfg, cfg.d_ff))
+        dec = cfg.n_layers * (2 * _attn_params(cfg) +
+                              _mlp_params(cfg, cfg.d_ff))
+        return total + enc + dec + cfg.max_seq_len * D
+
+    # dense / moe / vlm decoder
+    attn_p = _attn_params(cfg)
+    if cfg.moe is None:
+        return total + cfg.n_layers * (attn_p + _mlp_params(cfg, cfg.d_ff))
+
+    m = cfg.moe
+    n_dense = m.first_dense_layers
+    n_moe = cfg.n_layers - n_dense
+    dense_ffn = _mlp_params(cfg, m.d_ff_dense or cfg.d_ff)
+    expert_ffn = _mlp_params(cfg, m.d_ff_expert)
+    shared_ffn = _mlp_params(cfg, m.d_ff_expert * m.n_shared_experts) \
+        if m.n_shared_experts else 0
+    router = D * m.n_experts
+    n_eff = m.top_k if active_only else m.n_experts
+    total += n_dense * (attn_p + dense_ffn)
+    total += n_moe * (attn_p + router + n_eff * expert_ffn + shared_ffn)
+    return total

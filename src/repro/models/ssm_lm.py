@@ -1,0 +1,84 @@
+"""Pure Mamba-2 LM (mamba2-370m): scanned mamba blocks, no attention."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import mamba2 as m2
+from repro.models.config import ModelConfig
+from repro.models.hybrid import _mamba_prefill
+from repro.models.transformer import ParallelCtx, LOCAL
+
+
+def init_ssm_params(cfg: ModelConfig, key, dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, 4)
+
+    def one(k):
+        return {"ln": L.init_norm(cfg, dtype),
+                "mamba": m2.init_mamba2(cfg, k, dtype)}
+
+    return {
+        "embed": L.init_embedding(cfg, ks[0], dtype),
+        "mamba_blocks": jax.vmap(one)(jax.random.split(ks[1], cfg.n_layers)),
+        "final_norm": L.init_norm(cfg, dtype),
+        "lm_head": L.init_lm_head(cfg, ks[2], dtype),
+    }
+
+
+def forward_hidden(cfg: ModelConfig, params, tokens, ctx: ParallelCtx = LOCAL,
+                   image_embeds=None):
+    x = L.embed_tokens(params["embed"], tokens)
+    x = ctx.hidden(x)
+
+    def body(x, p):
+        h = L.apply_norm(cfg, p["ln"], x)
+        x = x + m2.mamba2_forward(cfg, p["mamba"], h)
+        x = ctx.hidden(x)
+        return x, None
+
+    body_fn = jax.checkpoint(body) if ctx.remat else body
+    x, _ = L.scan(body_fn, x, params["mamba_blocks"])
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    return x, jnp.zeros((), jnp.float32)
+
+
+def init_states(cfg: ModelConfig, batch: int, dtype):
+    s = m2.init_mamba2_state(cfg, batch, dtype)
+    return jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape), s)
+
+
+def prefill(cfg: ModelConfig, params, tokens, states,
+            ctx: ParallelCtx = LOCAL):
+    x = L.embed_tokens(params["embed"], tokens)
+    x = ctx.hidden(x)
+
+    def body(x, p):
+        h = L.apply_norm(cfg, p["ln"], x)
+        dx, state = _mamba_prefill(cfg, p["mamba"], h)
+        x = x + dx
+        x = ctx.hidden(x)
+        return x, state
+
+    x, states = L.scan(body, x, params["mamba_blocks"])
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    return x, states, jnp.zeros((), jnp.float32)
+
+
+def decode_step(cfg: ModelConfig, params, token, pos, states,
+                ctx: ParallelCtx = LOCAL):
+    x = L.embed_tokens(params["embed"], token)
+
+    def body(x, inp):
+        p, state = inp
+        h = L.apply_norm(cfg, p["ln"], x)
+        dx, new_state = m2.mamba2_decode(cfg, p["mamba"], h, state)
+        return x + dx, new_state
+
+    x, new_states = L.scan(body, x, (params["mamba_blocks"], states))
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = L.lm_logits(cfg, params["lm_head"], params["embed"], x)
+    return logits, new_states

@@ -1,0 +1,325 @@
+"""Decoder-only LM assembly for the dense / moe / vlm families.
+
+Layers are stacked along a leading axis and executed with
+``jax.lax.scan`` so the compiled HLO contains ONE layer body regardless
+of depth — essential to keep 512-device dry-run compiles tractable.
+
+Entry points:
+  init_lm_params / forward_hidden (training) / prefill / decode_step
+  run_blocks — scan over an arbitrary [start, end) layer slice (used by
+  the mixed-resolution restoration logic, which splits the backbone at
+  the restoration point).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models.config import ModelConfig
+
+
+@dataclass(frozen=True)
+class ParallelCtx:
+    """Threading of mesh/axis info through model code.  None mesh = local."""
+    mesh: Any = None
+    data_axes: Tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+    use_ep: bool = True
+    remat: bool = False
+    sp: bool = False      # sequence parallelism: shard the layer-carry
+                          # hidden state's d_model over the model axis
+
+    def constrain(self, x, *spec):
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(self.mesh, P(*spec)))
+
+    def hidden(self, x):
+        """Constraint for (B, T, D) residual-stream activations."""
+        if self.mesh is None:
+            return x
+        last = self.model_axis if (
+            self.sp and x.shape[-1] % self.mesh.shape[self.model_axis] == 0
+        ) else None
+        return self.constrain(x, self.data_axes, None, last)
+
+
+LOCAL = ParallelCtx()
+
+
+# ---------------------------------------------------------------------------
+# single block
+
+
+def _layer_kind(cfg: ModelConfig, idx: int) -> str:
+    if cfg.moe is not None and idx >= cfg.moe.first_dense_layers:
+        return "moe"
+    return "dense"
+
+
+def init_block(cfg: ModelConfig, key, dtype, kind: str):
+    ks = jax.random.split(key, 4)
+    p = {"ln1": L.init_norm(cfg, dtype), "ln2": L.init_norm(cfg, dtype)}
+    if cfg.mla is not None:
+        p["attn"] = attn.init_mla(cfg, ks[0], dtype)
+    else:
+        p["attn"] = attn.init_attention(cfg, ks[0], dtype)
+    if kind == "moe":
+        p["ffn"] = moe_lib.init_moe(cfg, ks[1], dtype)
+    else:
+        d_ff = cfg.d_ff
+        if cfg.moe is not None and cfg.moe.d_ff_dense:
+            d_ff = cfg.moe.d_ff_dense
+        p["ffn"] = L.init_mlp(cfg, ks[1], dtype, d_ff=d_ff)
+    return p
+
+
+def block_forward(cfg: ModelConfig, p, x, positions, ctx: ParallelCtx,
+                  kind: str, cache=None, pos=None):
+    """Pre-norm block.  cache/pos semantics follow attention.py.
+    Returns (x, new_cache, aux_loss)."""
+    h = L.apply_norm(cfg, p["ln1"], x)
+    new_cache = None
+    if cfg.mla is not None:
+        if cache is not None:
+            a, new_cache = attn.mla_forward(cfg, p["attn"], h, positions,
+                                            cache=cache, pos=pos)
+        else:
+            a = attn.mla_forward(cfg, p["attn"], h, positions)
+    else:
+        if cache is None:
+            a = attn.attention_forward(cfg, p["attn"], h, positions)
+        elif pos is None:
+            a, new_cache = attn.attention_prefill(cfg, p["attn"], h,
+                                                  positions, cache)
+        else:
+            a, new_cache = attn.attention_decode(cfg, p["attn"], h, pos, cache)
+    x = x + a
+    x = ctx.hidden(x)
+
+    h = L.apply_norm(cfg, p["ln2"], x)
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "moe":
+        if ctx.mesh is not None and ctx.use_ep:
+            f, aux = moe_lib.moe_sharded(cfg, p["ffn"], h, ctx.mesh,
+                                         data_axes=ctx.data_axes,
+                                         model_axis=ctx.model_axis)
+        else:
+            f, aux = moe_lib.moe_local(cfg, p["ffn"], h)
+    else:
+        f = L.apply_mlp(cfg, p["ffn"], h)
+    x = x + f
+    x = ctx.hidden(x)
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# parameter assembly
+
+
+def _stack_init(init_fn, key, n: int):
+    """vmap an init over n layer keys -> params stacked on axis 0."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def init_lm_params(cfg: ModelConfig, key, dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, 6)
+    params: Dict[str, Any] = {"embed": L.init_embedding(cfg, ks[0], dtype)}
+
+    n_dense = cfg.moe.first_dense_layers if cfg.moe is not None else 0
+    if cfg.moe is None:
+        n_dense = cfg.n_layers
+    n_moe = cfg.n_layers - n_dense
+    if n_dense:
+        params["dense_blocks"] = _stack_init(
+            lambda k: init_block(cfg, k, dtype, "dense"), ks[1], n_dense)
+    if n_moe:
+        params["moe_blocks"] = _stack_init(
+            lambda k: init_block(cfg, k, dtype, "moe"), ks[2], n_moe)
+
+    params["final_norm"] = L.init_norm(cfg, dtype)
+    params["lm_head"] = L.init_lm_head(cfg, ks[3], dtype)
+
+    if cfg.vlm is not None:
+        pks = jax.random.split(ks[4], 2)
+        params["projector"] = {
+            "w1": L.dense_init(pks[0], (cfg.vlm.vision_hidden, cfg.d_model),
+                               dtype),
+            "b1": jnp.zeros((cfg.d_model,), dtype),
+            "w2": L.dense_init(pks[1], (cfg.d_model, cfg.d_model), dtype),
+            "b2": jnp.zeros((cfg.d_model,), dtype),
+        }
+    return params
+
+
+def _block_stacks(cfg: ModelConfig, params):
+    """Ordered [(kind, stacked_params, n_layers)] covering the backbone."""
+    out = []
+    if "dense_blocks" in params:
+        n = jax.tree_util.tree_leaves(params["dense_blocks"])[0].shape[0]
+        out.append(("dense", params["dense_blocks"], n))
+    if "moe_blocks" in params:
+        n = jax.tree_util.tree_leaves(params["moe_blocks"])[0].shape[0]
+        out.append(("moe", params["moe_blocks"], n))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# scanned execution
+
+
+def _scan_blocks(cfg, stack, kind, x, positions, ctx, caches=None, pos=None):
+    """Scan a homogeneous stack of blocks.  caches: stacked (L, ...) pytree."""
+
+    def body(carry, layer_in):
+        x, aux = carry
+        p, cache = layer_in
+        x, new_cache, a = block_forward(cfg, p, x, positions, ctx, kind,
+                                        cache=cache, pos=pos)
+        return (x, aux + a), new_cache
+
+    body_fn = jax.checkpoint(body) if ctx.remat else body
+    (x, aux), new_caches = L.scan(
+        body_fn, (x, jnp.zeros((), jnp.float32)), (stack, caches))
+    return x, aux, new_caches
+
+
+def embed_inputs(cfg: ModelConfig, params, tokens,
+                 image_embeds: Optional[jnp.ndarray] = None):
+    x = L.embed_tokens(params["embed"], tokens)
+    if cfg.vlm is not None and image_embeds is not None:
+        pr = params["projector"]
+        v = jax.nn.gelu(image_embeds @ pr["w1"] + pr["b1"]) @ pr["w2"] + pr["b2"]
+        x = jnp.concatenate([v.astype(x.dtype), x], axis=1)
+    return x
+
+
+def forward_hidden(cfg: ModelConfig, params, tokens, ctx: ParallelCtx = LOCAL,
+                   image_embeds=None):
+    """Training/eval forward: final hidden states + aux loss."""
+    x = embed_inputs(cfg, params, tokens, image_embeds)
+    B, T, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(T)[None, :], (B, T))
+    x = ctx.hidden(x)
+    aux_total = jnp.zeros((), jnp.float32)
+    for kind, stack, n in _block_stacks(cfg, params):
+        x, aux, _ = _scan_blocks(cfg, stack, kind, x, positions, ctx)
+        aux_total = aux_total + aux
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    return x, aux_total
+
+
+def logits_from_hidden(cfg: ModelConfig, params, x, ctx: ParallelCtx = LOCAL):
+    logits = L.lm_logits(cfg, params["lm_head"], params["embed"], x)
+    return ctx.constrain(logits, ctx.data_axes, None, ctx.model_axis)
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    """Stacked (L, ...) caches per homogeneous block stack."""
+    def one(n):
+        if cfg.mla is not None:
+            c = attn.init_mla_cache(cfg, batch, max_len, dtype)
+        else:
+            c = attn.init_kv_cache(cfg, batch, max_len, dtype)
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), c)
+
+    n_dense = cfg.moe.first_dense_layers if cfg.moe is not None else cfg.n_layers
+    n_dense = min(n_dense, cfg.n_layers)
+    n_moe = cfg.n_layers - n_dense
+    caches = {}
+    if n_dense:
+        caches["dense_blocks"] = one(n_dense)
+    if n_moe:
+        caches["moe_blocks"] = one(n_moe)
+    return caches
+
+
+def prefill(cfg: ModelConfig, params, tokens, caches,
+            ctx: ParallelCtx = LOCAL, image_embeds=None):
+    """Prefill the KV caches; returns (last_hidden, caches, aux)."""
+    x = embed_inputs(cfg, params, tokens, image_embeds)
+    B, T, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(T)[None, :], (B, T))
+    x = ctx.hidden(x)
+    new_caches = {}
+    aux_total = jnp.zeros((), jnp.float32)
+    for kind, stack, n in _block_stacks(cfg, params):
+        name = f"{kind}_blocks"
+        x, aux, cs = _scan_blocks(cfg, stack, kind, x, positions, ctx,
+                                  caches=caches[name])
+        new_caches[name] = cs
+        aux_total = aux_total + aux
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    return x, new_caches, aux_total
+
+
+def decode_step(cfg: ModelConfig, params, token, pos, caches,
+                ctx: ParallelCtx = LOCAL):
+    """One decode step.  token: (B, 1) int32; pos: scalar int32.
+    Returns (logits (B, 1, V), caches)."""
+    x = L.embed_tokens(params["embed"], token)
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos)
+    x = ctx.hidden(x)
+    new_caches = {}
+    for kind, stack, n in _block_stacks(cfg, params):
+        name = f"{kind}_blocks"
+        x, _, cs = _scan_blocks(cfg, stack, kind, x, positions, ctx,
+                                caches=caches[name], pos=pos)
+        new_caches[name] = cs
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = logits_from_hidden(cfg, params, x, ctx)
+    return logits, new_caches
+
+
+# ---------------------------------------------------------------------------
+# layer-slice execution (mixed-resolution restoration splits the backbone)
+
+
+def slice_stack(stack, s: int, e: int):
+    return jax.tree_util.tree_map(lambda a: a[s:e], stack)
+
+
+def run_blocks(cfg: ModelConfig, params, x, positions, start: int, end: int,
+               ctx: ParallelCtx = LOCAL, caches=None, pos=None):
+    """Run backbone layers [start, end) on hidden states x.
+
+    Handles stacks spanning the dense/moe boundary.  caches, when given,
+    must be the full stacked cache pytree; the slice is updated in place
+    (functionally).  Returns (x, caches, aux).
+    """
+    offset = 0
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = dict(caches) if caches is not None else None
+    for kind, stack, n in _block_stacks(cfg, params):
+        name = f"{kind}_blocks"
+        s = max(start - offset, 0)
+        e = min(end - offset, n)
+        if s < e:
+            sub = slice_stack(stack, s, e)
+            sub_cache = (slice_stack(caches[name], s, e)
+                         if caches is not None else None)
+            x, aux, cs = _scan_blocks(cfg, sub, kind, x, positions, ctx,
+                                      caches=sub_cache, pos=pos)
+            aux_total = aux_total + aux
+            if caches is not None:
+                new_caches[name] = jax.tree_util.tree_map(
+                    lambda full, part: jax.lax.dynamic_update_slice_in_dim(
+                        full, part.astype(full.dtype), s, axis=0),
+                    new_caches[name], cs)
+        offset += n
+    return x, new_caches, aux_total

@@ -1,0 +1,163 @@
+"""Whisper-medium style encoder–decoder backbone.
+
+Per the assignment the conv/mel frontend is a STUB: ``input_specs``
+supplies precomputed frame embeddings (B, T_enc, d_model).  Sinusoidal
+positions are added to encoder frames; the decoder uses learned
+positions, causal self-attention with a KV cache, and cross-attention
+whose K/V are computed once from the encoder output at prefill.
+LayerNorm + GELU (not RMS/SwiGLU) to stay faithful to the family.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.models.transformer import ParallelCtx, LOCAL
+
+
+def _enc_dec_counts(cfg: ModelConfig):
+    return cfg.encdec.n_encoder_layers, cfg.n_layers
+
+
+def init_whisper_params(cfg: ModelConfig, key, dtype=jnp.float32) -> Dict:
+    n_enc, n_dec = _enc_dec_counts(cfg)
+    ks = jax.random.split(key, 6)
+
+    def enc_layer(k):
+        kk = jax.random.split(k, 2)
+        return {
+            "ln1": L.init_norm(cfg, dtype),
+            "attn": attn.init_attention(cfg, kk[0], dtype),
+            "ln2": L.init_norm(cfg, dtype),
+            "ffn": L.init_mlp(cfg, kk[1], dtype),
+        }
+
+    def dec_layer(k):
+        kk = jax.random.split(k, 3)
+        return {
+            "ln1": L.init_norm(cfg, dtype),
+            "self_attn": attn.init_attention(cfg, kk[0], dtype),
+            "ln_x": L.init_norm(cfg, dtype),
+            "cross_attn": attn.init_cross_attention(cfg, kk[1], dtype),
+            "ln2": L.init_norm(cfg, dtype),
+            "ffn": L.init_mlp(cfg, kk[2], dtype),
+        }
+
+    return {
+        "enc_blocks": jax.vmap(enc_layer)(jax.random.split(ks[0], n_enc)),
+        "enc_norm": L.init_norm(cfg, dtype),
+        "embed": L.init_embedding(cfg, ks[1], dtype),
+        "dec_pos": L.embed_init(ks[2], (cfg.max_seq_len, cfg.d_model), dtype),
+        "dec_blocks": jax.vmap(dec_layer)(jax.random.split(ks[3], n_dec)),
+        "final_norm": L.init_norm(cfg, dtype),
+        "lm_head": L.init_lm_head(cfg, ks[4], dtype),
+    }
+
+
+def encode(cfg: ModelConfig, params, frames, ctx: ParallelCtx = LOCAL):
+    """frames: (B, T_enc, d_model) stub embeddings -> encoder output."""
+    B, T, D = frames.shape
+    pos = L.sinusoidal_positions(T, D).astype(frames.dtype)
+    x = frames + pos[None]
+    x = ctx.hidden(x)
+    positions = jnp.broadcast_to(jnp.arange(T)[None, :], (B, T))
+
+    def body(x, p):
+        h = L.apply_norm(cfg, p["ln1"], x)
+        x = x + attn.attention_forward(cfg, p["attn"], h, positions,
+                                       causal=False, rope=False)
+        x = x + L.apply_mlp(cfg, p["ffn"], L.apply_norm(cfg, p["ln2"], x))
+        x = ctx.hidden(x)
+        return x, None
+
+    body_fn = jax.checkpoint(body) if ctx.remat else body
+    x, _ = L.scan(body_fn, x, params["enc_blocks"])
+    return L.apply_norm(cfg, params["enc_norm"], x)
+
+
+def _dec_block(cfg, p, x, positions, enc_out, cache=None, pos=None):
+    h = L.apply_norm(cfg, p["ln1"], x)
+    if cache is None:
+        a = attn.attention_forward(cfg, p["self_attn"], h, positions,
+                                   rope=False)
+        new_cache = None
+    elif pos is None:
+        a, new_cache = attn.attention_prefill(cfg, p["self_attn"], h,
+                                              positions, cache, rope=False)
+    else:
+        a, new_cache = attn.attention_decode(cfg, p["self_attn"], h, pos,
+                                             cache, rope=False)
+    x = x + a
+    x = x + attn.cross_attention(cfg, p["cross_attn"],
+                                 L.apply_norm(cfg, p["ln_x"], x), enc_out)
+    x = x + L.apply_mlp(cfg, p["ffn"], L.apply_norm(cfg, p["ln2"], x))
+    return x, new_cache
+
+
+def decode_train(cfg: ModelConfig, params, tokens, frames,
+                 ctx: ParallelCtx = LOCAL):
+    """Teacher-forced decoder over full target sequence."""
+    enc_out = encode(cfg, params, frames, ctx)
+    B, T = tokens.shape
+    x = L.embed_tokens(params["embed"], tokens) + params["dec_pos"][None, :T]
+    positions = jnp.broadcast_to(jnp.arange(T)[None, :], (B, T))
+
+    def body(x, p):
+        x, _ = _dec_block(cfg, p, x, positions, enc_out)
+        x = ctx.hidden(x)
+        return x, None
+
+    body_fn = jax.checkpoint(body) if ctx.remat else body
+    x, _ = L.scan(body_fn, x, params["dec_blocks"])
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    return x, jnp.zeros((), jnp.float32)
+
+
+def init_dec_caches(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    c = attn.init_kv_cache(cfg, batch, max_len, dtype)
+    return jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape), c)
+
+
+def prefill(cfg: ModelConfig, params, tokens, frames, caches,
+            ctx: ParallelCtx = LOCAL):
+    """Encode frames + teacher-forced prefill of decoder self-attn caches.
+    Returns (hidden, (enc_out, caches), aux)."""
+    enc_out = encode(cfg, params, frames, ctx)
+    B, T = tokens.shape
+    x = L.embed_tokens(params["embed"], tokens) + params["dec_pos"][None, :T]
+    positions = jnp.broadcast_to(jnp.arange(T)[None, :], (B, T))
+
+    def body(x, inp):
+        p, c = inp
+        x, c2 = _dec_block(cfg, p, x, positions, enc_out, cache=c)
+        return x, c2
+
+    x, new_caches = L.scan(body, x, (params["dec_blocks"], caches))
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    return x, (enc_out, new_caches), jnp.zeros((), jnp.float32)
+
+
+def decode_step(cfg: ModelConfig, params, token, pos, state,
+                ctx: ParallelCtx = LOCAL):
+    """One decoder token.  state = (enc_out, caches)."""
+    enc_out, caches = state
+    x = L.embed_tokens(params["embed"], token) + \
+        params["dec_pos"][pos][None, None, :]
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos)
+
+    def body(x, inp):
+        p, c = inp
+        x, c2 = _dec_block(cfg, p, x, positions, enc_out, cache=c, pos=pos)
+        return x, c2
+
+    x, new_caches = L.scan(body, x, (params["dec_blocks"], caches))
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = L.lm_logits(cfg, params["lm_head"], params["embed"], x)
+    return logits, (enc_out, new_caches)

@@ -1,0 +1,131 @@
+"""Offloading policies: the paper's baselines (§VI-A) + ViTMAlis itself
+(+ its ablated variants, §VI-D)."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.partition import bucket_n_low
+from repro.offload import motion as mo
+from repro.offload.optimizer import (OffloadOptimizer, SystemState,
+                                     candidate_configs)
+from repro.offload.simulator import Policy, Simulation
+
+FULL_QUALITY = 95        # baselines' default JPEG quality (paper §VI-A)
+
+
+def _zeros(sim: Simulation) -> np.ndarray:
+    return np.zeros((sim.part.n_regions,), np.int32)
+
+
+class Back2Back(Policy):
+    """Offload the newest frame immediately on completion; full res; no
+    tracker — stale cache results are rendered as-is."""
+    name = "Back2Back"
+    use_tracker = False
+
+    def decide(self, sim: Simulation, frame_idx: int) -> Dict:
+        return {"mask": _zeros(sim), "quality": FULL_QUALITY, "beta": 0}
+
+
+class TrackB2B(Back2Back):
+    """Accuracy-centric: Back2Back + local tracker (canonical paradigm)."""
+    name = "TrackB2B"
+    use_tracker = True
+
+
+class TrackRoI(Policy):
+    """Content-aware RoI masking: non-DOR regions are blanked before
+    encoding (big bandwidth cut, same inference cost, context lost)."""
+    name = "TrackRoI"
+    use_tracker = True
+
+    def decide(self, sim: Simulation, frame_idx: int) -> Dict:
+        rho = sim.rho()
+        phi = mo.classify_regions(sim.m, rho)
+        mask = _zeros(sim)
+        # non-DOR regions are blanked before encoding; the flat blanks
+        # genuinely compress to almost nothing in the DCT+zlib codec
+        blank = (phi != 2).astype(np.int32)
+        return {"mask": mask, "quality": FULL_QUALITY, "beta": 0,
+                "blank": blank}
+
+
+class TrackUD(Policy):
+    """Latency-adaptive: uniform downsample x2 when the last E2E latency
+    exceeded 15 frame intervals (adaptive-streaming heuristic)."""
+    name = "TrackUD"
+    use_tracker = True
+    threshold_frames = 15
+
+    def __init__(self, fps: int = 10, n_subsets: int = 4):
+        self.fps = fps
+        self.n_subsets = n_subsets
+        self.last_e2e: Optional[float] = None
+
+    def observe_completion(self, e2e_latency: float) -> None:
+        self.last_e2e = e2e_latency
+
+    def decide(self, sim: Simulation, frame_idx: int) -> Dict:
+        slow = (self.last_e2e is not None and
+                self.last_e2e > self.threshold_frames / self.fps)
+        if slow:
+            mask = np.ones((sim.part.n_regions,), np.int32)
+            return {"mask": mask, "quality": FULL_QUALITY,
+                    "beta": self.n_subsets}
+        return {"mask": _zeros(sim), "quality": FULL_QUALITY, "beta": 0}
+
+
+# ---------------------------------------------------------------------------
+# ViTMAlis
+
+
+class ViTMAlis(Policy):
+    """The full system: Algorithm 1 over the (tau_d, lambda, beta) space."""
+    name = "ViTMAlis"
+    use_tracker = True
+
+    def __init__(self, optimizer: OffloadOptimizer):
+        self.opt = optimizer
+
+    def decide(self, sim: Simulation, frame_idx: int) -> Dict:
+        import time as _t
+        self.opt.delays.net = sim.net_est
+        rho = sim.rho()
+        t0 = _t.perf_counter()
+        choice = self.opt.select(sim.m, sim.m_f, rho, sim.state)
+        wall = _t.perf_counter() - t0
+        c = choice["config"]
+        mask = choice["mask"].copy()
+        # enforce the static bucket: trim/pad handled by region ids later
+        n_d = choice["N_d"]
+        if int(mask.sum()) != n_d:
+            ones = np.nonzero(mask)[0]
+            mask[:] = 0
+            mask[ones[:n_d]] = 1
+        return {"mask": mask, "quality": c.quality,
+                "beta": c.beta if n_d > 0 else 0,
+                "opt_wall": wall}
+
+
+class ViTMAlisNoRegType(ViTMAlis):
+    """Ablation w/o RegType: downsample ALL non-DOR regions (no SBR/CMR
+    distinction) — the tau_d knob collapses to {0, all-non-DOR}."""
+    name = "w/o RegType"
+
+    def __init__(self, optimizer: OffloadOptimizer):
+        super().__init__(optimizer)
+        self.opt.configs = [c for c in self.opt.configs
+                            if c.tau_d in (0, 2)]
+
+
+class ViTMAlisNoDynaRes(ViTMAlis):
+    """Ablation w/o DynaRes: restoration deferred to the last subset."""
+    name = "w/o DynaRes"
+
+    def __init__(self, optimizer: OffloadOptimizer, n_subsets: int = 4):
+        super().__init__(optimizer)
+        self.opt.configs = [c for c in self.opt.configs
+                            if c.beta in (0, n_subsets)]

@@ -1,0 +1,175 @@
+"""Mixed-resolution frame codec (device-side encode, server-side decode).
+
+JPEG-like pipeline, reproducible in pure numpy (DESIGN.md hardware
+adaptation: libjpeg -> 8x8 DCT + quality-scaled quantization + zlib
+entropy stage, so compressed sizes are content- and quality-dependent
+exactly as the paper's MLP^size estimator requires).
+
+Encoding a mixed-resolution frame (paper Fig. 3): full-resolution regions
+are coded at their native pixels; regions marked for downsampling are
+average-pooled by ``d`` first.  The payload is the concatenation of both
+streams plus the binary region mask, mirroring the single mixed-res image
+the prototype transmits.
+"""
+from __future__ import annotations
+
+import zlib
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.partition import Partition
+
+# JPEG luminance quantization table
+_Q50 = np.array([
+    [16, 11, 10, 16, 24, 40, 51, 61],
+    [12, 12, 14, 19, 26, 58, 60, 55],
+    [14, 13, 16, 24, 40, 57, 69, 56],
+    [14, 17, 22, 29, 51, 87, 80, 62],
+    [18, 22, 37, 56, 68, 109, 103, 77],
+    [24, 35, 55, 64, 81, 104, 113, 92],
+    [49, 64, 78, 87, 103, 121, 120, 101],
+    [72, 92, 95, 98, 112, 100, 103, 99]], np.float32)
+
+
+def _quality_table(quality: int) -> np.ndarray:
+    q = max(1, min(int(quality), 100))
+    s = 5000 / q if q < 50 else 200 - 2 * q
+    tbl = np.floor((_Q50 * s + 50) / 100)
+    return np.clip(tbl, 1, 255).astype(np.float32)
+
+
+def _dct_matrix() -> np.ndarray:
+    k = np.arange(8)
+    c = np.sqrt(2.0 / 8.0) * np.cos((2 * k[None, :] + 1) * k[:, None]
+                                    * np.pi / 16.0)
+    c[0] *= 1.0 / np.sqrt(2.0)
+    return c.astype(np.float32)
+
+
+_DCT = _dct_matrix()
+_ZIG = np.array(sorted(range(64), key=lambda i: (i // 8 + i % 8,
+                                                 (i // 8 + i % 8) % 2 == 0
+                                                 and i % 8 or -(i % 8))))
+
+
+def _blockify(img: np.ndarray) -> np.ndarray:
+    """(H, W) -> (H/8 * W/8, 8, 8)."""
+    H, W = img.shape
+    x = img.reshape(H // 8, 8, W // 8, 8).transpose(0, 2, 1, 3)
+    return x.reshape(-1, 8, 8)
+
+
+def _unblockify(blocks: np.ndarray, H: int, W: int) -> np.ndarray:
+    x = blocks.reshape(H // 8, W // 8, 8, 8).transpose(0, 2, 1, 3)
+    return x.reshape(H, W)
+
+
+def _encode_plane(plane: np.ndarray, quality: int
+                  ) -> Tuple[bytes, np.ndarray]:
+    """DCT-quantize one plane; returns (compressed bytes, dequantized)."""
+    tbl = _quality_table(quality)
+    blocks = _blockify(plane * 255.0 - 128.0)
+    coef = np.einsum("ij,njk,lk->nil", _DCT, blocks, _DCT)
+    q = np.round(coef / tbl).astype(np.int16)
+    # zigzag scan improves run-length behaviour for zlib
+    zz = q.reshape(-1, 64)[:, _ZIG]
+    payload = zlib.compress(zz.astype(np.int16).tobytes(), level=6)
+    deq = (zz[:, np.argsort(_ZIG)].reshape(-1, 8, 8) * tbl)
+    rec = np.einsum("ji,njk,kl->nil", _DCT, deq, _DCT)
+    rec = (rec + 128.0) / 255.0
+    return payload, _unblockify(rec, *plane.shape)
+
+
+@dataclass
+class EncodedFrame:
+    payload_bytes: int
+    mask: np.ndarray                 # (n_regions,) int32
+    quality: int
+    streams: List[bytes]
+    shapes: Dict
+
+
+class MixedResCodec:
+    def __init__(self, part: Partition, patch_px: int, downsample: int):
+        self.part = part
+        self.patch_px = patch_px
+        self.d = downsample
+
+    def region_px(self) -> int:
+        return self.part.region * self.patch_px
+
+    # ------------------------------------------------------------------
+    def encode(self, frame: np.ndarray, mask: np.ndarray,
+               quality: int) -> Tuple[EncodedFrame, np.ndarray]:
+        """Encode with region mask; also returns the server-side decoded
+        mixed frame (full canvas with low regions decoded-upsampled) for
+        accuracy evaluation."""
+        rpx = self.region_px()
+        nRw = self.part.regions_w
+        gray = frame.mean(axis=-1)          # luma-only codec (3x cheaper)
+        decoded = frame.copy()
+        streams: List[bytes] = []
+        total = len(mask) // 8 + 1 + 16     # mask bits + header
+        chroma_factor = 1.5                 # subsampled chroma cost model
+
+        for j, low in enumerate(np.asarray(mask).astype(bool)):
+            ry, rx = divmod(j, nRw)
+            y0, x0 = ry * rpx, rx * rpx
+            region = gray[y0:y0 + rpx, x0:x0 + rpx]
+            if low:
+                r = region.reshape(rpx // self.d, self.d,
+                                   rpx // self.d, self.d).mean(axis=(1, 3))
+            else:
+                r = region
+            payload, rec = _encode_plane(r, quality)
+            streams.append(payload)
+            total += int(len(payload) * chroma_factor)
+            if low:
+                rec = np.repeat(np.repeat(rec, self.d, axis=0), self.d,
+                                axis=1)
+            # luma-corrected reconstruction: scale rgb by luma ratio
+            patch = frame[y0:y0 + rpx, x0:x0 + rpx]
+            luma = patch.mean(axis=-1, keepdims=True)
+            ratio = np.clip(rec[..., None] / np.maximum(luma, 1e-3),
+                            0.25, 4.0)
+            decoded[y0:y0 + rpx, x0:x0 + rpx] = np.clip(patch * ratio, 0, 1)
+
+        enc = EncodedFrame(payload_bytes=total, mask=np.asarray(mask),
+                           quality=quality, streams=streams,
+                           shapes={"rpx": rpx})
+        return enc, decoded
+
+    def encode_size_only(self, frame: np.ndarray, mask: np.ndarray,
+                         quality: int) -> int:
+        return self.encode(frame, mask, quality)[0].payload_bytes
+
+
+# ---------------------------------------------------------------------------
+# codec delay model (the paper profiles T_enc(N_d, lambda) offline on the
+# device and uses a mean T_dec; we do the same with a calibrated analytic
+# model of our codec on the reference mobile SoC)
+
+
+@dataclass(frozen=True)
+class CodecDelayModel:
+    """Delays in seconds.  Calibrated against the paper's Fig. 10 medians
+    (total codec delay ~30 ms for full-res 1080p at q95 on the Jetson)."""
+    enc_base: float = 0.0145          # full-res encode at q<=95
+    dec_base: float = 0.0150          # full-res decode
+    quality_slope: float = 0.004      # extra cost toward q100 (entropy len)
+    mixed_overhead: float = 0.004     # mask + dual-stream preprocessing
+
+    def encode_delay(self, part: Partition, n_low: int,
+                     quality: int) -> float:
+        full_frac = 1.0 - n_low * (1 - 1 / (part.downsample ** 2)) \
+            / part.n_regions
+        q_extra = self.quality_slope * max(quality - 95, 0) / 5.0
+        over = self.mixed_overhead if n_low > 0 else 0.0
+        return (self.enc_base + q_extra) * full_frac + over
+
+    def decode_delay(self, part: Partition, n_low: int) -> float:
+        full_frac = 1.0 - n_low * (1 - 1 / (part.downsample ** 2)) \
+            / part.n_regions
+        return self.dec_base * full_frac

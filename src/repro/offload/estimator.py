@@ -1,0 +1,204 @@
+"""Content-aware Performance Estimator (paper §IV-D, Table II).
+
+Three estimator families for compressed size S(c) and inference accuracy
+A(c):
+  * MLPEstimator      — the paper's choice: 3-layer MLP (128, 64, 1)
+                        trained with our JAX Adam on offline profiling data
+  * LinearEstimator   — least-squares baseline on the same features
+  * OfflineMean       — static mean of the profiling data
+
+plus the delay models of Eq. (2): profiled T_enc(N_d, lambda), mean
+T_dec, per-beta linear inference-delay models LM^inf_beta(N_d), and the
+short-window throughput/RTT estimator.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import adam
+
+# feature vector: (tau_d, N_d, m_d, m_f, lambda, mu_rho, sigma_rho, beta)
+N_FEATURES = 8
+
+
+def feature_vector(tau_d: int, n_d: int, m_d: float, m_f: float,
+                   quality: int, mu_rho: float, sigma_rho: float,
+                   beta: int) -> np.ndarray:
+    return np.array([tau_d, n_d, m_d, m_f, quality / 100.0,
+                     mu_rho, sigma_rho, beta], np.float32)
+
+
+# ---------------------------------------------------------------------------
+# MLP (the paper's estimator; Optuna-tuned architecture 128-64-1)
+
+
+def _init_mlp(key, sizes=(N_FEATURES, 128, 64, 1)):
+    params = []
+    for i in range(len(sizes) - 1):
+        key, k = jax.random.split(key)
+        w = jax.random.normal(k, (sizes[i], sizes[i + 1]),
+                              jnp.float32) / np.sqrt(sizes[i])
+        params.append({"w": w, "b": jnp.zeros((sizes[i + 1],))})
+    return params
+
+
+def _mlp_fwd(params, x):
+    for i, p in enumerate(params):
+        x = x @ p["w"] + p["b"]
+        if i < len(params) - 1:
+            x = jax.nn.relu(x)
+    return x[..., 0]
+
+
+@jax.jit
+def _mlp_loss(params, x, y):
+    pred = _mlp_fwd(params, x)
+    return jnp.mean(jnp.square(pred - y))
+
+
+_mlp_fwd_jit = jax.jit(_mlp_fwd)
+
+
+class MLPEstimator:
+    """Predicts a scalar target from config+content features."""
+
+    def __init__(self, seed: int = 0):
+        self.params = _init_mlp(jax.random.PRNGKey(seed))
+        self.x_mean = np.zeros(N_FEATURES, np.float32)
+        self.x_std = np.ones(N_FEATURES, np.float32)
+        self.y_mean, self.y_std = 0.0, 1.0
+
+    def fit(self, X: np.ndarray, y: np.ndarray, steps: int = 2000,
+            lr: float = 3e-3, batch: int = 256, seed: int = 0) -> None:
+        X = np.asarray(X, np.float32)
+        y = np.asarray(y, np.float32)
+        self.x_mean = X.mean(0)
+        self.x_std = X.std(0) + 1e-6
+        self.y_mean, self.y_std = float(y.mean()), float(y.std() + 1e-6)
+        Xn = (X - self.x_mean) / self.x_std
+        yn = (y - self.y_mean) / self.y_std
+
+        state = adam.init_adam(self.params)
+        rng = np.random.default_rng(seed)
+        grad_fn = jax.jit(jax.value_and_grad(_mlp_loss))
+        for s in range(steps):
+            idx = rng.integers(0, len(Xn), min(batch, len(Xn)))
+            loss, g = grad_fn(self.params, jnp.asarray(Xn[idx]),
+                              jnp.asarray(yn[idx]))
+            self.params, state, _ = adam.adam_update(
+                g, state, self.params, lr=lr * (0.1 ** (s / steps)))
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        Xn = (np.asarray(X, np.float32) - self.x_mean) / self.x_std
+        out = _mlp_fwd_jit(self.params, jnp.asarray(Xn))
+        return np.asarray(out) * self.y_std + self.y_mean
+
+
+class LinearEstimator:
+    """Closed-form least squares on the same features (Table II row 1)."""
+
+    def __init__(self):
+        self.w: Optional[np.ndarray] = None
+
+    def fit(self, X, y, **kw):
+        X = np.asarray(X, np.float64)
+        A = np.concatenate([X, np.ones((len(X), 1))], axis=1)
+        self.w, *_ = np.linalg.lstsq(A, np.asarray(y, np.float64),
+                                     rcond=None)
+
+    def predict(self, X):
+        X = np.asarray(X, np.float64)
+        A = np.concatenate([X, np.ones((len(X), 1))], axis=1)
+        return A @ self.w
+
+
+class OfflineMean:
+    """Static profiling mean (Table II row 2)."""
+
+    def __init__(self):
+        self.mean = 0.0
+
+    def fit(self, X, y, **kw):
+        self.mean = float(np.mean(y))
+
+    def predict(self, X):
+        return np.full((len(X),), self.mean)
+
+
+def regression_metrics(y_true, y_pred) -> Dict[str, float]:
+    y_true = np.asarray(y_true, np.float64)
+    y_pred = np.asarray(y_pred, np.float64)
+    err = y_pred - y_true
+    mae = float(np.mean(np.abs(err)))
+    rmse = float(np.sqrt(np.mean(err ** 2)))
+    # floor the denominator at 5% of the target scale: near-zero targets
+    # (empty-frame F1) otherwise make MAPE meaningless
+    scale = max(float(np.abs(y_true).mean()), 1e-9)
+    denom = np.maximum(np.abs(y_true), 0.05 * scale)
+    mape = float(np.mean(np.abs(err) / denom) * 100.0)
+    ss_res = float(np.sum(err ** 2))
+    ss_tot = float(np.sum((y_true - y_true.mean()) ** 2) + 1e-12)
+    return {"MAE": mae, "RMSE": rmse, "MAPE": mape,
+            "R2": 1.0 - ss_res / ss_tot}
+
+
+# ---------------------------------------------------------------------------
+# delay models (Eq. 2)
+
+
+@dataclass
+class InferenceDelayModel:
+    """LM^inf_beta(N_d): per-beta linear models a_beta * N_d + b_beta.
+
+    Parameterised from the ViTDet FLOP model calibrated to the paper's
+    measured full-res delay (fit_from_flops) or from profiling samples."""
+    coefs: Dict[int, Tuple[float, float]] = field(default_factory=dict)
+
+    def __call__(self, beta: int, n_d: int) -> float:
+        a, b = self.coefs[int(beta)]
+        return a * n_d + b
+
+    @classmethod
+    def fit_from_flops(cls, flops_fn: Callable[[int, int], float],
+                       n_regions: int, betas: Sequence[int],
+                       full_res_delay_s: float) -> "InferenceDelayModel":
+        """flops_fn(n_low, beta) -> FLOPs; anchored so that n_low=0 costs
+        ``full_res_delay_s`` (the paper's 1080p ViTDet-L measurement)."""
+        f_full = flops_fn(0, 0)
+        scale = full_res_delay_s / f_full
+        coefs = {}
+        for b in betas:
+            xs = np.arange(0, n_regions + 1)
+            ys = np.array([flops_fn(int(n), b) * scale for n in xs])
+            a, c = np.polyfit(xs, ys, 1)
+            coefs[int(b)] = (float(a), float(c))
+        return cls(coefs)
+
+
+@dataclass
+class ThroughputEstimator:
+    """Short-window mean of recent observations (paper: last two)."""
+    window: int = 2
+    obs_tput: List[float] = field(default_factory=list)
+    obs_rtt: List[float] = field(default_factory=list)
+
+    def observe(self, tput_bps: float, rtt_s: float) -> None:
+        self.obs_tput.append(tput_bps)
+        self.obs_rtt.append(rtt_s)
+
+    @property
+    def throughput(self) -> float:
+        if not self.obs_tput:
+            return 10e6
+        return float(np.mean(self.obs_tput[-self.window:]))
+
+    @property
+    def rtt(self) -> float:
+        if not self.obs_rtt:
+            return 0.04
+        return float(np.mean(self.obs_rtt[-self.window:]))

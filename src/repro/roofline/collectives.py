@@ -1,0 +1,91 @@
+"""Parse collective traffic out of post-SPMD optimized HLO text.
+
+cost_analysis() does not report collective bytes, so we sum operand/result
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op and convert to per-device link traffic with the
+standard ring-algorithm factors:
+
+  all-reduce       2 * S * (g-1)/g      (reduce-scatter + all-gather)
+  all-gather       R * (g-1)/g          (R = full result size)
+  reduce-scatter   S * (g-1)/g          (S = full operand size)
+  all-to-all       S * (g-1)/g
+  collective-permute  S                 (point-to-point)
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return 2
+
+
+def collective_bytes(hlo_text: str) -> Dict:
+    """Per-device collective traffic summed over the module."""
+    per_op = defaultdict(float)
+    counts = defaultdict(int)
+    total = 0.0
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        op = m.group(1)
+        g = _group_size(line)
+        lhs, _, rhs = line.partition("=")
+        result_b = _shape_bytes(lhs)
+        # operand bytes: shapes appearing in the call args
+        operand_b = _shape_bytes(rhs.split("(", 1)[-1])
+        frac = (g - 1) / g
+        if op == "all-reduce":
+            moved = 2.0 * operand_b * frac
+        elif op == "all-gather":
+            moved = result_b * frac
+        elif op == "reduce-scatter":
+            moved = operand_b * frac
+        elif op == "all-to-all":
+            moved = operand_b * frac
+        else:                            # collective-permute
+            moved = operand_b
+        per_op[op] += moved
+        counts[op] += 1
+        total += moved
+    return {
+        "bytes_per_device": total,
+        "by_op_bytes": dict(per_op),
+        "op_counts": dict(counts),
+    }

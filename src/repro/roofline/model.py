@@ -1,0 +1,55 @@
+"""Roofline terms for TPU v5e (assignment constants).
+
+  compute term    = HLO_FLOPs / (chips x 197 TFLOP/s bf16)
+  memory term     = HLO_bytes / (chips x 819 GB/s HBM)
+  collective term = collective_bytes / (chips x ~50 GB/s per ICI link)
+
+cost_analysis() on the post-SPMD module reports PER-DEVICE flops/bytes, so
+the per-chip division is already done; we scale back up for the recorded
+totals.  MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) measures how
+much of compiled compute is useful.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs import ShapeSpec
+from repro.models.config import ModelConfig
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (DESIGN.md; 1 link assumed)
+
+
+def roofline_terms(*, flops_per_device: float, bytes_per_device: float,
+                   collective_bytes_per_device: float,
+                   n_chips: int) -> Dict:
+    t_compute = flops_per_device / PEAK_FLOPS
+    t_memory = bytes_per_device / HBM_BW
+    t_collective = collective_bytes_per_device / ICI_BW
+    terms = {"t_compute": t_compute, "t_memory": t_memory,
+             "t_collective": t_collective}
+    bound = max(terms, key=terms.get).replace("t_", "")
+    t_crit = max(t_compute, t_memory, t_collective)
+    return {
+        **terms,
+        "bound": bound,
+        "t_critical": t_crit,
+        "compute_fraction": t_compute / t_crit if t_crit else 0.0,
+        "total_flops": flops_per_device * n_chips,
+        "total_bytes": bytes_per_device * n_chips,
+        "total_collective_bytes": collective_bytes_per_device * n_chips,
+    }
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeSpec) -> float:
+    """6*N*D useful-FLOPs estimate for the cell's workload."""
+    n = cfg.active_param_count() if cfg.moe is not None else \
+        cfg.param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch      # decode: one token per seq

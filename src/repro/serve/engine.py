@@ -1,0 +1,208 @@
+"""Batched KV-cache serving engine (wave scheduling, static shapes).
+
+Serving model for MVA-style workloads (DESIGN.md): every offloaded unit
+is a full *prefill* (the paper's frame analogy) followed by a bounded
+decode.  The engine batches requests into **waves**:
+
+  * requests are grouped by bucketed prompt length (static shapes — XLA
+    never retraces per request, the TPU-native adaptation of the paper's
+    per-frame dynamic resolution);
+  * one jitted ``prefill_fn`` per (bucket, n_low, beta) triple — the
+    paper's mixed-granularity prefill plugs in through ``low_span_mask``
+    and ``beta`` on the request (core.seq_mixed_res);
+  * greedy decode runs the whole wave in lock-step with per-slot EOS
+    masking; finished slots keep decoding (masked) until the wave drains
+    below ``refill_fraction`` — the static-shape analogue of continuous
+    batching.
+
+Fault hooks: the engine exposes per-wave latencies to the
+``DeadlineDispatcher`` (train/straggler.py) so a fleet-level dispatcher
+can re-issue requests stuck behind a straggling replica.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import seq_mixed_res as smr
+from repro.models import registry
+from repro.models.config import ModelConfig
+from repro.models.transformer import LOCAL, ParallelCtx
+from repro.serve.request import Request, Response
+
+
+@dataclass
+class ServeConfig:
+    max_batch: int = 8
+    max_len: int = 512                 # prompt + generated
+    buckets: Tuple[int, ...] = (64, 128, 256)
+    cache_dtype: object = jnp.float32
+    greedy: bool = True
+
+
+class ServeEngine:
+    """Single-replica engine over one model's params."""
+
+    def __init__(self, cfg: ModelConfig, params, sc: ServeConfig = None,
+                 ctx: ParallelCtx = LOCAL):
+        self.cfg = cfg
+        self.params = params
+        self.sc = sc or ServeConfig()
+        self.ctx = ctx
+        self.queue: List[Request] = []
+        self.responses: Dict[int, Response] = {}
+        self._prefill_fns: Dict = {}
+        self._decode_fns: Dict = {}
+        self.wave_latencies: List[float] = []
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _bucket(self, n: int) -> int:
+        for b in self.sc.buckets:
+            if n <= b:
+                return b
+        raise ValueError(f"prompt length {n} exceeds largest bucket "
+                         f"{self.sc.buckets[-1]}")
+
+    # ------------------------------------------------------------------
+    def _get_prefill(self, T: int, n_low: int, beta: int) -> Callable:
+        key = ("prefill", T, n_low, beta)
+        if key not in self._prefill_fns:
+            cfg, ctx = self.cfg, self.ctx
+
+            if n_low == 0 or beta == 0:
+                def fn(params, tokens, state):
+                    hidden, state, _ = registry.prefill(
+                        cfg, params, {"tokens": tokens}, state, ctx)
+                    from repro.models import transformer as tfm
+                    logits = tfm.logits_from_hidden(cfg, params,
+                                                    hidden[:, -1:, :], ctx)
+                    return logits, state
+            else:
+                def fn(params, tokens, state, mix_idx, pos_mix, restore_idx):
+                    pack = {"mix_idx": mix_idx, "pos_mix": pos_mix,
+                            "restore_idx": restore_idx}
+                    hidden, state, _ = smr.mixed_prefill(
+                        cfg, params, tokens, pack, beta, state, ctx)
+                    from repro.models import transformer as tfm
+                    logits = tfm.logits_from_hidden(cfg, params,
+                                                    hidden[:, -1:, :], ctx)
+                    return logits, state
+            self._prefill_fns[key] = jax.jit(fn, donate_argnums=(2,))
+        return self._prefill_fns[key]
+
+    def _get_decode(self) -> Callable:
+        if "decode" not in self._decode_fns:
+            cfg, ctx = self.cfg, self.ctx
+
+            def fn(params, token, pos, state):
+                return registry.decode_step(cfg, params, token, pos, state,
+                                            ctx)
+            self._decode_fns["decode"] = jax.jit(fn, donate_argnums=(3,),
+                                                 static_argnums=(2,))
+        return self._decode_fns["decode"]
+
+    # ------------------------------------------------------------------
+    def _form_wave(self) -> Optional[List[Request]]:
+        if not self.queue:
+            return None
+        # group by (bucket, n_low-bucket, beta) of the head request
+        head = self.queue[0]
+        hb = self._bucket(len(head.prompt))
+        hk = self._wave_key(head)
+        wave = [r for r in self.queue if self._wave_key(r) == hk]
+        wave = wave[: self.sc.max_batch]
+        for r in wave:
+            self.queue.remove(r)
+        return wave
+
+    def _wave_key(self, r: Request):
+        n_low = 0
+        if r.low_span_mask is not None and r.beta > 0:
+            n_low = int(np.asarray(r.low_span_mask).sum())
+        return (self._bucket(len(r.prompt)), n_low, r.beta)
+
+    # ------------------------------------------------------------------
+    def run_wave(self, now: float = 0.0) -> List[Response]:
+        """Serve one wave to completion.  Returns finished responses."""
+        wave = self._form_wave()
+        if wave is None:
+            return []
+        t0 = time.perf_counter()
+        cfg, sc = self.cfg, self.sc
+        T, n_low, beta = self._wave_key(wave[0])
+        B = len(wave)
+
+        toks = np.zeros((B, T), np.int32)
+        for i, r in enumerate(wave):
+            p = np.asarray(r.prompt, np.int32)
+            toks[i, :len(p)] = p
+            if len(p) < T:          # right-pad with the last prompt token
+                toks[i, len(p):] = p[-1] if len(p) else 0
+
+        state = registry.init_decode_state(cfg, B, sc.max_len,
+                                           sc.cache_dtype)
+        if n_low > 0 and beta > 0:
+            part = smr.seq_partition(cfg, T)
+            pack = smr.build_seq_pack(
+                np.asarray(wave[0].low_span_mask), n_low, part)
+            fn = self._get_prefill(T, n_low, beta)
+            logits, state = fn(self.params, jnp.asarray(toks), state,
+                               jnp.asarray(pack["mix_idx"]),
+                               jnp.asarray(pack["pos_mix"]),
+                               jnp.asarray(pack["restore_idx"]))
+        else:
+            fn = self._get_prefill(T, 0, 0)
+            logits, state = fn(self.params, jnp.asarray(toks), state)
+
+        decode = self._get_decode()
+        resp = {r.rid: Response(rid=r.rid, slot=i, prefill_done=now)
+                for i, r in enumerate(wave)}
+        done = np.zeros((B,), bool)
+        max_new = max(r.max_new_tokens for r in wave)
+        tok = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1),
+                         np.int32).reshape(B, 1)
+
+        for i, r in enumerate(wave):
+            resp[r.rid].tokens.append(int(tok[i, 0]))
+            if r.eos_id is not None and tok[i, 0] == r.eos_id:
+                done[i] = True
+
+        for step in range(1, max_new):
+            pos = T + step - 1
+            if pos >= sc.max_len or done.all():
+                break
+            logits, state = decode(self.params, jnp.asarray(tok), pos,
+                                   state)
+            tok = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1),
+                             np.int32).reshape(B, 1)
+            for i, r in enumerate(wave):
+                if done[i] or len(resp[r.rid].tokens) >= r.max_new_tokens:
+                    done[i] = True
+                    continue
+                resp[r.rid].tokens.append(int(tok[i, 0]))
+                if r.eos_id is not None and tok[i, 0] == r.eos_id:
+                    done[i] = True
+
+        wall = time.perf_counter() - t0
+        self.wave_latencies.append(wall)
+        out = []
+        for r in wave:
+            resp[r.rid].finished = now + wall
+            self.responses[r.rid] = resp[r.rid]
+            out.append(resp[r.rid])
+        return out
+
+    def run(self, now: float = 0.0) -> List[Response]:
+        """Drain the queue."""
+        out = []
+        while self.queue:
+            out.extend(self.run_wave(now))
+        return out

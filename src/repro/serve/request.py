@@ -1,0 +1,32 @@
+"""Serving request/response types."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # (T,) int32 token ids
+    max_new_tokens: int = 32
+    eos_id: Optional[int] = None
+    # paper technique: spans of the prompt that may be pooled at prefill
+    low_span_mask: Optional[np.ndarray] = None
+    beta: int = 0
+    arrival_time: float = 0.0
+
+
+@dataclass
+class Response:
+    rid: int
+    tokens: List[int] = field(default_factory=list)
+    prefill_done: float = 0.0
+    finished: float = 0.0
+    slot: int = -1
+
+    @property
+    def n_tokens(self) -> int:
+        return len(self.tokens)

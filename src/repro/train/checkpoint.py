@@ -1,0 +1,177 @@
+"""Sharded, content-hashed checkpointing with restore-time resharding.
+
+Layout on disk:
+  <dir>/step_<N>/manifest.json        tree structure, shapes, dtypes,
+                                      per-leaf shard list + sha256 hashes
+  <dir>/step_<N>/shard_<host>_<i>.npz leaf arrays (one npz per host)
+
+Fault-tolerance properties:
+  * atomic publish: manifest written last, to a temp file then renamed —
+    a crash mid-save never yields a manifest pointing at missing shards;
+  * content hashes: corrupt/truncated shards are detected at restore;
+  * restore-with-reshard: the target mesh/sharding may differ from the
+    save-time mesh (elastic scaling) — leaves are loaded to host then
+    device_put with the NEW sharding;
+  * async save: ``save_async`` snapshots to host memory synchronously and
+    writes in a daemon thread, so the training loop resumes immediately.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _key_str(p) -> str:
+    for attr in ("key", "idx", "name"):   # DictKey / SequenceKey / GetAttrKey
+        if hasattr(p, attr):
+            return str(getattr(p, attr))
+    return str(p)
+
+
+def _tree_paths(tree: Any) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [("/".join(_key_str(p) for p in path), leaf)
+            for path, leaf in flat]
+
+
+def _sha(arr: np.ndarray) -> str:
+    return hashlib.sha256(arr.tobytes()).hexdigest()[:16]
+
+
+# numpy's savez stores ml_dtypes leaves (bfloat16, float8_*) as opaque
+# void records; encode them as same-width unsigned views and restore the
+# true dtype from the manifest.
+_WIDTH_UINT = {1: np.uint8, 2: np.uint16, 4: np.uint32}
+
+
+def _encode_np(arr: np.ndarray) -> np.ndarray:
+    if arr.dtype.kind not in "biufc":          # custom dtype (bf16, fp8)
+        return arr.view(_WIDTH_UINT[arr.dtype.itemsize])
+    return arr
+
+
+def _decode_np(arr: np.ndarray, dtype_str: str) -> np.ndarray:
+    if str(arr.dtype) == dtype_str:
+        return arr
+    import ml_dtypes
+    return arr.view(np.dtype(getattr(ml_dtypes, dtype_str)))
+
+
+def save(tree: Any, directory: str, step: int, host_id: int = 0) -> str:
+    """Synchronous sharded save.  Returns the checkpoint path."""
+    ckpt = Path(directory) / f"step_{step:08d}"
+    ckpt.mkdir(parents=True, exist_ok=True)
+
+    leaves = _tree_paths(tree)
+    manifest: Dict[str, Any] = {"step": step, "leaves": {}}
+    arrays: Dict[str, np.ndarray] = {}
+    for i, (name, leaf) in enumerate(leaves):
+        arr = np.asarray(leaf)
+        key = f"a{i}"
+        arrays[key] = _encode_np(arr)
+        manifest["leaves"][name] = {
+            "key": key, "shape": list(arr.shape), "dtype": str(arr.dtype),
+            "sha": _sha(arr), "shard": f"shard_{host_id}_{i // 64}.npz",
+        }
+
+    # group leaves into shard files of <=64 arrays
+    by_shard: Dict[str, Dict[str, np.ndarray]] = {}
+    for name, meta in manifest["leaves"].items():
+        by_shard.setdefault(meta["shard"], {})[meta["key"]] = \
+            arrays[meta["key"]]
+    for fname, group in by_shard.items():
+        np.savez(ckpt / (fname + ".tmp"), **group)
+        os.replace(ckpt / (fname + ".tmp.npz"), ckpt / fname)
+
+    tmp = ckpt / "manifest.json.tmp"
+    tmp.write_text(json.dumps(manifest))
+    os.replace(tmp, ckpt / "manifest.json")      # atomic publish
+    return str(ckpt)
+
+
+_save_threads: List[threading.Thread] = []
+
+
+def save_async(tree: Any, directory: str, step: int) -> threading.Thread:
+    """Snapshot to host memory now; write in a background thread."""
+    host_tree = jax.tree_util.tree_map(lambda l: np.asarray(l), tree)
+    t = threading.Thread(target=save, args=(host_tree, directory, step),
+                         daemon=True)
+    t.start()
+    _save_threads.append(t)
+    return t
+
+
+def wait_pending_saves() -> None:
+    for t in _save_threads:
+        t.join()
+    _save_threads.clear()
+
+
+def latest_step(directory: str) -> Optional[int]:
+    d = Path(directory)
+    if not d.exists():
+        return None
+    steps = []
+    for p in d.iterdir():
+        if p.name.startswith("step_") and (p / "manifest.json").exists():
+            steps.append(int(p.name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(tree_like: Any, directory: str, step: Optional[int] = None,
+            shardings: Any = None, verify: bool = True) -> Any:
+    """Restore into the structure of ``tree_like``.
+
+    ``shardings``: optional NamedSharding tree for the TARGET mesh —
+    resharding happens on device_put, so the restoring job may run on a
+    different device count than the saver (elastic restart)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {directory}")
+    ckpt = Path(directory) / f"step_{step:08d}"
+    manifest = json.loads((ckpt / "manifest.json").read_text())
+
+    cache: Dict[str, Any] = {}
+
+    def load_leaf(name: str):
+        meta = manifest["leaves"][name]
+        if meta["shard"] not in cache:
+            cache[meta["shard"]] = np.load(ckpt / meta["shard"])
+        arr = _decode_np(cache[meta["shard"]][meta["key"]], meta["dtype"])
+        if verify and _sha(arr) != meta["sha"]:
+            raise IOError(f"checkpoint corruption in {name} "
+                          f"({meta['shard']})")
+        return arr
+
+    names = [n for n, _ in _tree_paths(tree_like)]
+    flat_shardings = (None if shardings is None else
+                      [s for _, s in _tree_paths(shardings)])
+    leaves = []
+    for i, name in enumerate(names):
+        arr = load_leaf(name)
+        if flat_shardings is not None:
+            arr = jax.device_put(arr, flat_shardings[i])
+        leaves.append(arr)
+    treedef = jax.tree_util.tree_structure(tree_like)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def prune_old(directory: str, keep: int = 3) -> None:
+    d = Path(directory)
+    if not d.exists():
+        return
+    steps = sorted(int(p.name.split("_")[1]) for p in d.iterdir()
+                   if p.name.startswith("step_")
+                   and (p / "manifest.json").exists())
+    for s in steps[:-keep]:
+        shutil.rmtree(d / f"step_{s:08d}", ignore_errors=True)

@@ -1,0 +1,64 @@
+"""Elastic scaling: rebuild the mesh from the surviving device set and
+reshard training state from the last checkpoint.
+
+The flow on failure (driven by HeartbeatMonitor):
+  1. drop failed hosts -> new device list
+  2. ``plan_mesh``: choose the largest (data, model) grid that fits,
+     keeping the model axis (TP degree) if possible — changing TP degree
+     invalidates sharded-parameter layouts more expensively than changing
+     the data axis;
+  3. restore the last checkpoint with the NEW shardings
+     (checkpoint.restore does host-side resharding);
+  4. scale gradient accumulation to preserve the global batch.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, List, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+from repro.train import checkpoint as ckpt_lib
+
+
+def plan_mesh(n_devices: int, model_par: int) -> Tuple[int, int]:
+    """Largest (data, model) grid with model axis preserved if possible."""
+    while model_par > 1 and n_devices % model_par:
+        model_par //= 2
+    data = n_devices // model_par
+    return data, model_par
+
+
+def rebuild_mesh(devices: List, model_par: int) -> Mesh:
+    import numpy as np
+    data, model = plan_mesh(len(devices), model_par)
+    usable = devices[: data * model]
+    arr = np.array(usable).reshape(data, model)
+    return Mesh(arr, ("data", "model"))
+
+
+@dataclass
+class ElasticState:
+    mesh: Mesh
+    global_batch: int
+    accum_steps: int
+
+    def scaled_accum(self, old_dp: int, new_dp: int) -> int:
+        """Keep the global batch constant across a size change."""
+        return max(1, int(round(self.accum_steps * old_dp / new_dp)))
+
+
+def elastic_restart(cfg, directory: str, devices: List, model_par: int,
+                    make_state_shapes, make_shardings,
+                    step: Optional[int] = None):
+    """Full restart path: new mesh + resharded restore.
+
+    ``make_state_shapes()`` -> pytree of ShapeDtypeStructs (params, opt);
+    ``make_shardings(mesh)`` -> matching NamedSharding tree."""
+    mesh = rebuild_mesh(devices, model_par)
+    shapes = make_state_shapes()
+    shardings = make_shardings(mesh)
+    state = ckpt_lib.restore(shapes, directory, step=step,
+                             shardings=shardings)
+    return mesh, state

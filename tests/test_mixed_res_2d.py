@@ -1,0 +1,171 @@
+"""Paper C1 (2-D ViT-native) correctness tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.core import mixed_res as mr
+from repro.core import partition as pt
+from repro.core import vit_backbone as vb
+from repro.models import registry
+
+
+def small_partition():
+    # 16x16 patch grid, window 2, downsample 2 -> region r=4, 4x4 regions
+    return pt.make_partition(16, 16, window=2, downsample=2)
+
+
+def test_partition_geometry():
+    p = small_partition()
+    assert p.region == 4 and p.n_regions == 16
+    assert p.tokens_full_region == 16 and p.tokens_low_region == 4
+    assert p.n_tokens(0) == 256
+    assert p.n_tokens(16) == 16 * 4           # all low: one window each
+    assert p.n_windows(0) == 64 and p.n_windows(16) == 16
+
+
+def test_partition_requires_divisibility():
+    with pytest.raises(ValueError):
+        pt.make_partition(10, 16, window=2, downsample=2)
+
+
+def test_bucketing():
+    assert pt.bucket_n_low(0, 16) == 0
+    assert pt.bucket_n_low(5, 16, 4) == 4      # rounds DOWN (safe direction)
+    assert pt.bucket_n_low(16, 16, 4) == 16
+    assert pt.bucket_set(16, 4) == (0, 4, 8, 12, 16)
+
+
+def test_mask_roundtrip():
+    mask = np.zeros(16, np.int32)
+    mask[[1, 5, 7]] = 1
+    full, low = pt.mask_to_region_ids(mask, 3)
+    assert sorted(low.tolist()) == [1, 5, 7]
+    assert len(full) == 13 and not set(full) & {1, 5, 7}
+    back = pt.region_ids_to_mask(low, 16)
+    np.testing.assert_array_equal(back, mask)
+
+
+def test_grid_window_roundtrip():
+    p = small_partition()
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 16, 16, 8))
+    rw = mr.grid_to_region_windows(x, p)
+    assert rw.shape == (2, 16, 4, 4, 8)
+    back = mr.region_windows_to_grid(rw, p)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+
+def test_pack_restore_all_full_is_identity():
+    p = small_partition()
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 16, 16, 8))
+    full_ids = jnp.arange(16, dtype=jnp.int32)
+    low_ids = jnp.zeros((0,), jnp.int32)
+    tokens, _ = mr.pack_mixed(x, p, full_ids, low_ids)
+    assert tokens.shape == (2, 256, 8)
+    restored = mr.restore_full(tokens, p, full_ids, low_ids)
+    expect = mr.grid_to_full_seq(x, p)
+    np.testing.assert_array_equal(np.asarray(restored), np.asarray(expect))
+    grid = mr.full_seq_to_grid(restored, p)
+    np.testing.assert_array_equal(np.asarray(grid), np.asarray(x))
+
+
+def test_pack_restore_low_regions_are_pooled_broadcast():
+    p = small_partition()
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 16, 16, 4))
+    mask = np.zeros(16, np.int32)
+    mask[[0, 9]] = 1
+    full_ids, low_ids = (jnp.asarray(a) for a in pt.mask_to_region_ids(mask, 2))
+    tokens, _ = mr.pack_mixed(x, p, full_ids, low_ids)
+    assert tokens.shape == (1, p.n_tokens(2), 4)
+    restored = mr.full_seq_to_grid(mr.restore_full(tokens, p, full_ids,
+                                                   low_ids), p)
+    # full regions untouched
+    r = p.region
+    np.testing.assert_allclose(np.asarray(restored[0, 0:4, 4:8]),
+                               np.asarray(x[0, 0:4, 4:8]), rtol=1e-6)
+    # low region 0 = patches [0:4, 0:4]: every 2x2 block holds its mean
+    blk = np.asarray(x[0, 0:2, 0:2]).mean(axis=(0, 1))
+    np.testing.assert_allclose(np.asarray(restored[0, 0, 0]), blk, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(restored[0, 1, 1]), blk, rtol=1e-5)
+
+
+def test_vitdet_full_vs_mixed_beta0_equal():
+    """beta=0 (restore at input) == feeding the pre-upsampled image."""
+    cfg = get_reduced("vitdet-l")
+    params = registry.init_params(cfg, jax.random.PRNGKey(0))
+    img = jax.random.uniform(jax.random.PRNGKey(1),
+                             (1, *cfg.vit.img_size, 3))
+    part = vb.vit_partition(cfg)
+    mask = np.zeros(part.n_regions, np.int32)
+    mask[0] = 1
+    full_ids, low_ids = (jnp.asarray(a)
+                         for a in pt.mask_to_region_ids(mask, 1))
+    f_mixed = vb.forward_features(cfg, params, img, full_ids, low_ids, beta=0)
+    assert f_mixed.shape == (1, part.grid_h, part.grid_w, cfg.d_model)
+    assert np.isfinite(np.asarray(f_mixed)).all()
+
+
+@pytest.mark.parametrize("beta", [1, 2])
+def test_vitdet_mixed_betas_finite_and_distinct(beta):
+    cfg = get_reduced("vitdet-l")
+    params = registry.init_params(cfg, jax.random.PRNGKey(0))
+    img = jax.random.uniform(jax.random.PRNGKey(1),
+                             (1, *cfg.vit.img_size, 3))
+    part = vb.vit_partition(cfg)
+    n_low = part.n_regions // 2
+    mask = np.zeros(part.n_regions, np.int32)
+    mask[:n_low] = 1
+    full_ids, low_ids = (jnp.asarray(a)
+                         for a in pt.mask_to_region_ids(mask, n_low))
+    feats = vb.forward_features(cfg, params, img, full_ids, low_ids,
+                                beta=beta)
+    assert feats.shape == (1, part.grid_h, part.grid_w, cfg.d_model)
+    assert np.isfinite(np.asarray(feats)).all()
+    # must differ from full-res features (downsampling loses detail)
+    f_full = vb.forward_features(cfg, params, img)
+    assert not np.allclose(np.asarray(feats), np.asarray(f_full))
+
+
+def test_vitdet_no_downsampling_any_beta_equals_full():
+    """With an empty low set the mixed path must equal plain inference."""
+    cfg = get_reduced("vitdet-l")
+    params = registry.init_params(cfg, jax.random.PRNGKey(0))
+    img = jax.random.uniform(jax.random.PRNGKey(1),
+                             (1, *cfg.vit.img_size, 3))
+    part = vb.vit_partition(cfg)
+    full_ids = jnp.arange(part.n_regions, dtype=jnp.int32)
+    low_ids = jnp.zeros((0,), jnp.int32)
+    f_full = vb.forward_features(cfg, params, img)
+    f_mix = vb.forward_features(cfg, params, img, full_ids, low_ids, beta=2)
+    np.testing.assert_allclose(np.asarray(f_mix), np.asarray(f_full),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_flops_monotonic_in_beta_and_nlow():
+    """Paper Fig. 5: later restoration -> fewer FLOPs; more low regions ->
+    fewer FLOPs."""
+    cfg = get_reduced("vitdet-l")
+    part = vb.vit_partition(cfg)
+    n_low = part.n_regions // 2
+    f = [vb.backbone_flops(cfg, n_low, b)
+         for b in range(cfg.vit.n_subsets + 1)]
+    assert all(f[i] >= f[i + 1] for i in range(len(f) - 1)), f
+    assert f[0] == vb.backbone_flops(cfg, 0, 0)       # beta=0 == full res
+    g = [vb.backbone_flops(cfg, n, cfg.vit.n_subsets)
+         for n in range(0, part.n_regions + 1, 4)]
+    assert all(g[i] >= g[i + 1] for i in range(len(g) - 1)), g
+
+
+def test_det_head_and_decode_shapes():
+    cfg = get_reduced("vitdet-l")
+    params = registry.init_params(cfg, jax.random.PRNGKey(0))
+    img = jax.random.uniform(jax.random.PRNGKey(1),
+                             (2, *cfg.vit.img_size, 3))
+    outs = vb.forward_det(cfg, params, img)
+    assert len(outs) == 3
+    from repro.core import det_head as dh
+    boxes, scores, classes = dh.decode_detections(cfg, outs, top_k=16)
+    assert boxes.shape == (2, 16, 4)
+    assert scores.shape == (2, 16)
+    assert np.isfinite(np.asarray(boxes)).all()

@@ -1,0 +1,214 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import mixed_res as mr
+from repro.core import seq_mixed_res as smr
+from repro.core.partition import (bucket_n_low, bucket_set, make_partition,
+                                  mask_to_region_ids, region_ids_to_mask)
+from repro.offload.optimizer import knee_point, pareto_frontier
+
+SET = settings(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# partitioning (paper §III-A)
+
+
+@SET
+@given(w=st.sampled_from([2, 4, 8]), d=st.sampled_from([2, 4]),
+       nh=st.integers(1, 4), nw=st.integers(1, 4))
+def test_partition_token_counts(w, d, nh, nw):
+    part = make_partition(nh * w * d, nw * w * d, w, d)
+    assert part.n_regions == nh * nw
+    # n_tokens interpolates between full and all-low monotonically
+    counts = [part.n_tokens(n) for n in range(part.n_regions + 1)]
+    assert counts[0] == part.grid_h * part.grid_w
+    assert all(a > b for a, b in zip(counts, counts[1:]))
+    # every mixed sequence tiles exactly into w*w windows (the paper's
+    # structural invariant)
+    for n in range(part.n_regions + 1):
+        assert part.n_tokens(n) == part.n_windows(n) * w * w
+
+
+@SET
+@given(n_regions=st.sampled_from([4, 16, 64]),
+       n_buckets=st.sampled_from([2, 4, 8]),
+       n=st.integers(0, 64))
+def test_bucket_rounds_down_to_valid_edge(n_regions, n_buckets, n):
+    n = min(n, n_regions)
+    b = bucket_n_low(n, n_regions, n_buckets)
+    assert 0 <= b <= n                    # never rounds UP (accuracy-safe)
+    assert b in bucket_set(n_regions, n_buckets)
+
+
+@SET
+@given(data=st.data(), nr=st.sampled_from([4, 16]))
+def test_mask_roundtrip(data, nr):
+    bits = data.draw(st.lists(st.booleans(), min_size=nr, max_size=nr))
+    mask = np.array(bits, np.int32)
+    n_low = int(mask.sum())
+    full_ids, low_ids = mask_to_region_ids(mask, n_low)
+    assert len(full_ids) == nr - n_low and len(low_ids) == n_low
+    assert not set(full_ids) & set(low_ids)
+    np.testing.assert_array_equal(region_ids_to_mask(low_ids, nr), mask)
+
+
+# ---------------------------------------------------------------------------
+# 2-D pack / restore (paper §III-B)
+
+
+@SET
+@given(data=st.data(), w=st.sampled_from([2, 4]), d=st.just(2),
+       nh=st.integers(1, 2), nw=st.integers(1, 2))
+def test_pack_restore_full_regions_identity(data, w, d, nh, nw):
+    """Regions kept at full resolution survive pack->restore exactly."""
+    part = make_partition(nh * w * d, nw * w * d, w, d)
+    nr = part.n_regions
+    n_low = data.draw(st.integers(0, nr - 1))
+    bits = np.zeros(nr, np.int32)
+    bits[data.draw(st.permutations(range(nr)))[:n_low]] = 1
+    full_ids, low_ids = mask_to_region_ids(bits, n_low)
+
+    key = jax.random.PRNGKey(data.draw(st.integers(0, 2 ** 16)))
+    x = jax.random.normal(key, (1, part.grid_h, part.grid_w, 3))
+    tokens, _ = mr.pack_mixed(x, part, jnp.asarray(full_ids),
+                              jnp.asarray(low_ids))
+    restored = mr.restore_full(tokens, part, jnp.asarray(full_ids),
+                               jnp.asarray(low_ids))
+    grid = mr.full_seq_to_grid(restored, part)
+
+    # full regions byte-identical; low regions constant within d x d cells
+    rpx = part.region
+    for j in range(nr):
+        ry, rx = divmod(j, part.regions_w)
+        a = np.asarray(x[0, ry*rpx:(ry+1)*rpx, rx*rpx:(rx+1)*rpx])
+        b = np.asarray(grid[0, ry*rpx:(ry+1)*rpx, rx*rpx:(rx+1)*rpx])
+        if bits[j] == 0:
+            np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
+        else:
+            cells = b.reshape(rpx // d, d, rpx // d, d, 3)
+            np.testing.assert_allclose(
+                cells, np.broadcast_to(cells[:, :1, :, :1], cells.shape),
+                rtol=1e-6, atol=1e-6)
+
+
+def test_grid_seq_roundtrip():
+    part = make_partition(16, 16, 4, 2)
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 16, 16, 8))
+    seq = mr.grid_to_full_seq(x, part)
+    back = mr.full_seq_to_grid(seq, part)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+
+# ---------------------------------------------------------------------------
+# 1-D pack / restore (sequence adaptation)
+
+
+@SET
+@given(data=st.data(), w=st.sampled_from([2, 4]), d=st.just(2),
+       n_spans=st.integers(2, 6))
+def test_seq_pack_restore_structure(data, w, d, n_spans):
+    part = smr.SeqPartition(n_spans * w * d, w, d)
+    n_low = data.draw(st.integers(0, n_spans))
+    bits = np.zeros(n_spans, np.int32)
+    bits[data.draw(st.permutations(range(n_spans)))[:n_low]] = 1
+    pack = smr.build_seq_pack(bits, n_low, part)
+    assert len(pack["mix_idx"]) == part.n_tokens(n_low)
+    # positions strictly increase -> index-causality == position-causality
+    pos = pack["pos_mix"]
+    assert (np.diff(pos) > 0).all()
+    # restore covers every full position with a valid mixed slot
+    assert pack["restore_idx"].min() >= 0
+    assert pack["restore_idx"].max() < len(pack["mix_idx"])
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, part.seq_len, 8))
+    xm = smr.pack_sequence(x, jnp.asarray(pack["mix_idx"]), d)
+    xr = smr.restore_sequence(xm, jnp.asarray(pack["restore_idx"]))
+    assert xr.shape == x.shape
+    # unpooled spans restore exactly
+    for s in range(n_spans):
+        t0 = s * part.span
+        if bits[s] == 0:
+            np.testing.assert_allclose(
+                np.asarray(xr[0, t0:t0 + part.span]),
+                np.asarray(x[0, t0:t0 + part.span]), rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Pareto / knee (Algorithm 1)
+
+
+@SET
+@given(pts=st.lists(st.tuples(st.floats(0.01, 10), st.floats(0, 1)),
+                    min_size=1, max_size=30))
+def test_pareto_frontier_properties(pts):
+    Z = [{"config": i, "T": t, "A": a} for i, (t, a) in enumerate(pts)]
+    front = pareto_frontier(Z)
+    assert front, "frontier never empty"
+    ts = [z["T"] for z in front]
+    as_ = [z["A"] for z in front]
+    assert ts == sorted(ts)                       # sorted by latency
+    assert all(b > a for a, b in zip(as_, as_[1:]))   # accuracy increases
+    # no frontier point is dominated by any candidate
+    for f in front:
+        for z in Z:
+            assert not (z["T"] < f["T"] - 1e-12 and z["A"] > f["A"] + 1e-12)
+    k = knee_point(front)
+    assert k in front
+
+
+# ---------------------------------------------------------------------------
+# codec / estimator / checkpoint invariants
+
+
+@SET
+@given(seed=st.integers(0, 2 ** 16), q1=st.integers(70, 90))
+def test_codec_quality_monotone(seed, q1):
+    from repro.core.partition import make_partition
+    from repro.offload.codec import MixedResCodec
+    rng = np.random.default_rng(seed)
+    part = make_partition(8, 8, 2, 2)
+    codec = MixedResCodec(part, 16, 2)
+    frame = rng.uniform(0, 1, (128, 128, 3)).astype(np.float32)
+    mask = np.zeros(part.n_regions, np.int32)
+    s_lo = codec.encode_size_only(frame, mask, q1)
+    s_hi = codec.encode_size_only(frame, mask, 100)
+    assert s_lo <= s_hi                     # higher quality never smaller
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    from repro.train import checkpoint as ckpt
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "nested": [{"w": jnp.ones((4,), jnp.bfloat16)},
+                       {"w": jnp.zeros((2, 2), jnp.int32)}]}
+    ckpt.save(tree, str(tmp_path), step=7)
+    back = ckpt.restore(jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree),
+        str(tmp_path))
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(back)):
+        assert np.asarray(a).dtype == np.asarray(b).dtype
+        np.testing.assert_array_equal(
+            np.asarray(a, np.float64), np.asarray(b, np.float64))
+
+
+def test_grad_compression_error_feedback_converges():
+    """int8 compression with error feedback: accumulated compressed sums
+    approach the true sum (the residual stays bounded)."""
+    from repro.optim.grad_compression import quantize_roundtrip
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(0, 1e-3, (256,)).astype(np.float32))
+    err = jnp.zeros_like(g)
+    total_true = np.zeros((256,), np.float64)
+    total_comp = np.zeros((256,), np.float64)
+    for _ in range(50):
+        dec, err = quantize_roundtrip(g, err)
+        total_true += np.asarray(g, np.float64)
+        total_comp += np.asarray(dec, np.float64)
+    # relative drift of the accumulated signal stays small
+    denom = np.abs(total_true).mean()
+    assert np.abs(total_comp - total_true).mean() < 0.05 * denom + 1e-6

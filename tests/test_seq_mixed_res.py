@@ -1,0 +1,167 @@
+"""1-D sequence adaptation (mixed-granularity prefill) tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.core import seq_mixed_res as smr
+from repro.models import registry
+from repro.models import transformer as tfm
+
+SEQ = 64
+BATCH = 2
+
+
+def _pack_for(cfg, n_low, which=None):
+    part = smr.seq_partition(cfg, SEQ)
+    mask = np.zeros(part.n_spans, np.int32)
+    if which is None:
+        which = list(range(n_low))
+    mask[which] = 1
+    plan = smr.build_seq_pack(mask, n_low, part)
+    return part, {k: jnp.asarray(v) for k, v in plan.items()}
+
+
+def test_build_seq_pack_invariants():
+    cfg = get_reduced("qwen3-4b")
+    part = smr.seq_partition(cfg, SEQ)          # span=16 -> 4 spans
+    assert part.n_spans == 4
+    mask = np.array([0, 1, 0, 1])
+    plan = smr.build_seq_pack(mask, 2, part)
+    assert plan["mix_idx"].shape[0] == part.n_tokens(2) == 64 - 2 * 8
+    # positions strictly increasing (temporal order preserved)
+    assert (np.diff(plan["pos_mix"]) > 0).all()
+    # restore_idx covers every full position with a valid mixed slot
+    assert plan["restore_idx"].shape == (SEQ,)
+    assert plan["restore_idx"].max() < plan["mix_idx"].shape[0]
+    # full spans map back to themselves
+    t = 5                                        # span 0 is full
+    assert plan["pos_mix"][plan["restore_idx"][t]] == t
+
+
+def test_build_seq_pack_bucket_adjustment():
+    cfg = get_reduced("qwen3-4b")
+    part = smr.seq_partition(cfg, SEQ)
+    # mask selects 3 spans but bucket is 2 -> keep first two
+    plan = smr.build_seq_pack(np.array([1, 1, 1, 0]), 2, part)
+    assert plan["low_spans"].tolist() == [0, 1]
+    # mask selects 1 span but bucket is 2 -> earliest unselected added
+    plan = smr.build_seq_pack(np.array([0, 0, 1, 0]), 2, part)
+    assert plan["low_spans"].tolist() == [0, 2]
+
+
+def test_pool_and_pack_values():
+    x = jnp.arange(2 * 8 * 1, dtype=jnp.float32).reshape(2, 8, 1)
+    pooled = smr.pool_groups(x, 2)
+    np.testing.assert_allclose(np.asarray(pooled[0, 0, 0]), 0.5)
+    np.testing.assert_allclose(np.asarray(pooled[1, 3, 0]), 14.5)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-4b", "deepseek-v2-236b",
+                                  "dbrx-132b", "llava-next-mistral-7b"])
+def test_mixed_forward_beta0_equals_plain(arch):
+    cfg = get_reduced(arch)
+    params = registry.init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (BATCH, SEQ), 0,
+                                cfg.vocab_size)
+    _, plan = _pack_for(cfg, 2)
+    h_plain, _ = tfm.forward_hidden(cfg, params, tokens)
+    h_mixed, _ = smr.mixed_forward_hidden(cfg, params, tokens, plan, beta=0)
+    np.testing.assert_allclose(np.asarray(h_mixed), np.asarray(h_plain),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("arch,beta", [("qwen3-4b", 2), ("qwen3-4b", 4),
+                                       ("deepseek-v2-236b", 2),
+                                       ("dbrx-132b", 2)])
+def test_mixed_forward_finite_and_distinct(arch, beta):
+    cfg = get_reduced(arch)
+    params = registry.init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (BATCH, SEQ), 0,
+                                cfg.vocab_size)
+    _, plan = _pack_for(cfg, 2)
+    h_mixed, _ = smr.mixed_forward_hidden(cfg, params, tokens, plan,
+                                          beta=beta)
+    assert h_mixed.shape == (BATCH, SEQ, cfg.d_model)
+    assert np.isfinite(np.asarray(h_mixed)).all()
+    h_plain, _ = tfm.forward_hidden(cfg, params, tokens)
+    assert not np.allclose(np.asarray(h_mixed), np.asarray(h_plain))
+
+
+@pytest.mark.parametrize("arch", ["qwen3-4b", "deepseek-v2-236b"])
+def test_mixed_prefill_cache_restoration_enables_decode(arch):
+    """After a mixed prefill the cache must be full-resolution: a decode
+    step from it must be finite, and with beta=0 must exactly match the
+    plain prefill+decode path."""
+    cfg = get_reduced(arch)
+    params = registry.init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (BATCH, SEQ), 0,
+                                cfg.vocab_size)
+    max_len = SEQ + 4
+    _, plan = _pack_for(cfg, 2)
+
+    # beta=0: exact equality with the standard path
+    c0 = tfm.init_caches(cfg, BATCH, max_len, jnp.float32)
+    h0, c0, _ = smr.mixed_prefill(cfg, params, tokens, plan, 0, c0)
+    c1 = tfm.init_caches(cfg, BATCH, max_len, jnp.float32)
+    h1, c1, _ = tfm.prefill(cfg, params, tokens, c1)
+    np.testing.assert_allclose(np.asarray(h0), np.asarray(h1), rtol=2e-5,
+                               atol=2e-5)
+
+    tok = tokens[:, -1:]
+    l0, _ = tfm.decode_step(cfg, params, tok, SEQ, c0)
+    l1, _ = tfm.decode_step(cfg, params, tok, SEQ, c1)
+    np.testing.assert_allclose(np.asarray(l0), np.asarray(l1), rtol=2e-4,
+                               atol=2e-4)
+
+    # beta=2: decode from restored caches is finite and sane
+    c2 = tfm.init_caches(cfg, BATCH, max_len, jnp.float32)
+    h2, c2, _ = smr.mixed_prefill(cfg, params, tokens, plan, 2, c2)
+    l2, _ = tfm.decode_step(cfg, params, tok, SEQ, c2)
+    assert np.isfinite(np.asarray(l2)).all()
+
+
+def test_mixed_prefill_saves_flops():
+    cfg = get_reduced("qwen3-4b")
+    full = smr.prefill_flops(cfg, 4096, 0, 4)
+    part = smr.seq_partition(cfg, 4096)
+    half = smr.prefill_flops(cfg, 4096, part.n_spans // 2, 4)
+    assert half < full
+    # beta=0 gives no savings regardless of n_low
+    assert smr.prefill_flops(cfg, 4096, part.n_spans // 2, 0) == full
+
+
+def test_mixed_forward_ssm_runs():
+    cfg = get_reduced("mamba2-370m")
+    params = registry.init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (BATCH, SEQ), 0,
+                                cfg.vocab_size)
+    _, plan = _pack_for(cfg, 2)
+    h, _ = smr.mixed_forward_ssm(cfg, params, tokens, plan, beta=2)
+    assert h.shape == (BATCH, SEQ, cfg.d_model)
+    assert np.isfinite(np.asarray(h)).all()
+
+
+def test_encode_mixed_whisper():
+    cfg = get_reduced("whisper-medium")
+    params = registry.init_params(cfg, jax.random.PRNGKey(0))
+    T_enc = cfg.encdec.encoder_seq_len
+    frames = jax.random.normal(jax.random.PRNGKey(1),
+                               (BATCH, T_enc, cfg.d_model))
+    part = smr.SeqPartition(T_enc, cfg.mixed_res.window,
+                            cfg.mixed_res.downsample)
+    # reduced whisper: enc seq 64, window 10 doesn't divide; use window 4
+    part = smr.SeqPartition(T_enc, 4, 2)
+    mask = np.zeros(part.n_spans, np.int32)
+    mask[0] = 1
+    plan = {k: jnp.asarray(v)
+            for k, v in smr.build_seq_pack(mask, 1, part).items()}
+    from repro.models import whisper as whs
+    enc_plain = whs.encode(cfg, params, frames)
+    enc_mixed = smr.encode_mixed(cfg, params, frames, plan, beta=1)
+    assert enc_mixed.shape == enc_plain.shape
+    assert np.isfinite(np.asarray(enc_mixed)).all()
+    enc_b0 = smr.encode_mixed(cfg, params, frames, plan, beta=0)
+    np.testing.assert_allclose(np.asarray(enc_b0), np.asarray(enc_plain),
+                               rtol=1e-5, atol=1e-5)
