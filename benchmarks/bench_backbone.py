@@ -1,0 +1,177 @@
+"""Backbone hot-path benchmark — tracks the perf trajectory of the ViTDet
+forward from this PR onward.
+
+Emits ``BENCH_backbone.json`` with:
+
+  * ``backbone``: us/call of the jitted ``forward_features`` for the
+    full-resolution workload and the mixed-resolution workload at every
+    restoration point beta, for both kernel backends ("xla" and
+    "pallas"; off-TPU the pallas numbers are INTERPRET mode — a
+    correctness path, not a perf claim, flagged by ``meta.interpret``);
+  * ``server_infer``: us/call of ``ServerModel.infer`` on a fig5-style
+    workload (object-free regions downsampled, per-frame calls) with the
+    jitted bucketed (n_low, beta) cache vs the same model run eagerly —
+    what the bucketed jit cache actually buys per frame.
+
+Standalone:  python benchmarks/bench_backbone.py [--smoke] [--out PATH]
+Harness:     picked up by benchmarks/run.py as the ``bench_backbone``
+suite (smoke settings).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.vitdet_l import SIM
+from repro.core import partition as pt
+from repro.core import vit_backbone as vb
+from repro.data import synthetic_video as sv
+from repro.models import registry
+from repro.offload import motion as mo
+from repro.offload.simulator import ServerModel
+
+DEFAULT_OUT = Path(__file__).resolve().parent.parent / "BENCH_backbone.json"
+BACKENDS = ("xla", "pallas")
+
+
+def _timer(fn, *args, reps: int = 5, warmup: int = 1) -> float:
+    """Median wall-time per call in us (blocks on async dispatch)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def bench_backbone(params, img, part, reps: int) -> list:
+    """forward_features us/call: full-res + mixed at each beta, per backend."""
+    rows = []
+    n_low = part.n_regions // 2
+    mask = np.zeros(part.n_regions, np.int32)
+    mask[:n_low] = 1
+    fi, li = (jnp.asarray(x) for x in pt.mask_to_region_ids(mask, n_low))
+
+    for backend in BACKENDS:
+        full_fn = jax.jit(
+            lambda p, i, _b=backend: vb.forward_features(SIM, p, i,
+                                                         backend=_b))
+        us = _timer(full_fn, params, img, reps=reps)
+        rows.append({"workload": "full", "beta": None, "n_low": 0,
+                     "backend": backend, "us_per_call": us})
+        for beta in range(SIM.vit.n_subsets + 1):
+            fn = jax.jit(
+                lambda p, i, a, b, _beta=beta, _b=backend:
+                vb.forward_features(SIM, p, i, a, b, _beta, backend=_b))
+            us = _timer(fn, params, img, fi, li, reps=reps)
+            rows.append({"workload": "mixed", "beta": beta, "n_low": n_low,
+                         "backend": backend, "us_per_call": us})
+    return rows
+
+
+def bench_server_infer(params, n_frames: int, reps: int) -> dict:
+    """fig5-style workload: per-frame ServerModel.infer, jitted bucketed
+    cache vs the untraced (eager) path."""
+    frames, gts = sv.make_clip("walkS", n_frames, size=SIM.vit.img_size[0],
+                               seed=31)
+    part = vb.vit_partition(SIM)
+    patch = SIM.vit.patch_size
+    masks = [(mo.region_density(g, part, patch) == 0).astype(np.int32)
+             for g in gts]
+    beta = 2
+
+    def per_frame_us(server, reps):
+        # warm up every (n_low, beta) bucket once, then time per-frame calls
+        for f, m in zip(frames, masks):
+            server.infer(f, m if m.sum() else None, beta if m.sum() else 0)
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            for f, m in zip(frames, masks):
+                server.infer(f, m if m.sum() else None,
+                             beta if m.sum() else 0)
+            ts.append((time.perf_counter() - t0) / len(frames))
+        return float(np.median(ts) * 1e6)
+
+    jit_us = per_frame_us(ServerModel(SIM, params), reps)
+    eager_us = per_frame_us(ServerModel(SIM, params, jit=False),
+                            max(1, reps // 2))
+    return {"workload": f"fig5-style walkS x{n_frames} frames, beta={beta}",
+            "jit_us": jit_us, "eager_us": eager_us,
+            "speedup": eager_us / jit_us if jit_us else float("nan")}
+
+
+def run_bench(smoke: bool = False, out: Path = DEFAULT_OUT) -> dict:
+    reps = 2 if smoke else 5
+    n_frames = 2 if smoke else 6
+    params = registry.init_params(SIM, jax.random.PRNGKey(0))
+    img = jax.random.uniform(jax.random.PRNGKey(1),
+                             (1, *SIM.vit.img_size, 3))
+    part = vb.vit_partition(SIM)
+
+    report = {
+        "meta": {
+            "config": "vitdet-l/SIM",
+            "device": jax.default_backend(),
+            "interpret": jax.default_backend() != "tpu",
+            "smoke": smoke,
+            "img_size": list(SIM.vit.img_size),
+            "n_regions": part.n_regions,
+        },
+        "backbone": bench_backbone(params, img, part, reps),
+        "server_infer": bench_server_infer(params, n_frames, reps),
+    }
+    out.write_text(json.dumps(report, indent=2) + "\n")
+    print(f"[bench_backbone] wrote {out}")
+    return report
+
+
+def run(ctx: dict) -> list:
+    """benchmarks/run.py adapter: smoke settings, CSV rows.  Writes to
+    the artifacts dir so harness runs never clobber the committed
+    full-mode BENCH_backbone.json with low-rep smoke numbers."""
+    out = Path(__file__).resolve().parent / "artifacts"
+    out.mkdir(parents=True, exist_ok=True)
+    rep = run_bench(smoke=True, out=out / "BENCH_backbone.smoke.json")
+    rows = []
+    for r in rep["backbone"]:
+        name = (f"bench_backbone/{r['workload']}"
+                + (f"_b{r['beta']}" if r["beta"] is not None else "")
+                + f"/{r['backend']}")
+        rows.append((name, r["us_per_call"], f"n_low={r['n_low']}"))
+    s = rep["server_infer"]
+    rows.append(("bench_backbone/server_infer_jit", s["jit_us"],
+                 f"eager_us={s['eager_us']:.0f} speedup={s['speedup']:.1f}x"))
+    ctx["bench_backbone"] = rows
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="minimal reps/frames (CI sanity lane)")
+    ap.add_argument("--out", type=Path, default=DEFAULT_OUT,
+                    help=f"output JSON path (default {DEFAULT_OUT})")
+    args = ap.parse_args(argv)
+    rep = run_bench(smoke=args.smoke, out=args.out)
+    for r in rep["backbone"]:
+        beta = "-" if r["beta"] is None else r["beta"]
+        print(f"  {r['workload']:>5} beta={beta} {r['backend']:>6}: "
+              f"{r['us_per_call']:10.0f} us/call")
+    s = rep["server_infer"]
+    print(f"  server.infer jit {s['jit_us']:.0f} us vs eager "
+          f"{s['eager_us']:.0f} us  ({s['speedup']:.1f}x)")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

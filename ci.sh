@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# CI lane: fast tests + a smoke run of the backbone perf benchmark, so
+# hot-path regressions (shape breaks, backend dispatch, retracing) fail
+# loudly.  Full suite: PYTHONPATH=src pytest -m "slow or not slow".
+set -euo pipefail
+cd "$(dirname "$0")"
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== fast test lane (pytest -m 'not slow') =="
+python -m pytest -x -q
+
+echo "== backbone benchmark smoke =="
+mkdir -p benchmarks/artifacts
+python benchmarks/bench_backbone.py --smoke \
+    --out benchmarks/artifacts/BENCH_backbone.smoke.json
+
+echo "CI OK"

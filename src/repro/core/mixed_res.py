@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.partition import Partition
+from repro.kernels import dispatch
 
 
 # ---------------------------------------------------------------------------
@@ -66,8 +67,15 @@ def low_grid_to_windows(x_low: jnp.ndarray, part: Partition) -> jnp.ndarray:
 # packing
 
 
-def downsample_grid(x: jnp.ndarray, d: int) -> jnp.ndarray:
-    """Average-pool a (B, Hp, Wp, C) grid by d (pixel/patch downsampling)."""
+def downsample_grid(x: jnp.ndarray, d: int, *,
+                    backend: Optional[str] = None) -> jnp.ndarray:
+    """Average-pool a (B, Hp, Wp, C) grid by d (pixel/patch downsampling).
+
+    ``backend`` routes to the Pallas mixed_res_pool kernel
+    (kernels.dispatch); default keeps the pure-jnp path.
+    """
+    if d > 1 and dispatch.use_pallas(backend):
+        return dispatch.avg_pool(x, d)
     B, Hp, Wp, C = x.shape
     x = x.reshape(B, Hp // d, d, Wp // d, d, C)
     return jnp.mean(x.astype(jnp.float32), axis=(2, 4)).astype(x.dtype)
@@ -75,7 +83,8 @@ def downsample_grid(x: jnp.ndarray, d: int) -> jnp.ndarray:
 
 def pack_mixed(x_grid: jnp.ndarray, part: Partition,
                full_ids: jnp.ndarray, low_ids: jnp.ndarray,
-               x_low_grid: Optional[jnp.ndarray] = None
+               x_low_grid: Optional[jnp.ndarray] = None, *,
+               backend: Optional[str] = None
                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Build the mixed-resolution window sequence.
 
@@ -89,7 +98,8 @@ def pack_mixed(x_grid: jnp.ndarray, part: Partition,
     w = part.window
     regions = grid_to_region_windows(x_grid, part)        # B,nR,d^2,w^2,C
     if x_low_grid is None:
-        x_low_grid = downsample_grid(x_grid, part.downsample)
+        x_low_grid = downsample_grid(x_grid, part.downsample,
+                                     backend=backend)
     low_windows = low_grid_to_windows(x_low_grid, part)   # B,nR,w^2,C
 
     full_part = regions[:, full_ids]                      # B,nF,d^2,w^2,C
@@ -119,13 +129,16 @@ def pack_positions(pos_grid: jnp.ndarray, part: Partition,
 
 
 def restore_full(tokens: jnp.ndarray, part: Partition,
-                 full_ids: jnp.ndarray, low_ids: jnp.ndarray) -> jnp.ndarray:
+                 full_ids: jnp.ndarray, low_ids: jnp.ndarray, *,
+                 backend: Optional[str] = None) -> jnp.ndarray:
     """Restore the full-resolution window-blocked sequence at an RP.
 
     tokens: (B, n_tokens, D) mixed sequence (window-blocked layout).
     Low-region windows are upsampled nearest-neighbour: each low token
     broadcasts to the d x d patches it summarised.  Output: (B, Hp*Wp, D)
     window-blocked full sequence (region-major, d^2 windows per region).
+    ``backend`` routes the upsample through the Pallas mixed_res_pool
+    kernel (kernels.dispatch).
     """
     B, _, D = tokens.shape
     w, d = part.window, part.downsample
@@ -133,9 +146,14 @@ def restore_full(tokens: jnp.ndarray, part: Partition,
     n_full_tok = nF * part.tokens_full_region
     full_part = tokens[:, :n_full_tok].reshape(B, nF, d * d, w * w, D)
     low_part = tokens[:, n_full_tok:].reshape(B, -1, w, w, D)
+    nL = low_part.shape[1]
 
     # nearest-neighbour upsample low windows: (w, w) -> (r, r) -> (d^2, w^2)
-    up = jnp.repeat(jnp.repeat(low_part, d, axis=2), d, axis=3)  # B,nL,r,r,D
+    if dispatch.use_pallas(backend):
+        up = dispatch.nn_upsample(low_part.reshape(B * nL, w, w, D), d)
+        up = up.reshape(B, nL, w * d, w * d, D)      # B,nL,r,r,D
+    else:
+        up = jnp.repeat(jnp.repeat(low_part, d, axis=2), d, axis=3)
     up = up.reshape(B, up.shape[1], d, w, d, w, D)
     up = up.transpose(0, 1, 2, 4, 3, 5, 6).reshape(
         B, up.shape[1], d * d, w * w, D)

@@ -19,8 +19,7 @@ relative-position bias inside attention (absolute learned pos-emb only).
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -91,26 +90,80 @@ def patchify(image: jnp.ndarray, patch: int) -> jnp.ndarray:
 
 
 def embed_patches(cfg: ModelConfig, params, image: jnp.ndarray,
-                  downsample: int = 1) -> jnp.ndarray:
+                  downsample: int = 1,
+                  backend: Optional[str] = None) -> jnp.ndarray:
     """Patchify (optionally pixel-downsampled) image and project to D."""
     if downsample > 1:
-        image = mr.downsample_grid(image, downsample)
+        image = mr.downsample_grid(image, downsample, backend=backend)
     p = params["patch_embed"]
     patches = patchify(image, cfg.vit.patch_size)
     return patches @ p["w"] + p["b"]
 
 
 # ---------------------------------------------------------------------------
+# packed positional-embedding cache
+#
+# pack_positions is pure data movement on the (trainable but
+# inference-frozen) pos_emb grid; re-packing it inside every eager
+# forward_features call is wasted work.  The cache is keyed on
+# (pos_emb identity, partition, n_low, region-id bytes) and is bypassed
+# whenever any input is a tracer (jit/grad see the uncached computation,
+# so training and compiled paths are unaffected).
+
+
+_POS_CACHE: Dict[tuple, tuple] = {}
+_POS_CACHE_MAX = 64
+
+
+def _concrete(*xs) -> bool:
+    return not any(isinstance(x, jax.core.Tracer) for x in xs)
+
+
+def packed_positions(pos: jnp.ndarray, part: Partition,
+                     full_ids: Optional[jnp.ndarray],
+                     low_ids: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """Cached pack of the positional grid for the (mixed or full) layout.
+
+    full_ids/low_ids None -> full-resolution window-blocked layout.
+    """
+    mixed = low_ids is not None
+    if mixed:
+        if not _concrete(pos, full_ids, low_ids):
+            return mr.pack_positions(pos, part, full_ids, low_ids)
+        key = (id(pos), part, int(low_ids.shape[0]),
+               bytes(memoryview(jax.device_get(full_ids))),
+               bytes(memoryview(jax.device_get(low_ids))))
+    else:
+        if not _concrete(pos):
+            return mr.grid_to_full_seq(pos[None], part)[0]
+        key = (id(pos), part, "full")
+
+    hit = _POS_CACHE.get(key)
+    # the cached entry pins ``pos`` so id() cannot be recycled; the
+    # identity check guards against a stale module-level cache anyway.
+    if hit is not None and hit[0] is pos:
+        return hit[1]
+    packed = (mr.pack_positions(pos, part, full_ids, low_ids) if mixed
+              else mr.grid_to_full_seq(pos[None], part)[0])
+    if len(_POS_CACHE) >= _POS_CACHE_MAX:
+        _POS_CACHE.clear()
+    _POS_CACHE[key] = (pos, packed)
+    return packed
+
+
+# ---------------------------------------------------------------------------
 # blocks
 
 
-def _vit_block(cfg: ModelConfig, p, x, *, window: int) -> jnp.ndarray:
+def _vit_block(cfg: ModelConfig, p, x, *, window: int,
+               backend: Optional[str] = None) -> jnp.ndarray:
     """x: (B, T, D) window-blocked.  window=0 -> global attention."""
     B, T, D = x.shape
     h = L.apply_norm(cfg, p["ln1"], x)
     positions = jnp.zeros((B, T), jnp.int32)      # no RoPE in ViT
     a = attn.attention_forward(cfg, p["attn"], h, positions,
-                               causal=False, window=window, rope=False)
+                               causal=False, window=window, rope=False,
+                               backend=backend)
     x = x + a
     h = L.apply_norm(cfg, p["ln2"], x)
     return x + L.apply_mlp(cfg, p["ffn"], h)
@@ -119,12 +172,15 @@ def _vit_block(cfg: ModelConfig, p, x, *, window: int) -> jnp.ndarray:
 def forward_features(cfg: ModelConfig, params, image: jnp.ndarray,
                      full_ids: Optional[jnp.ndarray] = None,
                      low_ids: Optional[jnp.ndarray] = None,
-                     beta: int = 0) -> jnp.ndarray:
+                     beta: int = 0,
+                     backend: Optional[str] = None) -> jnp.ndarray:
     """Backbone forward.  Returns the (B, Hp, Wp, D) full-res feature map.
 
     full_ids/low_ids: static-length region id arrays (see core.partition);
     None or empty low_ids -> plain full-resolution inference.
     beta: restoration point, 0..n_subsets (static).
+    backend: kernel backend ("auto" | "pallas" | "xla", kernels.dispatch)
+    for the window/global attention and pool/upsample hot paths.
     """
     part = vit_partition(cfg)
     v = cfg.vit
@@ -134,25 +190,24 @@ def forward_features(cfg: ModelConfig, params, image: jnp.ndarray,
     mixed = low_ids is not None and low_ids.shape[0] > 0 and beta > 0
     assert 0 <= beta <= N
 
-    x_full = embed_patches(cfg, params, image)                # B,Hp,Wp,D
+    x_full = embed_patches(cfg, params, image, backend=backend)  # B,Hp,Wp,D
     pos = params["pos_emb"]
     if mixed:
-        x_low = embed_patches(cfg, params, image, part.downsample)
+        x_low = embed_patches(cfg, params, image, part.downsample, backend)
         tokens, _ = mr.pack_mixed(x_full, part, full_ids, low_ids,
-                                  x_low_grid=x_low)
-        tokens = tokens + mr.pack_positions(pos, part, full_ids, low_ids)
+                                  x_low_grid=x_low, backend=backend)
+        tokens = tokens + packed_positions(pos, part, full_ids, low_ids)
     else:
         if low_ids is not None and low_ids.shape[0] > 0:      # beta == 0
-            x_low = embed_patches(cfg, params, image, part.downsample)
+            x_low = embed_patches(cfg, params, image, part.downsample,
+                                  backend)
             packed, _ = mr.pack_mixed(x_full, part, full_ids, low_ids,
-                                      x_low_grid=x_low)
-            tokens = mr.restore_full(packed, part, full_ids, low_ids)
+                                      x_low_grid=x_low, backend=backend)
+            tokens = mr.restore_full(packed, part, full_ids, low_ids,
+                                     backend=backend)
         else:
             tokens = mr.grid_to_full_seq(x_full, part)
-        tokens = tokens + mr.grid_to_full_seq(pos[None], part)[0]
-
-    def win_attn(x):
-        return _vit_block(cfg, params_blk, x, window=w2)
+        tokens = tokens + packed_positions(pos, part, None, None)
 
     restored = not mixed
     for s in range(N):
@@ -161,21 +216,24 @@ def forward_features(cfg: ModelConfig, params, image: jnp.ndarray,
             params_blk = params["blocks"][idx]
             is_global = m == M - 1
             if is_global and not restored and beta == s + 1:
-                tokens = mr.restore_full(tokens, part, full_ids, low_ids)
+                tokens = mr.restore_full(tokens, part, full_ids, low_ids,
+                                         backend=backend)
                 restored = True
             tokens = _vit_block(cfg, params_blk, tokens,
-                                window=0 if is_global else w2)
-    if not restored:      # beta == N restores before the LAST global block,
-        raise AssertionError("unreachable: beta <= N always restores")
+                                window=0 if is_global else w2,
+                                backend=backend)
+    # beta <= N always restores: beta == N hits the LAST global block.
 
     tokens = L.apply_norm(cfg, params["final_norm"], tokens)
     return mr.full_seq_to_grid(tokens, part)
 
 
 def forward_det(cfg: ModelConfig, params, image,
-                full_ids=None, low_ids=None, beta: int = 0):
+                full_ids=None, low_ids=None, beta: int = 0,
+                backend: Optional[str] = None):
     """Full model: backbone + dense head.  Returns det_head outputs."""
-    feats = forward_features(cfg, params, image, full_ids, low_ids, beta)
+    feats = forward_features(cfg, params, image, full_ids, low_ids, beta,
+                             backend=backend)
     return dh.det_head_forward(cfg, params["head"], feats)
 
 

@@ -22,4 +22,9 @@ The jnp model code paths remain the default for dry-run lowering (XLA
 cost analysis reads the jnp HLO); ``ops.py`` wrappers are the swap-in
 entry points on real TPU hardware (e.g. ``mamba2_forward(...,
 use_kernel=True)``).
+
+``dispatch.py`` is the model-facing router: hot paths take a
+``backend`` argument ("auto" | "pallas" | "xla") and "auto" selects the
+Pallas kernels on TPU while keeping the jnp paths elsewhere (interpret
+mode stays a parity-testing tool).  See README.md.
 """

@@ -1,0 +1,94 @@
+"""Kernel backend dispatch layer — routes model hot paths to the Pallas
+kernels or the pure-jnp (XLA) reference implementations.
+
+Every dispatch site takes a ``backend`` argument:
+
+  ``"xla"``     pure-jnp path (the original model code) — always available.
+  ``"pallas"``  the validated Pallas kernels under ``repro.kernels``;
+                off-TPU they run in *interpret* mode (the ops.py
+                convention), which is numerically exact but slow — meant
+                for parity testing, not performance.
+  ``"auto"``    ``"pallas"`` on TPU, ``"xla"`` everywhere else.  Interpret
+                mode is a correctness tool, so auto never selects it for
+                the hot path.
+  ``None``      ``"xla"``.  The kernels define no custom VJP, so the
+                bare default must stay differentiable: training code
+                that never mentions a backend keeps its gradient path.
+                Inference entry points (``ServerModel``) opt into
+                ``"auto"`` explicitly.
+
+The resolved choice can be forced globally with the ``REPRO_BACKEND``
+environment variable (useful for A/B runs of the benchmark harness
+without touching call sites).
+
+Only the *shapes the kernels support* are routed to Pallas; anything
+else (per-batch ``kv_len`` masks, query offsets) stays on the XLA path —
+the dispatcher is a router, not a second implementation.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import ops as _flash
+from repro.kernels.mixed_res_pool import ops as _pool
+from repro.kernels.window_attention import ops as _win
+
+BACKENDS = ("auto", "pallas", "xla")
+ENV_VAR = "REPRO_BACKEND"
+
+
+def resolve(backend: Optional[str] = None) -> str:
+    """Resolve a backend request to a concrete {"pallas", "xla"} choice."""
+    env = os.environ.get(ENV_VAR)
+    if env:
+        backend = env
+    if backend is None:
+        backend = "xla"      # grad-safe default; see module docstring
+    if backend not in BACKENDS:
+        raise ValueError(f"backend must be one of {BACKENDS}, got "
+                         f"{backend!r}")
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    return backend
+
+
+def use_pallas(backend: Optional[str] = None) -> bool:
+    return resolve(backend) == "pallas"
+
+
+# ---------------------------------------------------------------------------
+# thin wrappers over the kernel entry points (ops.py handles padding,
+# layout and interpret-mode selection; nothing to add here but a stable
+# import point that models/ can use without reaching into each kernel).
+
+
+def window_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     window: int) -> jnp.ndarray:
+    """Pallas non-overlapping window attention (ViTDet window blocks).
+
+    q: (B, T, H, Dh); k/v: (B, T, KV, Dh); T % window == 0.
+    """
+    return _win.window_attention(q, k, v, window)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = False) -> jnp.ndarray:
+    """Pallas flash attention (ViTDet global blocks / LM prefill).
+
+    q: (B, T, H, Dh); k/v: (B, S, KV, Dh).
+    """
+    return _flash.flash_attention(q, k, v, causal=causal)
+
+
+def avg_pool(x: jnp.ndarray, d: int) -> jnp.ndarray:
+    """Pallas average pool — drop-in for mixed_res.downsample_grid."""
+    return _pool.avg_pool_2d(x, d)
+
+
+def nn_upsample(x: jnp.ndarray, d: int) -> jnp.ndarray:
+    """Pallas nearest-neighbour upsample (restoration)."""
+    return _pool.nn_upsample_2d(x, d)

@@ -6,11 +6,12 @@ preallocated to the max sequence length and updated in place with
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch
 from repro.models.config import ModelConfig
 from repro.models.layers import apply_rope, dense_init, rms_norm
 
@@ -28,17 +29,25 @@ def sdpa(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
          causal: bool = False,
          q_offset: int | jnp.ndarray = 0,
          kv_len: Optional[jnp.ndarray] = None,
-         scale: Optional[float] = None) -> jnp.ndarray:
+         scale: Optional[float] = None,
+         backend: Optional[str] = None) -> jnp.ndarray:
     """q: (B,T,H,Dh)  k/v: (B,S,KV,Dh) with H = KV * G.  Returns (B,T,H,Dh).
 
     ``q_offset``: absolute position of q[0] (decode: pos; prefill: 0).
     ``kv_len``: optional per-batch valid cache length (B,) for decode.
+    ``backend``: kernel backend (kernels.dispatch); the Pallas flash
+    kernel handles the plain full-sequence case only — per-batch
+    ``kv_len`` masks and nonzero ``q_offset`` stay on the XLA path.
 
     Long sequences (T > 2*Q_CHUNK) are processed as a lax.scan over query
     blocks so the live logits buffer is (B, C, H, S) instead of the full
     (B, T, H, S) — the XLA analogue of flash attention's tiling (the
     Pallas kernel in kernels/flash_attention does the same on-chip).
     """
+    plain = (kv_len is None and isinstance(q_offset, int) and q_offset == 0
+             and scale is None)
+    if plain and dispatch.use_pallas(backend):
+        return dispatch.flash_attention(q, k, v, causal=causal)
     T = q.shape[1]
     if T > 2 * Q_CHUNK:
         return _sdpa_blocked(q, k, v, causal=causal, q_offset=q_offset,
@@ -93,15 +102,18 @@ def _sdpa_dense(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     return out.reshape(B, T, H, Dh).astype(q.dtype)
 
 
-def window_sdpa(q, k, v, window: int) -> jnp.ndarray:
+def window_sdpa(q, k, v, window: int, *,
+                backend: Optional[str] = None) -> jnp.ndarray:
     """Non-overlapping local window attention over a 1-D sequence.
 
     q/k/v: (B, T, H, Dh) with T % window == 0.  Each window attends only
-    to itself (ViTDet-style window attention, 1-D layout).
+    to itself (ViTDet-style window attention, 1-D layout).  ``backend``
+    routes to the Pallas window-attention kernel (kernels.dispatch).
     """
+    if dispatch.use_pallas(backend):
+        return dispatch.window_attention(q, k, v, window)
     B, T, H, Dh = q.shape
     W = T // window
-    rs = lambda x: x.reshape(B * W, window, x.shape[2], Dh)
     qw = q.reshape(B, W, window, H, Dh).reshape(B * W, window, H, Dh)
     kw = k.reshape(B, W, window, k.shape[2], Dh).reshape(B * W, window, -1, Dh)
     vw = v.reshape(B, W, window, v.shape[2], Dh).reshape(B * W, window, -1, Dh)
@@ -134,11 +146,25 @@ def init_attention(cfg: ModelConfig, key, dtype):
 
 def _project_qkv(cfg: ModelConfig, p, x, positions, rope: bool = True):
     B, T, _ = x.shape
-    q = x @ p["w_q"]
-    k = x @ p["w_k"]
-    v = x @ p["w_v"]
-    if cfg.attention_bias:
-        q, k, v = q + p["b_q"], k + p["b_k"], v + p["b_v"]
+    if T == 1:
+        # decode: the fused-weight concat below copies the whole QKV
+        # weight per step, which dominates a single-token GEMV — keep
+        # the three small GEMMs here.
+        q, k, v = x @ p["w_q"], x @ p["w_k"], x @ p["w_v"]
+        if cfg.attention_bias:
+            q, k, v = q + p["b_q"], k + p["b_k"], v + p["b_v"]
+    else:
+        # fused QKV: one (D, q_dim + 2*kv_dim) GEMM instead of three —
+        # each output column depends only on its own weight column, so
+        # the split results are bit-identical to the separate GEMMs
+        # (test_backend_dispatch.py asserts this) while the MXU sees
+        # one big matmul.
+        w_qkv = jnp.concatenate([p["w_q"], p["w_k"], p["w_v"]], axis=1)
+        qkv = x @ w_qkv
+        if cfg.attention_bias:
+            qkv = qkv + jnp.concatenate([p["b_q"], p["b_k"], p["b_v"]])
+        q, k, v = jnp.split(qkv, (cfg.q_dim, cfg.q_dim + cfg.kv_dim),
+                            axis=-1)
     q = q.reshape(B, T, cfg.n_heads, cfg.head_dim)
     k = k.reshape(B, T, cfg.n_kv_heads, cfg.head_dim)
     v = v.reshape(B, T, cfg.n_kv_heads, cfg.head_dim)
@@ -153,13 +179,19 @@ def _project_qkv(cfg: ModelConfig, p, x, positions, rope: bool = True):
 
 def attention_forward(cfg: ModelConfig, p, x, positions, *,
                       causal: bool = True, window: int = 0,
-                      rope: bool = True) -> jnp.ndarray:
-    """Full-sequence attention (training / prefill without cache reuse)."""
+                      rope: bool = True,
+                      backend: Optional[str] = None) -> jnp.ndarray:
+    """Full-sequence attention (training / prefill without cache reuse).
+
+    ``backend`` selects the kernel backend (kernels.dispatch): window
+    blocks route to the Pallas window-attention kernel, global blocks to
+    the Pallas flash kernel; ``"xla"`` keeps the pure-jnp paths.
+    """
     q, k, v = _project_qkv(cfg, p, x, positions, rope)
     if window > 0:
-        out = window_sdpa(q, k, v, window)
+        out = window_sdpa(q, k, v, window, backend=backend)
     else:
-        out = sdpa(q, k, v, causal=causal)
+        out = sdpa(q, k, v, causal=causal, backend=backend)
     out = out.reshape(x.shape[0], x.shape[1], cfg.q_dim) @ p["w_o"]
     if cfg.attention_bias:
         out = out + p["b_o"]

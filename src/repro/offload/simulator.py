@@ -38,39 +38,52 @@ SIZE_SCALE = (1920 * 1080) / (512 * 512)
 
 
 # ---------------------------------------------------------------------------
-# server model wrapper (jitted per (n_low bucket, beta) — static shapes)
+# server model wrapper — jitted bucketed inference cache: one compiled
+# forward_det per (n_low bucket, beta), mirroring ServeEngine._get_prefill.
+# Shapes are static within a bucket so per-frame calls never retrace.
 
 
 class ServerModel:
+    """Server-side detector with a per-(n_low, beta) compiled-fn cache.
+
+    ``backend`` selects the kernel backend for the backbone hot path
+    (kernels.dispatch: "auto" | "pallas" | "xla").  ``jit=False`` runs
+    the forward eagerly (op-by-op) — only useful to benchmark what the
+    bucketed cache buys (benchmarks/bench_backbone.py quotes both).
+    """
+
     def __init__(self, cfg: ModelConfig, params, top_k: int = 32,
-                 score_thresh: float = 0.4):
+                 score_thresh: float = 0.4,
+                 backend: Optional[str] = "auto", jit: bool = True):
         self.cfg = cfg
         self.params = params
         self.part = vb.vit_partition(cfg)
         self.top_k = top_k
         self.score_thresh = score_thresh
-        self._jitted: Dict[Tuple[int, int], Callable] = {}
+        self.backend = backend
+        self.jit = jit
+        self._fns: Dict[Tuple[int, int], Callable] = {}
 
     def _get_fn(self, n_low: int, beta: int) -> Callable:
         key = (n_low, beta)
-        if key not in self._jitted:
-            cfg = self.cfg
+        if key not in self._fns:
+            cfg, backend = self.cfg, self.backend
 
             if n_low == 0:
                 def fn(params, img):
-                    outs = vb.forward_det(cfg, params, img)
+                    outs = vb.forward_det(cfg, params, img, backend=backend)
                     from repro.core import det_head as dh
                     return dh.decode_detections(cfg, outs, self.top_k,
                                                 self.score_thresh)
             else:
                 def fn(params, img, full_ids, low_ids):
                     outs = vb.forward_det(cfg, params, img, full_ids,
-                                          low_ids, beta)
+                                          low_ids, beta, backend=backend)
                     from repro.core import det_head as dh
                     return dh.decode_detections(cfg, outs, self.top_k,
                                                 self.score_thresh)
-            self._jitted[key] = jax.jit(fn, static_argnums=())
-        return self._jitted[key]
+            self._fns[key] = jax.jit(fn) if self.jit else fn
+        return self._fns[key]
 
     def infer(self, frame: np.ndarray, mask: Optional[np.ndarray] = None,
               beta: int = 0) -> List[Dict]:

@@ -1,0 +1,201 @@
+"""Kernel backend dispatch layer (kernels.dispatch) — parity between the
+``"pallas"`` (interpret mode on CPU) and ``"xla"`` backbone paths, the
+fused-QKV bit-compatibility guarantee, and the packed-position cache."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.vitdet_l import SIM
+from repro.core import partition as pt
+from repro.core import vit_backbone as vb
+from repro.kernels import dispatch
+from repro.models import attention as attn
+from repro.models import registry
+from repro.models.config import ModelConfig
+
+TOL = dict(rtol=5e-5, atol=5e-5)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = registry.init_params(SIM, jax.random.PRNGKey(0))
+    img = jax.random.uniform(jax.random.PRNGKey(1), (1, *SIM.vit.img_size, 3))
+    part = vb.vit_partition(SIM)
+    return params, img, part
+
+
+def _ids(part, n_low):
+    mask = np.zeros(part.n_regions, np.int32)
+    mask[:n_low] = 1
+    fi, li = pt.mask_to_region_ids(mask, n_low)
+    return jnp.asarray(fi), jnp.asarray(li)
+
+
+# ---------------------------------------------------------------------------
+# backend resolution
+
+
+def test_resolve_backends():
+    assert dispatch.resolve("xla") == "xla"
+    assert dispatch.resolve("pallas") == "pallas"
+    # auto never picks interpret-mode pallas for the hot path off-TPU
+    expect = "pallas" if jax.default_backend() == "tpu" else "xla"
+    assert dispatch.resolve("auto") == expect
+    # bare default stays grad-safe (kernels define no custom VJP)
+    assert dispatch.resolve(None) == "xla"
+    with pytest.raises(ValueError):
+        dispatch.resolve("cuda")
+
+
+def test_resolve_env_override(monkeypatch):
+    monkeypatch.setenv(dispatch.ENV_VAR, "pallas")
+    assert dispatch.resolve("xla") == "pallas"
+    monkeypatch.setenv(dispatch.ENV_VAR, "xla")
+    assert dispatch.resolve("pallas") == "xla"
+
+
+# ---------------------------------------------------------------------------
+# forward_features parity: pallas (interpret) vs xla, full-res and mixed
+
+
+def test_forward_features_full_res_parity(setup):
+    params, img, _ = setup
+    ref = vb.forward_features(SIM, params, img, backend="xla")
+    out = vb.forward_features(SIM, params, img, backend="pallas")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL)
+
+
+@pytest.mark.parametrize("n_low", [8, 16])
+@pytest.mark.parametrize("beta", [0, 1, SIM.vit.n_subsets])
+def test_forward_features_mixed_parity(setup, beta, n_low):
+    params, img, part = setup
+    fi, li = _ids(part, n_low)
+    ref = vb.forward_features(SIM, params, img, fi, li, beta, backend="xla")
+    out = vb.forward_features(SIM, params, img, fi, li, beta,
+                              backend="pallas")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL)
+
+
+def test_forward_features_jit_parity(setup):
+    """The dispatch choice survives jit (the ServerModel path)."""
+    params, img, part = setup
+    fi, li = _ids(part, 8)
+
+    def f(backend):
+        fn = jax.jit(lambda p, i, a, b: vb.forward_features(
+            SIM, p, i, a, b, 2, backend=backend))
+        return fn(params, img, fi, li)
+
+    np.testing.assert_allclose(np.asarray(f("pallas")),
+                               np.asarray(f("xla")), **TOL)
+
+
+# ---------------------------------------------------------------------------
+# fused QKV: one concatenated GEMM must be BIT-compatible with the old
+# three-GEMM path (each output column touches only its own weight column)
+
+
+def _three_gemm_qkv(cfg, p, x, positions, rope):
+    """The pre-fusion reference implementation of _project_qkv."""
+    from repro.models.layers import apply_rope, rms_norm
+    B, T, _ = x.shape
+    q = x @ p["w_q"]
+    k = x @ p["w_k"]
+    v = x @ p["w_v"]
+    if cfg.attention_bias:
+        q, k, v = q + p["b_q"], k + p["b_k"], v + p["b_v"]
+    q = q.reshape(B, T, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(B, T, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(B, T, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta,
+                       cfg.partial_rotary_factor)
+        k = apply_rope(k, positions, cfg.rope_theta,
+                       cfg.partial_rotary_factor)
+    return q, k, v
+
+
+@pytest.mark.parametrize("cfg", [
+    SIM,                                            # bias, MHA (ViT)
+    ModelConfig(n_heads=8, n_kv_heads=2, head_dim=16, d_model=64),  # GQA
+], ids=["vit-sim", "gqa"])
+def test_fused_qkv_bit_compatible(cfg):
+    p = attn.init_attention(cfg, jax.random.PRNGKey(3), jnp.float32)
+    for T in (16, 1):         # prefill (fused) and decode (three-GEMM)
+        x = jax.random.normal(jax.random.PRNGKey(4), (2, T, cfg.d_model))
+        positions = jnp.arange(T)[None].repeat(2, 0)
+        for rope in (False, True):
+            fused = attn._project_qkv(cfg, p, x, positions, rope)
+            ref = _three_gemm_qkv(cfg, p, x, positions, rope)
+            for a, b, name in zip(fused, ref, "qkv"):
+                assert jnp.array_equal(a, b), \
+                    f"{name} not bit-identical (T={T})"
+
+
+# ---------------------------------------------------------------------------
+# sdpa / window_sdpa routing guards
+
+
+def test_sdpa_decode_args_stay_on_xla():
+    """kv_len / q_offset are unsupported by the flash kernel — the
+    dispatcher must fall back to XLA, not mis-route."""
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(ks[0], (2, 1, 4, 16))
+    k = jax.random.normal(ks[1], (2, 32, 4, 16))
+    v = jax.random.normal(ks[2], (2, 32, 4, 16))
+    kv_len = jnp.array([7, 32])
+    ref = attn.sdpa(q, k, v, kv_len=kv_len, backend="xla")
+    out = attn.sdpa(q, k, v, kv_len=kv_len, backend="pallas")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL)
+
+
+def test_window_sdpa_backend_parity():
+    ks = jax.random.split(jax.random.PRNGKey(6), 3)
+    q = jax.random.normal(ks[0], (2, 64, 4, 16))
+    k = jax.random.normal(ks[1], (2, 64, 4, 16))
+    v = jax.random.normal(ks[2], (2, 64, 4, 16))
+    np.testing.assert_allclose(
+        np.asarray(attn.window_sdpa(q, k, v, 4, backend="pallas")),
+        np.asarray(attn.window_sdpa(q, k, v, 4, backend="xla")), **TOL)
+
+
+# ---------------------------------------------------------------------------
+# packed positional-embedding cache
+
+
+def test_packed_positions_cache_hit(setup):
+    params, _, part = setup
+    pos = params["pos_emb"]
+    fi, li = _ids(part, 8)
+    vb._POS_CACHE.clear()
+    a = vb.packed_positions(pos, part, fi, li)
+    b = vb.packed_positions(pos, part, fi, li)
+    assert b is a                       # second eager call is a cache hit
+    np.testing.assert_array_equal(
+        np.asarray(a),
+        np.asarray(__import__("repro.core.mixed_res", fromlist=["x"])
+                   .pack_positions(pos, part, fi, li)))
+    # different region choice with the same n_low -> different entry
+    mask = np.zeros(part.n_regions, np.int32)
+    mask[8:] = 1
+    fi2, li2 = (jnp.asarray(x) for x in pt.mask_to_region_ids(mask, 8))
+    c = vb.packed_positions(pos, part, fi2, li2)
+    assert c is not a
+    assert not np.array_equal(np.asarray(c), np.asarray(a))
+
+
+def test_packed_positions_tracer_bypass(setup):
+    params, _, part = setup
+    pos = params["pos_emb"]
+    fi, li = _ids(part, 8)
+    vb._POS_CACHE.clear()
+    out = jax.jit(lambda p, a, b: vb.packed_positions(p, part, a, b))(
+        pos, fi, li)
+    assert not vb._POS_CACHE            # traced call must not populate
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(vb.packed_positions(pos, part, fi, li)),
+        **TOL)

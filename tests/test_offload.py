@@ -96,6 +96,7 @@ def test_tracker_follows_translation():
     assert tr.retention == 1.0
 
 
+@pytest.mark.slow
 def test_estimators_and_metrics():
     rng = np.random.default_rng(0)
     X = rng.uniform(0, 1, (400, 8)).astype(np.float32)

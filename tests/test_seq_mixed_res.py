@@ -90,6 +90,7 @@ def test_mixed_forward_finite_and_distinct(arch, beta):
 
 
 @pytest.mark.parametrize("arch", ["qwen3-4b", "deepseek-v2-236b"])
+@pytest.mark.slow
 def test_mixed_prefill_cache_restoration_enables_decode(arch):
     """After a mixed prefill the cache must be full-resolution: a decode
     step from it must be finite, and with beta=0 must exactly match the

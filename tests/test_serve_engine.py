@@ -9,6 +9,9 @@ from repro.models import registry
 from repro.serve.engine import ServeConfig, ServeEngine
 from repro.serve.request import Request
 
+# end-to-end serving waves: excluded from the default fast lane
+pytestmark = pytest.mark.slow
+
 ARCH = "qwen3-4b"
 T, NEW = 32, 4
 

@@ -45,6 +45,7 @@ def test_forward_and_loss(arch):
     assert float(loss) > 0
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ASSIGNED)
 def test_train_step_grads_finite(arch):
     cfg = get_reduced(arch)
@@ -62,6 +63,7 @@ def test_train_step_grads_finite(arch):
         assert np.isfinite(np.asarray(g)).all()
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ASSIGNED)
 def test_prefill_decode_matches_forward(arch):
     """prefill + KV-cache decode must agree with the full forward pass."""
