@@ -1,0 +1,229 @@
+"""Multi-client edge-serving benchmark — batched waves vs. sequential.
+
+Emits ``BENCH_multiclient.json`` with one row per (n_clients, mode):
+
+  * ``throughput_fps``   — offloaded frames served per second of
+                           SIMULATED time (the edge-capacity metric);
+  * ``p50_e2e_s`` / ``p95_e2e_s`` — Eq. (2) end-to-end latency incl.
+                           queueing delay at the shared replica;
+  * ``p50_queue_s`` / ``mean_wave`` — scheduler telemetry;
+  * ``wall_s``           — real wall-clock of the run (the batched
+                           forward also wins real compute time).
+
+Modes: ``batched`` (waves of same-(n_low bucket, beta) frames through
+one batched ``forward_det``) vs. ``sequential`` (one frame per wave) on
+the SAME workload.  The harness also cross-checks that batched
+detections match sequential detections box-for-box.
+
+Standalone:  python benchmarks/bench_multiclient.py [--smoke] [--out P]
+Harness:     picked up by benchmarks/run.py as the ``bench_multiclient``
+suite (smoke settings).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.configs.vitdet_l import SIM
+from repro.core import vit_backbone as vb
+from repro.data import synthetic_video as sv
+from repro.data.network_traces import make_trace
+from repro.models import registry
+from repro.offload.simulator import Policy, Simulation
+from repro.serve.edge import (BatchedServerModel, EdgeConfig,
+                              MultiClientSimulation)
+
+DEFAULT_OUT = Path(__file__).resolve().parent.parent / \
+    "BENCH_multiclient.json"
+CLIENT_COUNTS = (1, 2, 4)
+VIDEOS = ("walkS", "cycleS", "driveN", "walkB")
+PATCH = SIM.vit.patch_size
+SIZE = SIM.vit.img_size[0]
+FPS = 10
+# shared-edge service time: the paper's measured full-res ViTDet-L
+# delay, scaled by the mixed-res FLOP ratio (offload/estimator.py does
+# the same for the single-client grid) — makes the replica a genuine
+# bottleneck so queueing/batching behaviour is visible
+FULL_RES_DELAY_S = 0.281
+
+
+class RotatingMaskPolicy(Policy):
+    """Deterministic per-client region layout (distinct across clients,
+    same n_low bucket) — the co-batching worst case for the old
+    shared-layout packing."""
+    name = "rotating"
+    use_tracker = True
+
+    def __init__(self, offset: int, n_low: int, n_regions: int,
+                 beta: int = 2):
+        self.offset = offset
+        self.n_low = n_low
+        self.n_regions = n_regions
+        self.beta = beta
+
+    def decide(self, sim: Simulation, frame_idx: int) -> Dict:
+        mask = np.zeros(self.n_regions, np.int32)
+        for k in range(self.n_low):
+            mask[(self.offset + k) % self.n_regions] = 1
+        return {"mask": mask, "quality": 85, "beta": self.beta}
+
+
+def _inf_delay_model():
+    from repro.offload.estimator import InferenceDelayModel
+    part = vb.vit_partition(SIM)
+    return InferenceDelayModel.fit_from_flops(
+        lambda n, b: vb.backbone_flops(SIM, n, b), part.n_regions,
+        betas=tuple(range(SIM.vit.n_subsets + 1)),
+        full_res_delay_s=FULL_RES_DELAY_S)
+
+
+def make_clients(server: BatchedServerModel, n_clients: int,
+                 n_frames: int, gt_cache: Dict) -> List[Simulation]:
+    part = vb.vit_partition(SIM)
+    inf_delay = _inf_delay_model()
+    n_low = part.n_regions // 4
+    clients = []
+    for i in range(n_clients):
+        vname = VIDEOS[i % len(VIDEOS)]
+        key = (vname, n_frames)
+        if key not in gt_cache:
+            frames, _ = sv.make_clip(vname, n_frames, size=SIZE, seed=17)
+            gt_cache[key] = (frames, [server.infer(f) for f in frames])
+        frames, gt = gt_cache[key]
+        pol = RotatingMaskPolicy(offset=i * n_low, n_low=n_low,
+                                 n_regions=part.n_regions)
+        clients.append(Simulation(frames, gt, make_trace("4g", i,
+                                                         duration_s=120),
+                                  pol, server, part, PATCH, fps=FPS,
+                                  inf_delay=inf_delay))
+    return clients
+
+
+def run_mode(server: BatchedServerModel, n_clients: int, n_frames: int,
+             batched: bool, gt_cache: Dict) -> Dict:
+    clients = make_clients(server, n_clients, n_frames, gt_cache)
+    mc = MultiClientSimulation(clients, server,
+                               EdgeConfig(batched=batched))
+    t0 = time.perf_counter()
+    results = mc.run([VIDEOS[i % len(VIDEOS)] for i in range(n_clients)])
+    wall = time.perf_counter() - t0
+
+    e2e = np.array([x for r in results for x in r.e2e_latency], np.float64)
+    queue = np.asarray(mc.stats.queue_delays, np.float64)
+    sim_seconds = n_frames / FPS
+    return {
+        "n_clients": n_clients,
+        "mode": "batched" if batched else "sequential",
+        "offloads": int(e2e.size),
+        "throughput_fps": float(e2e.size / sim_seconds),
+        "p50_e2e_s": float(np.percentile(e2e, 50)) if e2e.size else None,
+        "p95_e2e_s": float(np.percentile(e2e, 95)) if e2e.size else None,
+        "p50_queue_s": (float(np.percentile(queue, 50))
+                        if queue.size else 0.0),
+        "mean_wave": mc.stats.mean_wave_size,
+        "wall_s": wall,
+        "_jobs": {f"{j['client']}:{j['frame']}": j["dets"]
+                  for j in mc.stats.jobs},
+    }
+
+
+def _dets_close(a: List[Dict], b: List[Dict], atol: float = 0.5) -> bool:
+    if len(a) != len(b):
+        return False
+    for da, db in zip(a, b):
+        if da["cls"] != db["cls"]:
+            return False
+        if not np.allclose(np.asarray(da["box"], np.float64),
+                           np.asarray(db["box"], np.float64), atol=atol):
+            return False
+    return True
+
+
+def run_bench(smoke: bool = False, out: Path = DEFAULT_OUT,
+              client_counts: Sequence[int] = CLIENT_COUNTS) -> dict:
+    n_frames = 16 if smoke else 48
+    params = registry.init_params(SIM, jax.random.PRNGKey(0))
+    server = BatchedServerModel(SIM, params, top_k=8, score_thresh=0.0)
+    gt_cache: Dict = {}
+
+    rows, match = [], {}
+    for n in client_counts:
+        row_b = run_mode(server, n, n_frames, batched=True,
+                         gt_cache=gt_cache)
+        row_s = run_mode(server, n, n_frames, batched=False,
+                         gt_cache=gt_cache)
+        jobs_b, jobs_s = row_b.pop("_jobs"), row_s.pop("_jobs")
+        shared = set(jobs_b) & set(jobs_s)
+        match[n] = {
+            "compared": len(shared),
+            "all_match": bool(shared) and all(
+                _dets_close(jobs_b[k], jobs_s[k]) for k in shared),
+        }
+        rows.extend([row_b, row_s])
+
+    report = {
+        "meta": {
+            "config": "vitdet-l/SIM",
+            "device": jax.default_backend(),
+            "smoke": smoke,
+            "n_frames": n_frames,
+            "fps": FPS,
+            "full_res_delay_s": FULL_RES_DELAY_S,
+            "batch_alpha": EdgeConfig().batch_alpha,
+        },
+        "rows": rows,
+        "detections_match": match,
+    }
+    out.write_text(json.dumps(report, indent=2) + "\n")
+    print(f"[bench_multiclient] wrote {out}")
+    return report
+
+
+def run(ctx: dict) -> list:
+    """benchmarks/run.py adapter: smoke settings, CSV rows."""
+    out = Path(__file__).resolve().parent / "artifacts"
+    out.mkdir(parents=True, exist_ok=True)
+    rep = run_bench(smoke=True, out=out / "BENCH_multiclient.smoke.json",
+                    client_counts=(1, 2))
+    rows = []
+    for r in rep["rows"]:
+        rows.append((f"bench_multiclient/{r['n_clients']}c/{r['mode']}",
+                     r["throughput_fps"],
+                     f"p95_e2e={r['p95_e2e_s']:.3f}s "
+                     f"wave={r['mean_wave']:.2f}"))
+    ctx["bench_multiclient"] = rows
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="fewer frames/clients (CI sanity lane)")
+    ap.add_argument("--clients", type=int, nargs="*", default=None,
+                    help=f"client counts (default {CLIENT_COUNTS})")
+    ap.add_argument("--out", type=Path, default=DEFAULT_OUT,
+                    help=f"output JSON path (default {DEFAULT_OUT})")
+    args = ap.parse_args(argv)
+    counts = tuple(args.clients) if args.clients else CLIENT_COUNTS
+    rep = run_bench(smoke=args.smoke, out=args.out, client_counts=counts)
+    for r in rep["rows"]:
+        print(f"  {r['n_clients']}c {r['mode']:>10}: "
+              f"{r['throughput_fps']:6.2f} offloads/s  "
+              f"p50 {r['p50_e2e_s']:.3f}s  p95 {r['p95_e2e_s']:.3f}s  "
+              f"queue p50 {r['p50_queue_s']:.3f}s  "
+              f"wave {r['mean_wave']:.2f}")
+    for n, m in rep["detections_match"].items():
+        print(f"  {n}c detections batched==sequential: {m['all_match']} "
+              f"({m['compared']} jobs)")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

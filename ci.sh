@@ -14,4 +14,8 @@ mkdir -p benchmarks/artifacts
 python benchmarks/bench_backbone.py --smoke \
     --out benchmarks/artifacts/BENCH_backbone.smoke.json
 
+echo "== multi-client serving bench smoke (2 clients) =="
+python benchmarks/bench_multiclient.py --smoke --clients 1 2 \
+    --out benchmarks/artifacts/BENCH_multiclient.smoke.json
+
 echo "CI OK"

@@ -5,6 +5,13 @@ the bucketed number of low-resolution regions ``n_low`` (static python
 int); WHICH regions are low is runtime data (``full_ids`` / ``low_ids``
 int32 arrays produced by ``partition.mask_to_region_ids``).
 
+Region ids come in two ranks:
+  * (n,)   — one layout shared by every sample in the batch (the original
+             single-stream path);
+  * (B, n) — a layout PER SAMPLE, so frames from different clients with
+             different low-region masks (but the same n_low bucket) can be
+             stacked into one batched forward (serve/edge.py).
+
 Layout invariant (window-blocked, see partition.py):
   token sequence = [ full-region windows (n_full * d^2 of them)
                    | low-region windows  (n_low of them) ]
@@ -93,6 +100,9 @@ def pack_mixed(x_grid: jnp.ndarray, part: Partition,
     grid (e.g. patchified from device-downsampled pixels); derived by
     average pooling when omitted.
 
+    full_ids/low_ids may be (n,) shared across the batch or (B, n)
+    per-sample (batched multi-client packing).
+
     Returns (tokens (B, n_tokens, C), windows (B, n_windows, w^2, C) view).
     """
     w = part.window
@@ -102,10 +112,16 @@ def pack_mixed(x_grid: jnp.ndarray, part: Partition,
                                      backend=backend)
     low_windows = low_grid_to_windows(x_low_grid, part)   # B,nR,w^2,C
 
-    full_part = regions[:, full_ids]                      # B,nF,d^2,w^2,C
-    B, nF = full_part.shape[0], full_part.shape[1]
+    if full_ids.ndim == 2:                                # per-sample ids
+        full_part = jnp.take_along_axis(
+            regions, full_ids[:, :, None, None, None], axis=1)
+        low_part = jnp.take_along_axis(
+            low_windows, low_ids[:, :, None, None], axis=1)
+    else:
+        full_part = regions[:, full_ids]                  # B,nF,d^2,w^2,C
+        low_part = low_windows[:, low_ids]                # B,nL,w^2,C
+    B = full_part.shape[0]
     full_part = full_part.reshape(B, -1, w * w, full_part.shape[-1])
-    low_part = low_windows[:, low_ids]                    # B,nL,w^2,C
     windows = jnp.concatenate([full_part, low_part], axis=1)
     tokens = windows.reshape(B, -1, windows.shape[-1])
     return tokens, windows
@@ -118,8 +134,14 @@ def pack_positions(pos_grid: jnp.ndarray, part: Partition,
 
     pos_grid: (Hp, Wp, D).  Low-res tokens receive the mean embedding of
     the d x d patch group they represent (paper: global positional
-    embeddings added to both sets of tokens).
+    embeddings added to both sets of tokens).  Per-sample (B, n) ids
+    return a (B, n_tokens, D) batch of packed embeddings.
     """
+    if full_ids.ndim == 2:
+        B = full_ids.shape[0]
+        grid = jnp.broadcast_to(pos_grid[None], (B,) + pos_grid.shape)
+        tokens, _ = pack_mixed(grid, part, full_ids, low_ids)
+        return tokens
     tokens, _ = pack_mixed(pos_grid[None], part, full_ids, low_ids)
     return tokens[0]
 
@@ -138,11 +160,12 @@ def restore_full(tokens: jnp.ndarray, part: Partition,
     broadcasts to the d x d patches it summarised.  Output: (B, Hp*Wp, D)
     window-blocked full sequence (region-major, d^2 windows per region).
     ``backend`` routes the upsample through the Pallas mixed_res_pool
-    kernel (kernels.dispatch).
+    kernel (kernels.dispatch).  full_ids/low_ids may be (n,) shared or
+    (B, n) per-sample.
     """
     B, _, D = tokens.shape
     w, d = part.window, part.downsample
-    nF = part.n_regions - low_ids.shape[0]
+    nF = part.n_regions - low_ids.shape[-1]
     n_full_tok = nF * part.tokens_full_region
     full_part = tokens[:, :n_full_tok].reshape(B, nF, d * d, w * w, D)
     low_part = tokens[:, n_full_tok:].reshape(B, -1, w, w, D)
@@ -159,8 +182,13 @@ def restore_full(tokens: jnp.ndarray, part: Partition,
         B, up.shape[1], d * d, w * w, D)
 
     out = jnp.zeros((B, part.n_regions, d * d, w * w, D), tokens.dtype)
-    out = out.at[:, full_ids].set(full_part)
-    out = out.at[:, low_ids].set(up)        # dup padded ids: last write wins
+    if low_ids.ndim == 2:                   # per-sample scatter
+        b = jnp.arange(B)[:, None]
+        out = out.at[b, full_ids].set(full_part)
+        out = out.at[b, low_ids].set(up)
+    else:
+        out = out.at[:, full_ids].set(full_part)
+        out = out.at[:, low_ids].set(up)    # dup padded ids: last write wins
     return out.reshape(B, part.grid_h * part.grid_w, D)
 
 

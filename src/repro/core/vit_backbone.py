@@ -23,6 +23,7 @@ from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import det_head as dh
 from repro.core import mixed_res as mr
@@ -124,15 +125,18 @@ def packed_positions(pos: jnp.ndarray, part: Partition,
                      low_ids: Optional[jnp.ndarray]) -> jnp.ndarray:
     """Cached pack of the positional grid for the (mixed or full) layout.
 
-    full_ids/low_ids None -> full-resolution window-blocked layout.
+    full_ids/low_ids None -> full-resolution window-blocked layout;
+    (B, n) per-sample ids produce a (B, n_tokens, D) batch.
     """
     mixed = low_ids is not None
     if mixed:
         if not _concrete(pos, full_ids, low_ids):
             return mr.pack_positions(pos, part, full_ids, low_ids)
-        key = (id(pos), part, int(low_ids.shape[0]),
-               bytes(memoryview(jax.device_get(full_ids))),
-               bytes(memoryview(jax.device_get(low_ids))))
+        key = (id(pos), part, tuple(low_ids.shape),
+               bytes(memoryview(np.ascontiguousarray(
+                   jax.device_get(full_ids)))),
+               bytes(memoryview(np.ascontiguousarray(
+                   jax.device_get(low_ids)))))
     else:
         if not _concrete(pos):
             return mr.grid_to_full_seq(pos[None], part)[0]
@@ -176,8 +180,10 @@ def forward_features(cfg: ModelConfig, params, image: jnp.ndarray,
                      backend: Optional[str] = None) -> jnp.ndarray:
     """Backbone forward.  Returns the (B, Hp, Wp, D) full-res feature map.
 
-    full_ids/low_ids: static-length region id arrays (see core.partition);
-    None or empty low_ids -> plain full-resolution inference.
+    full_ids/low_ids: static-length region id arrays (see core.partition),
+    either (n,) shared across the batch or (B, n) per-sample (batched
+    multi-client serving, serve/edge.py); None or empty low_ids -> plain
+    full-resolution inference.
     beta: restoration point, 0..n_subsets (static).
     backend: kernel backend ("auto" | "pallas" | "xla", kernels.dispatch)
     for the window/global attention and pool/upsample hot paths.
@@ -187,7 +193,7 @@ def forward_features(cfg: ModelConfig, params, image: jnp.ndarray,
     M = blocks_per_subset(cfg)
     N = v.n_subsets
     w2 = part.window * part.window
-    mixed = low_ids is not None and low_ids.shape[0] > 0 and beta > 0
+    mixed = low_ids is not None and low_ids.shape[-1] > 0 and beta > 0
     assert 0 <= beta <= N
 
     x_full = embed_patches(cfg, params, image, backend=backend)  # B,Hp,Wp,D
@@ -198,7 +204,7 @@ def forward_features(cfg: ModelConfig, params, image: jnp.ndarray,
                                   x_low_grid=x_low, backend=backend)
         tokens = tokens + packed_positions(pos, part, full_ids, low_ids)
     else:
-        if low_ids is not None and low_ids.shape[0] > 0:      # beta == 0
+        if low_ids is not None and low_ids.shape[-1] > 0:     # beta == 0
             x_low = embed_patches(cfg, params, image, part.downsample,
                                   backend)
             packed, _ = mr.pack_mixed(x_full, part, full_ids, low_ids,

@@ -7,6 +7,7 @@ deterministic per (kind, index).
 """
 from __future__ import annotations
 
+import zlib
 from dataclasses import dataclass
 from typing import List, Tuple
 
@@ -30,7 +31,10 @@ class NetworkTrace:
 
 
 def make_trace(kind: str, index: int, duration_s: int = 300) -> NetworkTrace:
-    rng = np.random.default_rng(hash((kind, index)) % 2 ** 32)
+    # NOT hash(): str hashing is salted per process (PYTHONHASHSEED), so
+    # trace statistics would differ from run to run
+    seed = zlib.crc32(f"{kind}-{index}".encode())
+    rng = np.random.default_rng(seed)
     if kind == "4g":
         mean_mbps = rng.uniform(10.4, 36.4)
         rtt_mean = 0.039

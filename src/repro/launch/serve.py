@@ -33,6 +33,10 @@ def main(argv=None) -> int:
     ap.add_argument("--beta", type=int, default=2)
     ap.add_argument("--low-frac", type=float, default=0.5,
                     help="fraction of spans pooled when --mixed")
+    ap.add_argument("--mask-variants", type=int, default=1,
+                    help="with --mixed: rotate the pooled spans across K "
+                    "distinct layouts — same n_low, different content, so "
+                    "requests split into K waves (the wave-key fix demo)")
     args = ap.parse_args(argv)
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
@@ -48,13 +52,18 @@ def main(argv=None) -> int:
     engine = ServeEngine(cfg, params, sc)
 
     rng = np.random.default_rng(0)
-    span_mask = None
+    masks = [None]
     beta = 0
     if args.mixed and cfg.mixed_res is not None:
         span = cfg.mixed_res.window * cfg.mixed_res.downsample
         n_spans = args.prompt_len // span
-        span_mask = np.zeros((n_spans,), np.int32)
-        span_mask[: int(n_spans * args.low_frac)] = 1     # oldest context
+        n_low = int(n_spans * args.low_frac)
+        masks = []
+        for k in range(max(args.mask_variants, 1)):
+            m = np.zeros((n_spans,), np.int32)
+            for j in range(n_low):                # rotated pooled spans
+                m[(k + j) % n_spans] = 1
+            masks.append(m)
         beta = args.beta
 
     for rid in range(args.requests):
@@ -62,7 +71,8 @@ def main(argv=None) -> int:
                               (args.prompt_len,)).astype(np.int32)
         engine.submit(Request(rid=rid, prompt=prompt,
                               max_new_tokens=args.max_new,
-                              low_span_mask=span_mask, beta=beta))
+                              low_span_mask=masks[rid % len(masks)],
+                              beta=beta))
 
     t0 = time.time()
     responses = engine.run()

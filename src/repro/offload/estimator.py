@@ -190,6 +190,11 @@ class ThroughputEstimator:
     def observe(self, tput_bps: float, rtt_s: float) -> None:
         self.obs_tput.append(tput_bps)
         self.obs_rtt.append(rtt_s)
+        # only the last ``window`` observations are ever read — trim so
+        # long-running clients don't grow the lists without bound
+        if len(self.obs_tput) > self.window:
+            del self.obs_tput[:-self.window]
+            del self.obs_rtt[:-self.window]
 
     @property
     def throughput(self) -> float:

@@ -44,7 +44,14 @@ SIZE_SCALE = (1920 * 1080) / (512 * 512)
 
 
 class ServerModel:
-    """Server-side detector with a per-(n_low, beta) compiled-fn cache.
+    """Server-side detector with a per-(n_low bucket, beta) compiled-fn
+    cache.
+
+    ``n_low`` is rounded DOWN to a bucket edge (partition.bucket_n_low)
+    before it keys the cache, so a policy emitting varied masks compiles
+    at most (n_buckets + 1) x |betas| forwards instead of one per
+    distinct region count; extra selected regions beyond the bucket stay
+    full-res (the accuracy-safe direction).
 
     ``backend`` selects the kernel backend for the backbone hot path
     (kernels.dispatch: "auto" | "pallas" | "xla").  ``jit=False`` runs
@@ -54,7 +61,8 @@ class ServerModel:
 
     def __init__(self, cfg: ModelConfig, params, top_k: int = 32,
                  score_thresh: float = 0.4,
-                 backend: Optional[str] = "auto", jit: bool = True):
+                 backend: Optional[str] = "auto", jit: bool = True,
+                 n_buckets: int = 4):
         self.cfg = cfg
         self.params = params
         self.part = vb.vit_partition(cfg)
@@ -62,7 +70,11 @@ class ServerModel:
         self.score_thresh = score_thresh
         self.backend = backend
         self.jit = jit
+        self.n_buckets = n_buckets
         self._fns: Dict[Tuple[int, int], Callable] = {}
+
+    def bucket(self, n_low: int) -> int:
+        return pt.bucket_n_low(n_low, self.part.n_regions, self.n_buckets)
 
     def _get_fn(self, n_low: int, beta: int) -> Callable:
         key = (n_low, beta)
@@ -88,7 +100,7 @@ class ServerModel:
     def infer(self, frame: np.ndarray, mask: Optional[np.ndarray] = None,
               beta: int = 0) -> List[Dict]:
         img = jnp.asarray(frame)[None]
-        n_low = 0 if mask is None else int(mask.sum())
+        n_low = 0 if mask is None else self.bucket(int(mask.sum()))
         if n_low == 0:
             fn = self._get_fn(0, 0)
             boxes, scores, classes = fn(self.params, img)
@@ -150,6 +162,8 @@ class SimResult:
             "median_inf_delay": med([d["inf"] for d in self.delay_parts]),
             "median_codec_delay": med([d["enc"] + d["dec"]
                                        for d in self.delay_parts]),
+            "median_queue_delay": med([d.get("queue", 0.0)
+                                       for d in self.delay_parts]),
         }
 
 
@@ -187,11 +201,40 @@ class Simulation:
         self.m_f = 0.0
 
     # ------------------------------------------------------------------
+    # per-frame steps.  Single-client ``run`` below and the multi-client
+    # engine (serve/edge.py) drive the SAME methods; the engine replaces
+    # the synchronous server call in _start_offload with batched waves.
+
     def rho(self) -> np.ndarray:
         return mo.region_density(self.tracker.boxes(), self.part,
                                  self.analyzer.patch_px)
 
-    def _start_offload(self, frame_idx: int, now: float, res: SimResult):
+    def _motion_tick(self, frame_idx: int, res: SimResult) -> None:
+        t0 = time.perf_counter()
+        self.m, self.m_f = self.analyzer.update(self.frames[frame_idx])
+        res.overhead.setdefault("motion_wall", []).append(
+            time.perf_counter() - t0)
+
+    def _should_offload(self, frame_idx: int) -> bool:
+        """Back-to-back: a new offload starts as soon as none is in
+        flight (frame 0 is skipped — the motion model needs a delta)."""
+        return self.inflight is None and frame_idx > 0
+
+    def _note_offload_gap(self, frame_idx: int, res: SimResult) -> None:
+        if self.last_offload_frame >= 0:
+            # the first offload has no predecessor: recording its warm-up
+            # gap as an inter-offload interval would bias the median
+            res.offload_interval.append(frame_idx - self.last_offload_frame)
+        self.state.eta = frame_idx - max(self.last_offload_frame, 0)
+        self.state.kappa = self.tracker.retention
+
+    def _prepare_offload(self, frame_idx: int, now: float,
+                         res: SimResult) -> Dict:
+        """Device side of an offload: policy decision, codec encode, and
+        the device-computable Eq. (2) delay terms.  Marks the client busy
+        (``inflight``) but does NOT run server inference — the caller
+        finishes the job via :meth:`_finish_offload` (immediately for the
+        single-client path, at wave time for the batched edge)."""
         decision = self.policy.decide(self, frame_idx)
         mask = decision["mask"]
         quality = decision["quality"]
@@ -213,28 +256,49 @@ class Simulation:
         n_d = int(mask.sum())
 
         tput, rtt = self.trace.at(now)
-        t_enc = self.delay_model.encode_delay(self.part, n_d, quality)
-        t_up = size * 8.0 / tput
-        t_dec = self.delay_model.decode_delay(self.part, n_d)
-        t_inf = self.inf_delay(beta if n_d > 0 else 0, n_d) \
-            if self.inf_delay else 0.05
-        e2e = t_enc + t_up + t_dec + t_inf + rtt
-
-        # server inference happens on the decoded mixed frame
-        dets = self.server.infer(decoded, mask if n_d > 0 else None, beta)
-        gt = self.gt_dets[frame_idx]
-        inf_f1 = det.frame_f1(dets, gt)
-
-        self.inflight = {
-            "frame": frame_idx, "done_at": now + e2e, "dets": dets,
-            "e2e": e2e, "tput": tput, "rtt": rtt, "size": size,
-            "parts": {"enc": t_enc, "net": t_up + rtt, "dec": t_dec,
-                      "inf": t_inf},
-            "inf_f1": inf_f1,
+        job = {
+            "frame": frame_idx, "submit": now, "decoded": decoded,
+            "mask": mask, "n_d": n_d, "beta": beta if n_d > 0 else 0,
+            "tput": tput, "rtt": rtt, "size": size,
+            "t_enc": self.delay_model.encode_delay(self.part, n_d, quality),
+            "t_up": size * 8.0 / tput,
+            "t_dec": self.delay_model.decode_delay(self.part, n_d),
+            "t_inf": (self.inf_delay(beta if n_d > 0 else 0, n_d)
+                      if self.inf_delay else 0.05),
+            "done_at": float("inf"), "dets": None,
         }
+        self.inflight = job
         self.last_offload_frame = frame_idx
+        return job
 
-    def _complete_offload(self, res: SimResult, now_frame: int):
+    def _finish_offload(self, job: Dict, dets: List[Dict],
+                        queue_delay: float = 0.0,
+                        t_dec: Optional[float] = None,
+                        t_inf: Optional[float] = None) -> None:
+        """Server side of an offload: attach detections and finalise the
+        Eq. (2) end-to-end latency.  ``queue_delay`` (and wave-amortised
+        ``t_dec``/``t_inf`` overrides) come from the edge scheduler."""
+        t_dec = job["t_dec"] if t_dec is None else t_dec
+        t_inf = job["t_inf"] if t_inf is None else t_inf
+        e2e = (job["t_enc"] + job["t_up"] + queue_delay + t_dec + t_inf
+               + job["rtt"])
+        job["dets"] = dets
+        job["inf_f1"] = det.frame_f1(dets, self.gt_dets[job["frame"]])
+        job["e2e"] = e2e
+        job["done_at"] = job["submit"] + e2e
+        job["parts"] = {"enc": job["t_enc"], "net": job["t_up"] + job["rtt"],
+                        "dec": t_dec, "inf": t_inf, "queue": queue_delay}
+
+    def _start_offload(self, frame_idx: int, now: float, res: SimResult):
+        """Single-client path: prepare + immediate (dedicated) server
+        inference on the decoded mixed frame."""
+        job = self._prepare_offload(frame_idx, now, res)
+        dets = self.server.infer(job["decoded"],
+                                 job["mask"] if job["n_d"] > 0 else None,
+                                 job["beta"])
+        self._finish_offload(job, dets)
+
+    def _complete_offload(self, res: SimResult, now_frame: int) -> Dict:
         fl = self.inflight
         self.inflight = None
         res.e2e_latency.append(fl["e2e"])
@@ -252,6 +316,22 @@ class Simulation:
             for fi in range(fl["frame"] + 1, now_frame):
                 self.tracker.step(self.frames[fi])
             self.tracker_frame = max(now_frame - 1, fl["frame"])
+        return fl
+
+    def _render_tick(self, frame_idx: int, res: SimResult) -> None:
+        # rendering for this frame: exact cache hit, else tracker
+        if frame_idx == self.cache_frame or not self.policy.use_tracker:
+            rendered = self.cache_dets
+        else:
+            t0 = time.perf_counter()
+            if self.tracker_frame < frame_idx:
+                self.tracker.step(self.frames[frame_idx])
+                self.tracker_frame = frame_idx
+            rendered = self.tracker.boxes()
+            res.overhead.setdefault("tracker_wall", []).append(
+                time.perf_counter() - t0)
+        res.rendering_f1.append(det.frame_f1(rendered,
+                                             self.gt_dets[frame_idx]))
 
     # ------------------------------------------------------------------
     def run(self, video_name: str = "video") -> SimResult:
@@ -261,33 +341,17 @@ class Simulation:
         for fi in range(n):
             now = fi * self.dt
 
-            t0 = time.perf_counter()
-            self.m, self.m_f = self.analyzer.update(self.frames[fi])
-            res.overhead.setdefault("motion_wall", []).append(
-                time.perf_counter() - t0)
-
+            self._motion_tick(fi, res)
             # completions due by now
             if self.inflight and self.inflight["done_at"] <= now:
                 self._complete_offload(res, fi)
             # schedule next offload (back-to-back upon completion)
-            if self.inflight is None and fi > 0:
-                res.offload_interval.append(fi - max(self.last_offload_frame,
-                                                     0))
-                self.state.eta = fi - max(self.last_offload_frame, 0)
-                self.state.kappa = self.tracker.retention
+            if self._should_offload(fi):
+                self._note_offload_gap(fi, res)
                 self._start_offload(fi, now, res)
-
-            # rendering for this frame: exact cache hit, else tracker
-            if fi == self.cache_frame or not self.policy.use_tracker:
-                rendered = self.cache_dets
-            else:
-                t0 = time.perf_counter()
-                if self.tracker_frame < fi:
-                    self.tracker.step(self.frames[fi])
-                    self.tracker_frame = fi
-                rendered = self.tracker.boxes()
-                res.overhead.setdefault("tracker_wall", []).append(
-                    time.perf_counter() - t0)
-            res.rendering_f1.append(det.frame_f1(rendered,
-                                                 self.gt_dets[fi]))
+            self._render_tick(fi, res)
+        # flush the final in-flight offload: its latency / delay parts /
+        # inference F1 belong in the result even though the clip ended
+        if self.inflight is not None:
+            self._complete_offload(res, n)
         return res

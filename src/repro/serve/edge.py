@@ -1,0 +1,240 @@
+"""Multi-client batched edge serving (ROADMAP: the "millions of users"
+direction; Arena-style patch-of-interest edge inference).
+
+One edge replica serves N concurrent device streams:
+
+  * :class:`BatchedServerModel` stacks decoded mixed-resolution frames
+    from MANY clients that share a (bucketed n_low, beta) configuration
+    into ONE batched ``forward_det`` call.  Each frame keeps its OWN
+    low-region layout — the per-sample (B, n) region-id path of
+    core.mixed_res — so co-batching never downsamples the wrong regions
+    (the 2-D analogue of the ServeEngine wave-key fix).
+  * :class:`MultiClientSimulation` multiplexes N (video, trace, policy)
+    device streams onto that replica with an event-driven wave
+    scheduler.  Offloads queue at the edge; waves form from whatever
+    compatible jobs have arrived when the replica frees up; the
+    resulting queueing delay is folded into Eq. (2)'s end-to-end
+    latency (``parts["queue"]``).
+
+The single-client :class:`~repro.offload.simulator.Simulation` is the
+N=1 case: both drive the same per-frame step methods
+(_motion_tick/_prepare_offload/_finish_offload/_complete_offload/
+_render_tick); only the server call differs (dedicated vs. waved).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import partition as pt
+from repro.offload import detection as det
+from repro.offload.simulator import ServerModel, Simulation, SimResult
+
+
+def stack_region_ids(masks: Sequence[np.ndarray], n_low: int
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-sample (B, nF) / (B, nL) region ids for a same-bucket wave."""
+    ids = [pt.mask_to_region_ids(m, n_low) for m in masks]
+    return (np.stack([f for f, _ in ids]).astype(np.int32),
+            np.stack([l for _, l in ids]).astype(np.int32))
+
+
+class BatchedServerModel(ServerModel):
+    """Edge replica shared by many clients.
+
+    Extends :class:`ServerModel` with :meth:`infer_batch`: frames with
+    the same (bucketed n_low, beta) but DIFFERENT masks run as one
+    batched forward through the PR-1 backend dispatch layer.  The
+    inherited ``_fns`` cache is reused — jit re-specializes per wave
+    shape (B and id rank included), so B=1 solo calls and batched waves
+    share one compiled-fn cache entry per (n_low bucket, beta).
+    """
+
+    def infer_batch(self, frames: np.ndarray,
+                    masks: Sequence[Optional[np.ndarray]],
+                    beta: int = 0) -> List[List[Dict]]:
+        """Batched inference over same-bucket frames.
+
+        frames: (B, H, W, 3); masks: per-frame (n_regions,) binary masks
+        (or None for full-res).  Every mask must land in the SAME n_low
+        bucket — that is the wave compatibility contract the scheduler
+        enforces.  Returns per-frame detection lists.
+        """
+        B = frames.shape[0]
+        assert len(masks) == B
+        n_lows = [0 if m is None else self.bucket(int(m.sum()))
+                  for m in masks]
+        n_low = n_lows[0]
+        assert all(n == n_low for n in n_lows), \
+            f"wave mixes n_low buckets: {n_lows}"
+        imgs = jnp.asarray(frames)
+        if n_low == 0:
+            fn = self._get_fn(0, 0)
+            boxes, scores, classes = fn(self.params, imgs)
+        else:
+            full_ids, low_ids = stack_region_ids(masks, n_low)
+            fn = self._get_fn(n_low, beta)
+            boxes, scores, classes = fn(self.params, imgs,
+                                        jnp.asarray(full_ids),
+                                        jnp.asarray(low_ids))
+        return [det.detections_from_arrays(boxes[i], scores[i], classes[i],
+                                           self.score_thresh)
+                for i in range(B)]
+
+
+# ---------------------------------------------------------------------------
+# event-driven multi-client engine
+
+
+@dataclass
+class EdgeConfig:
+    max_batch: int = 8
+    # serving mode: batched waves vs. one-job-at-a-time (the sequential
+    # baseline bench_multiclient.py compares against)
+    batched: bool = True
+    # marginal service time of each extra frame in a wave, as a fraction
+    # of the solo inference delay: service = t_inf * (1 + alpha * (B-1)).
+    # alpha < 1 is the batching win; alpha = 1 degenerates to sequential.
+    # (wave compatibility buckets come from the server's n_buckets —
+    # they MUST match infer_batch's bucketing, so there is no knob here)
+    batch_alpha: float = 0.35
+
+
+@dataclass
+class EdgeStats:
+    """Edge-side telemetry: wave sizes, queueing, and per-job outcomes."""
+    wave_sizes: List[int] = field(default_factory=list)
+    queue_delays: List[float] = field(default_factory=list)
+    jobs: List[Dict] = field(default_factory=list)
+
+    @property
+    def mean_wave_size(self) -> float:
+        return float(np.mean(self.wave_sizes)) if self.wave_sizes else 0.0
+
+
+class MultiClientSimulation:
+    """N device streams -> one shared edge replica.
+
+    clients: per-stream :class:`Simulation` objects (build them with
+    this same replica as their ``server`` so a standalone N=1 run uses
+    identical weights).  ``on_complete(client_idx, job)`` fires as each
+    offload's result reaches its client.
+    """
+
+    def __init__(self, clients: Sequence[Simulation],
+                 server: BatchedServerModel,
+                 ec: Optional[EdgeConfig] = None,
+                 on_complete: Optional[Callable[[int, Dict], None]] = None):
+        assert clients, "need at least one client"
+        self.clients = list(clients)
+        self.server = server
+        self.ec = ec or EdgeConfig()
+        self.on_complete = on_complete
+        self.dt = self.clients[0].dt
+        assert all(c.dt == self.dt for c in self.clients), \
+            "clients must share a frame rate"
+        self.pending: List[Tuple[int, Dict]] = []   # (client_idx, job)
+        self.free_at = 0.0                          # replica busy horizon
+        self.stats = EdgeStats()
+
+    # ------------------------------------------------------------------
+    def _job_key(self, job: Dict) -> Tuple[int, int]:
+        n_low = self.server.bucket(job["n_d"])
+        return (n_low, job["beta"] if n_low > 0 else 0)
+
+    def _run_wave(self, wave: List[Tuple[int, Dict]], t_start: float,
+                  key: Tuple[int, int]) -> float:
+        """Batched inference + Eq. (2) bookkeeping for one wave.
+        Returns the time the replica frees up."""
+        n_low, beta = key
+        imgs = np.stack([j["decoded"] for _, j in wave])
+        masks = [j["mask"] if n_low > 0 else None for _, j in wave]
+        dets = self.server.infer_batch(imgs, masks, beta)
+
+        B = len(wave)
+        t_dec = max(j["t_dec"] for _, j in wave)
+        t_inf = max(j["t_inf"] for _, j in wave)
+        if B > 1:
+            t_inf = t_inf * (1.0 + self.ec.batch_alpha * (B - 1))
+        done = t_start + t_dec + t_inf
+
+        self.stats.wave_sizes.append(B)
+        for (ci, job), d in zip(wave, dets):
+            q = t_start - job["arrival"]
+            self.clients[ci]._finish_offload(job, d, queue_delay=q,
+                                             t_dec=t_dec, t_inf=t_inf)
+            self.stats.queue_delays.append(q)
+            self.stats.jobs.append({"client": ci, "frame": job["frame"],
+                                    "wave_size": B, "queue": q,
+                                    "e2e": job["e2e"], "dets": d})
+        return done
+
+    def _drain(self, now: float) -> None:
+        """Schedule every wave that can START before ``now``.
+
+        The replica serves one wave at a time.  When it frees up, the
+        earliest-arrived pending job seeds a wave; compatible jobs
+        (same (n_low bucket, beta)) that have ALREADY arrived join it,
+        up to ``max_batch``.
+        """
+        # one sort per drain: the loop only ever REMOVES jobs, and the
+        # kept remainder is a subsequence, so order is preserved
+        self.pending.sort(key=lambda cj: cj[1]["arrival"])
+        while self.pending:
+            head = self.pending[0]
+            t_start = max(self.free_at, head[1]["arrival"])
+            if t_start >= now:
+                return
+            hk = self._job_key(head[1])
+            wave, rest = [head], []
+            for cj in self.pending[1:]:
+                if (self.ec.batched and len(wave) < self.ec.max_batch
+                        and cj[1]["arrival"] <= t_start
+                        and self._job_key(cj[1]) == hk):
+                    wave.append(cj)
+                else:
+                    rest.append(cj)
+            self.pending = rest
+            self.free_at = self._run_wave(wave, t_start, hk)
+
+    # ------------------------------------------------------------------
+    def run(self, video_names: Optional[Sequence[str]] = None
+            ) -> List[SimResult]:
+        """Run all streams to completion.  Returns per-client results."""
+        names = (list(video_names) if video_names is not None
+                 else [f"client{i}" for i in range(len(self.clients))])
+        results = [SimResult(policy=c.policy.name, video=names[i],
+                             trace=getattr(c.trace, "name", "trace"))
+                   for i, c in enumerate(self.clients)]
+
+        n_max = max(len(c.frames) for c in self.clients)
+        for fi in range(n_max):
+            now = fi * self.dt
+            self._drain(now)
+            for ci, c in enumerate(self.clients):
+                if fi >= len(c.frames):
+                    continue
+                c._motion_tick(fi, results[ci])
+                if c.inflight is not None and c.inflight["done_at"] <= now:
+                    job = c._complete_offload(results[ci], fi)
+                    if self.on_complete:
+                        self.on_complete(ci, job)
+                if c._should_offload(fi):
+                    c._note_offload_gap(fi, results[ci])
+                    job = c._prepare_offload(fi, now, results[ci])
+                    # arrival at the edge: encode + uplink transfer
+                    job["arrival"] = now + job["t_enc"] + job["t_up"]
+                    self.pending.append((ci, job))
+                c._render_tick(fi, results[ci])
+
+        # end of all clips: run the edge dry and flush in-flight offloads
+        self._drain(float("inf"))
+        for ci, c in enumerate(self.clients):
+            if c.inflight is not None:
+                job = c._complete_offload(results[ci], len(c.frames))
+                if self.on_complete:
+                    self.on_complete(ci, job)
+        return results

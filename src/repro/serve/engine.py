@@ -4,12 +4,14 @@ Serving model for MVA-style workloads (DESIGN.md): every offloaded unit
 is a full *prefill* (the paper's frame analogy) followed by a bounded
 decode.  The engine batches requests into **waves**:
 
-  * requests are grouped by bucketed prompt length (static shapes — XLA
-    never retraces per request, the TPU-native adaptation of the paper's
-    per-frame dynamic resolution);
-  * one jitted ``prefill_fn`` per (bucket, n_low, beta) triple — the
-    paper's mixed-granularity prefill plugs in through ``low_span_mask``
-    and ``beta`` on the request (core.seq_mixed_res);
+  * requests are grouped by (bucketed prompt length, bucketed n_low,
+    beta, pooled-span identity) — static shapes, so XLA never retraces
+    per request (the TPU-native adaptation of the paper's per-frame
+    dynamic resolution), and co-batched requests share the SAME span
+    layout, so one pack is correct for the whole wave;
+  * one jitted ``prefill_fn`` per (bucket, bucketed n_low, beta) triple —
+    the paper's mixed-granularity prefill plugs in through
+    ``low_span_mask`` and ``beta`` on the request (core.seq_mixed_res);
   * greedy decode runs the whole wave in lock-step with per-slot EOS
     masking; finished slots keep decoding (masked) until the wave drains
     below ``refill_fraction`` — the static-shape analogue of continuous
@@ -30,6 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import seq_mixed_res as smr
+from repro.core.partition import bucket_n_low
 from repro.models import registry
 from repro.models.config import ModelConfig
 from repro.models.transformer import LOCAL, ParallelCtx
@@ -43,6 +46,9 @@ class ServeConfig:
     buckets: Tuple[int, ...] = (64, 128, 256)
     cache_dtype: object = jnp.float32
     greedy: bool = True
+    # n_low is rounded down to one of this many bucket edges so the
+    # prefill jit-cache stays bounded (partition.bucket_n_low)
+    n_low_buckets: int = 4
 
 
 class ServeEngine:
@@ -113,21 +119,35 @@ class ServeEngine:
     def _form_wave(self) -> Optional[List[Request]]:
         if not self.queue:
             return None
-        # group by (bucket, n_low-bucket, beta) of the head request
-        head = self.queue[0]
-        hb = self._bucket(len(head.prompt))
-        hk = self._wave_key(head)
-        wave = [r for r in self.queue if self._wave_key(r) == hk]
-        wave = wave[: self.sc.max_batch]
-        for r in wave:
-            self.queue.remove(r)
+        # group by the head request's wave key; single pass keeps queue
+        # order and avoids the O(n^2) remove-per-request drain
+        hk = self._wave_key(self.queue[0])
+        wave, rest = [], []
+        for r in self.queue:
+            if len(wave) < self.sc.max_batch and self._wave_key(r) == hk:
+                wave.append(r)
+            else:
+                rest.append(r)
+        self.queue = rest
         return wave
 
-    def _wave_key(self, r: Request):
-        n_low = 0
-        if r.low_span_mask is not None and r.beta > 0:
-            n_low = int(np.asarray(r.low_span_mask).sum())
-        return (self._bucket(len(r.prompt)), n_low, r.beta)
+    def _wave_key(self, r: Request) -> Tuple[int, int, int, bytes]:
+        """(prompt bucket, bucketed n_low, beta, pooled-span identity).
+
+        The mask CONTENT (which spans are pooled, after bucket trimming)
+        is part of the key: requests with equal n_low but different span
+        layouts need different packs and must not share a wave.
+        """
+        T = self._bucket(len(r.prompt))
+        spans = r.low_spans()
+        if spans.shape[0] == 0:
+            return (T, 0, 0, b"")
+        n_spans = int(np.asarray(r.low_span_mask).reshape(-1).shape[0])
+        n_low = bucket_n_low(int(spans.shape[0]), n_spans,
+                             self.sc.n_low_buckets)
+        if n_low == 0:            # bucketed away: runs the plain prefill
+            return (T, 0, 0, b"")
+        return (T, n_low, r.beta, r.mask_key(n_low))
 
     # ------------------------------------------------------------------
     def run_wave(self, now: float = 0.0) -> List[Response]:
@@ -137,7 +157,7 @@ class ServeEngine:
             return []
         t0 = time.perf_counter()
         cfg, sc = self.cfg, self.sc
-        T, n_low, beta = self._wave_key(wave[0])
+        T, n_low, beta, _ = self._wave_key(wave[0])
         B = len(wave)
 
         toks = np.zeros((B, T), np.int32)

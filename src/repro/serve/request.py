@@ -18,6 +18,27 @@ class Request:
     beta: int = 0
     arrival_time: float = 0.0
 
+    def low_spans(self, n_low: Optional[int] = None) -> np.ndarray:
+        """Span indices actually pooled, in selection order.
+
+        ``n_low``: static bucket — extra selections beyond it are dropped
+        (the same trimming rule as seq_mixed_res.build_seq_pack), so the
+        returned ids are the pack's identity: two requests with equal
+        ``low_spans(n_low)`` produce byte-identical packs and may share a
+        wave.
+        """
+        if self.low_span_mask is None or self.beta <= 0:
+            return np.zeros((0,), np.int32)
+        sel = np.nonzero(
+            np.asarray(self.low_span_mask).reshape(-1) != 0)[0]
+        if n_low is not None:
+            sel = sel[:n_low]
+        return sel.astype(np.int32)
+
+    def mask_key(self, n_low: Optional[int] = None) -> bytes:
+        """Canonical wave-key bytes of the (bucket-trimmed) span mask."""
+        return self.low_spans(n_low).tobytes()
+
 
 @dataclass
 class Response:

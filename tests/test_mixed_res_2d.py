@@ -90,6 +90,64 @@ def test_pack_restore_low_regions_are_pooled_broadcast():
     np.testing.assert_allclose(np.asarray(restored[0, 1, 1]), blk, rtol=1e-5)
 
 
+def test_pack_restore_per_sample_ids_match_solo():
+    """(B, n) per-sample region ids (multi-client batching) must equal
+    running each sample alone with its own (n,) ids."""
+    p = small_partition()
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 16, 16, 4))
+    masks = []
+    for sel in ((0, 9), (3, 12)):
+        m = np.zeros(16, np.int32)
+        m[list(sel)] = 1
+        masks.append(m)
+    ids = [pt.mask_to_region_ids(m, 2) for m in masks]
+    fb = jnp.asarray(np.stack([f for f, _ in ids]))
+    lb = jnp.asarray(np.stack([l for _, l in ids]))
+    tok_b, _ = mr.pack_mixed(x, p, fb, lb)
+    res_b = mr.restore_full(tok_b, p, fb, lb)
+    for i in range(2):
+        f, l = (jnp.asarray(a) for a in ids[i])
+        tok_s, _ = mr.pack_mixed(x[i:i + 1], p, f, l)
+        np.testing.assert_allclose(np.asarray(tok_b[i]),
+                                   np.asarray(tok_s[0]), rtol=1e-6)
+        res_s = mr.restore_full(tok_s, p, f, l)
+        np.testing.assert_allclose(np.asarray(res_b[i]),
+                                   np.asarray(res_s[0]), rtol=1e-6)
+    pos = jax.random.normal(jax.random.PRNGKey(3), (16, 16, 4))
+    pos_b = mr.pack_positions(pos, p, fb, lb)
+    assert pos_b.shape == (2, p.n_tokens(2), 4)
+    for i in range(2):
+        f, l = (jnp.asarray(a) for a in ids[i])
+        np.testing.assert_allclose(np.asarray(pos_b[i]),
+                                   np.asarray(mr.pack_positions(pos, p,
+                                                                f, l)),
+                                   rtol=1e-6)
+
+
+def test_forward_features_per_sample_ids_match_solo():
+    """Batched forward with per-sample layouts == per-sample forwards."""
+    cfg = get_reduced("vitdet-l")
+    params = registry.init_params(cfg, jax.random.PRNGKey(0))
+    part = vb.vit_partition(cfg)
+    img = jax.random.uniform(jax.random.PRNGKey(1),
+                             (2, *cfg.vit.img_size, 3))
+    masks = []
+    for sel in ((0,), (part.n_regions - 1,)):
+        m = np.zeros(part.n_regions, np.int32)
+        m[list(sel)] = 1
+        masks.append(m)
+    ids = [pt.mask_to_region_ids(m, 1) for m in masks]
+    fb = jnp.asarray(np.stack([f for f, _ in ids]))
+    lb = jnp.asarray(np.stack([l for _, l in ids]))
+    feats = vb.forward_features(cfg, params, img, fb, lb, beta=2)
+    for i in range(2):
+        f, l = (jnp.asarray(a) for a in ids[i])
+        solo = vb.forward_features(cfg, params, img[i:i + 1], f, l, beta=2)
+        np.testing.assert_allclose(np.asarray(feats[i]),
+                                   np.asarray(solo[0]),
+                                   rtol=2e-5, atol=2e-5)
+
+
 def test_vitdet_full_vs_mixed_beta0_equal():
     """beta=0 (restore at input) == feeding the pre-upsampled image."""
     cfg = get_reduced("vitdet-l")

@@ -1,0 +1,226 @@
+"""Multi-client batched edge serving (serve/edge.py) + the simulator
+satellite fixes that ride along with it."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.vitdet_l import SIM
+from repro.core import vit_backbone as vb
+from repro.data import synthetic_video as sv
+from repro.data.network_traces import make_trace
+from repro.models import registry
+from repro.offload.estimator import ThroughputEstimator
+from repro.offload.simulator import Policy, ServerModel, Simulation
+from repro.serve.edge import (BatchedServerModel, EdgeConfig,
+                              MultiClientSimulation, stack_region_ids)
+
+PATCH = SIM.vit.patch_size
+SIZE = SIM.vit.img_size[0]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = registry.init_params(SIM, jax.random.PRNGKey(0))
+    # score_thresh 0: random-init scores are tiny, keep top_k slots live
+    server = BatchedServerModel(SIM, params, top_k=8, score_thresh=0.0)
+    return params, server, vb.vit_partition(SIM)
+
+
+class FixedPolicy(Policy):
+    """Deterministic per-client mask — exercises per-sample layouts."""
+    name = "fixed"
+    use_tracker = True
+
+    def __init__(self, lows, beta=2, n_regions=16):
+        self.lows = lows
+        self.beta = beta
+        self.n_regions = n_regions
+
+    def decide(self, sim, frame_idx):
+        mask = np.zeros(self.n_regions, np.int32)
+        mask[self.lows] = 1
+        return {"mask": mask, "quality": 85, "beta": self.beta}
+
+
+def _client(server, part, seed, lows, n_frames=12, inf_delay=None):
+    frames, _ = sv.make_clip("walkS", n_frames, size=SIZE, seed=seed)
+    gt = [server.infer(f) for f in frames]
+    trace = make_trace("4g", seed, duration_s=60)
+    pol = FixedPolicy(lows, beta=2, n_regions=part.n_regions)
+    return Simulation(frames, gt, trace, pol, server, part, PATCH,
+                      fps=10, inf_delay=inf_delay)
+
+
+def _boxes(dets):
+    return np.array([d["box"] for d in dets], np.float64).reshape(-1, 4)
+
+
+# ---------------------------------------------------------------------------
+# batched server
+
+
+def test_infer_batch_matches_solo_different_masks(setup):
+    """Same n_low bucket, DIFFERENT masks, one batched call == solo runs.
+
+    This is the 2-D regression for the wave-mask bug: pre-fix-style
+    shared-layout batching would downsample client 1's regions with
+    client 0's layout."""
+    params, server, part = setup
+    rng = np.random.default_rng(0)
+    frames = rng.uniform(0, 1, (2, SIZE, SIZE, 3)).astype(np.float32)
+    m0 = np.zeros(part.n_regions, np.int32)
+    m0[:4] = 1
+    m1 = np.zeros(part.n_regions, np.int32)
+    m1[-4:] = 1
+    batched = server.infer_batch(frames, [m0, m1], beta=2)
+    for i, m in enumerate((m0, m1)):
+        solo = server.infer(frames[i], m, beta=2)
+        assert len(batched[i]) == len(solo)
+        np.testing.assert_allclose(_boxes(batched[i]), _boxes(solo),
+                                   rtol=1e-4, atol=0.1)
+
+
+def test_infer_batch_rejects_mixed_buckets(setup):
+    _, server, part = setup
+    frames = np.zeros((2, SIZE, SIZE, 3), np.float32)
+    m0 = np.zeros(part.n_regions, np.int32)
+    m0[:4] = 1
+    m1 = np.zeros(part.n_regions, np.int32)
+    m1[:8] = 1
+    with pytest.raises(AssertionError):
+        server.infer_batch(frames, [m0, m1], beta=2)
+
+
+def test_server_cache_stays_bucketed(setup):
+    """Varied masks must not grow _fns beyond n_buckets x betas."""
+    params, _, part = setup
+    server = ServerModel(SIM, params, top_k=8, score_thresh=0.0,
+                         n_buckets=4)
+    rng = np.random.default_rng(1)
+    frame = rng.uniform(0, 1, (SIZE, SIZE, 3)).astype(np.float32)
+    betas = (1, 2)
+    for n in range(1, part.n_regions + 1):
+        mask = np.zeros(part.n_regions, np.int32)
+        mask[:n] = 1
+        server.infer(frame, mask, beta=betas[n % len(betas)])
+    n_edges = len(set(server.bucket(n)
+                      for n in range(part.n_regions + 1)))
+    assert len(server._fns) <= n_edges * len(betas) + 1   # +1 full-res
+
+
+def test_stack_region_ids_shapes(setup):
+    _, _, part = setup
+    masks = []
+    for s in (0, 4):
+        m = np.zeros(part.n_regions, np.int32)
+        m[s:s + 4] = 1
+        masks.append(m)
+    full, low = stack_region_ids(masks, 4)
+    assert full.shape == (2, part.n_regions - 4) and low.shape == (2, 4)
+    assert sorted(low[1].tolist()) == [4, 5, 6, 7]
+
+
+# ---------------------------------------------------------------------------
+# single-client satellite fixes
+
+
+def test_final_inflight_offload_is_flushed(setup):
+    """An offload still in flight at video end must reach SimResult."""
+    _, server, part = setup
+    # inference slower than the remaining clip: completion only via flush
+    c = _client(server, part, seed=3, lows=[0, 1, 2, 3], n_frames=6,
+                inf_delay=lambda beta, n_d: 60.0)
+    res = c.run("v")
+    assert c.inflight is None
+    assert len(res.e2e_latency) == 1          # dropped entirely pre-fix
+    assert len(res.inference_f1) == 1
+    assert len(res.delay_parts) == 1
+    assert res.e2e_latency[0] > 60.0
+
+
+def test_first_offload_interval_not_recorded(setup):
+    """The warm-up gap before the first offload is not an interval."""
+    _, server, part = setup
+    c = _client(server, part, seed=4, lows=[0, 1, 2, 3], n_frames=12)
+    res = c.run("v")
+    n_completed = len(res.e2e_latency)
+    # every offload completes (end-of-clip flush), and every offload
+    # EXCEPT the first records an inter-offload interval: pre-fix the
+    # warm-up gap made these counts equal
+    assert n_completed >= 2
+    assert len(res.offload_interval) == n_completed - 1
+    assert all(i >= 1 for i in res.offload_interval)
+
+
+def test_throughput_estimator_window_bounded():
+    est = ThroughputEstimator(window=2)
+    for i in range(50):
+        est.observe(10e6 + i, 0.04)
+    assert len(est.obs_tput) == 2 and len(est.obs_rtt) == 2
+    assert est.throughput == pytest.approx(10e6 + 48.5)
+
+
+# ---------------------------------------------------------------------------
+# multi-client engine
+
+
+@pytest.mark.slow
+def test_clients_batched_matches_sequential(setup):
+    """Clients with different masks: batched detections == sequential,
+    waves actually form, and queueing delay is accounted for.  (Three
+    clients: with two, back-to-back offloads interleave and never
+    overlap at the replica.)"""
+    _, server, part = setup
+    slow = lambda beta, n_d: 0.5          # force queueing -> real waves
+
+    def clients():
+        return [_client(server, part, seed=i, lows=list(range(4 * i,
+                                                              4 * i + 4)),
+                        n_frames=12, inf_delay=slow)
+                for i in range(3)]
+
+    done = []
+    mc_b = MultiClientSimulation(clients(), server, EdgeConfig(batched=True),
+                                 on_complete=lambda ci, job:
+                                 done.append((ci, job["frame"])))
+    res_b = mc_b.run()
+    mc_s = MultiClientSimulation(clients(), server,
+                                 EdgeConfig(batched=False))
+    res_s = mc_s.run()
+
+    assert max(mc_b.stats.wave_sizes) >= 2       # co-batching happened
+    assert all(s == 1 for s in mc_s.stats.wave_sizes)
+    assert len(done) == sum(len(r.e2e_latency) for r in res_b)
+    assert any(q > 0 for q in mc_s.stats.queue_delays)
+
+    jb = {(j["client"], j["frame"]): j["dets"] for j in mc_b.stats.jobs}
+    js = {(j["client"], j["frame"]): j["dets"] for j in mc_s.stats.jobs}
+    shared = set(jb) & set(js)
+    assert shared
+    for k in shared:
+        assert len(jb[k]) == len(js[k])
+        np.testing.assert_allclose(_boxes(jb[k]), _boxes(js[k]),
+                                   rtol=1e-4, atol=0.5)
+    # queueing delay is part of Eq. (2)'s e2e accounting
+    for r in res_b + res_s:
+        for e2e, parts in zip(r.e2e_latency, r.delay_parts):
+            assert e2e == pytest.approx(parts["enc"] + parts["net"]
+                                        + parts["dec"] + parts["inf"]
+                                        + parts["queue"])
+
+
+@pytest.mark.slow
+def test_single_client_is_n1_case(setup):
+    """MultiClientSimulation with N=1 reproduces Simulation.run."""
+    _, server, part = setup
+    r_solo = _client(server, part, seed=5, lows=[0, 1, 2, 3]).run("v")
+    mc = MultiClientSimulation(
+        [_client(server, part, seed=5, lows=[0, 1, 2, 3])], server,
+        EdgeConfig(batched=True))
+    r_multi = mc.run(["v"])[0]
+    np.testing.assert_allclose(r_solo.e2e_latency, r_multi.e2e_latency,
+                               rtol=1e-9)
+    np.testing.assert_allclose(r_solo.rendering_f1, r_multi.rendering_f1,
+                               atol=1e-6)
+    assert r_solo.offload_interval == r_multi.offload_interval
+    assert all(d["queue"] == 0.0 for d in r_multi.delay_parts)

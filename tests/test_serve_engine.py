@@ -1,4 +1,8 @@
-"""Serving engine: wave batching must reproduce the reference decode."""
+"""Serving engine: wave batching must reproduce the reference decode.
+
+Wave-formation tests are pure python (fast lane); tests that run a
+model are marked slow.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -9,9 +13,6 @@ from repro.models import registry
 from repro.serve.engine import ServeConfig, ServeEngine
 from repro.serve.request import Request
 
-# end-to-end serving waves: excluded from the default fast lane
-pytestmark = pytest.mark.slow
-
 ARCH = "qwen3-4b"
 T, NEW = 32, 4
 
@@ -21,6 +22,62 @@ def setup():
     cfg = get_reduced(ARCH)
     params = registry.init_params(cfg, jax.random.PRNGKey(0))
     return cfg, params
+
+
+# ---------------------------------------------------------------------------
+# wave formation (no model needed: _wave_key/_form_wave are host-side)
+
+
+def _queue_engine(masked_requests, max_batch=8):
+    """Engine with params=None — only queue mechanics are exercised."""
+    eng = ServeEngine(None, None, ServeConfig(max_batch=max_batch,
+                                              buckets=(T,)))
+    rng = np.random.default_rng(0)
+    for rid, (mask, beta) in enumerate(masked_requests):
+        eng.submit(Request(rid=rid,
+                           prompt=rng.integers(0, 100, (T,)).astype(np.int32),
+                           low_span_mask=mask, beta=beta))
+    return eng
+
+
+def test_wave_key_distinguishes_mask_content():
+    """Same n_low, different span layout -> different waves (the
+    cross-request wave-mask corruption fix)."""
+    m_head = np.array([1, 0, 0, 0], np.int32)
+    m_tail = np.array([0, 0, 0, 1], np.int32)
+    eng = _queue_engine([(m_head, 2), (m_tail, 2), (m_head.copy(), 2)])
+    k0, k1, k2 = (eng._wave_key(r) for r in eng.queue)
+    assert k0 != k1                      # same popcount, different spans
+    assert k0 == k2                      # identical masks may share
+    wave = eng._form_wave()
+    assert [r.rid for r in wave] == [0, 2]
+    assert [r.rid for r in eng.queue] == [1]
+
+
+def test_wave_key_ignores_mask_without_beta():
+    m = np.array([1, 1, 0, 0], np.int32)
+    eng = _queue_engine([(m, 0), (None, 0)])
+    assert eng._wave_key(eng.queue[0]) == eng._wave_key(eng.queue[1])
+
+
+def test_form_wave_respects_max_batch_and_order():
+    m = np.array([1, 0, 0, 0], np.int32)
+    eng = _queue_engine([(m, 2)] * 5, max_batch=2)
+    wave = eng._form_wave()
+    assert [r.rid for r in wave] == [0, 1]
+    assert [r.rid for r in eng.queue] == [2, 3, 4]
+
+
+def test_prefill_cache_key_uses_bucketed_n_low():
+    """Varied span counts collapse onto bucket edges (bounded jit cache)."""
+    reqs = []
+    for n in range(1, 9):
+        mask = np.zeros(8, np.int32)
+        mask[:n] = 1
+        reqs.append((mask, 2))
+    eng = _queue_engine(reqs)
+    n_lows = {eng._wave_key(r)[1] for r in eng.queue}
+    assert n_lows <= {0, 2, 4, 6, 8}     # bucket edges for 8 spans
 
 
 def _reference_greedy(cfg, params, prompt, n_new):
@@ -39,6 +96,7 @@ def _reference_greedy(cfg, params, prompt, n_new):
     return out
 
 
+@pytest.mark.slow
 def test_wave_matches_reference(setup):
     cfg, params = setup
     rng = np.random.default_rng(0)
@@ -56,6 +114,7 @@ def test_wave_matches_reference(setup):
                                               ref)
 
 
+@pytest.mark.slow
 def test_mixed_prefill_wave_runs(setup):
     cfg, params = setup
     rng = np.random.default_rng(1)
@@ -75,6 +134,7 @@ def test_mixed_prefill_wave_runs(setup):
     assert all(r.n_tokens == NEW for r in responses)
 
 
+@pytest.mark.slow
 def test_waves_group_by_config(setup):
     cfg, params = setup
     rng = np.random.default_rng(2)
@@ -93,3 +153,40 @@ def test_waves_group_by_config(setup):
     assert len(responses) == 4
     # plain and mixed requests cannot share a wave
     assert len(engine.wave_latencies) == 2
+
+
+@pytest.mark.slow
+def test_same_nlow_different_masks_match_solo(setup):
+    """Regression for the cross-request wave-mask corruption: two
+    requests with the SAME popcount but DIFFERENT low-span layouts,
+    submitted together, must decode exactly like solo runs.  On the old
+    n_low-only wave key they shared one wave and the second request was
+    prefilled with the first request's pack."""
+    cfg, params = setup
+    rng = np.random.default_rng(3)
+    span = cfg.mixed_res.window * cfg.mixed_res.downsample
+    n_spans = T // span
+    mask_a = np.zeros(n_spans, np.int32)
+    mask_a[0] = 1
+    mask_b = np.zeros(n_spans, np.int32)
+    mask_b[-1] = 1
+    prompts = [rng.integers(0, cfg.vocab_size, (T,)).astype(np.int32)
+               for _ in range(2)]
+    sc = ServeConfig(max_batch=4, max_len=T + NEW + 8, buckets=(T,))
+
+    def solo(prompt, mask):
+        eng = ServeEngine(cfg, params, sc)
+        eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=NEW,
+                           low_span_mask=mask, beta=2))
+        return eng.run()[0].tokens
+
+    expected = [solo(prompts[0], mask_a), solo(prompts[1], mask_b)]
+
+    engine = ServeEngine(cfg, params, sc)
+    for rid, (p, m) in enumerate(zip(prompts, (mask_a, mask_b))):
+        engine.submit(Request(rid=rid, prompt=p, max_new_tokens=NEW,
+                              low_span_mask=m, beta=2))
+    responses = {r.rid: r for r in engine.run()}
+    assert len(responses) == 2
+    for rid in (0, 1):
+        assert responses[rid].tokens == expected[rid], rid
