@@ -6,7 +6,7 @@ import time
 
 
 def main(argv=None) -> int:
-    from benchmarks import (bench_backbone, bench_multiclient,
+    from benchmarks import (bench_backbone, bench_multiclient, bench_reuse,
                             fig5_restoration, fig8_overall, fig9_delays,
                             fig10_codec, fig11_overhead, fig12_ablation,
                             roofline, table2_estimator)
@@ -15,6 +15,7 @@ def main(argv=None) -> int:
     suites = [
         ("bench_backbone", bench_backbone),
         ("bench_multiclient", bench_multiclient),
+        ("bench_reuse", bench_reuse),
         ("fig5", fig5_restoration),
         ("table2", table2_estimator),
         ("fig8", fig8_overall),

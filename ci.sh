@@ -18,4 +18,8 @@ echo "== multi-client serving bench smoke (2 clients) =="
 python benchmarks/bench_multiclient.py --smoke --clients 1 2 \
     --out benchmarks/artifacts/BENCH_multiclient.smoke.json
 
+echo "== temporal-reuse ablation smoke =="
+python benchmarks/bench_reuse.py --smoke \
+    --out benchmarks/artifacts/BENCH_reuse.smoke.json
+
 echo "CI OK"

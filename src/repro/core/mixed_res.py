@@ -21,6 +21,15 @@ With ``r = w*d`` every low region is exactly one window and every full
 region is exactly d^2 windows, so window attention over the mixed
 sequence is ``reshape -> sdpa -> reshape`` with NO gather (TPU-native
 adaptation recorded in DESIGN.md).
+
+Temporal region reuse (partition.RegionPlan): REUSE regions are absent
+from the transmitted sequence entirely — ``n_full`` above is
+``n_regions - n_low - n_reuse``.  At the restoration point
+:func:`restore_full` splices the cached per-region feature tiles
+(``reuse_tiles``, shaped (B, n_reuse, d^2, w^2, D)) into the reused
+regions' slots, alongside the scattered full windows and the upsampled
+low windows.  All scatters go through a sentinel-row buffer so padded
+duplicate ids have well-defined (first-write-wins) semantics.
 """
 from __future__ import annotations
 
@@ -107,19 +116,27 @@ def pack_mixed(x_grid: jnp.ndarray, part: Partition,
     """
     w = part.window
     regions = grid_to_region_windows(x_grid, part)        # B,nR,d^2,w^2,C
-    if x_low_grid is None:
-        x_low_grid = downsample_grid(x_grid, part.downsample,
-                                     backend=backend)
-    low_windows = low_grid_to_windows(x_low_grid, part)   # B,nR,w^2,C
+    has_low = low_ids.shape[-1] > 0
+    if has_low:
+        if x_low_grid is None:
+            x_low_grid = downsample_grid(x_grid, part.downsample,
+                                         backend=backend)
+        low_windows = low_grid_to_windows(x_low_grid, part)  # B,nR,w^2,C
 
     if full_ids.ndim == 2:                                # per-sample ids
         full_part = jnp.take_along_axis(
             regions, full_ids[:, :, None, None, None], axis=1)
-        low_part = jnp.take_along_axis(
-            low_windows, low_ids[:, :, None, None], axis=1)
     else:
         full_part = regions[:, full_ids]                  # B,nF,d^2,w^2,C
-        low_part = low_windows[:, low_ids]                # B,nL,w^2,C
+    if has_low:
+        if low_ids.ndim == 2:
+            low_part = jnp.take_along_axis(
+                low_windows, low_ids[:, :, None, None], axis=1)
+        else:
+            low_part = low_windows[:, low_ids]            # B,nL,w^2,C
+    else:           # no low regions: skip the pooled grid entirely
+        low_part = jnp.zeros(full_part.shape[:1] + (0, w * w)
+                             + full_part.shape[-1:], full_part.dtype)
     B = full_part.shape[0]
     full_part = full_part.reshape(B, -1, w * w, full_part.shape[-1])
     windows = jnp.concatenate([full_part, low_part], axis=1)
@@ -150,22 +167,44 @@ def pack_positions(pos_grid: jnp.ndarray, part: Partition,
 # restoration (paper §III-B)
 
 
+def _dups_to_sentinel(ids: jnp.ndarray, sentinel: int) -> jnp.ndarray:
+    """Map repeated occurrences of an id (any position with an equal id
+    at an EARLIER position) to ``sentinel``, making scatters with padded
+    duplicate ids deterministic first-write-wins."""
+    n = ids.shape[-1]
+    if n <= 1:
+        return ids
+    eq = ids[..., :, None] == ids[..., None, :]        # (..., n, n)
+    earlier = jnp.tril(jnp.ones((n, n), bool), k=-1)
+    dup = jnp.any(eq & earlier, axis=-1)
+    return jnp.where(dup, sentinel, ids)
+
+
 def restore_full(tokens: jnp.ndarray, part: Partition,
                  full_ids: jnp.ndarray, low_ids: jnp.ndarray, *,
-                 backend: Optional[str] = None) -> jnp.ndarray:
+                 backend: Optional[str] = None,
+                 reuse_ids: Optional[jnp.ndarray] = None,
+                 reuse_tiles: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """Restore the full-resolution window-blocked sequence at an RP.
 
     tokens: (B, n_tokens, D) mixed sequence (window-blocked layout).
     Low-region windows are upsampled nearest-neighbour: each low token
-    broadcasts to the d x d patches it summarised.  Output: (B, Hp*Wp, D)
-    window-blocked full sequence (region-major, d^2 windows per region).
-    ``backend`` routes the upsample through the Pallas mixed_res_pool
-    kernel (kernels.dispatch).  full_ids/low_ids may be (n,) shared or
-    (B, n) per-sample.
+    broadcasts to the d x d patches it summarised.  REUSE regions (absent
+    from ``tokens``) are spliced in from ``reuse_tiles``
+    ((B, n_reuse, d^2, w^2, D) cached per-region feature tiles) at
+    ``reuse_ids``.  Output: (B, Hp*Wp, D) window-blocked full sequence
+    (region-major, d^2 windows per region).  ``backend`` routes the
+    upsample through the Pallas mixed_res_pool kernel (kernels.dispatch).
+    All id arrays may be (n,) shared or (B, n) per-sample.
+
+    Scatters land in an (n_regions + 1)-row buffer: padded duplicate ids
+    are remapped to the sentinel row (sliced off afterwards), so the
+    result never depends on XLA's unspecified same-index write order.
     """
     B, _, D = tokens.shape
     w, d = part.window, part.downsample
-    nF = part.n_regions - low_ids.shape[-1]
+    nR_reuse = 0 if reuse_ids is None else reuse_ids.shape[-1]
+    nF = full_ids.shape[-1]
     n_full_tok = nF * part.tokens_full_region
     full_part = tokens[:, :n_full_tok].reshape(B, nF, d * d, w * w, D)
     low_part = tokens[:, n_full_tok:].reshape(B, -1, w, w, D)
@@ -181,14 +220,25 @@ def restore_full(tokens: jnp.ndarray, part: Partition,
     up = up.transpose(0, 1, 2, 4, 3, 5, 6).reshape(
         B, up.shape[1], d * d, w * w, D)
 
-    out = jnp.zeros((B, part.n_regions, d * d, w * w, D), tokens.dtype)
+    sentinel = part.n_regions
+    out = jnp.zeros((B, part.n_regions + 1, d * d, w * w, D), tokens.dtype)
+    low_sc = _dups_to_sentinel(low_ids, sentinel)
     if low_ids.ndim == 2:                   # per-sample scatter
         b = jnp.arange(B)[:, None]
         out = out.at[b, full_ids].set(full_part)
-        out = out.at[b, low_ids].set(up)
+        if nL:
+            out = out.at[b, low_sc].set(up)
+        if nR_reuse:
+            out = out.at[b, _dups_to_sentinel(reuse_ids, sentinel)].set(
+                reuse_tiles.astype(tokens.dtype))
     else:
         out = out.at[:, full_ids].set(full_part)
-        out = out.at[:, low_ids].set(up)    # dup padded ids: last write wins
+        if nL:
+            out = out.at[:, low_sc].set(up)
+        if nR_reuse:
+            out = out.at[:, _dups_to_sentinel(reuse_ids, sentinel)].set(
+                reuse_tiles.astype(tokens.dtype))
+    out = out[:, :part.n_regions]
     return out.reshape(B, part.grid_h * part.grid_w, D)
 
 

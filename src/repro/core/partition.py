@@ -17,6 +17,23 @@ Token layout convention used throughout this repo (TPU-native, DESIGN.md):
 sequences are **window-blocked** — a sequence of whole windows, each
 flattened row-major to ``w*w`` tokens.  Window attention is then a pure
 reshape (no gather); gathers appear only at pack (input) and restoration.
+
+Temporal region reuse (:class:`RegionPlan`): every decision region is in
+one of three states per offloaded frame —
+
+  * ``FULL``  — transmit native pixels, pack ``d**2`` windows;
+  * ``LOW``   — transmit downsampled pixels, pack one window;
+  * ``REUSE`` — transmit NOTHING; the edge splices the region's cached
+    backbone-feature tile (from this client's previous offload) back in
+    at the restoration point.
+
+The transmitted token sequence therefore excludes REUSE regions
+entirely; ``(n_low, n_reuse)`` are bucketed together so the server still
+compiles a bounded set of forward shapes.  Because a REUSE region ships
+zero payload bytes, its bucket must match the plan EXACTLY (rounding
+down would leave the server reading pixels that were never sent) — plans
+are built bucket-exact in ``n_reuse`` by the policy
+(offload.optimizer.build_reuse_plan).
 """
 from __future__ import annotations
 
@@ -25,6 +42,9 @@ from typing import Tuple
 
 import jax.numpy as jnp
 import numpy as np
+
+# RegionPlan states
+FULL, LOW, REUSE = 0, 1, 2
 
 
 @dataclass(frozen=True)
@@ -71,14 +91,15 @@ class Partition:
                 f"d{self.downsample})")
 
     # ------------------------------------------------------------------
-    def n_tokens(self, n_low: int) -> int:
-        """Total mixed-resolution token count for ``n_low`` low regions."""
-        n_full = self.n_regions - n_low
+    def n_tokens(self, n_low: int, n_reuse: int = 0) -> int:
+        """Transmitted token count for ``n_low`` low + ``n_reuse`` reused
+        regions (reused regions contribute NO tokens)."""
+        n_full = self.n_regions - n_low - n_reuse
         return (n_full * self.tokens_full_region
                 + n_low * self.tokens_low_region)
 
-    def n_windows(self, n_low: int) -> int:
-        n_full = self.n_regions - n_low
+    def n_windows(self, n_low: int, n_reuse: int = 0) -> int:
+        n_full = self.n_regions - n_low - n_reuse
         return n_full * self.windows_per_full_region + n_low
 
 
@@ -116,37 +137,106 @@ def bucket_set(n_regions: int, n_buckets: int = 4) -> Tuple[int, ...]:
 
 
 # ---------------------------------------------------------------------------
-# mask <-> region-id packing helpers (host-side, numpy: these produce the
-# *data* gather indices; shapes depend only on the static bucket)
+# RegionPlan: per-region FULL / LOW / REUSE states
+
+
+@dataclass(frozen=True)
+class RegionPlan:
+    """Per-region transmit/compute plan for one offloaded frame.
+
+    ``states``: (n_regions,) int8 array of FULL / LOW / REUSE.  FULL and
+    LOW regions are transmitted (native / downsampled); REUSE regions
+    ship zero payload bytes and are restored from the client's cached
+    backbone-feature tiles (serve.request.FeatureCache).
+    """
+    states: np.ndarray
+
+    @classmethod
+    def from_mask(cls, mask: np.ndarray) -> "RegionPlan":
+        """Binary downsample mask (the legacy region model) -> plan."""
+        m = np.asarray(mask).reshape(-1)
+        return cls(np.where(m != 0, LOW, FULL).astype(np.int8))
+
+    @property
+    def n_regions(self) -> int:
+        return int(self.states.shape[0])
+
+    @property
+    def n_low(self) -> int:
+        return int((self.states == LOW).sum())
+
+    @property
+    def n_reuse(self) -> int:
+        return int((self.states == REUSE).sum())
+
+    @property
+    def n_transmit(self) -> int:
+        return self.n_regions - self.n_reuse
+
+    def low_mask(self) -> np.ndarray:
+        return (self.states == LOW).astype(np.int32)
+
+    def reuse_mask(self) -> np.ndarray:
+        return (self.states == REUSE).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# mask/plan <-> region-id packing helpers (host-side, numpy: these produce
+# the *data* gather indices; shapes depend only on the static buckets)
+
+
+def _static_select(ids: np.ndarray, n: int) -> Tuple[np.ndarray, set]:
+    """First ``n`` ids with static size; pads by repeating the last entry
+    (or 0 when empty).  Returns (kept ids, the set actually selected)."""
+    if len(ids) >= n:
+        kept = ids[:n]
+        return kept, set(kept.tolist())
+    pad = np.full((n - len(ids),), ids[-1] if len(ids) else 0,
+                  dtype=np.int64)
+    kept = np.concatenate([ids, pad]) if len(ids) else pad
+    return kept, set(ids.tolist())
+
+
+def plan_to_region_ids(states: np.ndarray, n_low: int, n_reuse: int = 0
+                       ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Split plan states into (full_ids, low_ids, reuse_ids), static
+    sizes ``(n_regions - n_low - n_reuse, n_low, n_reuse)``.
+
+    ``n_low`` / ``n_reuse`` are the static buckets: extra LOW/REUSE
+    selections beyond them revert to FULL (the accuracy-safe direction
+    for LOW; for REUSE the caller must pass a bucket-exact plan — see the
+    module docstring).  When the plan selects FEWER than the bucket, ids
+    are padded by repeating the last entry — duplicates are packed twice
+    but restored once through the sentinel-row scatter
+    (mixed_res.restore_full).
+    """
+    states = np.asarray(states).reshape(-1)
+    n_regions = states.shape[0]
+    low = np.nonzero(states == LOW)[0]
+    reuse = np.nonzero(states == REUSE)[0]
+    kept_low, low_set = _static_select(low, n_low)
+    kept_reuse, reuse_set = _static_select(reuse, n_reuse)
+    drop = low_set | reuse_set
+    full = np.array([i for i in range(n_regions) if i not in drop],
+                    dtype=np.int64)
+    # static size: if the plan had fewer lows/reuses than the buckets,
+    # trim extras from the tail (they are covered by the padded dups).
+    full = full[:n_regions - n_low - n_reuse]
+    return (full.astype(np.int32), kept_low.astype(np.int32),
+            kept_reuse.astype(np.int32))
 
 
 def mask_to_region_ids(mask: np.ndarray, n_low: int) -> Tuple[np.ndarray,
                                                               np.ndarray]:
     """Split region ids into (full_ids, low_ids) with static sizes.
 
-    ``mask``: (n_regions,) binary; 1 = downsample.  ``n_low`` is the static
-    bucket: if the mask selects more, the extras (highest ids) stay full;
-    if fewer, low_ids is padded by *repeating* its last entry — repeated
-    regions are packed twice but restored once (harmless duplicates cost
-    only their window of compute).
-    """
-    mask = np.asarray(mask).reshape(-1).astype(bool)
-    n_regions = mask.shape[0]
-    low = np.nonzero(mask)[0]
-    if len(low) >= n_low:
-        kept_low = low[:n_low]
-    else:
-        pad = np.full((n_low - len(low),), low[-1] if len(low) else 0,
-                      dtype=np.int64)
-        kept_low = np.concatenate([low, pad]) if len(low) else pad
-    low_set = set(kept_low[:min(len(low), n_low)].tolist())
-    full = np.array([i for i in range(n_regions) if i not in low_set],
-                    dtype=np.int64)
-    assert len(full) == n_regions - min(len(low), n_low)
-    # static size: n_regions - n_low full slots; if mask had fewer lows,
-    # trim extras from the tail (they are covered by the padded low dups).
-    full = full[:n_regions - n_low]
-    return full.astype(np.int32), kept_low.astype(np.int32)
+    ``mask``: (n_regions,) binary; 1 = downsample.  The two-state special
+    case of :func:`plan_to_region_ids` (kept as the API for the binary
+    full/low paths)."""
+    mask = np.asarray(mask).reshape(-1)
+    full, low, _ = plan_to_region_ids(
+        np.where(mask != 0, LOW, FULL).astype(np.int8), n_low, 0)
+    return full, low
 
 
 def region_ids_to_mask(low_ids: np.ndarray, n_regions: int) -> np.ndarray:

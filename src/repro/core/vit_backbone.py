@@ -177,8 +177,12 @@ def forward_features(cfg: ModelConfig, params, image: jnp.ndarray,
                      full_ids: Optional[jnp.ndarray] = None,
                      low_ids: Optional[jnp.ndarray] = None,
                      beta: int = 0,
-                     backend: Optional[str] = None) -> jnp.ndarray:
-    """Backbone forward.  Returns the (B, Hp, Wp, D) full-res feature map.
+                     backend: Optional[str] = None,
+                     reuse_ids: Optional[jnp.ndarray] = None,
+                     reuse_tiles: Optional[jnp.ndarray] = None,
+                     capture_beta: int = 0):
+    """Backbone forward.  Returns the (B, Hp, Wp, D) full-res feature map
+    (or ``(feats, tiles)`` when ``capture_beta > 0``, see below).
 
     full_ids/low_ids: static-length region id arrays (see core.partition),
     either (n,) shared across the batch or (B, n) per-sample (batched
@@ -187,24 +191,51 @@ def forward_features(cfg: ModelConfig, params, image: jnp.ndarray,
     beta: restoration point, 0..n_subsets (static).
     backend: kernel backend ("auto" | "pallas" | "xla", kernels.dispatch)
     for the window/global attention and pool/upsample hot paths.
+
+    Temporal reuse (partition.RegionPlan):
+    reuse_ids/reuse_tiles: regions ABSENT from the transmitted sequence,
+    restored from cached per-region feature tiles
+    ((B, n_reuse, d^2, w^2, D), captured by a previous forward at the
+    SAME restoration point) — requires ``beta >= 1``.  None or empty
+    reuse_ids leaves every code path bit-identical to the no-reuse call.
+    capture_beta: when > 0, ALSO return the per-region feature tiles
+    (B, n_regions, d^2, w^2, D) of the token state entering the global
+    block of subset ``capture_beta`` — the tile the feature cache stores
+    for the NEXT frame's reuse.  Must be >= beta when a restoration is
+    pending (tiles are only defined on the full-length sequence); for a
+    mixed forward ``capture_beta == beta`` captures the restored tensor
+    itself, so reused regions' tiles round-trip unchanged (staleness is
+    bounded by the policy's K, not by the cache).
     """
     part = vit_partition(cfg)
     v = cfg.vit
     M = blocks_per_subset(cfg)
     N = v.n_subsets
     w2 = part.window * part.window
-    mixed = low_ids is not None and low_ids.shape[-1] > 0 and beta > 0
+    n_reuse = 0 if reuse_ids is None else reuse_ids.shape[-1]
+    has_low = low_ids is not None and low_ids.shape[-1] > 0
+    mixed = (has_low or n_reuse > 0) and beta > 0
     assert 0 <= beta <= N
+    assert 0 <= capture_beta <= N
+    if n_reuse > 0:
+        assert beta >= 1, "REUSE regions need a restoration point >= 1"
+        assert reuse_tiles is not None
+    if capture_beta and mixed:
+        assert capture_beta >= beta, \
+            "cannot capture tiles before the restoration point"
 
     x_full = embed_patches(cfg, params, image, backend=backend)  # B,Hp,Wp,D
     pos = params["pos_emb"]
     if mixed:
-        x_low = embed_patches(cfg, params, image, part.downsample, backend)
+        # reuse-only plans (n_low = 0) never read the pooled grid — skip
+        # the downsampled patch-embedding pass entirely
+        x_low = (embed_patches(cfg, params, image, part.downsample,
+                               backend) if has_low else None)
         tokens, _ = mr.pack_mixed(x_full, part, full_ids, low_ids,
                                   x_low_grid=x_low, backend=backend)
         tokens = tokens + packed_positions(pos, part, full_ids, low_ids)
     else:
-        if low_ids is not None and low_ids.shape[-1] > 0:     # beta == 0
+        if has_low:                                           # beta == 0
             x_low = embed_patches(cfg, params, image, part.downsample,
                                   backend)
             packed, _ = mr.pack_mixed(x_full, part, full_ids, low_ids,
@@ -215,6 +246,7 @@ def forward_features(cfg: ModelConfig, params, image: jnp.ndarray,
             tokens = mr.grid_to_full_seq(x_full, part)
         tokens = tokens + packed_positions(pos, part, None, None)
 
+    tiles = None
     restored = not mixed
     for s in range(N):
         for m in range(M):
@@ -223,23 +255,44 @@ def forward_features(cfg: ModelConfig, params, image: jnp.ndarray,
             is_global = m == M - 1
             if is_global and not restored and beta == s + 1:
                 tokens = mr.restore_full(tokens, part, full_ids, low_ids,
-                                         backend=backend)
+                                         backend=backend,
+                                         reuse_ids=(reuse_ids if n_reuse
+                                                    else None),
+                                         reuse_tiles=(reuse_tiles if n_reuse
+                                                      else None))
                 restored = True
+            if is_global and capture_beta == s + 1:
+                B = tokens.shape[0]
+                tiles = tokens.reshape(B, part.n_regions,
+                                       part.windows_per_full_region,
+                                       w2, tokens.shape[-1])
             tokens = _vit_block(cfg, params_blk, tokens,
                                 window=0 if is_global else w2,
                                 backend=backend)
     # beta <= N always restores: beta == N hits the LAST global block.
 
     tokens = L.apply_norm(cfg, params["final_norm"], tokens)
-    return mr.full_seq_to_grid(tokens, part)
+    feats = mr.full_seq_to_grid(tokens, part)
+    if capture_beta:
+        return feats, tiles
+    return feats
 
 
 def forward_det(cfg: ModelConfig, params, image,
                 full_ids=None, low_ids=None, beta: int = 0,
-                backend: Optional[str] = None):
-    """Full model: backbone + dense head.  Returns det_head outputs."""
+                backend: Optional[str] = None,
+                reuse_ids=None, reuse_tiles=None, capture_beta: int = 0):
+    """Full model: backbone + dense head.  Returns det_head outputs (or
+    ``(outputs, tiles)`` when ``capture_beta > 0`` — the per-region
+    restoration-point feature tiles that refresh the client's
+    FeatureCache for temporal reuse)."""
     feats = forward_features(cfg, params, image, full_ids, low_ids, beta,
-                             backend=backend)
+                             backend=backend, reuse_ids=reuse_ids,
+                             reuse_tiles=reuse_tiles,
+                             capture_beta=capture_beta)
+    if capture_beta:
+        feats, tiles = feats
+        return dh.det_head_forward(cfg, params["head"], feats), tiles
     return dh.det_head_forward(cfg, params["head"], feats)
 
 
@@ -247,11 +300,14 @@ def forward_det(cfg: ModelConfig, params, image,
 # FLOP accounting (used by the latency model and Fig. 5 benchmark)
 
 
-def backbone_flops(cfg: ModelConfig, n_low: int, beta: int) -> float:
+def backbone_flops(cfg: ModelConfig, n_low: int, beta: int,
+                   n_reuse: int = 0) -> float:
     """Analytic attention+MLP FLOPs of the backbone for a given config.
 
     Mirrors forward_features' block schedule; used to parameterise the
-    inference-delay linear models LM^inf_beta(N_d) (paper §IV-D).
+    inference-delay linear models LM^inf_beta(N_d, N_r) (paper §IV-D,
+    extended with the temporal-reuse term: reused regions contribute NO
+    tokens before the restoration point).
     """
     part = vit_partition(cfg)
     D, F = cfg.d_model, cfg.d_ff
@@ -259,9 +315,9 @@ def backbone_flops(cfg: ModelConfig, n_low: int, beta: int) -> float:
     N = cfg.vit.n_subsets
     w2 = part.window * part.window
 
-    n_mixed = part.n_tokens(n_low)
+    n_mixed = part.n_tokens(n_low, n_reuse)
     n_full = part.grid_h * part.grid_w
-    nw_mixed = part.n_windows(n_low)
+    nw_mixed = part.n_windows(n_low, n_reuse)
     nw_full = part.n_regions * part.windows_per_full_region
 
     def block_flops(n_tok, n_win):
@@ -274,7 +330,7 @@ def backbone_flops(cfg: ModelConfig, n_low: int, beta: int) -> float:
         return proj + att + mlp
 
     total = 0.0
-    restored = not (n_low > 0 and beta > 0)
+    restored = not ((n_low > 0 or n_reuse > 0) and beta > 0)
     for s in range(N):
         for m in range(M):
             is_global = m == M - 1

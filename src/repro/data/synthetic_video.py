@@ -40,6 +40,9 @@ SCENARIOS: Dict[str, Scenario] = {
     "walkB": Scenario("walkB", 1.0, 0.2, 6, 1.5, 0.90, 0.010, 24, 0.15),
     "cycleS": Scenario("cycleS", 5.0, 1.0, 5, 2.5, 1.00, 0.008, 64, 0.40),
     "driveN": Scenario("driveN", 7.0, 0.8, 6, 3.5, 0.45, 0.040, 64, 0.30),
+    # static surveillance camera (parked, near-stationary objects): the
+    # temporal-reuse best case — almost every region is motionless
+    "parkS": Scenario("parkS", 0.0, 0.0, 4, 0.0, 1.00, 0.002, 48, 0.35),
 }
 
 N_CLASSES = 8

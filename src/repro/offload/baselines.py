@@ -7,10 +7,10 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.core.partition import bucket_n_low
+from repro.core.partition import RegionPlan, bucket_n_low
 from repro.offload import motion as mo
 from repro.offload.optimizer import (OffloadOptimizer, SystemState,
-                                     candidate_configs)
+                                     build_reuse_plan, candidate_configs)
 from repro.offload.simulator import Policy, Simulation
 
 FULL_QUALITY = 95        # baselines' default JPEG quality (paper §VI-A)
@@ -92,6 +92,14 @@ class ViTMAlis(Policy):
 
     def decide(self, sim: Simulation, frame_idx: int) -> Dict:
         import time as _t
+        # bootstrap: before the first detections arrive, the tracker is
+        # empty and rho is identically zero — outside the estimators'
+        # profile distribution, so Algorithm 1's A-hats are meaningless.
+        # Seed the pipeline with one full-resolution offload (what the
+        # prototype's first frame does implicitly).
+        if sim.cache_frame < 0 and not sim.tracker.boxes():
+            return {"mask": _zeros(sim), "quality": FULL_QUALITY,
+                    "beta": 0, "opt_wall": 0.0}
         self.opt.delays.net = sim.net_est
         rho = sim.rho()
         t0 = _t.perf_counter()
@@ -108,6 +116,52 @@ class ViTMAlis(Policy):
         return {"mask": mask, "quality": c.quality,
                 "beta": c.beta if n_d > 0 else 0,
                 "opt_wall": wall}
+
+
+class ViTMAlisReuse(ViTMAlis):
+    """ViTMAlis + temporal region reuse (three-state RegionPlan).
+
+    On top of Algorithm 1's (tau_d, lambda, beta) choice, regions the
+    motion analyzer reports motionless AND whose cached feature tile is
+    still fresh (same restoration point, reused < K consecutive
+    offloads) transmit NOTHING — the edge splices their cached tiles in
+    at the restoration point.  Full-res choices still warm the cache
+    (tiles captured at ``capture_beta_default``), and a full-res choice
+    with a warm cache is lifted to FULL+REUSE at the cached restoration
+    point so static scenes stop paying for pixels that have not changed.
+    """
+    name = "ViTMAlis+Reuse"
+
+    def __init__(self, optimizer: OffloadOptimizer, reuse_k: int = 4,
+                 reuse_delta_m: float = 1e-3, min_transmit: int = 1,
+                 capture_beta_default: int = 2):
+        super().__init__(optimizer)
+        self.reuse_k = reuse_k
+        self.reuse_delta_m = reuse_delta_m
+        self.min_transmit = min_transmit
+        self.capture_beta_default = capture_beta_default
+
+    def decide(self, sim: Simulation, frame_idx: int) -> Dict:
+        base = super().decide(sim, frame_idx)
+        cache = sim.feature_cache
+        mask = base["mask"]
+        beta = base["beta"]
+        n_d = int(mask.sum())
+
+        if beta < 1 and n_d == 0 and cache is not None and \
+                cache.eligible(cache.beta).any():
+            # full-res choice, warm cache: reuse at the cached RP
+            beta = cache.beta
+        eligible = (cache.eligible(beta) if cache is not None
+                    else np.zeros((sim.part.n_regions,), bool))
+        plan = build_reuse_plan(sim.part, mask, sim.m, eligible,
+                                delta_m=self.reuse_delta_m,
+                                n_buckets=self.opt.n_buckets,
+                                min_transmit=self.min_transmit)
+        base["plan"] = plan
+        base["beta"] = beta if (plan.n_reuse > 0 or n_d > 0) else 0
+        base["capture_beta"] = self.capture_beta_default
+        return base
 
 
 class ViTMAlisNoRegType(ViTMAlis):

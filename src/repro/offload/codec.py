@@ -10,6 +10,12 @@ are coded at their native pixels; regions marked for downsampling are
 average-pooled by ``d`` first.  The payload is the concatenation of both
 streams plus the binary region mask, mirroring the single mixed-res image
 the prototype transmits.
+
+Temporal region reuse (core.partition.RegionPlan): regions marked REUSE
+(``reuse_mask``) are skipped ENTIRELY — zero payload bytes, no DCT work,
+and their canvas area is filled with neutral gray on the decoded frame
+(the server restores them from cached backbone features, never from
+pixels).  The delay models scale with transmitted regions only.
 """
 from __future__ import annotations
 
@@ -66,16 +72,26 @@ def _unblockify(blocks: np.ndarray, H: int, W: int) -> np.ndarray:
     return x.reshape(H, W)
 
 
-def _encode_plane(plane: np.ndarray, quality: int
-                  ) -> Tuple[bytes, np.ndarray]:
-    """DCT-quantize one plane; returns (compressed bytes, dequantized)."""
+def _quantize_plane(plane: np.ndarray, quality: int) -> np.ndarray:
+    """DCT-quantize one plane -> zigzag-scanned int16 coefficients."""
     tbl = _quality_table(quality)
     blocks = _blockify(plane * 255.0 - 128.0)
     coef = np.einsum("ij,njk,lk->nil", _DCT, blocks, _DCT)
     q = np.round(coef / tbl).astype(np.int16)
     # zigzag scan improves run-length behaviour for zlib
-    zz = q.reshape(-1, 64)[:, _ZIG]
-    payload = zlib.compress(zz.astype(np.int16).tobytes(), level=6)
+    return q.reshape(-1, 64)[:, _ZIG]
+
+
+def _plane_payload(zz: np.ndarray) -> bytes:
+    return zlib.compress(zz.astype(np.int16).tobytes(), level=6)
+
+
+def _encode_plane(plane: np.ndarray, quality: int
+                  ) -> Tuple[bytes, np.ndarray]:
+    """DCT-quantize one plane; returns (compressed bytes, dequantized)."""
+    tbl = _quality_table(quality)
+    zz = _quantize_plane(plane, quality)
+    payload = _plane_payload(zz)
     deq = (zz[:, np.argsort(_ZIG)].reshape(-1, 8, 8) * tbl)
     rec = np.einsum("ji,njk,kl->nil", _DCT, deq, _DCT)
     rec = (rec + 128.0) / 255.0
@@ -101,28 +117,50 @@ class MixedResCodec:
         return self.part.region * self.patch_px
 
     # ------------------------------------------------------------------
-    def encode(self, frame: np.ndarray, mask: np.ndarray,
-               quality: int) -> Tuple[EncodedFrame, np.ndarray]:
+    def _header_bytes(self, mask: np.ndarray,
+                      reuse_mask: Optional[np.ndarray]) -> int:
+        """Mask bits + header; the three-state plan costs one extra bit
+        row when any region is reused."""
+        total = len(mask) // 8 + 1 + 16
+        if reuse_mask is not None and np.asarray(reuse_mask).any():
+            total += len(mask) // 8 + 1
+        return total
+
+    def _region_plane(self, gray: np.ndarray, j: int,
+                      low: bool) -> np.ndarray:
+        rpx = self.region_px()
+        ry, rx = divmod(j, self.part.regions_w)
+        region = gray[ry * rpx:(ry + 1) * rpx, rx * rpx:(rx + 1) * rpx]
+        if low:
+            region = region.reshape(rpx // self.d, self.d,
+                                    rpx // self.d, self.d).mean(axis=(1, 3))
+        return region
+
+    def encode(self, frame: np.ndarray, mask: np.ndarray, quality: int,
+               reuse_mask: Optional[np.ndarray] = None
+               ) -> Tuple[EncodedFrame, np.ndarray]:
         """Encode with region mask; also returns the server-side decoded
         mixed frame (full canvas with low regions decoded-upsampled) for
-        accuracy evaluation."""
+        accuracy evaluation.  Regions set in ``reuse_mask`` transmit
+        nothing (empty stream, gray canvas fill)."""
         rpx = self.region_px()
-        nRw = self.part.regions_w
         gray = frame.mean(axis=-1)          # luma-only codec (3x cheaper)
         decoded = frame.copy()
         streams: List[bytes] = []
-        total = len(mask) // 8 + 1 + 16     # mask bits + header
+        total = self._header_bytes(mask, reuse_mask)
         chroma_factor = 1.5                 # subsampled chroma cost model
+        reuse = (np.zeros(len(mask), bool) if reuse_mask is None
+                 else np.asarray(reuse_mask).astype(bool))
 
         for j, low in enumerate(np.asarray(mask).astype(bool)):
-            ry, rx = divmod(j, nRw)
+            ry, rx = divmod(j, self.part.regions_w)
             y0, x0 = ry * rpx, rx * rpx
-            region = gray[y0:y0 + rpx, x0:x0 + rpx]
-            if low:
-                r = region.reshape(rpx // self.d, self.d,
-                                   rpx // self.d, self.d).mean(axis=(1, 3))
-            else:
-                r = region
+            if reuse[j]:
+                # REUSE: zero payload; the server never reads these pixels
+                streams.append(b"")
+                decoded[y0:y0 + rpx, x0:x0 + rpx] = 0.5
+                continue
+            r = self._region_plane(gray, j, low)
             payload, rec = _encode_plane(r, quality)
             streams.append(payload)
             total += int(len(payload) * chroma_factor)
@@ -142,8 +180,27 @@ class MixedResCodec:
         return enc, decoded
 
     def encode_size_only(self, frame: np.ndarray, mask: np.ndarray,
-                         quality: int) -> int:
-        return self.encode(frame, mask, quality)[0].payload_bytes
+                         quality: int,
+                         reuse_mask: Optional[np.ndarray] = None) -> int:
+        """Payload size of :meth:`encode` without the decode work.
+
+        Runs only the forward half of the pipeline (pool + DCT + quantize
+        + entropy length) — no dequantize, no inverse DCT, no
+        reconstruction — so estimator profiling can sweep configs at a
+        fraction of ``encode``'s cost.  Byte-for-byte identical totals.
+        """
+        gray = frame.mean(axis=-1)
+        total = self._header_bytes(mask, reuse_mask)
+        chroma_factor = 1.5
+        reuse = (np.zeros(len(mask), bool) if reuse_mask is None
+                 else np.asarray(reuse_mask).astype(bool))
+        for j, low in enumerate(np.asarray(mask).astype(bool)):
+            if reuse[j]:
+                continue
+            payload = _plane_payload(
+                _quantize_plane(self._region_plane(gray, j, low), quality))
+            total += int(len(payload) * chroma_factor)
+        return total
 
 
 # ---------------------------------------------------------------------------
@@ -155,21 +212,28 @@ class MixedResCodec:
 @dataclass(frozen=True)
 class CodecDelayModel:
     """Delays in seconds.  Calibrated against the paper's Fig. 10 medians
-    (total codec delay ~30 ms for full-res 1080p at q95 on the Jetson)."""
+    (total codec delay ~30 ms for full-res 1080p at q95 on the Jetson).
+
+    Costs scale with TRANSMITTED regions only: a LOW region costs
+    ``1/d^2`` of a full region, a REUSE region costs nothing (it is
+    skipped before the DCT stage)."""
     enc_base: float = 0.0145          # full-res encode at q<=95
     dec_base: float = 0.0150          # full-res decode
     quality_slope: float = 0.004      # extra cost toward q100 (entropy len)
     mixed_overhead: float = 0.004     # mask + dual-stream preprocessing
 
-    def encode_delay(self, part: Partition, n_low: int,
-                     quality: int) -> float:
-        full_frac = 1.0 - n_low * (1 - 1 / (part.downsample ** 2)) \
-            / part.n_regions
-        q_extra = self.quality_slope * max(quality - 95, 0) / 5.0
-        over = self.mixed_overhead if n_low > 0 else 0.0
-        return (self.enc_base + q_extra) * full_frac + over
+    def _work_frac(self, part: Partition, n_low: int, n_reuse: int) -> float:
+        frac = (1.0 - n_low * (1 - 1 / (part.downsample ** 2))
+                / part.n_regions - n_reuse / part.n_regions)
+        return max(frac, 0.0)
 
-    def decode_delay(self, part: Partition, n_low: int) -> float:
-        full_frac = 1.0 - n_low * (1 - 1 / (part.downsample ** 2)) \
-            / part.n_regions
-        return self.dec_base * full_frac
+    def encode_delay(self, part: Partition, n_low: int,
+                     quality: int, n_reuse: int = 0) -> float:
+        q_extra = self.quality_slope * max(quality - 95, 0) / 5.0
+        over = self.mixed_overhead if (n_low > 0 or n_reuse > 0) else 0.0
+        return ((self.enc_base + q_extra)
+                * self._work_frac(part, n_low, n_reuse) + over)
+
+    def decode_delay(self, part: Partition, n_low: int,
+                     n_reuse: int = 0) -> float:
+        return self.dec_base * self._work_frac(part, n_low, n_reuse)

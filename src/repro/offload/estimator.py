@@ -153,30 +153,59 @@ def regression_metrics(y_true, y_pred) -> Dict[str, float]:
 
 @dataclass
 class InferenceDelayModel:
-    """LM^inf_beta(N_d): per-beta linear models a_beta * N_d + b_beta.
+    """LM^inf_beta(N_d, N_r): per-beta linear models
+    ``a_beta * N_d + r_beta * N_r + b_beta``.
 
     Parameterised from the ViTDet FLOP model calibrated to the paper's
-    measured full-res delay (fit_from_flops) or from profiling samples."""
-    coefs: Dict[int, Tuple[float, float]] = field(default_factory=dict)
+    measured full-res delay (fit_from_flops) or from profiling samples.
+    ``N_r`` is the number of temporally REUSED regions (zero tokens
+    before the restoration point); a model fitted without the reuse term
+    (2-tuple coefs) treats it as free — callers that never reuse are
+    unaffected."""
+    coefs: Dict[int, Tuple[float, ...]] = field(default_factory=dict)
 
-    def __call__(self, beta: int, n_d: int) -> float:
-        a, b = self.coefs[int(beta)]
-        return a * n_d + b
+    def __call__(self, beta: int, n_d: int, n_reuse: int = 0) -> float:
+        c = self.coefs[int(beta)]
+        if len(c) == 2:
+            a, b = c
+            return a * n_d + b
+        a, r, b = c
+        return a * n_d + r * n_reuse + b
 
     @classmethod
-    def fit_from_flops(cls, flops_fn: Callable[[int, int], float],
+    def fit_from_flops(cls, flops_fn: Callable[..., float],
                        n_regions: int, betas: Sequence[int],
                        full_res_delay_s: float) -> "InferenceDelayModel":
-        """flops_fn(n_low, beta) -> FLOPs; anchored so that n_low=0 costs
-        ``full_res_delay_s`` (the paper's 1080p ViTDet-L measurement)."""
-        f_full = flops_fn(0, 0)
+        """flops_fn(n_low, beta[, n_reuse]) -> FLOPs; anchored so that
+        n_low=0 costs ``full_res_delay_s`` (the paper's 1080p ViTDet-L
+        measurement).  A 3-argument flops_fn fits the reuse plane; a
+        2-argument one falls back to the legacy N_d-only line."""
+        try:
+            flops_fn(0, int(betas[0]), 0)
+            with_reuse = True
+        except TypeError:
+            with_reuse = False
+        f_full = flops_fn(0, 0, 0) if with_reuse else flops_fn(0, 0)
         scale = full_res_delay_s / f_full
-        coefs = {}
+        coefs: Dict[int, Tuple[float, ...]] = {}
         for b in betas:
-            xs = np.arange(0, n_regions + 1)
-            ys = np.array([flops_fn(int(n), b) * scale for n in xs])
-            a, c = np.polyfit(xs, ys, 1)
-            coefs[int(b)] = (float(a), float(c))
+            if with_reuse and b >= 1:
+                feats, ys = [], []
+                for n in range(0, n_regions + 1):
+                    for r in range(0, n_regions + 1 - n):
+                        feats.append((n, r, 1.0))
+                        ys.append(flops_fn(n, b, r) * scale)
+                sol, *_ = np.linalg.lstsq(np.array(feats, np.float64),
+                                          np.array(ys, np.float64),
+                                          rcond=None)
+                coefs[int(b)] = tuple(float(v) for v in sol)
+            else:
+                xs = np.arange(0, n_regions + 1)
+                ys = np.array([(flops_fn(int(n), b, 0) if with_reuse
+                                else flops_fn(int(n), b)) * scale
+                               for n in xs])
+                a, c = np.polyfit(xs, ys, 1)
+                coefs[int(b)] = (float(a), float(c))
         return cls(coefs)
 
 

@@ -1,9 +1,18 @@
-"""Offload Configuration Selection (paper Algorithm 1).
+"""Offload Configuration Selection (paper Algorithm 1) + temporal reuse
+planning.
 
 For each frame to offload: classify regions, estimate (T-hat, A-hat) for
 every candidate configuration c = (tau_d, lambda, beta), take the Pareto
 frontier, and select by system state (min-latency when stale, knee point
 otherwise).
+
+:func:`build_reuse_plan` then lifts the chosen binary mask into a
+three-state :class:`~repro.core.partition.RegionPlan`: regions the
+RegionMotionAnalyzer reports motionless AND whose cached feature tile is
+still fresh (FeatureCache.eligible — same restoration point, reused
+fewer than K consecutive offloads) are promoted to REUSE and transmit
+nothing.  The emitted plan is bucket-EXACT in ``n_reuse`` so the codec
+and the server agree on the transmitted region set.
 """
 from __future__ import annotations
 
@@ -12,7 +21,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.partition import Partition, bucket_n_low
+from repro.core.partition import (FULL, LOW, REUSE, Partition, RegionPlan,
+                                  bucket_n_low, bucket_set)
 from repro.offload import motion as mo
 from repro.offload.estimator import (InferenceDelayModel, ThroughputEstimator,
                                      feature_vector)
@@ -62,7 +72,7 @@ class OffloadOptimizer:
     def __init__(self, part: Partition, size_est, acc_est,
                  delays: DelayModels, configs=None,
                  delta_m: float = 0.001, delta_rho: float = 0.0,
-                 n_buckets: int = 4):
+                 n_buckets: int = 4, a_floor: float = 0.25):
         self.part = part
         self.size_est = size_est
         self.acc_est = acc_est
@@ -71,6 +81,14 @@ class OffloadOptimizer:
         self.delta_m = delta_m
         self.delta_rho = delta_rho
         self.n_buckets = n_buckets
+        # accuracy floor (fraction of the frontier's best A-hat): configs
+        # predicted to collapse accuracy are never selected while a
+        # viable alternative exists.  Guards the degenerate two-point
+        # frontier a fully-static scene produces (everything classifies
+        # SBR -> the config space is "downsample nothing" vs "downsample
+        # everything", and the <=2-point knee fallback would pick the
+        # min-latency point even at A-hat ~ 0).
+        self.a_floor = a_floor
 
     # ------------------------------------------------------------------
     def evaluate(self, m: np.ndarray, m_f: float, rho: np.ndarray
@@ -112,11 +130,51 @@ class OffloadOptimizer:
         """Algorithm 1: returns the chosen candidate record."""
         Z = self.evaluate(m, m_f, rho)
         front = pareto_frontier(Z)
+        floor = self.a_floor * max(z["A"] for z in front)
+        viable = [z for z in front if z["A"] >= floor]
+        if viable:
+            front = viable
         if len(front) == 1:
             return front[0]
         if state.kappa < state.delta_kappa or state.eta > state.delta_eta:
             return min(front, key=lambda z: z["T"])
         return knee_point(front)
+
+
+# ---------------------------------------------------------------------------
+# temporal reuse planning
+
+
+def build_reuse_plan(part: Partition, mask: np.ndarray, m: np.ndarray,
+                     eligible: np.ndarray, delta_m: float = 1e-3,
+                     n_buckets: int = 4, min_transmit: int = 1
+                     ) -> RegionPlan:
+    """Lift a binary downsample mask into a three-state RegionPlan.
+
+    ``m``: per-region motion from the RegionMotionAnalyzer; ``eligible``:
+    FeatureCache.eligible(beta) — regions whose cached tile matches the
+    chosen restoration point and is within the staleness bound K.  A
+    region becomes REUSE when it is both motionless (``m < delta_m``) and
+    eligible; the stillest regions win the bucket slots.
+
+    The returned plan is bucket-exact: exactly ``bucket_n_low(...)``
+    regions are REUSE (REUSE ships zero bytes, so codec and server must
+    agree on the set — rounding down at the server would read pixels
+    that were never transmitted).  At least ``min_transmit`` regions stay
+    transmitted so the packed sequence is never empty.
+    """
+    mask = np.asarray(mask).reshape(-1)
+    states = np.where(mask != 0, LOW, FULL).astype(np.int8)
+    cand = np.asarray(eligible, bool) & (np.asarray(m) < delta_m)
+    cand_ids = np.nonzero(cand)[0]
+    limit = min(len(cand_ids), part.n_regions - min_transmit)
+    n_reuse = bucket_n_low(limit, part.n_regions, n_buckets)
+    n_reuse = min(n_reuse, limit)
+    if n_reuse > 0:
+        order = cand_ids[np.argsort(np.asarray(m)[cand_ids],
+                                    kind="stable")]
+        states[order[:n_reuse]] = REUSE
+    return RegionPlan(states)
 
 
 def pareto_frontier(Z: List[Dict]) -> List[Dict]:

@@ -23,7 +23,7 @@ import numpy as np
 
 from repro.core import partition as pt
 from repro.core import vit_backbone as vb
-from repro.core.partition import Partition
+from repro.core.partition import Partition, RegionPlan
 from repro.models import registry
 from repro.models.config import ModelConfig
 from repro.offload import detection as det
@@ -32,6 +32,7 @@ from repro.offload.codec import CodecDelayModel, MixedResCodec
 from repro.offload.estimator import ThroughputEstimator
 from repro.offload.optimizer import OffloadConfig, SystemState
 from repro.offload.tracker import LKTracker
+from repro.serve.request import FeatureCache
 
 # payload scale: our 512x512 luma codec vs the paper's 1080p YUV frames
 SIZE_SCALE = (1920 * 1080) / (512 * 512)
@@ -44,14 +45,17 @@ SIZE_SCALE = (1920 * 1080) / (512 * 512)
 
 
 class ServerModel:
-    """Server-side detector with a per-(n_low bucket, beta) compiled-fn
-    cache.
+    """Server-side detector with a per-(n_low bucket, n_reuse bucket,
+    beta, capture point) compiled-fn cache.
 
     ``n_low`` is rounded DOWN to a bucket edge (partition.bucket_n_low)
     before it keys the cache, so a policy emitting varied masks compiles
-    at most (n_buckets + 1) x |betas| forwards instead of one per
-    distinct region count; extra selected regions beyond the bucket stay
-    full-res (the accuracy-safe direction).
+    at most a bounded set of forwards instead of one per distinct region
+    count; extra selected regions beyond the bucket stay full-res (the
+    accuracy-safe direction).  ``n_reuse`` is NOT re-bucketed here —
+    reuse plans must arrive bucket-exact (a reused region ships zero
+    payload bytes, so codec and server must agree on the transmitted
+    set; offload.optimizer.build_reuse_plan enforces it).
 
     ``backend`` selects the kernel backend for the backbone hot path
     (kernels.dispatch: "auto" | "pallas" | "xla").  ``jit=False`` runs
@@ -71,29 +75,48 @@ class ServerModel:
         self.backend = backend
         self.jit = jit
         self.n_buckets = n_buckets
-        self._fns: Dict[Tuple[int, int], Callable] = {}
+        self._fns: Dict[Tuple[int, int, int, int], Callable] = {}
 
     def bucket(self, n_low: int) -> int:
         return pt.bucket_n_low(n_low, self.part.n_regions, self.n_buckets)
 
-    def _get_fn(self, n_low: int, beta: int) -> Callable:
-        key = (n_low, beta)
+    def _decode(self, outs):
+        from repro.core import det_head as dh
+        return dh.decode_detections(self.cfg, outs, self.top_k,
+                                    self.score_thresh)
+
+    def _get_fn(self, n_low: int, beta: int, n_reuse: int = 0,
+                capture: int = 0) -> Callable:
+        key = (n_low, n_reuse, beta, capture)
         if key not in self._fns:
             cfg, backend = self.cfg, self.backend
 
-            if n_low == 0:
+            def finish(outs):
+                if capture:
+                    outs, tiles = outs
+                    return self._decode(outs), tiles
+                return self._decode(outs)
+
+            if n_low == 0 and n_reuse == 0:
                 def fn(params, img):
-                    outs = vb.forward_det(cfg, params, img, backend=backend)
-                    from repro.core import det_head as dh
-                    return dh.decode_detections(cfg, outs, self.top_k,
-                                                self.score_thresh)
-            else:
+                    return finish(vb.forward_det(cfg, params, img,
+                                                 backend=backend,
+                                                 capture_beta=capture))
+            elif n_reuse == 0:
                 def fn(params, img, full_ids, low_ids):
-                    outs = vb.forward_det(cfg, params, img, full_ids,
-                                          low_ids, beta, backend=backend)
-                    from repro.core import det_head as dh
-                    return dh.decode_detections(cfg, outs, self.top_k,
-                                                self.score_thresh)
+                    return finish(vb.forward_det(cfg, params, img, full_ids,
+                                                 low_ids, beta,
+                                                 backend=backend,
+                                                 capture_beta=capture))
+            else:
+                def fn(params, img, full_ids, low_ids, reuse_ids,
+                       reuse_tiles):
+                    return finish(vb.forward_det(cfg, params, img, full_ids,
+                                                 low_ids, beta,
+                                                 backend=backend,
+                                                 reuse_ids=reuse_ids,
+                                                 reuse_tiles=reuse_tiles,
+                                                 capture_beta=capture))
             self._fns[key] = jax.jit(fn) if self.jit else fn
         return self._fns[key]
 
@@ -113,6 +136,58 @@ class ServerModel:
         return det.detections_from_arrays(boxes[0], scores[0], classes[0],
                                           self.score_thresh)
 
+    # ------------------------------------------------------------------
+    def plan_buckets(self, plan: RegionPlan) -> Tuple[int, int]:
+        """(bucketed n_low, bucket-exact n_reuse) for a plan."""
+        n_reuse = plan.n_reuse
+        assert pt.bucket_n_low(n_reuse, self.part.n_regions,
+                               self.n_buckets) == n_reuse, \
+            f"reuse plan not bucket-exact: n_reuse={n_reuse}"
+        return self.bucket(plan.n_low), n_reuse
+
+    def infer_plan(self, frame: np.ndarray, plan: RegionPlan,
+                   beta: int = 0, cache: Optional[FeatureCache] = None,
+                   frame_idx: int = -1,
+                   capture_beta: int = 0) -> List[Dict]:
+        """Stateful three-state inference for one client frame.
+
+        Splices the cached feature tiles of the plan's REUSE regions in
+        at the restoration point, and (when ``cache`` is given) refreshes
+        the cache with this forward's restoration-point tiles — captured
+        at ``beta`` for mixed forwards, at ``capture_beta`` for full-res
+        ones — so the NEXT offload can reuse them.
+        """
+        img = jnp.asarray(frame)[None]
+        n_low, n_reuse = self.plan_buckets(plan)
+        assert n_reuse == 0 or (cache is not None and beta >= 1), \
+            "REUSE regions need a feature cache and a restoration point"
+        cap = 0
+        if cache is not None:
+            cap = beta if beta >= 1 else capture_beta
+        if n_low == 0 and n_reuse == 0:
+            fn = self._get_fn(0, 0, 0, cap)
+            out = fn(self.params, img)
+            reuse_ids = np.zeros((0,), np.int32)
+        else:
+            full_ids, low_ids, reuse_ids = pt.plan_to_region_ids(
+                plan.states, n_low, n_reuse)
+            fn = self._get_fn(n_low, beta, n_reuse, cap)
+            if n_reuse == 0:
+                out = fn(self.params, img, jnp.asarray(full_ids),
+                         jnp.asarray(low_ids))
+            else:
+                tiles_in = jnp.asarray(cache.gather(reuse_ids))[None]
+                out = fn(self.params, img, jnp.asarray(full_ids),
+                         jnp.asarray(low_ids), jnp.asarray(reuse_ids),
+                         tiles_in)
+        if cap:
+            (boxes, scores, classes), tiles = out
+            cache.update(np.asarray(tiles[0]), reuse_ids, cap, frame_idx)
+        else:
+            boxes, scores, classes = out
+        return det.detections_from_arrays(boxes[0], scores[0], classes[0],
+                                          self.score_thresh)
+
 
 # ---------------------------------------------------------------------------
 # policies
@@ -122,9 +197,15 @@ class Policy:
     """Decides the offload configuration for each frame to be offloaded.
 
     Returns dict(mask (n_regions,), quality, beta, use_tracker: bool).
+    Temporal-reuse policies additionally return a three-state ``plan``
+    (partition.RegionPlan, bucket-exact in n_reuse) and may return
+    ``capture_beta`` (the restoration point full-res offloads capture
+    feature tiles at); they must set ``reuse_k`` (the staleness bound K)
+    so the Simulation provisions a per-client FeatureCache.
     """
     name = "policy"
     use_tracker = True
+    reuse_k = 0                 # K > 0 enables the per-client FeatureCache
 
     def decide(self, sim: "Simulation", frame_idx: int) -> Dict:
         raise NotImplementedError
@@ -190,6 +271,12 @@ class Simulation:
         self.tracker = LKTracker()
         self.net_est = ThroughputEstimator()
         self.state = SystemState()
+        # temporal-reuse session state: one FeatureCache per client
+        # stream, provisioned only for reuse-capable policies (reuse_k =
+        # the staleness bound K)
+        self.feature_cache: Optional[FeatureCache] = (
+            FeatureCache(part.n_regions, max_age=policy.reuse_k)
+            if policy.reuse_k > 0 else None)
 
         # runtime state
         self.cache_dets: List[Dict] = []
@@ -228,6 +315,15 @@ class Simulation:
         self.state.eta = frame_idx - max(self.last_offload_frame, 0)
         self.state.kappa = self.tracker.retention
 
+    def _inf_delay_s(self, beta: int, n_d: int, n_r: int) -> float:
+        """Inference-delay estimate; tolerates legacy 2-arg models."""
+        if self.inf_delay is None:
+            return 0.05
+        try:
+            return self.inf_delay(beta, n_d, n_r)
+        except TypeError:
+            return self.inf_delay(beta, n_d)
+
     def _prepare_offload(self, frame_idx: int, now: float,
                          res: SimResult) -> Dict:
         """Device side of an offload: policy decision, codec encode, and
@@ -236,9 +332,14 @@ class Simulation:
         finishes the job via :meth:`_finish_offload` (immediately for the
         single-client path, at wave time for the batched edge)."""
         decision = self.policy.decide(self, frame_idx)
-        mask = decision["mask"]
         quality = decision["quality"]
         beta = decision["beta"]
+        plan: Optional[RegionPlan] = decision.get("plan")
+        if plan is None:
+            plan = RegionPlan.from_mask(decision["mask"])
+        mask = plan.low_mask()
+        n_r = plan.n_reuse
+        reuse_mask = plan.reuse_mask() if n_r > 0 else None
 
         frame = self.frames[frame_idx]
         if decision.get("blank") is not None:       # RoI masking baselines
@@ -249,22 +350,27 @@ class Simulation:
                 ry, rx = divmod(int(j), nRw)
                 frame[ry * rpx:(ry + 1) * rpx, rx * rpx:(rx + 1) * rpx] = 0.5
         t0 = time.perf_counter()
-        enc, decoded = self.codec.encode(frame, mask, quality)
+        enc, decoded = self.codec.encode(frame, mask, quality,
+                                         reuse_mask=reuse_mask)
         res.overhead.setdefault("codec_wall", []).append(
             time.perf_counter() - t0)
         size = enc.payload_bytes * SIZE_SCALE
         n_d = int(mask.sum())
+        beta_eff = beta if (n_d > 0 or n_r > 0) else 0
 
         tput, rtt = self.trace.at(now)
         job = {
             "frame": frame_idx, "submit": now, "decoded": decoded,
-            "mask": mask, "n_d": n_d, "beta": beta if n_d > 0 else 0,
+            "mask": mask, "n_d": n_d, "beta": beta_eff,
+            "plan": plan, "n_r": n_r,
+            "capture_beta": decision.get("capture_beta", 0),
             "tput": tput, "rtt": rtt, "size": size,
-            "t_enc": self.delay_model.encode_delay(self.part, n_d, quality),
+            "t_enc": self.delay_model.encode_delay(self.part, n_d, quality,
+                                                   n_reuse=n_r),
             "t_up": size * 8.0 / tput,
-            "t_dec": self.delay_model.decode_delay(self.part, n_d),
-            "t_inf": (self.inf_delay(beta if n_d > 0 else 0, n_d)
-                      if self.inf_delay else 0.05),
+            "t_dec": self.delay_model.decode_delay(self.part, n_d,
+                                                   n_reuse=n_r),
+            "t_inf": self._inf_delay_s(beta_eff, n_d, n_r),
             "done_at": float("inf"), "dets": None,
         }
         self.inflight = job
@@ -293,9 +399,16 @@ class Simulation:
         """Single-client path: prepare + immediate (dedicated) server
         inference on the decoded mixed frame."""
         job = self._prepare_offload(frame_idx, now, res)
-        dets = self.server.infer(job["decoded"],
-                                 job["mask"] if job["n_d"] > 0 else None,
-                                 job["beta"])
+        if self.feature_cache is not None:
+            dets = self.server.infer_plan(job["decoded"], job["plan"],
+                                          job["beta"],
+                                          cache=self.feature_cache,
+                                          frame_idx=job["frame"],
+                                          capture_beta=job["capture_beta"])
+        else:
+            dets = self.server.infer(job["decoded"],
+                                     job["mask"] if job["n_d"] > 0 else None,
+                                     job["beta"])
         self._finish_offload(job, dets)
 
     def _complete_offload(self, res: SimResult, now_frame: int) -> Dict:

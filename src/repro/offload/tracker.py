@@ -139,7 +139,11 @@ class LKTracker:
                 for px in xs:
                     dx_total = dy_total = 0.0
                     ok = True
-                    # coarse-to-fine
+                    # coarse-to-fine; a small object can be featureless
+                    # at a coarse level (its texture averages away), so a
+                    # failed coarse estimate contributes zero update and
+                    # the chain continues — only the finest level is
+                    # allowed to reject the point
                     for lv in range(self.levels - 1, -1, -1):
                         s = 2 ** lv
                         gx, gy = grads[lv]
@@ -147,8 +151,9 @@ class LKTracker:
                                         (px + dx_total) / s,
                                         (py + dy_total) / s)
                         if res is None:
-                            ok = False
-                            break
+                            if lv == 0:
+                                ok = False
+                            continue
                         dx_total += res[0] * s
                         dy_total += res[1] * s
                     if ok and abs(dx_total) < W * 0.2 and \

@@ -4,17 +4,22 @@ direction; Arena-style patch-of-interest edge inference).
 One edge replica serves N concurrent device streams:
 
   * :class:`BatchedServerModel` stacks decoded mixed-resolution frames
-    from MANY clients that share a (bucketed n_low, beta) configuration
-    into ONE batched ``forward_det`` call.  Each frame keeps its OWN
-    low-region layout — the per-sample (B, n) region-id path of
-    core.mixed_res — so co-batching never downsamples the wrong regions
-    (the 2-D analogue of the ServeEngine wave-key fix).
+    from MANY clients that share a (bucketed n_low, bucket-exact
+    n_reuse, beta) configuration into ONE batched ``forward_det`` call.
+    Each frame keeps its OWN three-state region layout — the per-sample
+    (B, n) region-id path of core.mixed_res — so co-batching never
+    downsamples (or reuses) the wrong regions (the 2-D analogue of the
+    ServeEngine wave-key fix).  Temporal reuse is sessionful: each
+    client stream owns a :class:`~repro.serve.request.FeatureCache`
+    whose restoration-point tiles are spliced in (REUSE regions) and
+    refreshed (captured tiles) per sample, never across samples.
   * :class:`MultiClientSimulation` multiplexes N (video, trace, policy)
     device streams onto that replica with an event-driven wave
     scheduler.  Offloads queue at the edge; waves form from whatever
-    compatible jobs have arrived when the replica frees up; the
-    resulting queueing delay is folded into Eq. (2)'s end-to-end
-    latency (``parts["queue"]``).
+    compatible jobs — same (n_low bucket, n_reuse bucket, beta, capture
+    point) — have arrived when the replica frees up; the resulting
+    queueing delay is folded into Eq. (2)'s end-to-end latency
+    (``parts["queue"]``).
 
 The single-client :class:`~repro.offload.simulator.Simulation` is the
 N=1 case: both drive the same per-frame step methods
@@ -30,8 +35,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import partition as pt
+from repro.core.partition import RegionPlan
 from repro.offload import detection as det
 from repro.offload.simulator import ServerModel, Simulation, SimResult
+from repro.serve.request import FeatureCache
 
 
 def stack_region_ids(masks: Sequence[np.ndarray], n_low: int
@@ -40,6 +47,15 @@ def stack_region_ids(masks: Sequence[np.ndarray], n_low: int
     ids = [pt.mask_to_region_ids(m, n_low) for m in masks]
     return (np.stack([f for f, _ in ids]).astype(np.int32),
             np.stack([l for _, l in ids]).astype(np.int32))
+
+
+def stack_plan_ids(plans: Sequence[RegionPlan], n_low: int, n_reuse: int
+                   ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Per-sample (B, nF) / (B, nL) / (B, nR) ids for a same-bucket wave."""
+    ids = [pt.plan_to_region_ids(p.states, n_low, n_reuse) for p in plans]
+    return (np.stack([f for f, _, _ in ids]).astype(np.int32),
+            np.stack([l for _, l, _ in ids]).astype(np.int32),
+            np.stack([r for _, _, r in ids]).astype(np.int32))
 
 
 class BatchedServerModel(ServerModel):
@@ -80,6 +96,56 @@ class BatchedServerModel(ServerModel):
             boxes, scores, classes = fn(self.params, imgs,
                                         jnp.asarray(full_ids),
                                         jnp.asarray(low_ids))
+        return [det.detections_from_arrays(boxes[i], scores[i], classes[i],
+                                           self.score_thresh)
+                for i in range(B)]
+
+    def infer_plans(self, frames: np.ndarray,
+                    plans: Sequence[RegionPlan],
+                    beta: int,
+                    caches: Sequence[FeatureCache],
+                    frame_ids: Sequence[int],
+                    capture_beta: int = 0) -> List[List[Dict]]:
+        """Batched three-state inference over same-bucket frames.
+
+        Every plan must share ONE (n_low bucket, bucket-exact n_reuse)
+        pair and every frame restores at the same ``beta`` — the wave
+        compatibility contract the scheduler enforces.  Each sample's
+        REUSE tiles come from (and the refreshed restoration-point tiles
+        go back to) its OWN client's :class:`FeatureCache`, so co-batched
+        sessions never see each other's features.  Returns per-frame
+        detection lists.
+        """
+        B = frames.shape[0]
+        assert len(plans) == len(caches) == len(frame_ids) == B
+        buckets = [self.plan_buckets(p) for p in plans]
+        n_low, n_reuse = buckets[0]
+        assert all(b == (n_low, n_reuse) for b in buckets), \
+            f"wave mixes (n_low, n_reuse) buckets: {buckets}"
+        cap = beta if beta >= 1 else capture_beta
+        imgs = jnp.asarray(frames)
+        reuse_b = np.zeros((B, 0), np.int32)
+        if n_low == 0 and n_reuse == 0:
+            fn = self._get_fn(0, 0, 0, cap)
+            out = fn(self.params, imgs)
+        else:
+            full_b, low_b, reuse_b = stack_plan_ids(plans, n_low, n_reuse)
+            fn = self._get_fn(n_low, beta, n_reuse, cap)
+            if n_reuse == 0:
+                out = fn(self.params, imgs, jnp.asarray(full_b),
+                         jnp.asarray(low_b))
+            else:
+                tiles = jnp.asarray(np.stack(
+                    [c.gather(reuse_b[i]) for i, c in enumerate(caches)]))
+                out = fn(self.params, imgs, jnp.asarray(full_b),
+                         jnp.asarray(low_b), jnp.asarray(reuse_b), tiles)
+        if cap:
+            (boxes, scores, classes), tiles_out = out
+            tiles_np = np.asarray(tiles_out)
+            for i, c in enumerate(caches):
+                c.update(tiles_np[i], reuse_b[i], cap, frame_ids[i])
+        else:
+            boxes, scores, classes = out
         return [det.detections_from_arrays(boxes[i], scores[i], classes[i],
                                            self.score_thresh)
                 for i in range(B)]
@@ -141,18 +207,39 @@ class MultiClientSimulation:
         self.stats = EdgeStats()
 
     # ------------------------------------------------------------------
-    def _job_key(self, job: Dict) -> Tuple[int, int]:
+    def _job_key(self, job: Dict) -> Tuple[int, int, int, int]:
+        """Wave compatibility: (n_low bucket, n_reuse bucket, beta,
+        capture point).  Sessionful (reuse-capable) jobs capture
+        restoration-point tiles, so their compiled forward differs from
+        stateless jobs even at (n_low, n_reuse, beta) parity — the
+        capture field keeps them in separate waves."""
         n_low = self.server.bucket(job["n_d"])
-        return (n_low, job["beta"] if n_low > 0 else 0)
+        n_reuse = job.get("n_r", 0)
+        beta = job["beta"] if (n_low > 0 or n_reuse > 0) else 0
+        if self.clients[self._client_of(job)].feature_cache is None:
+            cap = 0
+        else:
+            cap = beta if beta >= 1 else job.get("capture_beta", 0)
+        return (n_low, n_reuse, beta, cap)
+
+    def _client_of(self, job: Dict) -> int:
+        return job["_client"]
 
     def _run_wave(self, wave: List[Tuple[int, Dict]], t_start: float,
-                  key: Tuple[int, int]) -> float:
+                  key: Tuple[int, int, int, int]) -> float:
         """Batched inference + Eq. (2) bookkeeping for one wave.
         Returns the time the replica frees up."""
-        n_low, beta = key
+        n_low, n_reuse, beta, cap = key
         imgs = np.stack([j["decoded"] for _, j in wave])
-        masks = [j["mask"] if n_low > 0 else None for _, j in wave]
-        dets = self.server.infer_batch(imgs, masks, beta)
+        if cap or n_reuse > 0:
+            dets = self.server.infer_plans(
+                imgs, [j["plan"] for _, j in wave], beta,
+                [self.clients[ci].feature_cache for ci, _ in wave],
+                [j["frame"] for _, j in wave],
+                capture_beta=cap if beta < 1 else 0)
+        else:
+            masks = [j["mask"] if n_low > 0 else None for _, j in wave]
+            dets = self.server.infer_batch(imgs, masks, beta)
 
         B = len(wave)
         t_dec = max(j["t_dec"] for _, j in wave)
@@ -227,6 +314,7 @@ class MultiClientSimulation:
                     job = c._prepare_offload(fi, now, results[ci])
                     # arrival at the edge: encode + uplink transfer
                     job["arrival"] = now + job["t_enc"] + job["t_up"]
+                    job["_client"] = ci
                     self.pending.append((ci, job))
                 c._render_tick(fi, results[ci])
 

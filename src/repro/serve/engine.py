@@ -5,13 +5,23 @@ is a full *prefill* (the paper's frame analogy) followed by a bounded
 decode.  The engine batches requests into **waves**:
 
   * requests are grouped by (bucketed prompt length, bucketed n_low,
-    beta, pooled-span identity) — static shapes, so XLA never retraces
-    per request (the TPU-native adaptation of the paper's per-frame
-    dynamic resolution), and co-batched requests share the SAME span
-    layout, so one pack is correct for the whole wave;
-  * one jitted ``prefill_fn`` per (bucket, bucketed n_low, beta) triple —
-    the paper's mixed-granularity prefill plugs in through
-    ``low_span_mask`` and ``beta`` on the request (core.seq_mixed_res);
+    bucketed n_reuse, beta, span-layout identity) — static shapes, so
+    XLA never retraces per request (the TPU-native adaptation of the
+    paper's per-frame dynamic resolution), and co-batched requests share
+    the SAME span layout, so one pack is correct for the whole wave;
+  * one jitted ``prefill_fn`` per (bucket, bucketed n_low, bucketed
+    n_reuse, beta) tuple — the paper's mixed-granularity prefill plugs
+    in through ``low_span_mask`` and ``beta`` on the request
+    (core.seq_mixed_res);
+  * temporal reuse is SESSIONFUL: requests carrying a ``client_id`` get
+    a per-client :class:`~repro.serve.request.FeatureCache` whose
+    bookkeeping gates ``reuse_span_mask`` — a span may ride the reuse
+    discount at most K consecutive requests before it is forced back to
+    full granularity (staleness bound).  The sequence prefill has no
+    feature splice (tokens are always transmitted), so effective reuse
+    spans are conservatively POOLED like low spans; the session/wave
+    machinery is shared verbatim with the vision edge (serve/edge.py),
+    which does splice cached tiles;
   * greedy decode runs the whole wave in lock-step with per-slot EOS
     masking; finished slots keep decoding (masked) until the wave drains
     below ``refill_fraction`` — the static-shape analogue of continuous
@@ -36,7 +46,7 @@ from repro.core.partition import bucket_n_low
 from repro.models import registry
 from repro.models.config import ModelConfig
 from repro.models.transformer import LOCAL, ParallelCtx
-from repro.serve.request import Request, Response
+from repro.serve.request import FeatureCache, Request, Response
 
 
 @dataclass
@@ -46,9 +56,11 @@ class ServeConfig:
     buckets: Tuple[int, ...] = (64, 128, 256)
     cache_dtype: object = jnp.float32
     greedy: bool = True
-    # n_low is rounded down to one of this many bucket edges so the
-    # prefill jit-cache stays bounded (partition.bucket_n_low)
+    # n_low / n_reuse are rounded down to one of this many bucket edges
+    # so the prefill jit-cache stays bounded (partition.bucket_n_low)
     n_low_buckets: int = 4
+    # staleness bound K for per-client reuse sessions
+    reuse_max_age: int = 4
 
 
 class ServeEngine:
@@ -65,10 +77,47 @@ class ServeEngine:
         self._prefill_fns: Dict = {}
         self._decode_fns: Dict = {}
         self.wave_latencies: List[float] = []
+        # per-client reuse sessions (bookkeeping-only FeatureCaches:
+        # the seq prefill transmits every token, so only the staleness
+        # state machine applies here)
+        self.sessions: Dict[int, FeatureCache] = {}
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
         self.queue.append(req)
+
+    def session(self, client_id: int, n_spans: int) -> FeatureCache:
+        sess = self.sessions.get(client_id)
+        if sess is None or sess.n_regions != n_spans:
+            sess = FeatureCache(n_spans, max_age=self.sc.reuse_max_age)
+            self.sessions[client_id] = sess
+        return sess
+
+    def _effective_reuse(self, r: Request) -> np.ndarray:
+        """Reuse spans that survive the per-client staleness gate.
+
+        READ-ONLY: wave keying must not create or replace sessions (a
+        queued request with a different span geometry would otherwise
+        discard another request's warm session just by being keyed).
+        Anonymous requests (no client_id), cold/stale sessions, and
+        span-geometry mismatches get no reuse; spans also claimed low
+        stay low; the survivors are bucketed like low spans so the
+        prefill jit-cache stays bounded."""
+        spans = r.reuse_spans()
+        if spans.shape[0] == 0 or r.client_id < 0 or \
+                r.reuse_span_mask is None:
+            return np.zeros((0,), np.int32)
+        low = set(r.low_spans().tolist())
+        spans = np.array([s for s in spans if s not in low], np.int32)
+        n_spans = int(np.asarray(r.reuse_span_mask).reshape(-1).shape[0])
+        sess = self.sessions.get(r.client_id)
+        if sess is None or sess.n_regions != n_spans:
+            return np.zeros((0,), np.int32)
+        ok = sess.eligible(r.beta)
+        spans = spans[ok[spans]] if spans.shape[0] else spans
+        n_reuse = bucket_n_low(int(spans.shape[0]), n_spans,
+                               self.sc.n_low_buckets)
+        return spans[:n_reuse]
 
     def _bucket(self, n: int) -> int:
         for b in self.sc.buckets:
@@ -78,12 +127,13 @@ class ServeEngine:
                          f"{self.sc.buckets[-1]}")
 
     # ------------------------------------------------------------------
-    def _get_prefill(self, T: int, n_low: int, beta: int) -> Callable:
-        key = ("prefill", T, n_low, beta)
+    def _get_prefill(self, T: int, n_low: int, beta: int,
+                     n_reuse: int = 0) -> Callable:
+        key = ("prefill", T, n_low, n_reuse, beta)
         if key not in self._prefill_fns:
             cfg, ctx = self.cfg, self.ctx
 
-            if n_low == 0 or beta == 0:
+            if (n_low == 0 and n_reuse == 0) or beta == 0:
                 def fn(params, tokens, state):
                     hidden, state, _ = registry.prefill(
                         cfg, params, {"tokens": tokens}, state, ctx)
@@ -131,23 +181,29 @@ class ServeEngine:
         self.queue = rest
         return wave
 
-    def _wave_key(self, r: Request) -> Tuple[int, int, int, bytes]:
-        """(prompt bucket, bucketed n_low, beta, pooled-span identity).
+    def _wave_key(self, r: Request) -> Tuple[int, int, int, int, bytes]:
+        """(prompt bucket, bucketed n_low, bucketed n_reuse, beta,
+        span-layout identity).
 
-        The mask CONTENT (which spans are pooled, after bucket trimming)
-        is part of the key: requests with equal n_low but different span
-        layouts need different packs and must not share a wave.
+        The mask CONTENT (which spans are pooled/reused, after bucket
+        trimming and the session-staleness gate) is part of the key:
+        requests with equal counts but different span layouts need
+        different packs and must not share a wave.
         """
         T = self._bucket(len(r.prompt))
         spans = r.low_spans()
-        if spans.shape[0] == 0:
-            return (T, 0, 0, b"")
-        n_spans = int(np.asarray(r.low_span_mask).reshape(-1).shape[0])
-        n_low = bucket_n_low(int(spans.shape[0]), n_spans,
-                             self.sc.n_low_buckets)
-        if n_low == 0:            # bucketed away: runs the plain prefill
-            return (T, 0, 0, b"")
-        return (T, n_low, r.beta, r.mask_key(n_low))
+        reuse = self._effective_reuse(r)
+        n_reuse = int(reuse.shape[0])
+        if spans.shape[0] == 0 and n_reuse == 0:
+            return (T, 0, 0, 0, b"")
+        n_low = 0
+        if spans.shape[0] > 0:
+            n_spans = int(np.asarray(r.low_span_mask).reshape(-1).shape[0])
+            n_low = bucket_n_low(int(spans.shape[0]), n_spans,
+                                 self.sc.n_low_buckets)
+        if n_low == 0 and n_reuse == 0:   # bucketed away: plain prefill
+            return (T, 0, 0, 0, b"")
+        return (T, n_low, n_reuse, r.beta, r.mask_key(n_low, reuse))
 
     # ------------------------------------------------------------------
     def run_wave(self, now: float = 0.0) -> List[Response]:
@@ -157,7 +213,7 @@ class ServeEngine:
             return []
         t0 = time.perf_counter()
         cfg, sc = self.cfg, self.sc
-        T, n_low, beta, _ = self._wave_key(wave[0])
+        T, n_low, n_reuse, beta, _ = self._wave_key(wave[0])
         B = len(wave)
 
         toks = np.zeros((B, T), np.int32)
@@ -169,11 +225,21 @@ class ServeEngine:
 
         state = registry.init_decode_state(cfg, B, sc.max_len,
                                            sc.cache_dtype)
-        if n_low > 0 and beta > 0:
+        if (n_low > 0 or n_reuse > 0) and beta > 0:
             part = smr.seq_partition(cfg, T)
-            pack = smr.build_seq_pack(
-                np.asarray(wave[0].low_span_mask), n_low, part)
-            fn = self._get_prefill(T, n_low, beta)
+            r0 = wave[0]
+            span_mask = (r0.low_span_mask if r0.low_span_mask is not None
+                         else r0.reuse_span_mask)
+            n_spans = int(np.asarray(span_mask).reshape(-1).shape[0])
+            # conservative fallback for reuse on the seq path: effective
+            # reuse spans are POOLED alongside the low spans (tokens are
+            # always transmitted here; only the vision edge splices
+            # cached features)
+            mask = np.zeros((n_spans,), np.int32)
+            mask[r0.low_spans(n_low)] = 1
+            mask[self._effective_reuse(r0)] = 1
+            pack = smr.build_seq_pack(mask, n_low + n_reuse, part)
+            fn = self._get_prefill(T, n_low, beta, n_reuse)
             logits, state = fn(self.params, jnp.asarray(toks), state,
                                jnp.asarray(pack["mix_idx"]),
                                jnp.asarray(pack["pos_mix"]),
@@ -181,6 +247,15 @@ class ServeEngine:
         else:
             fn = self._get_prefill(T, 0, 0)
             logits, state = fn(self.params, jnp.asarray(toks), state)
+
+        # refresh reuse sessions: effective reuse spans age by one, every
+        # other span of a sessionful request resets (it was transmitted)
+        for r in wave:
+            if r.client_id >= 0 and r.reuse_span_mask is not None:
+                n_sp = int(np.asarray(r.reuse_span_mask).reshape(-1)
+                           .shape[0])
+                self.session(r.client_id, n_sp).note(
+                    self._effective_reuse(r), r.beta, int(now))
 
         decode = self._get_decode()
         resp = {r.rid: Response(rid=r.rid, slot=i, prefill_done=now)

@@ -1,10 +1,80 @@
-"""Serving request/response types."""
+"""Serving request/response types + per-client feature-cache sessions.
+
+:class:`FeatureCache` is the session state behind temporal region reuse
+(core.partition.RegionPlan): one cache per client stream, holding the
+per-region backbone-feature tiles captured at the restoration point of
+that client's previous offload, plus the bookkeeping that bounds
+staleness — a region may be reused at most ``max_age`` (the K of the
+README's state machine) CONSECUTIVE offloads before it must be
+transmitted (FULL/LOW) again.  The vision edge (serve/edge.py,
+offload/simulator.py) stores real tiles; the sequence engine
+(serve/engine.py) uses the same bookkeeping tiles-free to gate and
+bucket reuse spans.
+"""
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 from typing import List, Optional
 
 import numpy as np
+
+
+@dataclass
+class FeatureCache:
+    """Per-client cached restoration-point feature tiles + reuse ages.
+
+    ``tiles``: (n_regions, d^2, w^2, D) window-blocked per-region tiles
+    (None until the first capture, and always None for bookkeeping-only
+    sessions such as the sequence engine's).  ``beta``: the restoration
+    point the tiles were captured at — reuse is only valid at the SAME
+    restoration point.  ``age[j]``: consecutive offloads region j has
+    been reused; at ``max_age`` (K) the region is forced back to
+    FULL/LOW.
+    """
+    n_regions: int
+    max_age: int = 4
+    beta: int = -1
+    tiles: Optional[np.ndarray] = None
+    age: np.ndarray = None
+    frame: int = -1
+    warm: bool = False
+
+    def __post_init__(self):
+        if self.age is None:
+            self.age = np.zeros((self.n_regions,), np.int32)
+
+    # ------------------------------------------------------------------
+    def eligible(self, beta: int) -> np.ndarray:
+        """(n_regions,) bool: regions whose cached tile may be reused for
+        an offload restoring at ``beta`` (cache warm, same restoration
+        point, staleness bound not yet hit)."""
+        if not self.warm or beta < 1 or beta != self.beta:
+            return np.zeros((self.n_regions,), bool)
+        return self.age < self.max_age
+
+    def gather(self, reuse_ids: np.ndarray) -> np.ndarray:
+        """(n_reuse, d^2, w^2, D) tiles for the plan's reuse set."""
+        assert self.tiles is not None, "cache holds no tiles yet"
+        return self.tiles[np.asarray(reuse_ids, np.int64)]
+
+    # ------------------------------------------------------------------
+    def note(self, reuse_ids: np.ndarray, beta: int, frame: int) -> None:
+        """Bookkeeping-only refresh: regions in ``reuse_ids`` were reused
+        this offload (age + 1), every other region was transmitted
+        (age reset to 0)."""
+        ids = np.asarray(reuse_ids, np.int64).reshape(-1)
+        new_age = np.zeros((self.n_regions,), np.int32)
+        new_age[ids] = self.age[ids] + 1
+        self.age = new_age
+        self.beta = int(beta)
+        self.frame = int(frame)
+        self.warm = True
+
+    def update(self, tiles: np.ndarray, reuse_ids: np.ndarray,
+               beta: int, frame: int) -> None:
+        """Full refresh after a forward that captured tiles."""
+        self.tiles = np.asarray(tiles)
+        self.note(reuse_ids, beta, frame)
 
 
 @dataclass
@@ -17,6 +87,20 @@ class Request:
     low_span_mask: Optional[np.ndarray] = None
     beta: int = 0
     arrival_time: float = 0.0
+    # temporal reuse: the client's session identity and the spans it
+    # claims unchanged since its previous request (serve/engine.py gates
+    # them against the per-client FeatureCache staleness bound)
+    client_id: int = -1
+    reuse_span_mask: Optional[np.ndarray] = None
+
+    def _spans(self, mask: Optional[np.ndarray],
+               n: Optional[int]) -> np.ndarray:
+        if mask is None or self.beta <= 0:
+            return np.zeros((0,), np.int32)
+        sel = np.nonzero(np.asarray(mask).reshape(-1) != 0)[0]
+        if n is not None:
+            sel = sel[:n]
+        return sel.astype(np.int32)
 
     def low_spans(self, n_low: Optional[int] = None) -> np.ndarray:
         """Span indices actually pooled, in selection order.
@@ -27,17 +111,25 @@ class Request:
         ``low_spans(n_low)`` produce byte-identical packs and may share a
         wave.
         """
-        if self.low_span_mask is None or self.beta <= 0:
-            return np.zeros((0,), np.int32)
-        sel = np.nonzero(
-            np.asarray(self.low_span_mask).reshape(-1) != 0)[0]
-        if n_low is not None:
-            sel = sel[:n_low]
-        return sel.astype(np.int32)
+        return self._spans(self.low_span_mask, n_low)
 
-    def mask_key(self, n_low: Optional[int] = None) -> bytes:
-        """Canonical wave-key bytes of the (bucket-trimmed) span mask."""
-        return self.low_spans(n_low).tobytes()
+    def reuse_spans(self, n_reuse: Optional[int] = None) -> np.ndarray:
+        """Span indices the client marked temporally reusable, with the
+        same bucket-trimming rule as :meth:`low_spans`."""
+        return self._spans(self.reuse_span_mask, n_reuse)
+
+    def mask_key(self, n_low: Optional[int] = None,
+                 reuse_ids: Optional[np.ndarray] = None) -> bytes:
+        """Canonical wave-key bytes of the (bucket-trimmed) span layout.
+
+        ``reuse_ids``: the EFFECTIVE reuse spans (after the engine's
+        session-staleness gate) — part of the identity because co-batched
+        requests must share one pack layout.
+        """
+        key = self.low_spans(n_low).tobytes()
+        if reuse_ids is not None and len(reuse_ids):
+            key += b"|" + np.asarray(reuse_ids, np.int32).tobytes()
+        return key
 
 
 @dataclass

@@ -76,6 +76,75 @@ def test_codec_delay_model_monotonic():
     assert dm.decode_delay(PART, 8) < dm.decode_delay(PART, 0)
 
 
+def test_encode_size_only_matches_encode():
+    """Satellite: the decode-free fast path must report byte-identical
+    payload sizes to the full encode, with and without reuse."""
+    frames, _ = sv.make_clip("walkS", 2, size=512, seed=2)
+    codec = MixedResCodec(PART, PATCH, 2)
+    reuse = np.zeros(16, np.int32)
+    reuse[10:14] = 1
+    for quality in (70, 85, 95):
+        for n in (0, 4, 8):
+            mask = np.zeros(16, np.int32)
+            mask[:n] = 1
+            enc, _ = codec.encode(frames[0], mask, quality)
+            assert codec.encode_size_only(frames[0], mask, quality) == \
+                enc.payload_bytes
+        mask = np.zeros(16, np.int32)
+        mask[:4] = 1
+        enc, _ = codec.encode(frames[1], mask, quality, reuse_mask=reuse)
+        assert codec.encode_size_only(frames[1], mask, quality,
+                                      reuse_mask=reuse) == enc.payload_bytes
+
+
+def test_payload_monotonic_in_n_low_and_quality():
+    """Satellite: payload bytes fall as n_low grows (fixed quality) and
+    rise with quality (fixed mask)."""
+    frames, _ = sv.make_clip("walkS", 1, size=512, seed=5)
+    codec = MixedResCodec(PART, PATCH, 2)
+    sizes = []
+    for n in range(0, 17, 4):
+        mask = np.zeros(16, np.int32)
+        mask[:n] = 1
+        sizes.append(codec.encode_size_only(frames[0], mask, 90))
+    assert all(sizes[i] > sizes[i + 1] for i in range(len(sizes) - 1)), sizes
+    mask = np.zeros(16, np.int32)
+    mask[:6] = 1
+    qsizes = [codec.encode_size_only(frames[0], mask, q)
+              for q in (70, 80, 90, 100)]
+    assert all(qsizes[i] < qsizes[i + 1]
+               for i in range(len(qsizes) - 1)), qsizes
+
+
+def test_codec_reuse_regions_ship_zero_bytes():
+    frames, _ = sv.make_clip("walkS", 1, size=512, seed=6)
+    codec = MixedResCodec(PART, PATCH, 2)
+    mask = np.zeros(16, np.int32)
+    reuse = np.zeros(16, np.int32)
+    reuse[:8] = 1
+    enc_all, dec = codec.encode(frames[0], mask, 90)
+    enc_r, dec_r = codec.encode(frames[0], mask, 90, reuse_mask=reuse)
+    # reused regions: empty streams, gray canvas, far fewer bytes
+    assert all(len(s) == 0 for s in enc_r.streams[:8])
+    assert all(len(s) > 0 for s in enc_r.streams[8:])
+    assert enc_r.payload_bytes < 0.75 * enc_all.payload_bytes
+    rpx = codec.region_px()
+    assert (dec_r[:rpx, :rpx] == 0.5).all()
+    # untouched regions decode identically
+    np.testing.assert_array_equal(dec_r[-rpx:, -rpx:], dec[-rpx:, -rpx:])
+
+
+def test_codec_delay_model_reuse_scales_with_transmitted_regions():
+    dm = CodecDelayModel()
+    # a reused region is cheaper than a downsampled one, which is
+    # cheaper than a full one
+    assert dm.encode_delay(PART, 0, 90, n_reuse=8) < \
+        dm.encode_delay(PART, 8, 90) < dm.encode_delay(PART, 0, 90)
+    assert dm.decode_delay(PART, 0, n_reuse=8) < dm.decode_delay(PART, 8)
+    # everything-reused degenerates to the (clamped) overhead floor
+    assert dm.decode_delay(PART, 0, n_reuse=16) == 0.0
+
+
 def test_tracker_follows_translation():
     rng = np.random.default_rng(0)
     base = rng.uniform(0, 1, (96, 96, 3)).astype(np.float32)
@@ -127,6 +196,18 @@ def test_inference_delay_model_from_flops():
     # later RPs and more regions are faster
     assert lm(4, 8) < lm(1, 8) < lm(0, 0) + 1e-9
     assert lm(4, 16) < lm(4, 4)
+    # a 2-arg flops_fn yields a legacy model: the reuse term is free
+    assert lm(4, 8, 4) == lm(4, 8)
+
+    # 3-arg flops_fn fits the reuse plane: reused regions cut delay
+    lm3 = InferenceDelayModel.fit_from_flops(
+        lambda n, b, r=0: vb.backbone_flops(cfg, n, b, r), part.n_regions,
+        betas=(0, 1, 2, 3, 4), full_res_delay_s=0.281)
+    assert abs(lm3(0, 0) - 0.281) < 0.02
+    assert lm3(2, 0, 8) < lm3(2, 0, 0)
+    assert lm3(2, 4, 8) < lm3(2, 4, 0)
+    # a reused region saves more than a downsampled one (zero tokens)
+    assert lm3(2, 0, 8) < lm3(2, 8, 0)
 
 
 def test_pareto_and_knee():

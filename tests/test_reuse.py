@@ -1,0 +1,466 @@
+"""Temporal region reuse: three-state RegionPlan through the stack
+(core.partition -> mixed_res -> vit_backbone -> simulator -> edge)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.configs.vitdet_l import SIM
+from repro.core import mixed_res as mr
+from repro.core import partition as pt
+from repro.core import vit_backbone as vb
+from repro.core.partition import FULL, LOW, REUSE, RegionPlan
+from repro.data import synthetic_video as sv
+from repro.data.network_traces import make_trace
+from repro.models import registry
+from repro.offload.optimizer import build_reuse_plan
+from repro.offload.simulator import Policy, Simulation
+from repro.serve.edge import (BatchedServerModel, EdgeConfig,
+                              MultiClientSimulation)
+from repro.serve.request import FeatureCache
+
+PATCH = SIM.vit.patch_size
+SIZE = SIM.vit.img_size[0]
+
+
+# ---------------------------------------------------------------------------
+# RegionPlan + id mapping
+
+
+def test_region_plan_counts_and_masks():
+    states = np.array([FULL, LOW, REUSE, LOW, FULL, REUSE], np.int8)
+    plan = RegionPlan(states)
+    assert plan.n_low == 2 and plan.n_reuse == 2 and plan.n_transmit == 4
+    assert plan.low_mask().tolist() == [0, 1, 0, 1, 0, 0]
+    assert plan.reuse_mask().tolist() == [0, 0, 1, 0, 0, 1]
+    p2 = RegionPlan.from_mask(np.array([0, 1, 1, 0]))
+    assert p2.n_low == 2 and p2.n_reuse == 0
+
+
+def test_plan_to_region_ids_three_state():
+    states = np.array([REUSE, LOW, FULL, FULL, LOW, REUSE, FULL, FULL],
+                      np.int8)
+    full, low, reuse = pt.plan_to_region_ids(states, 2, 2)
+    assert sorted(low.tolist()) == [1, 4]
+    assert sorted(reuse.tolist()) == [0, 5]
+    assert sorted(full.tolist()) == [2, 3, 6, 7]
+    # buckets smaller than the selection: extras revert to FULL
+    full, low, reuse = pt.plan_to_region_ids(states, 1, 1)
+    assert low.tolist() == [1] and reuse.tolist() == [0]
+    assert len(full) == 6 and 4 in full and 5 in full
+
+
+def test_mask_to_region_ids_matches_plan_special_case():
+    mask = np.zeros(16, np.int32)
+    mask[[1, 5, 7]] = 1
+    f2, l2 = pt.mask_to_region_ids(mask, 3)
+    states = np.where(mask != 0, LOW, FULL).astype(np.int8)
+    f3, l3, r3 = pt.plan_to_region_ids(states, 3, 0)
+    np.testing.assert_array_equal(f2, f3)
+    np.testing.assert_array_equal(l2, l3)
+    assert r3.shape == (0,)
+
+
+def test_partition_token_counts_with_reuse():
+    p = pt.make_partition(16, 16, window=2, downsample=2)
+    assert p.n_tokens(2, 4) == p.n_tokens(2) - 4 * p.tokens_full_region
+    assert p.n_windows(2, 4) == p.n_windows(2) - 4 * p.windows_per_full_region
+    assert p.n_tokens(0, p.n_regions) == 0
+
+
+# ---------------------------------------------------------------------------
+# restore_full with reuse tiles + sentinel scatter
+
+
+def small_partition():
+    return pt.make_partition(16, 16, window=2, downsample=2)
+
+
+def test_restore_full_splices_reuse_tiles():
+    p = small_partition()
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 16, 16, 8))
+    states = np.full(p.n_regions, FULL, np.int8)
+    states[[2, 9]] = LOW
+    states[[4, 11]] = REUSE
+    full_ids, low_ids, reuse_ids = pt.plan_to_region_ids(states, 2, 2)
+    tokens, _ = mr.pack_mixed(x, p, jnp.asarray(full_ids),
+                              jnp.asarray(low_ids))
+    assert tokens.shape == (2, p.n_tokens(2, 2), 8)
+    tiles = jax.random.normal(jax.random.PRNGKey(1),
+                              (2, 2, p.windows_per_full_region,
+                               p.tokens_low_region, 8))
+    restored = mr.restore_full(tokens, p, jnp.asarray(full_ids),
+                               jnp.asarray(low_ids),
+                               reuse_ids=jnp.asarray(reuse_ids),
+                               reuse_tiles=tiles)
+    out = np.asarray(restored).reshape(2, p.n_regions,
+                                       p.windows_per_full_region,
+                                       p.tokens_low_region, 8)
+    # reused regions hold the cached tiles verbatim
+    for k, rid in enumerate(reuse_ids.tolist()):
+        np.testing.assert_array_equal(out[:, rid], np.asarray(tiles[:, k]))
+    # full regions hold the original grid content
+    expect = np.asarray(mr.grid_to_region_windows(x, p))
+    for rid in full_ids.tolist():
+        np.testing.assert_array_equal(out[:, rid], expect[:, rid])
+
+
+def test_restore_full_empty_reuse_bit_identical():
+    p = small_partition()
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 16, 16, 4))
+    mask = np.zeros(p.n_regions, np.int32)
+    mask[[0, 9]] = 1
+    full_ids, low_ids = (jnp.asarray(a)
+                         for a in pt.mask_to_region_ids(mask, 2))
+    tokens, _ = mr.pack_mixed(x, p, full_ids, low_ids)
+    a = mr.restore_full(tokens, p, full_ids, low_ids)
+    b = mr.restore_full(tokens, p, full_ids, low_ids,
+                        reuse_ids=jnp.zeros((0,), jnp.int32),
+                        reuse_tiles=jnp.zeros(
+                            (1, 0, p.windows_per_full_region,
+                             p.tokens_low_region, 4)))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restore_full_duplicate_pad_ids_first_write_wins():
+    """Satellite fix: padded duplicate low ids scatter through the
+    sentinel row, so the FIRST occurrence deterministically wins even
+    when the duplicated window slots hold different (garbage) data."""
+    p = small_partition()
+    w2 = p.tokens_low_region
+    nF = p.n_regions - 2
+    full_ids = jnp.asarray([i for i in range(p.n_regions) if i != 3][:nF],
+                           jnp.int32)
+    low_ids = jnp.asarray([3, 3], jnp.int32)        # padded duplicate
+    D = 4
+    rng = np.random.default_rng(0)
+    tokens = rng.normal(size=(1, nF * p.tokens_full_region + 2 * w2, D)
+                        ).astype(np.float32)
+    first_window = tokens[0, nF * p.tokens_full_region:
+                          nF * p.tokens_full_region + w2].reshape(
+                              p.window, p.window, D)
+    restored = np.asarray(mr.restore_full(jnp.asarray(tokens), p,
+                                          full_ids, low_ids))
+    out = restored.reshape(1, p.n_regions, p.windows_per_full_region,
+                           w2, D)
+    # region 3 holds the upsampled FIRST duplicate window
+    up = np.repeat(np.repeat(first_window, p.downsample, 0),
+                   p.downsample, 1)
+    d, w = p.downsample, p.window
+    up = up.reshape(d, w, d, w, D).transpose(0, 2, 1, 3, 4).reshape(
+        d * d, w2, D)
+    np.testing.assert_allclose(out[0, 3], up, rtol=1e-6)
+    # and the scatter is deterministic across runs
+    again = np.asarray(mr.restore_full(jnp.asarray(tokens), p,
+                                       full_ids, low_ids))
+    np.testing.assert_array_equal(restored, again)
+
+
+def test_restore_full_per_sample_duplicate_pad_ids():
+    p = small_partition()
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 16, 16, 4))
+    # per-sample layouts where sample 1 has a padded duplicate
+    ids = [pt.plan_to_region_ids(
+        np.where(np.isin(np.arange(16), sel), LOW, FULL).astype(np.int8),
+        2, 0)[:2] for sel in ([0, 9], [5])]
+    assert ids[1][1].tolist() == [5, 5]             # dup pad happened
+    fb = jnp.asarray(np.stack([f for f, _ in ids]))
+    lb = jnp.asarray(np.stack([l for _, l in ids]))
+    tok, _ = mr.pack_mixed(x, p, fb, lb)
+    res = np.asarray(mr.restore_full(tok, p, fb, lb))
+    # sample 0 must match its solo restore exactly
+    f0, l0 = (jnp.asarray(a) for a in ids[0])
+    tok0, _ = mr.pack_mixed(x[:1], p, f0, l0)
+    solo = np.asarray(mr.restore_full(tok0, p, f0, l0))
+    np.testing.assert_array_equal(res[:1], solo)
+    assert np.isfinite(res).all()
+
+
+# ---------------------------------------------------------------------------
+# backbone: reuse forward + tile capture
+
+
+def test_forward_det_empty_reuse_bit_identical():
+    """Acceptance pin: with an empty reuse set, forward_det is
+    bit-identical to the reuse-free call."""
+    cfg = get_reduced("vitdet-l")
+    params = registry.init_params(cfg, jax.random.PRNGKey(0))
+    part = vb.vit_partition(cfg)
+    img = jax.random.uniform(jax.random.PRNGKey(1),
+                             (1, *cfg.vit.img_size, 3))
+    mask = np.zeros(part.n_regions, np.int32)
+    mask[0] = 1
+    fi, li = (jnp.asarray(a) for a in pt.mask_to_region_ids(mask, 1))
+    base = vb.forward_det(cfg, params, img, fi, li, beta=2)
+    empty_tiles = jnp.zeros((1, 0, part.windows_per_full_region,
+                             part.tokens_low_region, cfg.d_model))
+    (outs, tiles) = vb.forward_det(cfg, params, img, fi, li, beta=2,
+                                   reuse_ids=jnp.zeros((0,), jnp.int32),
+                                   reuse_tiles=empty_tiles, capture_beta=2)
+    for a, b in zip(base, outs):
+        for xa, xb in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(xa), np.asarray(xb))
+    assert tiles.shape == (1, part.n_regions,
+                           part.windows_per_full_region,
+                           part.tokens_low_region, cfg.d_model)
+
+
+def test_reuse_of_same_frame_tiles_is_exact_at_beta1():
+    """Structural invariant: before the first global block, full-region
+    windows only ever attended within themselves, so tiles captured from
+    a full-res forward at beta=1 and spliced back for the SAME frame
+    reproduce the full-res features exactly."""
+    cfg = get_reduced("vitdet-l")
+    params = registry.init_params(cfg, jax.random.PRNGKey(0))
+    part = vb.vit_partition(cfg)
+    img = jax.random.uniform(jax.random.PRNGKey(1),
+                             (1, *cfg.vit.img_size, 3))
+    f_full, tiles = vb.forward_features(cfg, params, img, capture_beta=1)
+    states = np.full(part.n_regions, REUSE, np.int8)
+    states[0] = FULL
+    fi, li, ri = pt.plan_to_region_ids(states, 0, part.n_regions - 1)
+    f_reuse = vb.forward_features(
+        cfg, params, img, jnp.asarray(fi), jnp.asarray(li), beta=1,
+        reuse_ids=jnp.asarray(ri), reuse_tiles=tiles[:, np.asarray(ri)])
+    np.testing.assert_allclose(np.asarray(f_reuse), np.asarray(f_full),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_backbone_flops_decrease_with_reuse():
+    cfg = get_reduced("vitdet-l")
+    part = vb.vit_partition(cfg)
+    f = [vb.backbone_flops(cfg, 0, 2, r) for r in range(part.n_regions)]
+    assert all(f[i] > f[i + 1] for i in range(len(f) - 1))
+    # reuse only matters before the restoration point
+    assert vb.backbone_flops(cfg, 0, 0, 0) == vb.backbone_flops(cfg, 0, 0)
+
+
+# ---------------------------------------------------------------------------
+# FeatureCache + reuse planning
+
+
+def test_feature_cache_staleness_state_machine():
+    c = FeatureCache(n_regions=4, max_age=2)
+    assert not c.eligible(2).any()                  # cold
+    tiles = np.zeros((4, 1, 1, 8), np.float32)
+    c.update(tiles, np.zeros((0,), np.int32), beta=2, frame=0)
+    assert c.eligible(2).all()
+    assert not c.eligible(3).any()                  # wrong RP
+    c.update(tiles, np.array([1, 2]), beta=2, frame=1)
+    assert c.age.tolist() == [0, 1, 1, 0]
+    c.update(tiles, np.array([1, 2]), beta=2, frame=2)
+    assert c.age.tolist() == [0, 2, 2, 0]
+    assert c.eligible(2).tolist() == [True, False, False, True]  # K hit
+    c.update(tiles, np.array([3]), beta=2, frame=3)
+    assert c.age.tolist() == [0, 0, 0, 1]           # transmitted -> reset
+
+
+def test_build_reuse_plan_bucket_exact_and_min_transmit():
+    part = pt.make_partition(32, 32, window=4, downsample=2)   # 16 regions
+    mask = np.zeros(16, np.int32)
+    mask[:8] = 1
+    m = np.zeros(16, np.float32)
+    m[0] = 0.5                                     # region 0 moves
+    eligible = np.ones(16, bool)
+    plan = build_reuse_plan(part, mask, m, eligible)
+    # 15 candidates, min_transmit=1 -> limit 15 -> bucket edge 12
+    assert plan.n_reuse == 12
+    assert plan.states[0] != REUSE
+    assert plan.n_transmit >= 1
+    # no eligibility -> plain two-state plan
+    plan0 = build_reuse_plan(part, mask, m, np.zeros(16, bool))
+    assert plan0.n_reuse == 0 and plan0.n_low == 8
+    # all eligible + empty mask still keeps min_transmit regions
+    plan_all = build_reuse_plan(part, np.zeros(16, np.int32),
+                                np.zeros(16, np.float32),
+                                np.ones(16, bool))
+    assert plan_all.n_reuse == 12 and plan_all.n_transmit == 4
+
+
+# ---------------------------------------------------------------------------
+# server + sessions (SIM scale)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = registry.init_params(SIM, jax.random.PRNGKey(0))
+    server = BatchedServerModel(SIM, params, top_k=8, score_thresh=0.0)
+    return params, server, vb.vit_partition(SIM)
+
+
+class FixedReusePolicy(Policy):
+    """Static low mask + motion-gated reuse at a fixed restoration point
+    (deterministic; exercises the full plan/cache plumbing)."""
+    name = "fixed-reuse"
+    use_tracker = True
+    reuse_k = 3
+
+    def __init__(self, n_regions, lows=(0, 1, 2, 3), beta=2):
+        self.n_regions = n_regions
+        self.lows = list(lows)
+        self.beta = beta
+
+    def decide(self, sim, frame_idx):
+        mask = np.zeros(self.n_regions, np.int32)
+        mask[self.lows] = 1
+        cache = sim.feature_cache
+        elig = (cache.eligible(self.beta) if cache is not None
+                else np.zeros(self.n_regions, bool))
+        plan = build_reuse_plan(sim.part, mask, sim.m, elig)
+        return {"mask": mask, "quality": 85, "beta": self.beta,
+                "plan": plan, "capture_beta": self.beta}
+
+
+def _client(server, part, seed, video="parkS", n_frames=10,
+            inf_delay=None, delay_model=None):
+    frames, _ = sv.make_clip(video, n_frames, size=SIZE, seed=seed)
+    gt = [server.infer(f) for f in frames]
+    trace = make_trace("4g", seed, duration_s=60)
+    pol = FixedReusePolicy(part.n_regions)
+    return Simulation(frames, gt, trace, pol, server, part, PATCH,
+                      fps=10, inf_delay=inf_delay, delay_model=delay_model)
+
+
+def _boxes(dets):
+    return np.array([d["box"] for d in dets], np.float64).reshape(-1, 4)
+
+
+def test_infer_plan_warms_and_reuses_cache(setup):
+    _, server, part = setup
+    rng = np.random.default_rng(0)
+    frame = rng.uniform(0, 1, (SIZE, SIZE, 3)).astype(np.float32)
+    cache = FeatureCache(part.n_regions, max_age=3)
+    mask = np.zeros(part.n_regions, np.int32)
+    mask[:4] = 1
+    plan0 = RegionPlan.from_mask(mask)
+    server.infer_plan(frame, plan0, beta=2, cache=cache, frame_idx=0)
+    assert cache.warm and cache.beta == 2
+    assert cache.tiles.shape == (part.n_regions,
+                                 part.windows_per_full_region,
+                                 part.tokens_low_region, SIM.d_model)
+    # second offload reuses 4 regions
+    states = plan0.states.copy()
+    states[8:12] = REUSE
+    dets = server.infer_plan(frame, RegionPlan(states), beta=2,
+                             cache=cache, frame_idx=1)
+    assert cache.age[8:12].tolist() == [1, 1, 1, 1]
+    assert cache.age[:8].sum() == 0
+    assert isinstance(dets, list)
+
+
+def test_reuse_of_cached_static_frame_matches_transmit(setup):
+    """Reusing tiles captured from the SAME frame must reproduce the
+    plain mixed forward's detections (the static-scene limit)."""
+    _, server, part = setup
+    rng = np.random.default_rng(1)
+    frame = rng.uniform(0, 1, (SIZE, SIZE, 3)).astype(np.float32)
+    mask = np.zeros(part.n_regions, np.int32)
+    cache = FeatureCache(part.n_regions, max_age=4)
+    # warm at beta=1 on a full-res offload
+    server.infer_plan(frame, RegionPlan.from_mask(mask), beta=0,
+                      cache=cache, frame_idx=0, capture_beta=1)
+    assert cache.beta == 1
+    states = np.full(part.n_regions, FULL, np.int8)
+    states[4:8] = REUSE
+    d_reuse = server.infer_plan(frame, RegionPlan(states), beta=1,
+                                cache=cache, frame_idx=1)
+    d_full = server.infer(frame)
+    assert len(d_reuse) == len(d_full)
+    np.testing.assert_allclose(_boxes(d_reuse), _boxes(d_full),
+                               rtol=1e-4, atol=0.1)
+
+
+def test_infer_plans_batched_matches_solo(setup):
+    """Co-batched reuse waves: each sample spliced from its OWN cache."""
+    _, server, part = setup
+    rng = np.random.default_rng(2)
+    frames = rng.uniform(0, 1, (2, SIZE, SIZE, 3)).astype(np.float32)
+    mask = np.zeros(part.n_regions, np.int32)
+    mask[:4] = 1
+    plan_warm = RegionPlan.from_mask(mask)
+
+    def warm_caches():
+        caches = [FeatureCache(part.n_regions, max_age=4)
+                  for _ in range(2)]
+        for i, c in enumerate(caches):
+            server.infer_plan(frames[i], plan_warm, beta=2, cache=c,
+                              frame_idx=0)
+        return caches
+
+    plans = []
+    for sel in ((8, 9, 10, 11), (12, 13, 14, 15)):
+        states = plan_warm.states.copy()
+        states[list(sel)] = REUSE
+        plans.append(RegionPlan(states))
+
+    caches_b = warm_caches()
+    batched = server.infer_plans(frames, plans, 2, caches_b, [1, 1])
+    caches_s = warm_caches()
+    for i in range(2):
+        solo = server.infer_plan(frames[i], plans[i], beta=2,
+                                 cache=caches_s[i], frame_idx=1)
+        assert len(batched[i]) == len(solo)
+        np.testing.assert_allclose(_boxes(batched[i]), _boxes(solo),
+                                   rtol=1e-4, atol=0.1)
+        np.testing.assert_allclose(caches_b[i].tiles, caches_s[i].tiles,
+                                   rtol=1e-4, atol=1e-4)
+        assert caches_b[i].age.tolist() == caches_s[i].age.tolist()
+
+
+def test_simulation_reuse_cuts_bytes_on_static_scene(setup):
+    _, server, part = setup
+    c = _client(server, part, seed=3)
+    res = c.run("parkS")
+    assert c.feature_cache.warm
+    sizes = np.asarray(res.sizes)
+    assert len(sizes) >= 3
+    # offloads after the warm-up one ship far fewer bytes
+    assert np.median(sizes[1:]) < 0.7 * sizes[0]
+
+
+@pytest.mark.slow
+def test_two_client_cache_isolation(setup):
+    """Two clients, DIFFERENT content, shared replica: each client's
+    detections must equal its own solo run — a cross-client cache leak
+    would corrupt the reused features."""
+    _, server, part = setup
+    # zero service time -> the replica is never busy -> no queueing, so
+    # the multi-client run is tick-for-tick identical to the solo runs
+    from repro.offload.codec import CodecDelayModel
+    fast = lambda beta, n_d, n_r=0: 0.0
+    zero_dm = CodecDelayModel(enc_base=0.0, dec_base=0.0,
+                              quality_slope=0.0, mixed_overhead=0.0)
+    solo = {}
+    for seed, vid in ((5, "parkS"), (6, "walkB")):
+        r = _client(server, part, seed, vid, inf_delay=fast,
+                    delay_model=zero_dm).run(vid)
+        solo[vid] = r
+    mc = MultiClientSimulation(
+        [_client(server, part, 5, "parkS", inf_delay=fast,
+                 delay_model=zero_dm),
+         _client(server, part, 6, "walkB", inf_delay=fast,
+                 delay_model=zero_dm)],
+        server, EdgeConfig(batched=True))
+    rs = mc.run(["parkS", "walkB"])
+    for r_multi, vid in zip(rs, ("parkS", "walkB")):
+        r_solo = solo[vid]
+        np.testing.assert_allclose(r_solo.rendering_f1,
+                                   r_multi.rendering_f1, atol=1e-6)
+        np.testing.assert_allclose(r_solo.sizes, r_multi.sizes, rtol=1e-9)
+        np.testing.assert_allclose(r_solo.e2e_latency, r_multi.e2e_latency,
+                                   rtol=1e-9)
+    # caches hold different content (different videos)
+    ca, cb = (c.feature_cache for c in mc.clients)
+    assert not np.allclose(ca.tiles, cb.tiles)
+
+
+def test_server_fn_cache_stays_bounded_with_reuse(setup):
+    """Plans over many frames must key a bounded set of compiled fns:
+    (n_low buckets) x (n_reuse buckets) x betas x capture points."""
+    _, server, part = setup
+    n_before = len(server._fns)
+    c = _client(server, part, seed=7, n_frames=8)
+    c.run("parkS")
+    grown = len(server._fns) - n_before
+    assert grown <= 3 * 2    # few (n_low, n_reuse) pairs at one (beta, cap)

@@ -80,6 +80,56 @@ def test_prefill_cache_key_uses_bucketed_n_low():
     assert n_lows <= {0, 2, 4, 6, 8}     # bucket edges for 8 spans
 
 
+def test_reuse_sessions_gate_and_bucket_waves():
+    """Temporal-reuse plumbing: anonymous / cold sessions get no reuse;
+    a warm session's reuse spans enter the wave key; after K consecutive
+    reuses the staleness bound forces the spans back out."""
+    eng = ServeEngine(None, None, ServeConfig(max_batch=8, buckets=(T,),
+                                              reuse_max_age=2))
+    rng = np.random.default_rng(0)
+    reuse = np.zeros(8, np.int32)
+    reuse[:4] = 1
+
+    def req(rid, client_id):
+        return Request(rid=rid,
+                       prompt=rng.integers(0, 100, (T,)).astype(np.int32),
+                       reuse_span_mask=reuse, beta=2, client_id=client_id)
+
+    # anonymous request: no session, no reuse
+    assert eng._wave_key(req(0, -1)) == (T, 0, 0, 0, b"")
+    # cold session: no reuse yet, but the session warms up when noted
+    r1 = req(1, 7)
+    assert eng._wave_key(r1) == (T, 0, 0, 0, b"")
+    eng.session(7, 8).note(np.zeros((0,), np.int32), beta=2, frame=0)
+    k = eng._wave_key(r1)
+    assert k[2] == 4 and k[3] == 2          # n_reuse bucket, beta
+    # per-client isolation: client 8's cold session still gets nothing
+    assert eng._wave_key(req(2, 8)) == (T, 0, 0, 0, b"")
+    # staleness: after K=2 consecutive reuses the spans are forced back
+    eng.session(7, 8).note(np.arange(4), beta=2, frame=1)
+    assert eng._wave_key(r1)[2] == 4
+    eng.session(7, 8).note(np.arange(4), beta=2, frame=2)
+    assert eng._wave_key(r1)[2] == 0        # age hit K -> transmit again
+    # a restoration-point switch invalidates the session
+    eng.session(7, 8).note(np.zeros((0,), np.int32), beta=3, frame=3)
+    assert eng._wave_key(r1)[2] == 0
+
+
+def test_reuse_spans_never_ride_low_spans():
+    """A span claimed both low and reusable stays LOW (transmitted
+    pooled) — the reuse discount must not double-count it."""
+    eng = ServeEngine(None, None, ServeConfig(max_batch=8, buckets=(T,)))
+    rng = np.random.default_rng(1)
+    low = np.zeros(8, np.int32)
+    low[:4] = 1
+    eng.session(3, 8).note(np.zeros((0,), np.int32), beta=2, frame=0)
+    r = Request(rid=0, prompt=rng.integers(0, 100, (T,)).astype(np.int32),
+                low_span_mask=low, reuse_span_mask=low.copy(), beta=2,
+                client_id=3)
+    key = eng._wave_key(r)
+    assert key[1] == 4 and key[2] == 0      # all low, nothing reused
+
+
 def _reference_greedy(cfg, params, prompt, n_new):
     """Single-request prefill + greedy decode, straight off the registry."""
     from repro.models import transformer as tfm
@@ -153,6 +203,36 @@ def test_waves_group_by_config(setup):
     assert len(responses) == 4
     # plain and mixed requests cannot share a wave
     assert len(engine.wave_latencies) == 2
+
+
+@pytest.mark.slow
+def test_reuse_wave_runs_through_model(setup):
+    """Sessionful reuse request end-to-end: the engine pools the
+    effective reuse spans (conservative seq fallback) and refreshes the
+    per-client session after the wave."""
+    cfg, params = setup
+    rng = np.random.default_rng(4)
+    span = cfg.mixed_res.window * cfg.mixed_res.downsample
+    n_spans = T // span
+    reuse = np.zeros(n_spans, np.int32)
+    reuse[0] = 1
+    engine = ServeEngine(cfg, params, ServeConfig(
+        max_batch=4, max_len=T + NEW + 8, buckets=(T,)))
+
+    def submit(rid):
+        engine.submit(Request(
+            rid=rid, prompt=rng.integers(0, cfg.vocab_size, (T,))
+            .astype(np.int32), max_new_tokens=NEW,
+            reuse_span_mask=reuse, beta=2, client_id=1))
+
+    submit(0)                    # cold session: plain prefill, warms it
+    r0 = engine.run()[0]
+    assert r0.n_tokens == NEW
+    assert engine.sessions[1].warm and engine.sessions[1].beta == 2
+    submit(1)                    # warm session: reuse spans engage
+    r1 = engine.run()[0]
+    assert r1.n_tokens == NEW
+    assert engine.sessions[1].age[0] == 1
 
 
 @pytest.mark.slow
