@@ -109,7 +109,8 @@ def run_mode(server: BatchedServerModel, n_clients: int, n_frames: int,
              batched: bool, gt_cache: Dict) -> Dict:
     clients = make_clients(server, n_clients, n_frames, gt_cache)
     mc = MultiClientSimulation(clients, server,
-                               EdgeConfig(batched=batched))
+                               EdgeConfig(batched=batched,
+                                          keep_dets=True))
     t0 = time.perf_counter()
     results = mc.run([VIDEOS[i % len(VIDEOS)] for i in range(n_clients)])
     wall = time.perf_counter() - t0

@@ -1,0 +1,447 @@
+"""Zero-stall serving benchmark — AOT warmup, device-resident feature
+caches, cross-bucket wave coalescing (the PR-4 serving hot path).
+
+Emits ``BENCH_serving.json`` with three sections:
+
+  * ``warmup``   — first-offload wall latency and p95 per-offload server
+                   wall time for a lazy-compile replica vs. an
+                   AOT-warmed one, plus the executable counts: total
+                   compiled, compiled during warmup, and compiled in
+                   steady state (MUST be 0 after warmup — the bench
+                   fails under ``--check`` otherwise);
+  * ``cache``    — host<->device tile bytes per offload on a reuse-heavy
+                   parkS workload, device-resident FeatureCache vs. the
+                   legacy host-resident mode (device mode MUST be 0);
+  * ``coalesce`` — mean wave size, throughput and p95 e2e (queueing
+                   included) on a mixed-bucket multi-client workload
+                   with and without cross-bucket coalescing, plus
+                   rendering-F1 deltas on the parkS/driveN scenarios
+                   (promotion only ever ADDS resolution, so the deltas
+                   must be 0.000).
+
+Standalone:  python benchmarks/bench_serving.py [--smoke] [--check]
+Harness:     picked up by benchmarks/run.py as the ``bench_serving``
+             suite (smoke settings, check enabled).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.vitdet_l import SIM
+from repro.core import partition as pt
+from repro.core import vit_backbone as vb
+from repro.core.partition import REUSE, RegionPlan
+from repro.data import synthetic_video as sv
+from repro.data.network_traces import make_trace
+from repro.models import registry
+from repro.offload.estimator import InferenceDelayModel
+from repro.offload.optimizer import build_reuse_plan
+from repro.offload.simulator import Policy, ServerModel, Simulation
+from repro.serve.edge import (BatchedServerModel, EdgeConfig,
+                              MultiClientSimulation)
+from repro.serve.request import FeatureCache
+
+DEFAULT_OUT = Path(__file__).resolve().parent.parent / "BENCH_serving.json"
+PATCH = SIM.vit.patch_size
+SIZE = SIM.vit.img_size[0]
+FPS = 10
+FULL_RES_DELAY_S = 0.281
+BETA = 2
+REUSE_K = 4
+
+
+def _params():
+    return registry.init_params(SIM, jax.random.PRNGKey(0))
+
+
+def _inf_delay_model() -> InferenceDelayModel:
+    part = vb.vit_partition(SIM)
+    return InferenceDelayModel.fit_from_flops(
+        lambda n, b, r=0: vb.backbone_flops(SIM, n, b, r), part.n_regions,
+        betas=tuple(range(SIM.vit.n_subsets + 1)),
+        full_res_delay_s=FULL_RES_DELAY_S)
+
+
+def _mask(part, lows) -> np.ndarray:
+    m = np.zeros(part.n_regions, np.int32)
+    m[list(lows)] = 1
+    return m
+
+
+# ---------------------------------------------------------------------------
+# section 1: AOT warmup vs. lazy compile
+
+
+def _serving_trace(server: ServerModel, frames: np.ndarray,
+                   with_reuse: bool) -> List[float]:
+    """A representative steady-state serving trace (solo calls + waves
+    across the plan space); returns per-call wall seconds."""
+    part = server.part
+    plan4 = RegionPlan.from_mask(_mask(part, range(4)))
+    plan8 = RegionPlan.from_mask(_mask(part, range(8)))
+    cache = FeatureCache(part.n_regions, max_age=REUSE_K)
+    states = plan4.states.copy()
+    states[8:12] = REUSE
+    plan_r = RegionPlan(states)
+    walls = []
+
+    def call(fn, *a, **kw):
+        t0 = time.perf_counter()
+        fn(*a, **kw)
+        walls.append(time.perf_counter() - t0)
+
+    n = len(frames)
+    for i in range(n):
+        f = frames[i % n]
+        call(server.infer, f)                              # full-res solo
+        call(server.infer, f, _mask(part, range(4)), BETA)  # mixed solo
+        call(server.infer_wave, frames[:2], [plan4, plan4], BETA)
+        call(server.infer_wave, frames[:3], [plan8] * 3, BETA)
+        if with_reuse:
+            if not cache.warm:
+                call(server.infer_plan, f, plan4, BETA, cache, i)
+            else:
+                call(server.infer_plan, f, plan_r, BETA, cache, i)
+    return walls
+
+
+def bench_warmup(n_frames: int) -> Dict:
+    frames, _ = sv.make_clip("walkS", max(n_frames, 4), size=SIZE, seed=3)
+    frames = frames[:max(n_frames, 4)]
+    rows = {}
+    for mode in ("lazy", "warmed"):
+        server = ServerModel(SIM, _params(), top_k=8, score_thresh=0.0)
+        warm_wall = 0.0
+        if mode == "warmed":
+            # captures include BETA: reuse sessions capture tiles at the
+            # restoration point even on their (n_reuse = 0) warm-up
+            # offloads, so those executables are part of the grid
+            space = server.default_plan_space(
+                betas=(BETA,), reuse_edges=(0, 4), captures=(0, BETA))
+            server.warmup(space)
+            warm_wall = server.stats.warmup_wall_s
+        walls = _serving_trace(server, frames, with_reuse=True)
+        rows[mode] = {
+            "first_offload_wall_s": walls[0],
+            "p50_offload_wall_s": float(np.percentile(walls, 50)),
+            "p95_offload_wall_s": float(np.percentile(walls, 95)),
+            "warmup_wall_s": warm_wall,
+            "executables_total": server.stats.compiles,
+            "steady_compiles": server.stats.steady_compiles,
+            "steady_compile_keys": [list(k) for k in
+                                    server.stats.steady_compile_keys],
+        }
+    rows["first_offload_speedup"] = (
+        rows["lazy"]["first_offload_wall_s"]
+        / max(rows["warmed"]["first_offload_wall_s"], 1e-12))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# section 2: device-resident FeatureCache
+
+
+class FixedReusePolicy(Policy):
+    """Static low mask + motion-gated reuse at a fixed restoration point
+    (deterministic; exercises the full plan/cache plumbing)."""
+    name = "fixed-reuse"
+    use_tracker = True
+    reuse_k = REUSE_K
+
+    def __init__(self, n_regions, lows=(0, 1, 2, 3), beta=BETA):
+        self.n_regions = n_regions
+        self.lows = list(lows)
+        self.beta = beta
+
+    def decide(self, sim, frame_idx):
+        mask = np.zeros(self.n_regions, np.int32)
+        mask[self.lows] = 1
+        cache = sim.feature_cache
+        elig = (cache.eligible(self.beta) if cache is not None
+                else np.zeros(self.n_regions, bool))
+        plan = build_reuse_plan(sim.part, mask, sim.m, elig)
+        return {"mask": mask, "quality": 85, "beta": self.beta,
+                "plan": plan, "capture_beta": self.beta}
+
+
+def bench_cache(n_frames: int) -> Dict:
+    part = vb.vit_partition(SIM)
+    frames, _ = sv.make_clip("parkS", n_frames, size=SIZE, seed=23)
+    rows = {}
+    for mode, device in (("device", True), ("host", False)):
+        server = ServerModel(SIM, _params(), top_k=8, score_thresh=0.0,
+                             device_cache=device)
+        gt = [server.infer(f) for f in frames]
+        n_offloads0 = server.stats.offloads
+        b0 = server.stats.tile_bytes
+        sim = Simulation(frames, gt, make_trace("4g", 0, duration_s=120),
+                         FixedReusePolicy(part.n_regions), server, part,
+                         PATCH, fps=FPS, inf_delay=_inf_delay_model())
+        sim.run("parkS")
+        offloads = server.stats.offloads - n_offloads0
+        reused = int((sim.feature_cache.age > 0).sum())
+        rows[mode] = {
+            "offloads": offloads,
+            "tile_bytes_h2d": server.stats.tile_bytes_h2d,
+            "tile_bytes_d2h": server.stats.tile_bytes_d2h,
+            "tile_bytes_per_offload": (server.stats.tile_bytes - b0)
+            / max(offloads, 1),
+            "cache_on_device": bool(sim.feature_cache.tiles_on_device),
+            "regions_reused_at_end": reused,
+        }
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# section 3: cross-bucket wave coalescing
+
+
+class FixedMaskPolicy(Policy):
+    name = "fixedmask"
+    use_tracker = True
+
+    def __init__(self, lows, n_regions, beta=BETA):
+        self.lows = list(lows)
+        self.n_regions = n_regions
+        self.beta = beta
+
+    def decide(self, sim, frame_idx):
+        m = np.zeros(self.n_regions, np.int32)
+        m[self.lows] = 1
+        return {"mask": m, "quality": 85, "beta": self.beta}
+
+
+def _bucket_clients(server, part, video_specs, n_frames, gt_cache):
+    inf_delay = _inf_delay_model()
+    clients = []
+    for i, (video, lows) in enumerate(video_specs):
+        key = (video, n_frames)
+        if key not in gt_cache:
+            frames, _ = sv.make_clip(video, n_frames, size=SIZE, seed=23)
+            gt_cache[key] = (frames, [server.infer(f) for f in frames])
+        frames, gt = gt_cache[key]
+        clients.append(Simulation(
+            frames, gt, make_trace("4g", i, duration_s=240),
+            FixedMaskPolicy(lows, part.n_regions), server, part, PATCH,
+            fps=FPS, inf_delay=inf_delay))
+    return clients
+
+
+def _run_coalesce(server, part, video_specs, n_frames, coalesce,
+                  gt_cache, keep=None) -> Dict:
+    clients = _bucket_clients(server, part, video_specs, n_frames,
+                              gt_cache)
+    mc = MultiClientSimulation(clients, server,
+                               EdgeConfig(batched=True,
+                                          coalesce=coalesce),
+                               on_complete=keep)
+    results = mc.run([v for v, _ in video_specs])
+    e2e = np.array([x for r in results for x in r.e2e_latency], np.float64)
+    rf1 = {}
+    for r in results:
+        rf1.setdefault(r.video, []).extend(r.rendering_f1)
+    return {
+        "coalesce": coalesce,
+        "offloads": int(e2e.size),
+        "throughput_fps": float(e2e.size / (n_frames / FPS)),
+        "p50_e2e_s": float(np.percentile(e2e, 50)) if e2e.size else None,
+        "p95_e2e_s": float(np.percentile(e2e, 95)) if e2e.size else None,
+        "mean_wave": mc.stats.mean_wave_size,
+        "promoted_jobs": mc.stats.promoted,
+        "median_rendering_f1": {v: float(np.median(x))
+                                for v, x in rf1.items()},
+    }
+
+
+def bench_coalesce(n_frames: int) -> Dict:
+    from repro.offload import detection as det
+    part = vb.vit_partition(SIM)
+    server = BatchedServerModel(SIM, _params(), top_k=8, score_thresh=0.0)
+    gt_cache: Dict = {}
+
+    # (a) mixed-bucket workload: every client sits in a DIFFERENT n_low
+    # bucket, so without coalescing no two jobs are ever wave-compatible
+    # (mean wave is exactly 1) — wave growth is pure cross-bucket
+    # promotion.  For each promoted job we also quote the inference-F1
+    # cost of the promotion itself: F1(promoted dets) - F1(the dets a
+    # solo run at the job's OWN bucket yields), timeline effects
+    # excluded.
+    specs = [("parkS", range(4)), ("parkS", range(12)),
+             ("driveN", range(8)), ("driveN", range(16))]
+    promoted_jobs: List[Dict] = []
+
+    def keep(ci, job):
+        if "promoted_n_low" in job:
+            promoted_jobs.append({"video": specs[ci][0], **job})
+
+    on = _run_coalesce(server, part, specs, n_frames, True, gt_cache,
+                       keep=keep)
+    off = _run_coalesce(server, part, specs, n_frames, False, gt_cache)
+
+    f1_cost = []
+    for job in promoted_jobs:
+        gt = gt_cache[(job["video"], n_frames)][1][job["frame"]]
+        own = server.infer_wave(job["decoded"][None], [job["plan"]],
+                                job["beta"])[0]
+        f1_cost.append(det.frame_f1(job["dets"], gt)
+                       - det.frame_f1(own, gt))
+
+    # (b) the EXISTING parkS/driveN scenarios (same-bucket clients, the
+    # bench_reuse workload shape): enabling coalescing must be a perfect
+    # no-op there — no cross-bucket jobs exist, so the scheduler, the
+    # timeline, and the rendering F1 must be IDENTICAL (delta 0.000).
+    deltas = {}
+    for video in ("parkS", "driveN"):
+        sp = [(video, range(4)), (video, range(4))]
+        s_on = _run_coalesce(server, part, sp, n_frames, True, gt_cache)
+        s_off = _run_coalesce(server, part, sp, n_frames, False, gt_cache)
+        assert s_on["promoted_jobs"] == 0
+        deltas[video] = (s_on["median_rendering_f1"][video]
+                         - s_off["median_rendering_f1"][video])
+
+    return {"on": on, "off": off,
+            "promotion_inference_f1_delta": {
+                "n": len(f1_cost),
+                "mean": float(np.mean(f1_cost)) if f1_cost else 0.0,
+                "median": float(np.median(f1_cost)) if f1_cost else 0.0,
+            },
+            "rendering_f1_delta": deltas}
+
+
+# ---------------------------------------------------------------------------
+
+
+def check(report: Dict) -> List[str]:
+    """The acceptance gates ci.sh enforces on the smoke lane."""
+    errs = []
+    w = report["warmup"]
+    if w["warmed"]["steady_compiles"] != 0:
+        errs.append(f"steady-state compiles after warmup: "
+                    f"{w['warmed']['steady_compiles']} "
+                    f"{w['warmed']['steady_compile_keys']}")
+    if not (w["warmed"]["first_offload_wall_s"]
+            < w["lazy"]["first_offload_wall_s"]):
+        errs.append("warmup did not reduce first-offload latency")
+    if report["cache"]["device"]["tile_bytes_per_offload"] != 0:
+        errs.append("device-resident cache shipped tile bytes")
+    if report["cache"]["host"]["tile_bytes_per_offload"] <= 0:
+        errs.append("host-resident baseline counted no tile bytes")
+    c = report["coalesce"]
+    if not c["on"]["mean_wave"] > c["off"]["mean_wave"]:
+        errs.append(f"coalescing did not grow waves: "
+                    f"{c['on']['mean_wave']} <= {c['off']['mean_wave']}")
+    if c["on"]["promoted_jobs"] <= 0:
+        errs.append("no jobs were promoted")
+    # promotion must not cost inference accuracy: F1(promoted dets) >=
+    # F1(own-bucket dets) on average (promotion only ADDS resolution)
+    if c["promotion_inference_f1_delta"]["mean"] < 0:
+        errs.append(f"promotion degraded inference F1: "
+                    f"{c['promotion_inference_f1_delta']}")
+    for v, d in c["rendering_f1_delta"].items():
+        if abs(d) > 1e-12:
+            errs.append(f"rendering-F1 delta on {v}: {d:+.4f}")
+    return errs
+
+
+def run_bench(smoke: bool = False, out: Path = DEFAULT_OUT,
+              do_check: bool = False) -> dict:
+    n_frames = 16 if smoke else 40
+    report = {
+        "meta": {
+            "config": "vitdet-l/SIM",
+            "device": jax.default_backend(),
+            "smoke": smoke,
+            "n_frames": n_frames,
+            "fps": FPS,
+            "beta": BETA,
+            "reuse_k": REUSE_K,
+            "full_res_delay_s": FULL_RES_DELAY_S,
+            "batch_buckets": list(pt.BATCH_BUCKETS),
+        },
+        "warmup": bench_warmup(4 if smoke else 8),
+        "cache": bench_cache(n_frames),
+        "coalesce": bench_coalesce(n_frames),
+    }
+    errs = check(report)
+    report["check"] = {"passed": not errs, "errors": errs}
+    out.write_text(json.dumps(report, indent=2) + "\n")
+    print(f"[bench_serving] wrote {out}")
+    if do_check and errs:
+        raise SystemExit("[bench_serving] CHECK FAILED: " + "; ".join(errs))
+    return report
+
+
+def run(ctx: dict) -> list:
+    """benchmarks/run.py adapter: smoke settings, CSV rows."""
+    out = Path(__file__).resolve().parent / "artifacts"
+    out.mkdir(parents=True, exist_ok=True)
+    rep = run_bench(smoke=True, out=out / "BENCH_serving.smoke.json",
+                    do_check=True)
+    w, c = rep["warmup"], rep["coalesce"]
+    rows = [
+        ("bench_serving/first_offload/lazy",
+         w["lazy"]["first_offload_wall_s"] * 1e6,
+         f"execs={w['lazy']['executables_total']}"),
+        ("bench_serving/first_offload/warmed",
+         w["warmed"]["first_offload_wall_s"] * 1e6,
+         f"execs={w['warmed']['executables_total']} "
+         f"steady_compiles={w['warmed']['steady_compiles']}"),
+        ("bench_serving/tile_bytes/device", 0.0,
+         f"per_offload={rep['cache']['device']['tile_bytes_per_offload']:.0f}"),
+        ("bench_serving/tile_bytes/host", 0.0,
+         f"per_offload={rep['cache']['host']['tile_bytes_per_offload']:.0f}"),
+        ("bench_serving/coalesce", 0.0,
+         f"wave {c['off']['mean_wave']:.2f}->{c['on']['mean_wave']:.2f} "
+         f"promoted={c['on']['promoted_jobs']}"),
+    ]
+    ctx["bench_serving"] = rows
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="fewer frames (CI sanity lane)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero unless all acceptance gates hold")
+    ap.add_argument("--out", type=Path, default=DEFAULT_OUT,
+                    help=f"output JSON path (default {DEFAULT_OUT})")
+    args = ap.parse_args(argv)
+    rep = run_bench(smoke=args.smoke, out=args.out, do_check=args.check)
+    w = rep["warmup"]
+    print(f"  first offload: lazy {w['lazy']['first_offload_wall_s']:.3f}s"
+          f" -> warmed {w['warmed']['first_offload_wall_s']:.3f}s "
+          f"({w['first_offload_speedup']:.1f}x); "
+          f"p95 {w['lazy']['p95_offload_wall_s']:.3f}s -> "
+          f"{w['warmed']['p95_offload_wall_s']:.3f}s")
+    print(f"  executables: lazy {w['lazy']['executables_total']} "
+          f"(all steady) vs warmed {w['warmed']['executables_total']} "
+          f"(steady {w['warmed']['steady_compiles']})")
+    for mode in ("device", "host"):
+        r = rep["cache"][mode]
+        print(f"  tiles/{mode}: {r['tile_bytes_per_offload']:.0f} B/offload"
+              f" (h2d {r['tile_bytes_h2d']}, d2h {r['tile_bytes_d2h']}, "
+              f"{r['offloads']} offloads)")
+    c = rep["coalesce"]
+    print(f"  coalesce: wave {c['off']['mean_wave']:.2f} -> "
+          f"{c['on']['mean_wave']:.2f}, promoted "
+          f"{c['on']['promoted_jobs']}, p95 e2e "
+          f"{c['off']['p95_e2e_s']:.3f}s -> {c['on']['p95_e2e_s']:.3f}s")
+    print(f"  promotion inference-F1 cost: "
+          f"{c['promotion_inference_f1_delta']}; scenario rendering-F1 "
+          f"deltas {c['rendering_f1_delta']}")
+    print(f"  check: {'OK' if rep['check']['passed'] else 'FAILED'} "
+          f"{rep['check']['errors']}")
+    return 0 if rep["check"]["passed"] or not args.check else 1
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main(sys.argv[1:]))

@@ -7,15 +7,16 @@ import time
 
 def main(argv=None) -> int:
     from benchmarks import (bench_backbone, bench_multiclient, bench_reuse,
-                            fig5_restoration, fig8_overall, fig9_delays,
-                            fig10_codec, fig11_overhead, fig12_ablation,
-                            roofline, table2_estimator)
+                            bench_serving, fig5_restoration, fig8_overall,
+                            fig9_delays, fig10_codec, fig11_overhead,
+                            fig12_ablation, roofline, table2_estimator)
 
     only = set(argv[1:]) if argv and len(argv) > 1 else None
     suites = [
         ("bench_backbone", bench_backbone),
         ("bench_multiclient", bench_multiclient),
         ("bench_reuse", bench_reuse),
+        ("bench_serving", bench_serving),
         ("fig5", fig5_restoration),
         ("table2", table2_estimator),
         ("fig8", fig8_overall),

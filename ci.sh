@@ -22,4 +22,11 @@ echo "== temporal-reuse ablation smoke =="
 python benchmarks/bench_reuse.py --smoke \
     --out benchmarks/artifacts/BENCH_reuse.smoke.json
 
+echo "== serving hot-path smoke (warmup / device cache / coalescing) =="
+# --check enforces the zero-stall gates: steady-state compile count 0
+# after warmup, zero tile bytes with the device-resident cache, waves
+# strictly larger with coalescing, scenario F1 deltas 0.000
+python benchmarks/bench_serving.py --smoke --check \
+    --out benchmarks/artifacts/BENCH_serving.smoke.json
+
 echo "CI OK"

@@ -242,6 +242,42 @@ def restore_full(tokens: jnp.ndarray, part: Partition,
     return out.reshape(B, part.grid_h * part.grid_w, D)
 
 
+# ---------------------------------------------------------------------------
+# device-resident feature-tile index ops (serving hot path)
+#
+# The FeatureCache behind temporal region reuse holds per-region
+# restoration-point tiles.  Keeping them as jax arrays and gathering /
+# refreshing with these jitted ops means a reuse-heavy serving loop ships
+# ZERO tile bytes over PCIe per offload: the d->h copy at capture and the
+# h->d re-upload at reuse both disappear (offload/simulator.ServerModel
+# counts the bytes either way — stats.tile_bytes_*).
+
+
+@jax.jit
+def gather_tiles(tiles: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    """(n_regions, d^2, w^2, D), (n,) -> (n, d^2, w^2, D), on device."""
+    return jnp.take(tiles, ids, axis=0)
+
+
+@jax.jit
+def take_sample_tiles(wave_tiles: jnp.ndarray, i) -> jnp.ndarray:
+    """(B, nR, d^2, w^2, D) wave capture -> sample ``i``'s (nR, ...) tiles
+    as a standalone device buffer (so the cache does not pin the whole
+    wave tensor)."""
+    return jnp.take(wave_tiles, i, axis=0)
+
+
+def _refresh(stale: jnp.ndarray, new: jnp.ndarray) -> jnp.ndarray:
+    return jax.lax.dynamic_update_slice(stale, new.astype(stale.dtype),
+                                        (0,) * stale.ndim)
+
+
+# full in-place overwrite: donating the stale buffer lets XLA write the
+# refreshed tiles straight into the old allocation instead of growing the
+# live set by one (n_regions, d^2, w^2, D) tensor per client per offload.
+refresh_tiles = jax.jit(_refresh, donate_argnums=(0,))
+
+
 def full_seq_to_grid(tokens: jnp.ndarray, part: Partition) -> jnp.ndarray:
     """Window-blocked full sequence (B, Hp*Wp, D) -> (B, Hp, Wp, D)."""
     B, _, D = tokens.shape

@@ -38,7 +38,7 @@ are built bucket-exact in ``n_reuse`` by the policy
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Tuple
+from typing import Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -134,6 +134,28 @@ def bucket_set(n_regions: int, n_buckets: int = 4) -> Tuple[int, ...]:
     if edges[-1] != n_regions:
         edges.append(n_regions)
     return tuple(edges)
+
+
+# batch-size buckets (serving hot path): waves are padded UP to the next
+# edge so the compiled-executable grid is bounded in B as well — without
+# this, every distinct wave size B is a fresh XLA trace at serve time.
+BATCH_BUCKETS = (1, 2, 4, 8)
+
+
+def batch_bucket(b: int, buckets: Sequence[int] = BATCH_BUCKETS) -> int:
+    """Round a wave size UP to the nearest batch bucket.
+
+    Padding up is the only safe direction: padded samples replicate a
+    real sample and are dropped from the decoded detections, so the wave
+    result is unchanged (pinned bit-exactly by tests — within one
+    executable, XLA results are invariant to pad content and row order).
+    """
+    assert b >= 1, f"empty wave: B={b}"
+    for edge in sorted(buckets):
+        if b <= edge:
+            return edge
+    raise ValueError(f"wave size {b} exceeds largest batch bucket "
+                     f"{max(buckets)}")
 
 
 # ---------------------------------------------------------------------------
@@ -243,3 +265,26 @@ def region_ids_to_mask(low_ids: np.ndarray, n_regions: int) -> np.ndarray:
     m = np.zeros((n_regions,), np.int32)
     m[np.asarray(low_ids, np.int64)] = 1
     return m
+
+
+# ---------------------------------------------------------------------------
+# per-sample id stacking for batched waves (host-side; the (B, n) rank of
+# mixed_res).  Every sample keeps its OWN layout; only the bucket counts
+# are shared across the wave.
+
+
+def stack_region_ids(masks: Sequence[np.ndarray], n_low: int
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-sample (B, nF) / (B, nL) region ids for a same-bucket wave."""
+    ids = [mask_to_region_ids(m, n_low) for m in masks]
+    return (np.stack([f for f, _ in ids]).astype(np.int32),
+            np.stack([l for _, l in ids]).astype(np.int32))
+
+
+def stack_plan_ids(plans: Sequence["RegionPlan"], n_low: int, n_reuse: int
+                   ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Per-sample (B, nF) / (B, nL) / (B, nR) ids for a same-bucket wave."""
+    ids = [plan_to_region_ids(p.states, n_low, n_reuse) for p in plans]
+    return (np.stack([f for f, _, _ in ids]).astype(np.int32),
+            np.stack([l for _, l, _ in ids]).astype(np.int32),
+            np.stack([r for _, _, r in ids]).astype(np.int32))

@@ -19,6 +19,7 @@ relative-position bias inside attention (absolute learned pos-emb only).
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from typing import Dict, Optional
 
 import jax
@@ -112,7 +113,7 @@ def embed_patches(cfg: ModelConfig, params, image: jnp.ndarray,
 # so training and compiled paths are unaffected).
 
 
-_POS_CACHE: Dict[tuple, tuple] = {}
+_POS_CACHE: "OrderedDict[tuple, tuple]" = OrderedDict()
 _POS_CACHE_MAX = 64
 
 
@@ -146,11 +147,12 @@ def packed_positions(pos: jnp.ndarray, part: Partition,
     # the cached entry pins ``pos`` so id() cannot be recycled; the
     # identity check guards against a stale module-level cache anyway.
     if hit is not None and hit[0] is pos:
+        _POS_CACHE.move_to_end(key)
         return hit[1]
     packed = (mr.pack_positions(pos, part, full_ids, low_ids) if mixed
               else mr.grid_to_full_seq(pos[None], part)[0])
-    if len(_POS_CACHE) >= _POS_CACHE_MAX:
-        _POS_CACHE.clear()
+    while len(_POS_CACHE) >= _POS_CACHE_MAX:
+        _POS_CACHE.popitem(last=False)    # LRU: evict the oldest only
     _POS_CACHE[key] = (pos, packed)
     return packed
 

@@ -15,12 +15,13 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import mixed_res as mr
 from repro.core import partition as pt
 from repro.core import vit_backbone as vb
 from repro.core.partition import Partition, RegionPlan
@@ -32,30 +33,47 @@ from repro.offload.codec import CodecDelayModel, MixedResCodec
 from repro.offload.estimator import ThroughputEstimator
 from repro.offload.optimizer import OffloadConfig, SystemState
 from repro.offload.tracker import LKTracker
-from repro.serve.request import FeatureCache
+from repro.serve.request import FeatureCache, ServingStats
 
 # payload scale: our 512x512 luma codec vs the paper's 1080p YUV frames
 SIZE_SCALE = (1920 * 1080) / (512 * 512)
 
 
 # ---------------------------------------------------------------------------
-# server model wrapper — jitted bucketed inference cache: one compiled
-# forward_det per (n_low bucket, beta), mirroring ServeEngine._get_prefill.
-# Shapes are static within a bucket so per-frame calls never retrace.
+# server model wrapper — the bucketed-executable serving hot path.
+#
+# EVERY inference (solo N=1, batched multi-client wave, padded or
+# coalesced) runs through ONE code path, infer_wave: per-sample (B, n)
+# region-id layouts, the wave padded UP to a batch bucket, against an
+# AOT-compiled executable keyed on the bounded grid
+#     (n_low bucket, n_reuse bucket, beta, capture point, B bucket).
+# warmup() compiles that grid off the critical path at replica start;
+# after it, a steady-state compile is telemetry (stats.steady_compiles)
+# that tests and bench_serving treat as a failure.
 
 
 class ServerModel:
-    """Server-side detector with a per-(n_low bucket, n_reuse bucket,
-    beta, capture point) compiled-fn cache.
+    """Server-side detector with an AOT-compiled bucketed-executable
+    grid and device-resident feature caches.
 
     ``n_low`` is rounded DOWN to a bucket edge (partition.bucket_n_low)
-    before it keys the cache, so a policy emitting varied masks compiles
-    at most a bounded set of forwards instead of one per distinct region
-    count; extra selected regions beyond the bucket stay full-res (the
-    accuracy-safe direction).  ``n_reuse`` is NOT re-bucketed here —
-    reuse plans must arrive bucket-exact (a reused region ships zero
-    payload bytes, so codec and server must agree on the transmitted
-    set; offload.optimizer.build_reuse_plan enforces it).
+    before it keys an executable, so a policy emitting varied masks
+    compiles at most a bounded set of forwards instead of one per
+    distinct region count; extra selected regions beyond the bucket stay
+    full-res (the accuracy-safe direction).  ``n_reuse`` is NOT
+    re-bucketed here — reuse plans must arrive bucket-exact (a reused
+    region ships zero payload bytes, so codec and server must agree on
+    the transmitted set; offload.optimizer.build_reuse_plan enforces
+    it).  Wave sizes are padded UP to ``b_buckets`` edges with copies of
+    sample 0; padded rows are dropped from the decoded detections and
+    never touch a FeatureCache, so within one executable the padding is
+    bit-invisible (pinned by tests).
+
+    ``device_cache=True`` keeps captured restoration-point tiles as
+    device arrays end to end: reuse gathers and cache refreshes are
+    jitted index ops (core.mixed_res) and ship ZERO tile bytes between
+    host and device per offload (stats.tile_bytes_*); ``False`` is the
+    legacy host-resident mode the bench compares against.
 
     ``backend`` selects the kernel backend for the backbone hot path
     (kernels.dispatch: "auto" | "pallas" | "xla").  ``jit=False`` runs
@@ -66,7 +84,9 @@ class ServerModel:
     def __init__(self, cfg: ModelConfig, params, top_k: int = 32,
                  score_thresh: float = 0.4,
                  backend: Optional[str] = "auto", jit: bool = True,
-                 n_buckets: int = 4):
+                 n_buckets: int = 4,
+                 b_buckets: Tuple[int, ...] = pt.BATCH_BUCKETS,
+                 device_cache: bool = True):
         self.cfg = cfg
         self.params = params
         self.part = vb.vit_partition(cfg)
@@ -75,68 +95,168 @@ class ServerModel:
         self.backend = backend
         self.jit = jit
         self.n_buckets = n_buckets
-        self._fns: Dict[Tuple[int, int, int, int], Callable] = {}
+        self.b_buckets = tuple(sorted(b_buckets))
+        self.device_cache = device_cache
+        self._fns: Dict[Tuple[int, int, int, int, int], Callable] = {}
+        self.stats = ServingStats()
 
     def bucket(self, n_low: int) -> int:
         return pt.bucket_n_low(n_low, self.part.n_regions, self.n_buckets)
+
+    def batch_bucket(self, b: int) -> int:
+        return pt.batch_bucket(b, self.b_buckets)
 
     def _decode(self, outs):
         from repro.core import det_head as dh
         return dh.decode_detections(self.cfg, outs, self.top_k,
                                     self.score_thresh)
 
+    # ------------------------------------------------------------------
+    # executable grid
+
+    def _build_fn(self, n_low: int, beta: int, n_reuse: int,
+                  capture: int) -> Callable:
+        cfg, backend = self.cfg, self.backend
+
+        def finish(outs):
+            if capture:
+                outs, tiles = outs
+                return self._decode(outs), tiles
+            return self._decode(outs)
+
+        if n_low == 0 and n_reuse == 0:
+            def fn(params, img):
+                return finish(vb.forward_det(cfg, params, img,
+                                             backend=backend,
+                                             capture_beta=capture))
+        elif n_reuse == 0:
+            def fn(params, img, full_ids, low_ids):
+                return finish(vb.forward_det(cfg, params, img, full_ids,
+                                             low_ids, beta,
+                                             backend=backend,
+                                             capture_beta=capture))
+        else:
+            def fn(params, img, full_ids, low_ids, reuse_ids,
+                   reuse_tiles):
+                return finish(vb.forward_det(cfg, params, img, full_ids,
+                                             low_ids, beta,
+                                             backend=backend,
+                                             reuse_ids=reuse_ids,
+                                             reuse_tiles=reuse_tiles,
+                                             capture_beta=capture))
+        return fn
+
+    def _arg_structs(self, n_low: int, n_reuse: int, batch: int) -> List:
+        """ShapeDtypeStructs of one executable's data arguments."""
+        part = self.part
+        H, W = self.cfg.vit.img_size
+        sds = [jax.ShapeDtypeStruct((batch, H, W, 3), jnp.float32)]
+        if n_low > 0 or n_reuse > 0:
+            n_full = part.n_regions - n_low - n_reuse
+            sds.append(jax.ShapeDtypeStruct((batch, n_full), jnp.int32))
+            sds.append(jax.ShapeDtypeStruct((batch, n_low), jnp.int32))
+        if n_reuse > 0:
+            sds.append(jax.ShapeDtypeStruct((batch, n_reuse), jnp.int32))
+            sds.append(jax.ShapeDtypeStruct(
+                (batch, n_reuse, part.windows_per_full_region,
+                 part.tokens_low_region, self.cfg.d_model), jnp.float32))
+        return sds
+
     def _get_fn(self, n_low: int, beta: int, n_reuse: int = 0,
-                capture: int = 0) -> Callable:
-        key = (n_low, n_reuse, beta, capture)
+                capture: int = 0, batch: int = 1) -> Callable:
+        key = (n_low, n_reuse, beta, capture, batch)
         if key not in self._fns:
-            cfg, backend = self.cfg, self.backend
-
-            def finish(outs):
-                if capture:
-                    outs, tiles = outs
-                    return self._decode(outs), tiles
-                return self._decode(outs)
-
-            if n_low == 0 and n_reuse == 0:
-                def fn(params, img):
-                    return finish(vb.forward_det(cfg, params, img,
-                                                 backend=backend,
-                                                 capture_beta=capture))
-            elif n_reuse == 0:
-                def fn(params, img, full_ids, low_ids):
-                    return finish(vb.forward_det(cfg, params, img, full_ids,
-                                                 low_ids, beta,
-                                                 backend=backend,
-                                                 capture_beta=capture))
-            else:
-                def fn(params, img, full_ids, low_ids, reuse_ids,
-                       reuse_tiles):
-                    return finish(vb.forward_det(cfg, params, img, full_ids,
-                                                 low_ids, beta,
-                                                 backend=backend,
-                                                 reuse_ids=reuse_ids,
-                                                 reuse_tiles=reuse_tiles,
-                                                 capture_beta=capture))
-            self._fns[key] = jax.jit(fn) if self.jit else fn
+            fn = self._build_fn(n_low, beta, n_reuse, capture)
+            if self.jit:
+                # AOT: lower + compile against the key's exact shapes.
+                # The executable can never silently retrace, so each
+                # cache miss is exactly one XLA compile — the telemetry
+                # below is the whole compile surface.
+                fn = jax.jit(fn).lower(
+                    self.params, *self._arg_structs(n_low, n_reuse,
+                                                    batch)).compile()
+                self.stats.note_compile(key)
+            self._fns[key] = fn
         return self._fns[key]
 
-    def infer(self, frame: np.ndarray, mask: Optional[np.ndarray] = None,
-              beta: int = 0) -> List[Dict]:
-        img = jnp.asarray(frame)[None]
-        n_low = 0 if mask is None else self.bucket(int(mask.sum()))
-        if n_low == 0:
-            fn = self._get_fn(0, 0)
-            boxes, scores, classes = fn(self.params, img)
-        else:
-            full_ids, low_ids = pt.mask_to_region_ids(mask, n_low)
-            fn = self._get_fn(n_low, beta)
-            boxes, scores, classes = fn(self.params, img,
-                                        jnp.asarray(full_ids),
-                                        jnp.asarray(low_ids))
-        return det.detections_from_arrays(boxes[0], scores[0], classes[0],
-                                          self.score_thresh)
+    def warmup(self, plan_space, batch_buckets: Optional[Tuple[int, ...]]
+               = None) -> int:
+        """AOT-compile the executable grid off the critical path.
+
+        ``plan_space``: iterable of (n_low bucket, n_reuse bucket, beta,
+        capture point) tuples — the plan shapes the deployment's config
+        space can emit (see :meth:`default_plan_space`).  Each is
+        compiled for every batch bucket.  Returns the number of
+        executables compiled; afterwards ``stats.steady_compiles``
+        counts every further compile (a steady-state stall).
+        """
+        t0 = time.perf_counter()
+        before = self.stats.compiles
+        space = dict.fromkeys(tuple(p) for p in plan_space)
+        for (n_low, n_reuse, beta, cap) in space:
+            if n_low == 0 and n_reuse == 0:
+                beta = 0                      # serve-time normalisation
+            for b in (batch_buckets or self.b_buckets):
+                self._get_fn(n_low, beta, n_reuse, cap, b)
+        if self.device_cache:
+            self._warm_tile_ops(space, batch_buckets or self.b_buckets)
+        return self.stats.finish_warmup(t0, before, time.perf_counter())
+
+    def _warm_tile_ops(self, space, batch_buckets) -> None:
+        """Compile the device-resident cache's jitted index ops
+        (mixed_res.gather_tiles / take_sample_tiles / refresh_tiles) for
+        every tile shape the plan space can produce — they sit on the
+        serving critical path too, and an unwarmed jit there would be a
+        steady-state stall invisible to ``stats`` (jax.jit caches are
+        global per function + shape, so one warm call covers serving)."""
+        part = self.part
+        tile = (part.n_regions, part.windows_per_full_region,
+                part.tokens_low_region, self.cfg.d_model)
+        dummy = jnp.zeros(tile, jnp.float32)
+        reuse_edges = {n_reuse for (_, n_reuse, _, _) in space if n_reuse}
+        for n_reuse in reuse_edges:
+            mr.gather_tiles(dummy, jnp.zeros((n_reuse,), jnp.int32))
+        if any(cap for (_, _, _, cap) in space):
+            mr.refresh_tiles(jnp.zeros(tile, jnp.float32), dummy)
+            for b in batch_buckets:
+                mr.take_sample_tiles(jnp.zeros((b,) + tile, jnp.float32),
+                                     np.int32(0))
+
+    def default_plan_space(self, betas: Sequence[int],
+                           reuse_edges: Sequence[int] = (0,),
+                           captures: Sequence[int] = (0,),
+                           full_res: bool = True) -> List[Tuple[int, int,
+                                                                int, int]]:
+        """The bounded plan grid a config space induces: every n_low
+        bucket edge x bucket-exact n_reuse x beta x capture point.
+        Mixed plans capture at their own beta when the session captures
+        at all (``captures`` lists the extra full-res capture points)."""
+        edges = pt.bucket_set(self.part.n_regions, self.n_buckets)
+        space: List[Tuple[int, int, int, int]] = []
+        if full_res:
+            for cap in captures:
+                space.append((0, 0, 0, cap))
+        for beta in betas:
+            if beta < 1:
+                continue
+            for n_low in edges:
+                for n_reuse in reuse_edges:
+                    if n_low + n_reuse > self.part.n_regions:
+                        continue
+                    if n_low == 0 and n_reuse == 0:
+                        continue
+                    caps = {0}
+                    if any(c > 0 for c in captures) or n_reuse > 0:
+                        caps.add(beta)        # sessions capture at beta
+                    for cap in sorted(caps):
+                        if n_reuse > 0 and cap == 0:
+                            continue          # reuse implies a session
+                        space.append((n_low, n_reuse, beta, cap))
+        return list(dict.fromkeys(space))
 
     # ------------------------------------------------------------------
+    # the one serving entry point
+
     def plan_buckets(self, plan: RegionPlan) -> Tuple[int, int]:
         """(bucketed n_low, bucket-exact n_reuse) for a plan."""
         n_reuse = plan.n_reuse
@@ -144,6 +264,132 @@ class ServerModel:
                                self.n_buckets) == n_reuse, \
             f"reuse plan not bucket-exact: n_reuse={n_reuse}"
         return self.bucket(plan.n_low), n_reuse
+
+    def infer_wave(self, frames: np.ndarray, plans: Sequence[RegionPlan],
+                   beta: int = 0,
+                   caches: Optional[Sequence[FeatureCache]] = None,
+                   frame_ids: Optional[Sequence[int]] = None,
+                   capture_beta: int = 0,
+                   n_low_override: Optional[int] = None
+                   ) -> List[List[Dict]]:
+        """Serve one wave (B >= 1 frames) through the bucketed grid.
+
+        frames: (B, H, W, 3); plans: per-sample RegionPlans sharing one
+        (n_low bucket, bucket-exact n_reuse) pair; caches/frame_ids: the
+        per-client FeatureCaches of sessionful (reuse/capture) jobs —
+        each sample splices from and refreshes its OWN cache, never
+        another's.  ``n_low_override``: run the wave at a SMALLER n_low
+        bucket than the plans' own (cross-bucket coalescing) — surplus
+        LOW selections revert to FULL, the accuracy-safe direction,
+        via partition.plan_to_region_ids' bucket trimming.
+
+        The wave is padded up to the next batch bucket with copies of
+        sample 0; padded rows are dropped from the decoded detections
+        and never touch a cache (within one executable the result is
+        bit-invariant to pad content — pinned by tests).
+        """
+        frames = np.asarray(frames)
+        B = frames.shape[0]
+        assert len(plans) == B and B >= 1
+        buckets = [self.plan_buckets(p) for p in plans]
+        n_reuse = buckets[0][1]
+        assert all(b[1] == n_reuse for b in buckets), \
+            f"wave mixes n_reuse buckets: {buckets}"
+        if n_low_override is None:
+            n_low = buckets[0][0]
+            assert all(b[0] == n_low for b in buckets), \
+                f"wave mixes n_low buckets: {buckets}"
+        else:
+            n_low = n_low_override
+            assert all(b[0] >= n_low for b in buckets), \
+                f"coalescing may only shrink n_low buckets: " \
+                f"{buckets} -> {n_low}"
+        beta_eff = beta if (n_low > 0 or n_reuse > 0) else 0
+        cap = 0
+        if caches is not None:
+            assert len(caches) == B
+            cap = beta if beta >= 1 else capture_beta
+        assert n_reuse == 0 or (caches is not None and beta >= 1), \
+            "REUSE regions need feature caches and a restoration point"
+
+        Bp = self.batch_bucket(B)
+        npad = Bp - B
+
+        def pad_rows(a: np.ndarray) -> np.ndarray:
+            if npad == 0:
+                return a
+            return np.concatenate([a, np.repeat(a[:1], npad, axis=0)])
+
+        imgs = jnp.asarray(pad_rows(frames))
+        reuse_rows: List[np.ndarray] = [np.zeros((0,), np.int32)] * B
+        if n_low == 0 and n_reuse == 0:
+            fn = self._get_fn(0, 0, 0, cap, Bp)
+            out = fn(self.params, imgs)
+        else:
+            full_b, low_b, reuse_b = pt.stack_plan_ids(plans, n_low,
+                                                       n_reuse)
+            full_b, low_b, reuse_b = (pad_rows(full_b), pad_rows(low_b),
+                                      pad_rows(reuse_b))
+            fn = self._get_fn(n_low, beta_eff, n_reuse, cap, Bp)
+            if n_reuse == 0:
+                out = fn(self.params, imgs, jnp.asarray(full_b),
+                         jnp.asarray(low_b))
+            else:
+                reuse_rows = [reuse_b[i] for i in range(B)]
+                tiles_in = self._gather_wave_tiles(caches, reuse_rows,
+                                                   npad)
+                out = fn(self.params, imgs, jnp.asarray(full_b),
+                         jnp.asarray(low_b), jnp.asarray(reuse_b),
+                         tiles_in)
+        if cap:
+            (boxes, scores, classes), tiles_out = out
+            self._refresh_caches(caches, tiles_out, reuse_rows, cap,
+                                 frame_ids if frame_ids is not None
+                                 else [-1] * B)
+        else:
+            boxes, scores, classes = out
+        self.stats.offloads += B
+        return [det.detections_from_arrays(boxes[i], scores[i], classes[i],
+                                           self.score_thresh)
+                for i in range(B)]
+
+    def _gather_wave_tiles(self, caches, reuse_rows: List[np.ndarray],
+                           npad: int) -> jnp.ndarray:
+        """(Bp, n_reuse, d^2, w^2, D) stacked per-sample reuse tiles.
+
+        Device-resident caches stack on device — zero h2d tile bytes;
+        host caches are uploaded (and accounted) here."""
+        gathered = [c.gather(r) for c, r in zip(caches, reuse_rows)]
+        gathered += [gathered[0]] * npad
+        if all(not isinstance(g, np.ndarray) for g in gathered):
+            return jnp.stack(gathered)
+        host = np.stack([np.asarray(g) for g in gathered])
+        self.stats.tile_bytes_h2d += host[:len(reuse_rows)].nbytes
+        return jnp.asarray(host)
+
+    def _refresh_caches(self, caches, tiles_out, reuse_rows, cap: int,
+                        frame_ids) -> None:
+        """Refresh each real sample's cache with its captured tiles.
+        Padded rows are never written back."""
+        B = len(reuse_rows)
+        if self.device_cache:
+            for i, c in enumerate(caches[:B]):
+                c.update(mr.take_sample_tiles(tiles_out, np.int32(i)),
+                         reuse_rows[i], cap, frame_ids[i])
+        else:
+            tiles_np = np.asarray(tiles_out)
+            self.stats.tile_bytes_d2h += tiles_np[:B].nbytes
+            for i, c in enumerate(caches[:B]):
+                c.update(tiles_np[i], reuse_rows[i], cap, frame_ids[i])
+
+    # ------------------------------------------------------------------
+    # N=1 conveniences (thin wrappers over infer_wave)
+
+    def infer(self, frame: np.ndarray, mask: Optional[np.ndarray] = None,
+              beta: int = 0) -> List[Dict]:
+        plan = (RegionPlan.from_mask(mask) if mask is not None
+                else RegionPlan(np.zeros((self.part.n_regions,), np.int8)))
+        return self.infer_wave(frame[None], [plan], beta)[0]
 
     def infer_plan(self, frame: np.ndarray, plan: RegionPlan,
                    beta: int = 0, cache: Optional[FeatureCache] = None,
@@ -157,36 +403,10 @@ class ServerModel:
         at ``beta`` for mixed forwards, at ``capture_beta`` for full-res
         ones — so the NEXT offload can reuse them.
         """
-        img = jnp.asarray(frame)[None]
-        n_low, n_reuse = self.plan_buckets(plan)
-        assert n_reuse == 0 or (cache is not None and beta >= 1), \
-            "REUSE regions need a feature cache and a restoration point"
-        cap = 0
-        if cache is not None:
-            cap = beta if beta >= 1 else capture_beta
-        if n_low == 0 and n_reuse == 0:
-            fn = self._get_fn(0, 0, 0, cap)
-            out = fn(self.params, img)
-            reuse_ids = np.zeros((0,), np.int32)
-        else:
-            full_ids, low_ids, reuse_ids = pt.plan_to_region_ids(
-                plan.states, n_low, n_reuse)
-            fn = self._get_fn(n_low, beta, n_reuse, cap)
-            if n_reuse == 0:
-                out = fn(self.params, img, jnp.asarray(full_ids),
-                         jnp.asarray(low_ids))
-            else:
-                tiles_in = jnp.asarray(cache.gather(reuse_ids))[None]
-                out = fn(self.params, img, jnp.asarray(full_ids),
-                         jnp.asarray(low_ids), jnp.asarray(reuse_ids),
-                         tiles_in)
-        if cap:
-            (boxes, scores, classes), tiles = out
-            cache.update(np.asarray(tiles[0]), reuse_ids, cap, frame_idx)
-        else:
-            boxes, scores, classes = out
-        return det.detections_from_arrays(boxes[0], scores[0], classes[0],
-                                          self.score_thresh)
+        return self.infer_wave(
+            frame[None], [plan], beta,
+            caches=None if cache is None else [cache],
+            frame_ids=[frame_idx], capture_beta=capture_beta)[0]
 
 
 # ---------------------------------------------------------------------------

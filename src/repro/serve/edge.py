@@ -12,14 +12,24 @@ One edge replica serves N concurrent device streams:
     ServeEngine wave-key fix).  Temporal reuse is sessionful: each
     client stream owns a :class:`~repro.serve.request.FeatureCache`
     whose restoration-point tiles are spliced in (REUSE regions) and
-    refreshed (captured tiles) per sample, never across samples.
+    refreshed (captured tiles) per sample, never across samples.  All
+    of it is the one bucketed-executable + padded-batch code path of
+    :meth:`ServerModel.infer_wave` — waves pad UP to a batch bucket, so
+    the executable set stays the bounded warmup grid.
   * :class:`MultiClientSimulation` multiplexes N (video, trace, policy)
     device streams onto that replica with an event-driven wave
-    scheduler.  Offloads queue at the edge; waves form from whatever
-    compatible jobs — same (n_low bucket, n_reuse bucket, beta, capture
-    point) — have arrived when the replica frees up; the resulting
-    queueing delay is folded into Eq. (2)'s end-to-end latency
-    (``parts["queue"]``).
+    scheduler.  Offloads queue at the edge (kept sorted on insert);
+    waves form from whatever compatible jobs — same (n_low bucket,
+    n_reuse bucket, beta, capture point) — have arrived when the
+    replica frees up; the resulting queueing delay is folded into
+    Eq. (2)'s end-to-end latency (``parts["queue"]``).  With
+    ``EdgeConfig.coalesce`` the scheduler additionally promotes a
+    pending job from a LARGER n_low bucket into the forming wave's
+    smaller bucket (surplus LOW regions revert to FULL — the
+    accuracy-safe direction partition.plan_to_region_ids already
+    implements) whenever a cost model built on ``backbone_flops`` and
+    ``batch_alpha`` says the queueing delay saved exceeds the extra
+    compute bought.
 
 The single-client :class:`~repro.offload.simulator.Simulation` is the
 N=1 case: both drive the same per-frame step methods
@@ -28,45 +38,30 @@ _render_tick); only the server call differs (dedicated vs. waved).
 """
 from __future__ import annotations
 
+import bisect
+import warnings
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import partition as pt
-from repro.core.partition import RegionPlan
-from repro.offload import detection as det
+from repro.core import vit_backbone as vb
+from repro.core.partition import (RegionPlan, stack_plan_ids,
+                                  stack_region_ids)
 from repro.offload.simulator import ServerModel, Simulation, SimResult
 from repro.serve.request import FeatureCache
 
-
-def stack_region_ids(masks: Sequence[np.ndarray], n_low: int
-                     ) -> Tuple[np.ndarray, np.ndarray]:
-    """Per-sample (B, nF) / (B, nL) region ids for a same-bucket wave."""
-    ids = [pt.mask_to_region_ids(m, n_low) for m in masks]
-    return (np.stack([f for f, _ in ids]).astype(np.int32),
-            np.stack([l for _, l in ids]).astype(np.int32))
-
-
-def stack_plan_ids(plans: Sequence[RegionPlan], n_low: int, n_reuse: int
-                   ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-    """Per-sample (B, nF) / (B, nL) / (B, nR) ids for a same-bucket wave."""
-    ids = [pt.plan_to_region_ids(p.states, n_low, n_reuse) for p in plans]
-    return (np.stack([f for f, _, _ in ids]).astype(np.int32),
-            np.stack([l for _, l, _ in ids]).astype(np.int32),
-            np.stack([r for _, _, r in ids]).astype(np.int32))
+__all__ = ["BatchedServerModel", "EdgeConfig", "EdgeStats",
+           "MultiClientSimulation", "stack_plan_ids", "stack_region_ids"]
 
 
 class BatchedServerModel(ServerModel):
     """Edge replica shared by many clients.
 
-    Extends :class:`ServerModel` with :meth:`infer_batch`: frames with
-    the same (bucketed n_low, beta) but DIFFERENT masks run as one
-    batched forward through the PR-1 backend dispatch layer.  The
-    inherited ``_fns`` cache is reused — jit re-specializes per wave
-    shape (B and id rank included), so B=1 solo calls and batched waves
-    share one compiled-fn cache entry per (n_low bucket, beta).
+    Kept as the multi-client API surface; both entry points are thin
+    adapters over the inherited :meth:`ServerModel.infer_wave`, so solo
+    B=1 calls and batched waves share one executable grid (and one
+    warmup) per (n_low bucket, n_reuse bucket, beta, capture, B bucket).
     """
 
     def infer_batch(self, frames: np.ndarray,
@@ -83,22 +78,13 @@ class BatchedServerModel(ServerModel):
         assert len(masks) == B
         n_lows = [0 if m is None else self.bucket(int(m.sum()))
                   for m in masks]
-        n_low = n_lows[0]
-        assert all(n == n_low for n in n_lows), \
+        assert all(n == n_lows[0] for n in n_lows), \
             f"wave mixes n_low buckets: {n_lows}"
-        imgs = jnp.asarray(frames)
-        if n_low == 0:
-            fn = self._get_fn(0, 0)
-            boxes, scores, classes = fn(self.params, imgs)
-        else:
-            full_ids, low_ids = stack_region_ids(masks, n_low)
-            fn = self._get_fn(n_low, beta)
-            boxes, scores, classes = fn(self.params, imgs,
-                                        jnp.asarray(full_ids),
-                                        jnp.asarray(low_ids))
-        return [det.detections_from_arrays(boxes[i], scores[i], classes[i],
-                                           self.score_thresh)
-                for i in range(B)]
+        plans = [RegionPlan.from_mask(m) if m is not None and n_lows[0] > 0
+                 else RegionPlan(np.zeros((self.part.n_regions,), np.int8))
+                 for m in masks]
+        return self.infer_wave(frames, plans, beta,
+                               n_low_override=n_lows[0])
 
     def infer_plans(self, frames: np.ndarray,
                     plans: Sequence[RegionPlan],
@@ -116,39 +102,11 @@ class BatchedServerModel(ServerModel):
         sessions never see each other's features.  Returns per-frame
         detection lists.
         """
-        B = frames.shape[0]
-        assert len(plans) == len(caches) == len(frame_ids) == B
-        buckets = [self.plan_buckets(p) for p in plans]
-        n_low, n_reuse = buckets[0]
-        assert all(b == (n_low, n_reuse) for b in buckets), \
-            f"wave mixes (n_low, n_reuse) buckets: {buckets}"
-        cap = beta if beta >= 1 else capture_beta
-        imgs = jnp.asarray(frames)
-        reuse_b = np.zeros((B, 0), np.int32)
-        if n_low == 0 and n_reuse == 0:
-            fn = self._get_fn(0, 0, 0, cap)
-            out = fn(self.params, imgs)
-        else:
-            full_b, low_b, reuse_b = stack_plan_ids(plans, n_low, n_reuse)
-            fn = self._get_fn(n_low, beta, n_reuse, cap)
-            if n_reuse == 0:
-                out = fn(self.params, imgs, jnp.asarray(full_b),
-                         jnp.asarray(low_b))
-            else:
-                tiles = jnp.asarray(np.stack(
-                    [c.gather(reuse_b[i]) for i, c in enumerate(caches)]))
-                out = fn(self.params, imgs, jnp.asarray(full_b),
-                         jnp.asarray(low_b), jnp.asarray(reuse_b), tiles)
-        if cap:
-            (boxes, scores, classes), tiles_out = out
-            tiles_np = np.asarray(tiles_out)
-            for i, c in enumerate(caches):
-                c.update(tiles_np[i], reuse_b[i], cap, frame_ids[i])
-        else:
-            boxes, scores, classes = out
-        return [det.detections_from_arrays(boxes[i], scores[i], classes[i],
-                                           self.score_thresh)
-                for i in range(B)]
+        assert len(plans) == len(caches) == len(frame_ids) == \
+            frames.shape[0]
+        return self.infer_wave(frames, plans, beta, caches=caches,
+                               frame_ids=frame_ids,
+                               capture_beta=capture_beta)
 
 
 # ---------------------------------------------------------------------------
@@ -165,8 +123,15 @@ class EdgeConfig:
     # of the solo inference delay: service = t_inf * (1 + alpha * (B-1)).
     # alpha < 1 is the batching win; alpha = 1 degenerates to sequential.
     # (wave compatibility buckets come from the server's n_buckets —
-    # they MUST match infer_batch's bucketing, so there is no knob here)
+    # they MUST match infer_wave's bucketing, so there is no knob here)
     batch_alpha: float = 0.35
+    # cross-bucket wave coalescing: promote a pending job from a larger
+    # n_low bucket into the forming wave's smaller bucket when the
+    # queueing delay saved exceeds the extra compute (cost model below)
+    coalesce: bool = False
+    # keep full per-job detection lists in EdgeStats.jobs (benchmarks
+    # opt in; long simulations must not grow without bound)
+    keep_dets: bool = False
 
 
 @dataclass
@@ -175,6 +140,7 @@ class EdgeStats:
     wave_sizes: List[int] = field(default_factory=list)
     queue_delays: List[float] = field(default_factory=list)
     jobs: List[Dict] = field(default_factory=list)
+    promoted: int = 0                     # jobs coalesced across buckets
 
     @property
     def mean_wave_size(self) -> float:
@@ -204,9 +170,26 @@ class MultiClientSimulation:
             "clients must share a frame rate"
         self.pending: List[Tuple[int, Dict]] = []   # (client_idx, job)
         self.free_at = 0.0                          # replica busy horizon
+        # a wave can never exceed the largest batch bucket — padding
+        # only rounds UP, so an oversized wave would have no executable
+        self.max_wave = min(self.ec.max_batch, max(self.server.b_buckets))
+        if self.max_wave < self.ec.max_batch:
+            warnings.warn(
+                f"EdgeConfig.max_batch={self.ec.max_batch} exceeds the "
+                f"server's largest batch bucket "
+                f"{max(self.server.b_buckets)}; waves are capped at "
+                f"{self.max_wave} — raise b_buckets to serve bigger "
+                f"waves", stacklevel=2)
         self.stats = EdgeStats()
 
     # ------------------------------------------------------------------
+    def _enqueue(self, ci: int, job: Dict) -> None:
+        """Insert a job keeping ``pending`` sorted by edge arrival time —
+        the scheduler never re-sorts (satellite fix: the old per-tick
+        sort was O(n log n) on every frame even when nothing arrived)."""
+        bisect.insort(self.pending, (ci, job),
+                      key=lambda cj: cj[1]["arrival"])
+
     def _job_key(self, job: Dict) -> Tuple[int, int, int, int]:
         """Wave compatibility: (n_low bucket, n_reuse bucket, beta,
         capture point).  Sessionful (reuse-capable) jobs capture
@@ -225,25 +208,74 @@ class MultiClientSimulation:
     def _client_of(self, job: Dict) -> int:
         return job["_client"]
 
+    # ------------------------------------------------------------------
+    # cross-bucket coalescing cost model
+
+    def _wave_service_s(self, wave: List[Tuple[int, Dict]]) -> float:
+        """Modelled service time of a wave (decode + amortised infer)."""
+        B = len(wave)
+        t_dec = max(j["t_dec"] for _, j in wave)
+        t_inf = max(j.get("t_inf_exec", j["t_inf"]) for _, j in wave)
+        if B > 1:
+            t_inf = t_inf * (1.0 + self.ec.batch_alpha * (B - 1))
+        return t_dec + t_inf
+
+    def _try_promote(self, job: Dict, jk: Tuple[int, int, int, int],
+                     hk: Tuple[int, int, int, int],
+                     wave: List[Tuple[int, Dict]]) -> bool:
+        """Coalesce ``job`` (bucket key ``jk``) into a wave of key ``hk``.
+
+        Only a SHRINK of the n_low bucket is ever legal: the surplus LOW
+        selections revert to FULL (partition.plan_to_region_ids), which
+        costs compute but never accuracy.  The reuse set is bucket-exact
+        (zero bytes were shipped for it) and the restoration/capture
+        points shape the executable, so those must match outright.
+        Promotes iff the queueing delay the job avoids (waiting out this
+        wave's service) exceeds the extra compute it buys: the
+        flops-scaled inference-time increase plus its ``batch_alpha``
+        marginal share of the wave.
+        """
+        n_low_w, n_reuse_w, beta_w, cap_w = hk
+        n_low_j, n_reuse_j, beta_j, cap_j = jk
+        if not (n_reuse_j == n_reuse_w and beta_j == beta_w
+                and cap_j == cap_w and n_low_j > n_low_w):
+            return False
+        cfg = self.server.cfg
+        f_own = vb.backbone_flops(cfg, n_low_j, beta_j, n_reuse_j)
+        f_new = vb.backbone_flops(cfg, n_low_w, beta_w, n_reuse_w)
+        t_inf_new = job["t_inf"] * (f_new / f_own)
+        extra = (t_inf_new - job["t_inf"]) \
+            + self.ec.batch_alpha * t_inf_new
+        saved = self._wave_service_s(wave)
+        if saved <= extra:
+            return False
+        job["t_inf_exec"] = t_inf_new
+        job["promoted_n_low"] = n_low_j
+        self.stats.promoted += 1
+        return True
+
+    # ------------------------------------------------------------------
     def _run_wave(self, wave: List[Tuple[int, Dict]], t_start: float,
                   key: Tuple[int, int, int, int]) -> float:
         """Batched inference + Eq. (2) bookkeeping for one wave.
         Returns the time the replica frees up."""
         n_low, n_reuse, beta, cap = key
         imgs = np.stack([j["decoded"] for _, j in wave])
+        plans = [j["plan"] for _, j in wave]
         if cap or n_reuse > 0:
-            dets = self.server.infer_plans(
-                imgs, [j["plan"] for _, j in wave], beta,
-                [self.clients[ci].feature_cache for ci, _ in wave],
-                [j["frame"] for _, j in wave],
-                capture_beta=cap if beta < 1 else 0)
+            dets = self.server.infer_wave(
+                imgs, plans, beta,
+                caches=[self.clients[ci].feature_cache for ci, _ in wave],
+                frame_ids=[j["frame"] for _, j in wave],
+                capture_beta=cap if beta < 1 else 0,
+                n_low_override=n_low)
         else:
-            masks = [j["mask"] if n_low > 0 else None for _, j in wave]
-            dets = self.server.infer_batch(imgs, masks, beta)
+            dets = self.server.infer_wave(imgs, plans, beta,
+                                          n_low_override=n_low)
 
         B = len(wave)
         t_dec = max(j["t_dec"] for _, j in wave)
-        t_inf = max(j["t_inf"] for _, j in wave)
+        t_inf = max(j.get("t_inf_exec", j["t_inf"]) for _, j in wave)
         if B > 1:
             t_inf = t_inf * (1.0 + self.ec.batch_alpha * (B - 1))
         done = t_start + t_dec + t_inf
@@ -254,9 +286,12 @@ class MultiClientSimulation:
             self.clients[ci]._finish_offload(job, d, queue_delay=q,
                                              t_dec=t_dec, t_inf=t_inf)
             self.stats.queue_delays.append(q)
-            self.stats.jobs.append({"client": ci, "frame": job["frame"],
-                                    "wave_size": B, "queue": q,
-                                    "e2e": job["e2e"], "dets": d})
+            rec = {"client": ci, "frame": job["frame"], "wave_size": B,
+                   "queue": q, "e2e": job["e2e"],
+                   "promoted": "promoted_n_low" in job}
+            if self.ec.keep_dets:
+                rec["dets"] = d
+            self.stats.jobs.append(rec)
         return done
 
     def _drain(self, now: float) -> None:
@@ -264,12 +299,14 @@ class MultiClientSimulation:
 
         The replica serves one wave at a time.  When it frees up, the
         earliest-arrived pending job seeds a wave; compatible jobs
-        (same (n_low bucket, beta)) that have ALREADY arrived join it,
-        up to ``max_batch``.
+        (same (n_low bucket, n_reuse bucket, beta, capture)) that have
+        ALREADY arrived join it, up to ``max_batch`` — plus, with
+        coalescing on, arrived jobs from LARGER n_low buckets whose
+        promotion the cost model approves.  ``pending`` is kept sorted
+        on insert (:meth:`_enqueue`); the loop only ever removes jobs,
+        and the kept remainder is a subsequence, so order is preserved
+        without re-sorting.
         """
-        # one sort per drain: the loop only ever REMOVES jobs, and the
-        # kept remainder is a subsequence, so order is preserved
-        self.pending.sort(key=lambda cj: cj[1]["arrival"])
         while self.pending:
             head = self.pending[0]
             t_start = max(self.free_at, head[1]["arrival"])
@@ -278,9 +315,15 @@ class MultiClientSimulation:
             hk = self._job_key(head[1])
             wave, rest = [head], []
             for cj in self.pending[1:]:
-                if (self.ec.batched and len(wave) < self.ec.max_batch
-                        and cj[1]["arrival"] <= t_start
-                        and self._job_key(cj[1]) == hk):
+                joinable = (self.ec.batched
+                            and len(wave) < self.max_wave
+                            and cj[1]["arrival"] <= t_start)
+                if joinable:
+                    jk = self._job_key(cj[1])
+                    joinable = jk == hk or (
+                        self.ec.coalesce
+                        and self._try_promote(cj[1], jk, hk, wave))
+                if joinable:
                     wave.append(cj)
                 else:
                     rest.append(cj)
@@ -315,7 +358,7 @@ class MultiClientSimulation:
                     # arrival at the edge: encode + uplink transfer
                     job["arrival"] = now + job["t_enc"] + job["t_up"]
                     job["_client"] = ci
-                    self.pending.append((ci, job))
+                    self._enqueue(ci, job)
                 c._render_tick(fi, results[ci])
 
         # end of all clips: run the edge dry and flush in-flight offloads

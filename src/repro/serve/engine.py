@@ -46,7 +46,8 @@ from repro.core.partition import bucket_n_low
 from repro.models import registry
 from repro.models.config import ModelConfig
 from repro.models.transformer import LOCAL, ParallelCtx
-from repro.serve.request import FeatureCache, Request, Response
+from repro.serve.request import (FeatureCache, Request, Response,
+                                 ServingStats)
 
 
 @dataclass
@@ -61,6 +62,11 @@ class ServeConfig:
     n_low_buckets: int = 4
     # staleness bound K for per-client reuse sessions
     reuse_max_age: int = 4
+    # wave sizes are padded UP to these edges so the prefill/decode
+    # executable set is bounded in B too (padded slots replicate slot 0
+    # and are masked out of the responses) — the same batch-bucketing
+    # contract as ServerModel.infer_wave on the vision edge
+    b_buckets: Tuple[int, ...] = (1, 2, 4, 8)
 
 
 class ServeEngine:
@@ -77,10 +83,26 @@ class ServeEngine:
         self._prefill_fns: Dict = {}
         self._decode_fns: Dict = {}
         self.wave_latencies: List[float] = []
+        # compile-surface telemetry: every executable is keyed on static
+        # shapes (prompt bucket, n_low, n_reuse, beta, B bucket), so a
+        # key miss is exactly one XLA compile; after warmup() a miss is
+        # a steady-state stall (stats.steady_compiles)
+        self.stats = ServingStats()
+        if self.sc.max_batch > max(self.sc.b_buckets):
+            import warnings
+            warnings.warn(
+                f"ServeConfig.max_batch={self.sc.max_batch} exceeds the "
+                f"largest batch bucket {max(self.sc.b_buckets)}; waves "
+                f"are capped at the bucket — raise b_buckets to serve "
+                f"bigger waves", stacklevel=2)
         # per-client reuse sessions (bookkeeping-only FeatureCaches:
         # the seq prefill transmits every token, so only the staleness
         # state machine applies here)
         self.sessions: Dict[int, FeatureCache] = {}
+
+    def batch_bucket(self, b: int) -> int:
+        from repro.core.partition import batch_bucket
+        return batch_bucket(b, self.sc.b_buckets)
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -127,54 +149,131 @@ class ServeEngine:
                          f"{self.sc.buckets[-1]}")
 
     # ------------------------------------------------------------------
-    def _get_prefill(self, T: int, n_low: int, beta: int,
-                     n_reuse: int = 0) -> Callable:
-        key = ("prefill", T, n_low, n_reuse, beta)
-        if key not in self._prefill_fns:
-            cfg, ctx = self.cfg, self.ctx
+    def _build_prefill(self, beta: int, mixed: bool) -> Callable:
+        cfg, ctx = self.cfg, self.ctx
+        if not mixed:
+            def fn(params, tokens, state):
+                hidden, state, _ = registry.prefill(
+                    cfg, params, {"tokens": tokens}, state, ctx)
+                from repro.models import transformer as tfm
+                logits = tfm.logits_from_hidden(cfg, params,
+                                                hidden[:, -1:, :], ctx)
+                return logits, state
+        else:
+            def fn(params, tokens, state, mix_idx, pos_mix, restore_idx):
+                pack = {"mix_idx": mix_idx, "pos_mix": pos_mix,
+                        "restore_idx": restore_idx}
+                hidden, state, _ = smr.mixed_prefill(
+                    cfg, params, tokens, pack, beta, state, ctx)
+                from repro.models import transformer as tfm
+                logits = tfm.logits_from_hidden(cfg, params,
+                                                hidden[:, -1:, :], ctx)
+                return logits, state
+        return fn
 
-            if (n_low == 0 and n_reuse == 0) or beta == 0:
-                def fn(params, tokens, state):
-                    hidden, state, _ = registry.prefill(
-                        cfg, params, {"tokens": tokens}, state, ctx)
-                    from repro.models import transformer as tfm
-                    logits = tfm.logits_from_hidden(cfg, params,
-                                                    hidden[:, -1:, :], ctx)
-                    return logits, state
-            else:
-                def fn(params, tokens, state, mix_idx, pos_mix, restore_idx):
-                    pack = {"mix_idx": mix_idx, "pos_mix": pos_mix,
-                            "restore_idx": restore_idx}
-                    hidden, state, _ = smr.mixed_prefill(
-                        cfg, params, tokens, pack, beta, state, ctx)
-                    from repro.models import transformer as tfm
-                    logits = tfm.logits_from_hidden(cfg, params,
-                                                    hidden[:, -1:, :], ctx)
-                    return logits, state
+    def _get_prefill(self, T: int, n_low: int, beta: int,
+                     n_reuse: int = 0, batch: int = 1) -> Callable:
+        key = ("prefill", T, n_low, n_reuse, beta, batch)
+        if key not in self._prefill_fns:
+            mixed = (n_low > 0 or n_reuse > 0) and beta > 0
+            fn = self._build_prefill(beta, mixed)
+            # every argument shape is pinned by the key (tokens (B, T),
+            # state from init_decode_state(B), pack sizes from the
+            # bucket counts), so this jit traces exactly once
             self._prefill_fns[key] = jax.jit(fn, donate_argnums=(2,))
+            self.stats.note_compile(key)
         return self._prefill_fns[key]
 
-    def _get_decode(self) -> Callable:
-        if "decode" not in self._decode_fns:
+    def _get_decode(self, batch: int = 1) -> Callable:
+        key = ("decode", batch)
+        if key not in self._decode_fns:
             cfg, ctx = self.cfg, self.ctx
 
+            # pos is a TRACED int32 scalar: the old static_argnums pos
+            # recompiled the decode step at EVERY token position — a
+            # per-step XLA stall in steady-state serving.  All decode
+            # paths index caches dynamically, so one executable serves
+            # every position.
             def fn(params, token, pos, state):
                 return registry.decode_step(cfg, params, token, pos, state,
                                             ctx)
-            self._decode_fns["decode"] = jax.jit(fn, donate_argnums=(3,),
-                                                 static_argnums=(2,))
-        return self._decode_fns["decode"]
+            self._decode_fns[key] = jax.jit(fn, donate_argnums=(3,))
+            self.stats.note_compile(key)
+        return self._decode_fns[key]
+
+    # ------------------------------------------------------------------
+    def _pack_for(self, T: int, n_low: int, n_reuse: int,
+                  mask: Optional[np.ndarray] = None) -> Dict[str,
+                                                             np.ndarray]:
+        """Build the (shared) seq pack for a wave — or, with no mask, a
+        representative pack of the same static shapes (warmup)."""
+        part = smr.seq_partition(self.cfg, T)
+        if mask is None:
+            mask = np.zeros((part.n_spans,), np.int32)
+            mask[:n_low + n_reuse] = 1
+        return smr.build_seq_pack(mask, n_low + n_reuse, part)
+
+    def warmup(self, prompt_lens: Optional[Tuple[int, ...]] = None,
+               plan_space: Optional[List[Tuple[int, int, int]]] = None,
+               batch_buckets: Optional[Tuple[int, ...]] = None) -> int:
+        """AOT-compile the serving executables off the critical path.
+
+        ``prompt_lens``: prompt buckets to warm (default: all of
+        ``sc.buckets``); ``plan_space``: (n_low, n_reuse, beta) mixed-
+        prefill shapes on top of the always-warmed plain prefill;
+        ``batch_buckets``: wave sizes (default ``sc.b_buckets`` up to
+        ``max_batch``).  Returns the number of executables compiled;
+        afterwards ``stats.steady_compiles`` counts every further
+        compile (a steady-state stall).
+        """
+        t0 = time.perf_counter()
+        before = self.stats.compiles
+        cfg, sc = self.cfg, self.sc
+        lens = tuple(prompt_lens or sc.buckets)
+        if batch_buckets is None:
+            # buckets a wave can actually land on: up to the bucket that
+            # covers max_batch (a B=max_batch wave pads to that edge)
+            cover = self.batch_bucket(min(sc.max_batch,
+                                          max(sc.b_buckets)))
+            batch_buckets = tuple(b for b in sc.b_buckets if b <= cover)
+        batches = tuple(batch_buckets)
+        for B in batches:
+            state = registry.init_decode_state(cfg, B, sc.max_len,
+                                               sc.cache_dtype)
+            decode = self._get_decode(B)
+            decode(self.params, jnp.zeros((B, 1), jnp.int32),
+                   jnp.asarray(lens[0], jnp.int32), state)
+            for T in lens:
+                toks = jnp.zeros((B, T), jnp.int32)
+                state = registry.init_decode_state(cfg, B, sc.max_len,
+                                                   sc.cache_dtype)
+                self._get_prefill(T, 0, 0, 0, B)(self.params, toks, state)
+                for (n_low, n_reuse, beta) in (plan_space or ()):
+                    if (n_low == 0 and n_reuse == 0) or beta == 0:
+                        continue
+                    pack = self._pack_for(T, n_low, n_reuse)
+                    state = registry.init_decode_state(cfg, B, sc.max_len,
+                                                       sc.cache_dtype)
+                    self._get_prefill(T, n_low, beta, n_reuse, B)(
+                        self.params, jnp.zeros((B, T), jnp.int32), state,
+                        jnp.asarray(pack["mix_idx"]),
+                        jnp.asarray(pack["pos_mix"]),
+                        jnp.asarray(pack["restore_idx"]))
+        return self.stats.finish_warmup(t0, before, time.perf_counter())
 
     # ------------------------------------------------------------------
     def _form_wave(self) -> Optional[List[Request]]:
         if not self.queue:
             return None
         # group by the head request's wave key; single pass keeps queue
-        # order and avoids the O(n^2) remove-per-request drain
+        # order and avoids the O(n^2) remove-per-request drain.  Waves
+        # are additionally capped at the largest batch bucket — padding
+        # only rounds UP, so a larger wave would have no executable.
+        cap = min(self.sc.max_batch, max(self.sc.b_buckets))
         hk = self._wave_key(self.queue[0])
         wave, rest = [], []
         for r in self.queue:
-            if len(wave) < self.sc.max_batch and self._wave_key(r) == hk:
+            if len(wave) < cap and self._wave_key(r) == hk:
                 wave.append(r)
             else:
                 rest.append(r)
@@ -215,18 +314,23 @@ class ServeEngine:
         cfg, sc = self.cfg, self.sc
         T, n_low, n_reuse, beta, _ = self._wave_key(wave[0])
         B = len(wave)
+        # pad the wave up to a batch bucket: slot 0 is replicated into
+        # the padded slots, which are masked out of the responses and
+        # decode as done from step 0 — so the executable set stays the
+        # bounded (T x n_low x n_reuse x beta x B bucket) warmup grid
+        Bp = self.batch_bucket(B)
 
-        toks = np.zeros((B, T), np.int32)
+        toks = np.zeros((Bp, T), np.int32)
         for i, r in enumerate(wave):
             p = np.asarray(r.prompt, np.int32)
             toks[i, :len(p)] = p
             if len(p) < T:          # right-pad with the last prompt token
                 toks[i, len(p):] = p[-1] if len(p) else 0
+        toks[B:] = toks[0]
 
-        state = registry.init_decode_state(cfg, B, sc.max_len,
+        state = registry.init_decode_state(cfg, Bp, sc.max_len,
                                            sc.cache_dtype)
         if (n_low > 0 or n_reuse > 0) and beta > 0:
-            part = smr.seq_partition(cfg, T)
             r0 = wave[0]
             span_mask = (r0.low_span_mask if r0.low_span_mask is not None
                          else r0.reuse_span_mask)
@@ -238,14 +342,14 @@ class ServeEngine:
             mask = np.zeros((n_spans,), np.int32)
             mask[r0.low_spans(n_low)] = 1
             mask[self._effective_reuse(r0)] = 1
-            pack = smr.build_seq_pack(mask, n_low + n_reuse, part)
-            fn = self._get_prefill(T, n_low, beta, n_reuse)
+            pack = self._pack_for(T, n_low, n_reuse, mask)
+            fn = self._get_prefill(T, n_low, beta, n_reuse, Bp)
             logits, state = fn(self.params, jnp.asarray(toks), state,
                                jnp.asarray(pack["mix_idx"]),
                                jnp.asarray(pack["pos_mix"]),
                                jnp.asarray(pack["restore_idx"]))
         else:
-            fn = self._get_prefill(T, 0, 0)
+            fn = self._get_prefill(T, 0, 0, 0, Bp)
             logits, state = fn(self.params, jnp.asarray(toks), state)
 
         # refresh reuse sessions: effective reuse spans age by one, every
@@ -257,13 +361,14 @@ class ServeEngine:
                 self.session(r.client_id, n_sp).note(
                     self._effective_reuse(r), r.beta, int(now))
 
-        decode = self._get_decode()
+        decode = self._get_decode(Bp)
         resp = {r.rid: Response(rid=r.rid, slot=i, prefill_done=now)
                 for i, r in enumerate(wave)}
-        done = np.zeros((B,), bool)
+        done = np.zeros((Bp,), bool)
+        done[B:] = True                   # padded slots never emit tokens
         max_new = max(r.max_new_tokens for r in wave)
         tok = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1),
-                         np.int32).reshape(B, 1)
+                         np.int32).reshape(Bp, 1)
 
         for i, r in enumerate(wave):
             resp[r.rid].tokens.append(int(tok[i, 0]))
@@ -274,10 +379,10 @@ class ServeEngine:
             pos = T + step - 1
             if pos >= sc.max_len or done.all():
                 break
-            logits, state = decode(self.params, jnp.asarray(tok), pos,
-                                   state)
+            logits, state = decode(self.params, jnp.asarray(tok),
+                                   jnp.asarray(pos, jnp.int32), state)
             tok = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1),
-                             np.int32).reshape(B, 1)
+                             np.int32).reshape(Bp, 1)
             for i, r in enumerate(wave):
                 if done[i] or len(resp[r.rid].tokens) >= r.max_new_tokens:
                     done[i] = True

@@ -14,9 +14,54 @@ bucket reuse spans.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
 import numpy as np
+
+
+@dataclass
+class ServingStats:
+    """Replica-side serving telemetry: the compile surface and tile
+    traffic of the bucketed-executable hot path.
+
+    ``warmed`` flips once :meth:`warmup` has compiled the executable
+    grid; every compile after that is a steady-state stall — exactly the
+    p95 spike warmup exists to remove — so tests and bench_serving treat
+    ``steady_compiles > 0`` as a failure, not a perf footnote.  The tile
+    byte counters account the host<->device traffic of the temporal-
+    reuse FeatureCache (zero in device-resident mode).
+    """
+    compiles: int = 0
+    steady_compiles: int = 0
+    steady_compile_keys: List[Tuple] = field(default_factory=list)
+    warmed: bool = False
+    warmup_wall_s: float = 0.0
+    offloads: int = 0
+    tile_bytes_d2h: int = 0
+    tile_bytes_h2d: int = 0
+
+    @property
+    def tile_bytes(self) -> int:
+        return self.tile_bytes_d2h + self.tile_bytes_h2d
+
+    def tile_bytes_per_offload(self) -> float:
+        return self.tile_bytes / max(self.offloads, 1)
+
+    def note_compile(self, key: Tuple) -> None:
+        """Record one executable compile; after warmup it counts as a
+        steady-state stall."""
+        self.compiles += 1
+        if self.warmed:
+            self.steady_compiles += 1
+            self.steady_compile_keys.append(key)
+
+    def finish_warmup(self, t0: float, compiles_before: int,
+                      now: float) -> int:
+        """Close a warmup pass: flip ``warmed``, account its wall time,
+        return the number of executables it compiled."""
+        self.warmed = True
+        self.warmup_wall_s += now - t0
+        return self.compiles - compiles_before
 
 
 @dataclass
@@ -25,11 +70,15 @@ class FeatureCache:
 
     ``tiles``: (n_regions, d^2, w^2, D) window-blocked per-region tiles
     (None until the first capture, and always None for bookkeeping-only
-    sessions such as the sequence engine's).  ``beta``: the restoration
-    point the tiles were captured at — reuse is only valid at the SAME
-    restoration point.  ``age[j]``: consecutive offloads region j has
-    been reused; at ``max_age`` (K) the region is forced back to
-    FULL/LOW.
+    sessions such as the sequence engine's).  Tiles are stored in
+    whatever residence the server hands them: the serving hot path keeps
+    them as DEVICE (jax) arrays so reuse gathers and capture refreshes
+    never cross PCIe (core.mixed_res.gather_tiles / refresh_tiles, the
+    stale buffer donated on update); host numpy tiles remain supported
+    as the legacy / debugging mode.  ``beta``: the restoration point the
+    tiles were captured at — reuse is only valid at the SAME restoration
+    point.  ``age[j]``: consecutive offloads region j has been reused;
+    at ``max_age`` (K) the region is forced back to FULL/LOW.
     """
     n_regions: int
     max_age: int = 4
@@ -44,6 +93,11 @@ class FeatureCache:
             self.age = np.zeros((self.n_regions,), np.int32)
 
     # ------------------------------------------------------------------
+    @property
+    def tiles_on_device(self) -> bool:
+        return self.tiles is not None and not isinstance(self.tiles,
+                                                         np.ndarray)
+
     def eligible(self, beta: int) -> np.ndarray:
         """(n_regions,) bool: regions whose cached tile may be reused for
         an offload restoring at ``beta`` (cache warm, same restoration
@@ -53,8 +107,14 @@ class FeatureCache:
         return self.age < self.max_age
 
     def gather(self, reuse_ids: np.ndarray) -> np.ndarray:
-        """(n_reuse, d^2, w^2, D) tiles for the plan's reuse set."""
+        """(n_reuse, d^2, w^2, D) tiles for the plan's reuse set, in the
+        cache's residence (a device gather never touches the host)."""
         assert self.tiles is not None, "cache holds no tiles yet"
+        if self.tiles_on_device:
+            from repro.core import mixed_res as mr
+            import jax.numpy as jnp
+            return mr.gather_tiles(self.tiles,
+                                   jnp.asarray(reuse_ids, jnp.int32))
         return self.tiles[np.asarray(reuse_ids, np.int64)]
 
     # ------------------------------------------------------------------
@@ -70,10 +130,25 @@ class FeatureCache:
         self.frame = int(frame)
         self.warm = True
 
-    def update(self, tiles: np.ndarray, reuse_ids: np.ndarray,
+    def update(self, tiles, reuse_ids: np.ndarray,
                beta: int, frame: int) -> None:
-        """Full refresh after a forward that captured tiles."""
-        self.tiles = np.asarray(tiles)
+        """Full refresh after a forward that captured tiles.
+
+        Device tiles stay on device; when the cache already holds a
+        same-shaped device buffer the refresh donates the stale buffer
+        (mixed_res.refresh_tiles) so steady-state reuse serving never
+        grows the live set.  Host (numpy) tiles keep the legacy
+        host-resident behaviour.
+        """
+        if isinstance(tiles, np.ndarray):
+            self.tiles = tiles
+        else:
+            if (self.tiles_on_device and self.tiles.shape == tiles.shape
+                    and self.tiles.dtype == tiles.dtype):
+                from repro.core import mixed_res as mr
+                self.tiles = mr.refresh_tiles(self.tiles, tiles)
+            else:
+                self.tiles = tiles
         self.note(reuse_ids, beta, frame)
 
 

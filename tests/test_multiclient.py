@@ -180,12 +180,13 @@ def test_clients_batched_matches_sequential(setup):
                 for i in range(3)]
 
     done = []
-    mc_b = MultiClientSimulation(clients(), server, EdgeConfig(batched=True),
+    mc_b = MultiClientSimulation(clients(), server,
+                                 EdgeConfig(batched=True, keep_dets=True),
                                  on_complete=lambda ci, job:
                                  done.append((ci, job["frame"])))
     res_b = mc_b.run()
     mc_s = MultiClientSimulation(clients(), server,
-                                 EdgeConfig(batched=False))
+                                 EdgeConfig(batched=False, keep_dets=True))
     res_s = mc_s.run()
 
     assert max(mc_b.stats.wave_sizes) >= 2       # co-batching happened

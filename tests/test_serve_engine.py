@@ -235,6 +235,90 @@ def test_reuse_wave_runs_through_model(setup):
     assert engine.sessions[1].age[0] == 1
 
 
+def test_batch_bucket_covers_max_batch():
+    eng = ServeEngine(None, None, ServeConfig(max_batch=3, buckets=(T,)))
+    assert eng.batch_bucket(1) == 1
+    assert eng.batch_bucket(3) == 4      # B=3 waves pad to the 4 bucket
+
+
+@pytest.mark.slow
+def test_engine_warmup_steady_state_zero_compiles(setup):
+    """After warmup over (prompt bucket x plan space x B buckets),
+    serving identical-shaped waves never compiles: the prefill/decode
+    executable set is exactly the warmup grid."""
+    cfg, params = setup
+    rng = np.random.default_rng(5)
+    span = cfg.mixed_res.window * cfg.mixed_res.downsample
+    n_spans = T // span
+    mask = np.zeros(n_spans, np.int32)
+    mask[:2] = 1
+    engine = ServeEngine(cfg, params, ServeConfig(
+        max_batch=3, max_len=T + NEW + 8, buckets=(T,)))
+    n_low = engine._wave_key(Request(
+        rid=-1, prompt=np.zeros(T, np.int32), low_span_mask=mask,
+        beta=2))[1]
+    n = engine.warmup(plan_space=[(n_low, 0, 2)])
+    assert n == engine.stats.compiles > 0
+    assert engine.stats.warmed
+
+    for rid in range(3):
+        engine.submit(Request(
+            rid=rid, prompt=rng.integers(0, cfg.vocab_size, (T,))
+            .astype(np.int32), max_new_tokens=NEW,
+            low_span_mask=mask if rid else None, beta=2 if rid else 0))
+    responses = engine.run()
+    assert len(responses) == 3
+    assert engine.stats.steady_compiles == 0, \
+        engine.stats.steady_compile_keys
+
+
+@pytest.mark.slow
+def test_engine_padded_wave_tokens_bit_identical_to_solo(setup):
+    """B=3 wave padded to the B=4 executable decodes token-identically
+    to solo runs through the same executable (single batch bucket)."""
+    cfg, params = setup
+    rng = np.random.default_rng(6)
+    prompts = [rng.integers(0, cfg.vocab_size, (T,)).astype(np.int32)
+               for _ in range(3)]
+    sc = ServeConfig(max_batch=4, max_len=T + NEW + 8, buckets=(T,),
+                     b_buckets=(4,))
+
+    def solo(prompt):
+        eng = ServeEngine(cfg, params, sc)
+        eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=NEW))
+        return eng.run()[0].tokens
+
+    expected = [solo(p) for p in prompts]
+    engine = ServeEngine(cfg, params, sc)
+    for rid, p in enumerate(prompts):
+        engine.submit(Request(rid=rid, prompt=p, max_new_tokens=NEW))
+    responses = {r.rid: r for r in engine.run()}
+    assert len(engine.wave_latencies) == 1          # one padded wave
+    for rid in range(3):
+        assert responses[rid].tokens == expected[rid]
+
+
+@pytest.mark.slow
+def test_decode_executable_is_position_independent(setup):
+    """The decode step compiles ONCE per batch bucket — the old static
+    pos argument recompiled at every token position (a steady-state
+    stall the warmup could never cover)."""
+    cfg, params = setup
+    rng = np.random.default_rng(7)
+    engine = ServeEngine(cfg, params, ServeConfig(
+        max_batch=2, max_len=T + NEW + 8, buckets=(T,)))
+    engine.submit(Request(rid=0, prompt=rng.integers(
+        0, cfg.vocab_size, (T,)).astype(np.int32), max_new_tokens=NEW))
+    engine.run()
+    assert len(engine._decode_fns) == 1
+    before = engine.stats.compiles
+    engine.submit(Request(rid=1, prompt=rng.integers(
+        0, cfg.vocab_size, (T,)).astype(np.int32),
+        max_new_tokens=NEW + 2))       # more positions, same executable
+    engine.run()
+    assert engine.stats.compiles == before
+
+
 @pytest.mark.slow
 def test_same_nlow_different_masks_match_solo(setup):
     """Regression for the cross-request wave-mask corruption: two

@@ -1,0 +1,472 @@
+"""Zero-stall serving hot path: AOT-warmed batch-bucketed executables,
+padded waves, device-resident feature caches, cross-bucket coalescing.
+
+Bit-identity contract pinned here: within ONE executable (same batch
+bucket), XLA results are invariant to pad content and row order — so a
+padded wave matches a solo run EXACTLY whenever both land on the same
+B bucket.  Tests that need bit-identity therefore configure a single
+batch bucket; cross-bucket comparisons are ULP-level only and use the
+repo's usual tolerances.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.vitdet_l import SIM
+from repro.core import partition as pt
+from repro.core import vit_backbone as vb
+from repro.core.partition import REUSE, RegionPlan
+from repro.data import synthetic_video as sv
+from repro.data.network_traces import make_trace
+from repro.models import registry
+from repro.offload.simulator import Policy, ServerModel, Simulation
+from repro.serve.edge import (BatchedServerModel, EdgeConfig,
+                              MultiClientSimulation)
+from repro.serve.request import FeatureCache
+
+PATCH = SIM.vit.patch_size
+SIZE = SIM.vit.img_size[0]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = registry.init_params(SIM, jax.random.PRNGKey(0))
+    return params, vb.vit_partition(SIM)
+
+
+def _frames(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.uniform(0, 1, (n, SIZE, SIZE, 3)).astype(np.float32)
+
+
+def _mask(part, lows):
+    m = np.zeros(part.n_regions, np.int32)
+    m[list(lows)] = 1
+    return m
+
+
+# ---------------------------------------------------------------------------
+# batch buckets
+
+
+def test_batch_bucket_rounds_up():
+    assert pt.batch_bucket(1) == 1
+    assert pt.batch_bucket(2) == 2
+    assert pt.batch_bucket(3) == 4
+    assert pt.batch_bucket(5) == 8
+    assert pt.batch_bucket(3, (2, 6)) == 6
+    with pytest.raises(ValueError):
+        pt.batch_bucket(9)
+    with pytest.raises(AssertionError):
+        pt.batch_bucket(0)
+
+
+# ---------------------------------------------------------------------------
+# AOT warmup + steady-state compile telemetry
+
+
+def test_warmup_then_steady_state_has_zero_compiles(setup):
+    """After warmup over the plan space, serving never compiles: no new
+    ``_fns`` entries and ``stats.steady_compiles == 0`` — a steady-state
+    compile is a test failure, not a silent p95 spike."""
+    params, part = setup
+    server = ServerModel(SIM, params, top_k=8, score_thresh=0.0,
+                         b_buckets=(1, 2, 4))
+    space = server.default_plan_space(betas=(2,), reuse_edges=(0, 4),
+                                      captures=(0, 2))
+    n = server.warmup(space)
+    assert n == len(server._fns) == server.stats.compiles
+    n_fns = len(server._fns)
+
+    frames = _frames(4)
+    cache = FeatureCache(part.n_regions, max_age=4)
+    plan_low = RegionPlan.from_mask(_mask(part, range(4)))
+    # solo full-res, solo mixed, mixed wave, capture + reuse session
+    server.infer(frames[0])
+    server.infer(frames[0], _mask(part, range(4)), beta=2)
+    server.infer_wave(frames[:3], [plan_low] * 3, beta=2)
+    server.infer_plan(frames[0], plan_low, beta=2, cache=cache,
+                      frame_idx=0)
+    states = plan_low.states.copy()
+    states[8:12] = REUSE
+    server.infer_plan(frames[1], RegionPlan(states), beta=2, cache=cache,
+                      frame_idx=1)
+    assert len(server._fns) == n_fns
+    assert server.stats.steady_compiles == 0
+    assert server.stats.warmed and server.stats.warmup_wall_s > 0
+
+
+def test_unwarmed_shape_is_counted_as_steady_compile(setup):
+    params, _ = setup
+    server = ServerModel(SIM, params, top_k=8, score_thresh=0.0)
+    server.warmup([(0, 0, 0, 0)], batch_buckets=(1,))
+    assert server.stats.steady_compiles == 0
+    server.infer(_frames(1)[0], _mask(vb.vit_partition(SIM), range(4)),
+                 beta=2)
+    assert server.stats.steady_compiles == 1
+    assert server.stats.steady_compile_keys == [(4, 0, 2, 0, 1)]
+
+
+# ---------------------------------------------------------------------------
+# padded waves: bit-identical to solo through the shared executable
+
+
+def test_padded_wave_bit_identical_to_solo(setup):
+    """A B=3 wave padded to the B=4 executable produces detections
+    BIT-identical to solo B=1 runs (which pad to the same executable:
+    single batch bucket)."""
+    params, part = setup
+    server = ServerModel(SIM, params, top_k=8, score_thresh=0.0,
+                         b_buckets=(4,))
+    frames = _frames(3, seed=1)
+    plans = [RegionPlan.from_mask(_mask(part, range(s, s + 4)))
+             for s in (0, 4, 8)]
+    wave = server.infer_wave(frames, plans, beta=2)
+    for i in range(3):
+        solo = server.infer_wave(frames[i][None], [plans[i]], beta=2)[0]
+        assert wave[i] == solo            # dict floats compare bitwise
+    # padding compiled exactly one executable for all four calls
+    assert server.stats.compiles == 1
+
+
+def test_padded_wave_close_to_other_bucket_solo(setup):
+    """Across DIFFERENT batch buckets results agree to tolerance (the
+    repo's usual batched-vs-solo contract)."""
+    params, part = setup
+    server = ServerModel(SIM, params, top_k=8, score_thresh=0.0)
+    frames = _frames(3, seed=2)
+    plans = [RegionPlan.from_mask(_mask(part, range(4)))] * 3
+    wave = server.infer_wave(frames, plans, beta=2)       # B bucket 4
+    for i in range(3):
+        solo = server.infer_wave(frames[i][None], [plans[i]],
+                                 beta=2)[0]               # B bucket 1
+        assert len(wave[i]) == len(solo)
+        a = np.array([d["box"] for d in wave[i]], np.float64)
+        b = np.array([d["box"] for d in solo], np.float64)
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=0.1)
+
+
+def test_padded_reuse_wave_never_touches_pad_caches(setup):
+    """A padded sessionful wave updates exactly the B real caches, and
+    each sample matches its solo run bit-identically."""
+    params, part = setup
+    server = ServerModel(SIM, params, top_k=8, score_thresh=0.0,
+                         b_buckets=(4,))
+    frames = _frames(3, seed=3)
+    warm_plan = RegionPlan.from_mask(_mask(part, range(4)))
+
+    def warm():
+        caches = [FeatureCache(part.n_regions, max_age=4)
+                  for _ in range(3)]
+        for i, c in enumerate(caches):
+            server.infer_plan(frames[i], warm_plan, beta=2, cache=c,
+                              frame_idx=0)
+        return caches
+
+    plans = []
+    for sel in ((8, 9), (10, 11), (12, 13)):
+        states = warm_plan.states.copy()
+        states[list(sel)] = REUSE
+        plans.append(RegionPlan(states))
+    # bucket-exact reuse needs n_reuse on a bucket edge (step = 4 for 16
+    # regions): use 4 reused regions per plan
+    plans = []
+    for sel in ((8, 9, 10, 11), (9, 10, 11, 12), (10, 11, 12, 13)):
+        states = warm_plan.states.copy()
+        states[list(sel)] = REUSE
+        plans.append(RegionPlan(states))
+
+    caches_w = warm()
+    wave = server.infer_wave(frames, plans, beta=2, caches=caches_w,
+                             frame_ids=[1, 1, 1])
+    caches_s = warm()
+    for i in range(3):
+        solo = server.infer_plan(frames[i], plans[i], beta=2,
+                                 cache=caches_s[i], frame_idx=1)
+        assert wave[i] == solo
+        np.testing.assert_array_equal(np.asarray(caches_w[i].tiles),
+                                      np.asarray(caches_s[i].tiles))
+        assert caches_w[i].age.tolist() == caches_s[i].age.tolist()
+
+
+# ---------------------------------------------------------------------------
+# cross-bucket coalescing
+
+
+def test_coalesced_job_bit_identical_to_solo_at_promoted_bucket(setup):
+    """n_low_override runs a larger-bucket plan under the wave's smaller
+    bucket (surplus LOW -> FULL) and matches the solo run of the same
+    promoted configuration bit-identically."""
+    params, part = setup
+    server = ServerModel(SIM, params, top_k=8, score_thresh=0.0,
+                         b_buckets=(2,))
+    frames = _frames(2, seed=4)
+    plan_a = RegionPlan.from_mask(_mask(part, range(4)))      # bucket 4
+    plan_b = RegionPlan.from_mask(_mask(part, range(8)))      # bucket 8
+    wave = server.infer_wave(frames, [plan_a, plan_b], beta=2,
+                             n_low_override=4)
+    solo_b = server.infer_wave(frames[1][None], [plan_b], beta=2,
+                               n_low_override=4)[0]
+    assert wave[1] == solo_b
+    solo_a = server.infer_wave(frames[0][None], [plan_a], beta=2)[0]
+    assert wave[0] == solo_a
+
+
+def test_override_may_only_shrink(setup):
+    params, part = setup
+    server = ServerModel(SIM, params, top_k=8, score_thresh=0.0)
+    plan = RegionPlan.from_mask(_mask(part, range(4)))
+    with pytest.raises(AssertionError):
+        server.infer_wave(_frames(1), [plan], beta=2, n_low_override=8)
+
+
+class TwoBucketPolicy(Policy):
+    """Fixed-layout policy whose n_low differs per client — the
+    mixed-bucket workload coalescing exists for."""
+    name = "twobucket"
+    use_tracker = True
+
+    def __init__(self, lows, beta=2, n_regions=16):
+        self.lows = list(lows)
+        self.beta = beta
+        self.n_regions = n_regions
+
+    def decide(self, sim, frame_idx):
+        m = np.zeros(self.n_regions, np.int32)
+        m[self.lows] = 1
+        return {"mask": m, "quality": 85, "beta": self.beta}
+
+
+def _mixed_bucket_clients(server, part, n_frames=12):
+    slow = lambda beta, n_d, n_r=0: 0.5      # force queueing
+    clients = []
+    for i, lows in enumerate((range(4), range(8), range(4, 8),
+                              range(8, 16))):
+        frames, _ = sv.make_clip("walkS", n_frames, size=SIZE,
+                                 seed=10 + i)
+        gt = [server.infer(f) for f in frames]
+        pol = TwoBucketPolicy(lows, n_regions=part.n_regions)
+        clients.append(Simulation(frames, gt,
+                                  make_trace("4g", i, duration_s=60),
+                                  pol, server, part, PATCH, fps=10,
+                                  inf_delay=slow))
+    return clients
+
+
+@pytest.mark.slow
+def test_coalescing_grows_waves_and_matches_solo(setup):
+    """Mixed-bucket multi-client workload: coalescing promotes jobs,
+    grows the mean wave, and every promoted job's detections equal the
+    solo run of its promoted configuration bit-exactly (single batch
+    bucket -> shared executables)."""
+    params, part = setup
+    server = BatchedServerModel(SIM, params, top_k=8, score_thresh=0.0,
+                                b_buckets=(4,))
+    completed = {}
+
+    def keep(ci, job):
+        completed[(ci, job["frame"])] = job
+
+    mc_on = MultiClientSimulation(
+        _mixed_bucket_clients(server, part), server,
+        EdgeConfig(batched=True, coalesce=True), on_complete=keep)
+    mc_on.run()
+    mc_off = MultiClientSimulation(
+        _mixed_bucket_clients(server, part), server,
+        EdgeConfig(batched=True, coalesce=False))
+    mc_off.run()
+
+    assert mc_on.stats.promoted > 0
+    assert mc_on.stats.mean_wave_size > mc_off.stats.mean_wave_size
+
+    promoted = [j for j in completed.values() if "promoted_n_low" in j]
+    assert promoted
+    for job in promoted:
+        n_low_exec = server.bucket(job["n_d"])
+        solo = server.infer_wave(
+            job["decoded"][None], [job["plan"]], job["beta"],
+            n_low_override=min(4, n_low_exec))[0]
+        assert job["dets"] == solo
+
+
+# ---------------------------------------------------------------------------
+# device-resident feature caches
+
+
+def test_device_cache_ships_zero_tile_bytes(setup):
+    params, part = setup
+    frames = _frames(3, seed=5)
+
+    def reuse_run(device_cache):
+        server = ServerModel(SIM, params, top_k=8, score_thresh=0.0,
+                             device_cache=device_cache)
+        cache = FeatureCache(part.n_regions, max_age=4)
+        plan = RegionPlan.from_mask(_mask(part, range(4)))
+        server.infer_plan(frames[0], plan, beta=2, cache=cache,
+                          frame_idx=0)
+        states = plan.states.copy()
+        states[8:12] = REUSE
+        for fi in (1, 2):
+            server.infer_plan(frames[fi], RegionPlan(states), beta=2,
+                              cache=cache, frame_idx=fi)
+        return server, cache
+
+    dev_server, dev_cache = reuse_run(True)
+    assert dev_cache.tiles_on_device
+    assert dev_server.stats.tile_bytes == 0
+    assert dev_server.stats.tile_bytes_per_offload() == 0.0
+
+    host_server, host_cache = reuse_run(False)
+    assert not host_cache.tiles_on_device
+    assert host_server.stats.tile_bytes_d2h > 0    # capture copies out
+    assert host_server.stats.tile_bytes_h2d > 0    # reuse re-uploads
+
+
+def test_device_and_host_caches_agree(setup):
+    """Residence is a pure transport choice: detections and cache
+    contents agree across modes."""
+    params, part = setup
+    frames = _frames(2, seed=6)
+    plan = RegionPlan.from_mask(_mask(part, range(4)))
+    states = plan.states.copy()
+    states[8:12] = REUSE
+    outs = {}
+    for mode in (True, False):
+        server = ServerModel(SIM, params, top_k=8, score_thresh=0.0,
+                             device_cache=mode)
+        cache = FeatureCache(part.n_regions, max_age=4)
+        server.infer_plan(frames[0], plan, beta=2, cache=cache,
+                          frame_idx=0)
+        dets = server.infer_plan(frames[1], RegionPlan(states), beta=2,
+                                 cache=cache, frame_idx=1)
+        outs[mode] = (dets, np.asarray(cache.tiles))
+    assert len(outs[True][0]) == len(outs[False][0])
+    a = np.array([d["box"] for d in outs[True][0]], np.float64)
+    b = np.array([d["box"] for d in outs[False][0]], np.float64)
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=0.1)
+    np.testing.assert_allclose(outs[True][1], outs[False][1],
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_feature_cache_update_donates_stale_device_buffer():
+    cache = FeatureCache(n_regions=4, max_age=2)
+    t0 = jnp.ones((4, 1, 4, 8), jnp.float32)
+    cache.update(t0, np.zeros((0,), np.int32), beta=2, frame=0)
+    assert cache.tiles_on_device
+    stale = cache.tiles
+    cache.update(stale * 2.0, np.zeros((0,), np.int32), beta=2, frame=1)
+    # the stale buffer was donated into the refresh
+    with pytest.raises(Exception):
+        np.asarray(stale)
+    assert float(np.asarray(cache.tiles).mean()) == 2.0
+
+
+# ---------------------------------------------------------------------------
+# scheduler satellites: sorted-on-insert queue, bounded EdgeStats.jobs
+
+
+def _fake_job(arrival, n_d=4, frame=0):
+    return {"arrival": arrival, "n_d": n_d, "n_r": 0, "beta": 2,
+            "frame": frame, "_client": 0, "t_dec": 0.0, "t_inf": 0.1}
+
+
+def test_pending_queue_sorted_on_insert(setup):
+    params, part = setup
+    server = BatchedServerModel(SIM, params, top_k=8, score_thresh=0.0)
+    frames, _ = sv.make_clip("walkS", 2, size=SIZE, seed=0)
+    sim = Simulation(frames, [[], []], make_trace("4g", 0, duration_s=10),
+                     TwoBucketPolicy(range(4), n_regions=part.n_regions),
+                     server, part, PATCH, fps=10)
+    mc = MultiClientSimulation([sim], server)
+    order = []
+    mc._run_wave = lambda wave, t_start, key: (
+        order.extend(j["frame"] for _, j in wave) or (t_start + 0.01))
+    for i, arr in enumerate([0.5, 0.1, 0.9, 0.3]):
+        mc._enqueue(0, _fake_job(arr, frame=i))
+    assert [j["arrival"] for _, j in mc.pending] == [0.1, 0.3, 0.5, 0.9]
+    mc._drain(float("inf"))
+    # waves form in ARRIVAL order, not insertion order
+    assert order[0] == 1 and set(order) == {0, 1, 2, 3}
+
+
+def test_wave_never_exceeds_largest_batch_bucket(setup):
+    """max_batch larger than the biggest batch bucket must not form an
+    unservable wave (padding only rounds UP)."""
+    params, part = setup
+    server = BatchedServerModel(SIM, params, top_k=8, score_thresh=0.0,
+                                b_buckets=(2,))
+    frames, _ = sv.make_clip("walkS", 2, size=SIZE, seed=2)
+    sim = Simulation(frames, [[], []], make_trace("4g", 0, duration_s=10),
+                     TwoBucketPolicy(range(4), n_regions=part.n_regions),
+                     server, part, PATCH, fps=10)
+    mc = MultiClientSimulation([sim], server, EdgeConfig(max_batch=8))
+    assert mc.max_wave == 2
+    sizes = []
+    mc._run_wave = lambda wave, t_start, key: (
+        sizes.append(len(wave)) or (t_start + 0.01))
+    for i in range(5):
+        mc._enqueue(0, _fake_job(0.1 * i, frame=i))
+    mc._drain(float("inf"))
+    assert sizes and max(sizes) <= 2 and sum(sizes) == 5
+
+
+def test_edge_stats_dets_opt_in(setup):
+    params, part = setup
+    server = BatchedServerModel(SIM, params, top_k=8, score_thresh=0.0)
+
+    def one_client():
+        frames, _ = sv.make_clip("walkS", 6, size=SIZE, seed=1)
+        gt = [server.infer(f) for f in frames]
+        return [Simulation(frames, gt, make_trace("4g", 0, duration_s=30),
+                           TwoBucketPolicy(range(4),
+                                           n_regions=part.n_regions),
+                           server, part, PATCH, fps=10)]
+
+    mc = MultiClientSimulation(one_client(), server, EdgeConfig())
+    mc.run()
+    assert mc.stats.jobs and all("dets" not in j for j in mc.stats.jobs)
+    mc2 = MultiClientSimulation(one_client(), server,
+                                EdgeConfig(keep_dets=True))
+    mc2.run()
+    assert mc2.stats.jobs and all("dets" in j for j in mc2.stats.jobs)
+
+
+# ---------------------------------------------------------------------------
+# positional-embedding cache LRU
+
+
+def test_pos_cache_evicts_lru_not_everything():
+    part = pt.make_partition(16, 16, window=2, downsample=2)  # 16 regions
+    pos = jnp.asarray(np.random.default_rng(0).normal(
+        size=(16, 16, 8)).astype(np.float32))
+    saved = dict(vb._POS_CACHE)
+    vb._POS_CACHE.clear()
+    try:
+        layouts = []
+        for i in range(16):
+            for j in range(i + 1, 16):
+                layouts.append((i, j))
+        layouts = layouts[:vb._POS_CACHE_MAX + 8]
+        for (i, j) in layouts:
+            states = np.zeros(16, np.int8)
+            states[[i, j]] = 1            # LOW
+            f, l, _ = pt.plan_to_region_ids(states, 2, 0)
+            vb.packed_positions(pos, part, jnp.asarray(f), jnp.asarray(l))
+        assert len(vb._POS_CACHE) == vb._POS_CACHE_MAX
+        # the most recent layout survives; the oldest was evicted alone
+        keys = list(vb._POS_CACHE)
+        assert len(keys) == vb._POS_CACHE_MAX
+        first_victims = layouts[:len(layouts) - vb._POS_CACHE_MAX]
+        assert len(first_victims) == 8
+        # re-touching the newest entry is a hit (no growth, stays last)
+        i, j = layouts[-1]
+        states = np.zeros(16, np.int8)
+        states[[i, j]] = 1
+        f, l, _ = pt.plan_to_region_ids(states, 2, 0)
+        vb.packed_positions(pos, part, jnp.asarray(f), jnp.asarray(l))
+        assert len(vb._POS_CACHE) == vb._POS_CACHE_MAX
+        assert list(vb._POS_CACHE)[-1] == keys[-1]
+    finally:
+        vb._POS_CACHE.clear()
+        vb._POS_CACHE.update(saved)
