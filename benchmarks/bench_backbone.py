@@ -5,9 +5,12 @@ Emits ``BENCH_backbone.json`` with:
 
   * ``backbone``: us/call of the jitted ``forward_features`` for the
     full-resolution workload and the mixed-resolution workload at every
-    restoration point beta, for both kernel backends ("xla" and
-    "pallas"; off-TPU the pallas numbers are INTERPRET mode — a
-    correctness path, not a perf claim, flagged by ``meta.interpret``);
+    restoration point beta.  Off-TPU the default is the XLA backend
+    ONLY: pallas runs in INTERPRET mode there — a correctness path
+    ~2-3x slower that only inflates bench wall time — so it must be
+    opted back in with ``--backends pallas,xla`` (on TPU both backends
+    are benched by default; ``meta.backends``/``meta.interpret`` record
+    what ran);
   * ``server_infer``: us/call of ``ServerModel.infer`` on a fig5-style
     workload (object-free regions downsampled, per-frame calls) with the
     jitted bucketed (n_low, beta) cache vs the same model run eagerly —
@@ -37,7 +40,14 @@ from repro.offload import motion as mo
 from repro.offload.simulator import ServerModel
 
 DEFAULT_OUT = Path(__file__).resolve().parent.parent / "BENCH_backbone.json"
-BACKENDS = ("xla", "pallas")
+
+
+def default_backends() -> tuple:
+    """Both backends on TPU; XLA only elsewhere (pallas-interpret is a
+    parity path ~2-3x slower on CPU — opt in with --backends)."""
+    if jax.default_backend() == "tpu":
+        return ("xla", "pallas")
+    return ("xla",)
 
 
 def _timer(fn, *args, reps: int = 5, warmup: int = 1) -> float:
@@ -52,7 +62,7 @@ def _timer(fn, *args, reps: int = 5, warmup: int = 1) -> float:
     return float(np.median(ts) * 1e6)
 
 
-def bench_backbone(params, img, part, reps: int) -> list:
+def bench_backbone(params, img, part, reps: int, backends) -> list:
     """forward_features us/call: full-res + mixed at each beta, per backend."""
     rows = []
     n_low = part.n_regions // 2
@@ -60,7 +70,7 @@ def bench_backbone(params, img, part, reps: int) -> list:
     mask[:n_low] = 1
     fi, li = (jnp.asarray(x) for x in pt.mask_to_region_ids(mask, n_low))
 
-    for backend in BACKENDS:
+    for backend in backends:
         full_fn = jax.jit(
             lambda p, i, _b=backend: vb.forward_features(SIM, p, i,
                                                          backend=_b))
@@ -109,9 +119,11 @@ def bench_server_infer(params, n_frames: int, reps: int) -> dict:
             "speedup": eager_us / jit_us if jit_us else float("nan")}
 
 
-def run_bench(smoke: bool = False, out: Path = DEFAULT_OUT) -> dict:
+def run_bench(smoke: bool = False, out: Path = DEFAULT_OUT,
+              backends=None) -> dict:
     reps = 2 if smoke else 5
     n_frames = 2 if smoke else 6
+    backends = tuple(backends) if backends else default_backends()
     params = registry.init_params(SIM, jax.random.PRNGKey(0))
     img = jax.random.uniform(jax.random.PRNGKey(1),
                              (1, *SIM.vit.img_size, 3))
@@ -121,12 +133,14 @@ def run_bench(smoke: bool = False, out: Path = DEFAULT_OUT) -> dict:
         "meta": {
             "config": "vitdet-l/SIM",
             "device": jax.default_backend(),
-            "interpret": jax.default_backend() != "tpu",
+            "backends": list(backends),
+            "interpret": ("pallas" in backends
+                          and jax.default_backend() != "tpu"),
             "smoke": smoke,
             "img_size": list(SIM.vit.img_size),
             "n_regions": part.n_regions,
         },
-        "backbone": bench_backbone(params, img, part, reps),
+        "backbone": bench_backbone(params, img, part, reps, backends),
         "server_infer": bench_server_infer(params, n_frames, reps),
     }
     out.write_text(json.dumps(report, indent=2) + "\n")
@@ -158,10 +172,16 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--smoke", action="store_true",
                     help="minimal reps/frames (CI sanity lane)")
+    ap.add_argument("--backends", type=str, default=None,
+                    help="comma-separated backends to bench (default: "
+                         "xla,pallas on TPU; xla only elsewhere — "
+                         "pallas-interpret is a slow parity path)")
     ap.add_argument("--out", type=Path, default=DEFAULT_OUT,
                     help=f"output JSON path (default {DEFAULT_OUT})")
     args = ap.parse_args(argv)
-    rep = run_bench(smoke=args.smoke, out=args.out)
+    backends = (tuple(b.strip() for b in args.backends.split(","))
+                if args.backends else None)
+    rep = run_bench(smoke=args.smoke, out=args.out, backends=backends)
     for r in rep["backbone"]:
         beta = "-" if r["beta"] is None else r["beta"]
         print(f"  {r['workload']:>5} beta={beta} {r['backend']:>6}: "

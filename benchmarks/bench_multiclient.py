@@ -75,10 +75,14 @@ class RotatingMaskPolicy(Policy):
 
 
 def _inf_delay_model():
+    from repro.core import partition as pt
     from repro.offload.estimator import InferenceDelayModel
     part = vb.vit_partition(SIM)
+    # cost the padded length bucket the collapsed grid actually serves
+    edges = pt.length_bucket_set(part)
     return InferenceDelayModel.fit_from_flops(
-        lambda n, b: vb.backbone_flops(SIM, n, b), part.n_regions,
+        lambda n, b: vb.backbone_flops(SIM, n, b, length_edges=edges),
+        part.n_regions,
         betas=tuple(range(SIM.vit.n_subsets + 1)),
         full_res_delay_s=FULL_RES_DELAY_S)
 

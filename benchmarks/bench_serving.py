@@ -1,25 +1,30 @@
-"""Zero-stall serving benchmark — AOT warmup, device-resident feature
-caches, cross-bucket wave coalescing (the PR-4 serving hot path).
+"""Zero-stall serving benchmark — AOT warmup over the COLLAPSED
+(length bucket, beta, capture, B bucket) executable grid,
+device-resident feature caches, cross-bucket wave coalescing.
 
 Emits ``BENCH_serving.json`` with three sections:
 
   * ``warmup``   — first-offload wall latency and p95 per-offload server
                    wall time for a lazy-compile replica vs. an
-                   AOT-warmed one, plus the executable counts: total
-                   compiled, compiled during warmup, and compiled in
-                   steady state (MUST be 0 after warmup — the bench
-                   fails under ``--check`` otherwise);
+                   AOT-warmed one, plus the COMPILE SURFACE: total
+                   executables, the warmed key list, warmup wall time
+                   (gated by ``--max-warmup-s``), and steady-state
+                   compiles (MUST be 0 after warmup — the bench fails
+                   under ``--check`` otherwise, as does a surface
+                   larger than ``EXEC_BUDGET`` executables);
   * ``cache``    — host<->device tile bytes per offload on a reuse-heavy
                    parkS workload, device-resident FeatureCache vs. the
                    legacy host-resident mode (device mode MUST be 0);
-  * ``coalesce`` — mean wave size, throughput and p95 e2e (queueing
-                   included) on a mixed-bucket multi-client workload
-                   with and without cross-bucket coalescing, plus
-                   rendering-F1 deltas on the parkS/driveN scenarios
-                   (promotion only ever ADDS resolution, so the deltas
-                   must be 0.000).
+  * ``coalesce`` — mean wave size, mixed-plan wave counts (waves
+                   batching >= 2 distinct n_low values in ONE
+                   executable), throughput and p95 e2e (queueing
+                   included) on a multi-length-bucket workload with and
+                   without cross-bucket coalescing, plus rendering-F1
+                   deltas on the parkS/driveN scenarios (promotion only
+                   ever PADS the sequence, so the deltas must be 0.000).
 
 Standalone:  python benchmarks/bench_serving.py [--smoke] [--check]
+                    [--max-warmup-s S]
 Harness:     picked up by benchmarks/run.py as the ``bench_serving``
              suite (smoke settings, check enabled).
 """
@@ -55,6 +60,9 @@ FPS = 10
 FULL_RES_DELAY_S = 0.281
 BETA = 2
 REUSE_K = 4
+# the collapsed grid must stay within this many executables (vs 56 on
+# the old (n_low bucket, n_reuse bucket, beta, capture, B) grid)
+EXEC_BUDGET = 16
 
 
 def _params():
@@ -63,8 +71,14 @@ def _params():
 
 def _inf_delay_model() -> InferenceDelayModel:
     part = vb.vit_partition(SIM)
+    # LM^inf costs the PADDED length bucket the replica actually runs,
+    # not the exact mixed length — the executable grid pads sequences
+    # up to pt.length_bucket_set edges
+    edges = pt.length_bucket_set(part)
     return InferenceDelayModel.fit_from_flops(
-        lambda n, b, r=0: vb.backbone_flops(SIM, n, b, r), part.n_regions,
+        lambda n, b, r=0: vb.backbone_flops(SIM, n, b, r,
+                                            length_edges=edges),
+        part.n_regions,
         betas=tuple(range(SIM.vit.n_subsets + 1)),
         full_res_delay_s=FULL_RES_DELAY_S)
 
@@ -134,6 +148,7 @@ def bench_warmup(n_frames: int) -> Dict:
             "p95_offload_wall_s": float(np.percentile(walls, 95)),
             "warmup_wall_s": warm_wall,
             "executables_total": server.stats.compiles,
+            "compile_surface": sorted([list(k) for k in server._fns]),
             "steady_compiles": server.stats.steady_compiles,
             "steady_compile_keys": [list(k) for k in
                                     server.stats.steady_compile_keys],
@@ -255,6 +270,12 @@ def _run_coalesce(server, part, video_specs, n_frames, coalesce,
         "p95_e2e_s": float(np.percentile(e2e, 95)) if e2e.size else None,
         "mean_wave": mc.stats.mean_wave_size,
         "promoted_jobs": mc.stats.promoted,
+        # waves that batched >= 2 distinct n_low values in ONE
+        # executable — the collapsed-grid win coalescing builds on
+        "mixed_plan_waves": mc.stats.mixed_plan_waves,
+        "max_distinct_n_low_per_wave": (max(mc.stats.wave_n_low_mix)
+                                        if mc.stats.wave_n_low_mix
+                                        else 0),
         "median_rendering_f1": {v: float(np.median(x))
                                 for v, x in rf1.items()},
     }
@@ -266,19 +287,21 @@ def bench_coalesce(n_frames: int) -> Dict:
     server = BatchedServerModel(SIM, _params(), top_k=8, score_thresh=0.0)
     gt_cache: Dict = {}
 
-    # (a) mixed-bucket workload: every client sits in a DIFFERENT n_low
-    # bucket, so without coalescing no two jobs are ever wave-compatible
-    # (mean wave is exactly 1) — wave growth is pure cross-bucket
-    # promotion.  For each promoted job we also quote the inference-F1
-    # cost of the promotion itself: F1(promoted dets) - F1(the dets a
-    # solo run at the job's OWN bucket yields), timeline effects
-    # excluded.
+    # (a) multi-length-bucket workload: the clients span three length
+    # buckets (n_low 4 -> 64 windows, 8/12 -> 48, 16 -> 24 at SIM
+    # scale), so same-bucket jobs already co-batch WITHOUT coalescing
+    # (the collapsed grid batches any n_low mix at one bucket); wave
+    # growth beyond that is cross-bucket promotion — padding a shorter
+    # job up to the wave's bucket.  For each promoted job we also quote
+    # the inference-F1 cost of the promotion itself: F1(promoted dets)
+    # - F1(the dets a solo run at the job's OWN bucket yields), timeline
+    # effects excluded (promotion only pads, so this must be ~0).
     specs = [("parkS", range(4)), ("parkS", range(12)),
              ("driveN", range(8)), ("driveN", range(16))]
     promoted_jobs: List[Dict] = []
 
     def keep(ci, job):
-        if "promoted_n_low" in job:
+        if "promoted_lb" in job:
             promoted_jobs.append({"video": specs[ci][0], **job})
 
     on = _run_coalesce(server, part, specs, n_frames, True, gt_cache,
@@ -318,7 +341,8 @@ def bench_coalesce(n_frames: int) -> Dict:
 # ---------------------------------------------------------------------------
 
 
-def check(report: Dict) -> List[str]:
+def check(report: Dict,
+          max_warmup_s: Optional[float] = None) -> List[str]:
     """The acceptance gates ci.sh enforces on the smoke lane."""
     errs = []
     w = report["warmup"]
@@ -329,6 +353,15 @@ def check(report: Dict) -> List[str]:
     if not (w["warmed"]["first_offload_wall_s"]
             < w["lazy"]["first_offload_wall_s"]):
         errs.append("warmup did not reduce first-offload latency")
+    # the collapsed compile surface: length buckets, not (n_low, n_reuse)
+    if w["warmed"]["executables_total"] > EXEC_BUDGET:
+        errs.append(f"compile surface regressed: "
+                    f"{w['warmed']['executables_total']} executables "
+                    f"> budget {EXEC_BUDGET}")
+    if max_warmup_s is not None and \
+            w["warmed"]["warmup_wall_s"] > max_warmup_s:
+        errs.append(f"warmup wall time {w['warmed']['warmup_wall_s']:.1f}s"
+                    f" > budget {max_warmup_s:.1f}s")
     if report["cache"]["device"]["tile_bytes_per_offload"] != 0:
         errs.append("device-resident cache shipped tile bytes")
     if report["cache"]["host"]["tile_bytes_per_offload"] <= 0:
@@ -339,8 +372,11 @@ def check(report: Dict) -> List[str]:
                     f"{c['on']['mean_wave']} <= {c['off']['mean_wave']}")
     if c["on"]["promoted_jobs"] <= 0:
         errs.append("no jobs were promoted")
+    if c["off"]["mixed_plan_waves"] + c["on"]["mixed_plan_waves"] <= 0:
+        errs.append("no wave batched plans with distinct n_low values "
+                    "in one executable")
     # promotion must not cost inference accuracy: F1(promoted dets) >=
-    # F1(own-bucket dets) on average (promotion only ADDS resolution)
+    # F1(own-bucket dets) on average (promotion only PADS the sequence)
     if c["promotion_inference_f1_delta"]["mean"] < 0:
         errs.append(f"promotion degraded inference F1: "
                     f"{c['promotion_inference_f1_delta']}")
@@ -351,8 +387,10 @@ def check(report: Dict) -> List[str]:
 
 
 def run_bench(smoke: bool = False, out: Path = DEFAULT_OUT,
-              do_check: bool = False) -> dict:
+              do_check: bool = False,
+              max_warmup_s: Optional[float] = None) -> dict:
     n_frames = 16 if smoke else 40
+    part = vb.vit_partition(SIM)
     report = {
         "meta": {
             "config": "vitdet-l/SIM",
@@ -364,12 +402,15 @@ def run_bench(smoke: bool = False, out: Path = DEFAULT_OUT,
             "reuse_k": REUSE_K,
             "full_res_delay_s": FULL_RES_DELAY_S,
             "batch_buckets": list(pt.BATCH_BUCKETS),
+            "length_bucket_edges": list(pt.length_bucket_set(part)),
+            "exec_budget": EXEC_BUDGET,
+            "max_warmup_s": max_warmup_s,
         },
         "warmup": bench_warmup(4 if smoke else 8),
         "cache": bench_cache(n_frames),
         "coalesce": bench_coalesce(n_frames),
     }
-    errs = check(report)
+    errs = check(report, max_warmup_s=max_warmup_s)
     report["check"] = {"passed": not errs, "errors": errs}
     out.write_text(json.dumps(report, indent=2) + "\n")
     print(f"[bench_serving] wrote {out}")
@@ -383,7 +424,7 @@ def run(ctx: dict) -> list:
     out = Path(__file__).resolve().parent / "artifacts"
     out.mkdir(parents=True, exist_ok=True)
     rep = run_bench(smoke=True, out=out / "BENCH_serving.smoke.json",
-                    do_check=True)
+                    do_check=True, max_warmup_s=90.0)
     w, c = rep["warmup"], rep["coalesce"]
     rows = [
         ("bench_serving/first_offload/lazy",
@@ -393,13 +434,17 @@ def run(ctx: dict) -> list:
          w["warmed"]["first_offload_wall_s"] * 1e6,
          f"execs={w['warmed']['executables_total']} "
          f"steady_compiles={w['warmed']['steady_compiles']}"),
+        ("bench_serving/warmup_wall", w["warmed"]["warmup_wall_s"] * 1e6,
+         f"execs={w['warmed']['executables_total']} "
+         f"budget={EXEC_BUDGET}"),
         ("bench_serving/tile_bytes/device", 0.0,
          f"per_offload={rep['cache']['device']['tile_bytes_per_offload']:.0f}"),
         ("bench_serving/tile_bytes/host", 0.0,
          f"per_offload={rep['cache']['host']['tile_bytes_per_offload']:.0f}"),
         ("bench_serving/coalesce", 0.0,
          f"wave {c['off']['mean_wave']:.2f}->{c['on']['mean_wave']:.2f} "
-         f"promoted={c['on']['promoted_jobs']}"),
+         f"promoted={c['on']['promoted_jobs']} "
+         f"mixed_waves={c['on']['mixed_plan_waves']}"),
     ]
     ctx["bench_serving"] = rows
     return rows
@@ -411,10 +456,14 @@ def main(argv=None) -> int:
                     help="fewer frames (CI sanity lane)")
     ap.add_argument("--check", action="store_true",
                     help="exit nonzero unless all acceptance gates hold")
+    ap.add_argument("--max-warmup-s", type=float, default=None,
+                    help="fail --check when the warmed replica's warmup "
+                         "wall time exceeds this budget (seconds)")
     ap.add_argument("--out", type=Path, default=DEFAULT_OUT,
                     help=f"output JSON path (default {DEFAULT_OUT})")
     args = ap.parse_args(argv)
-    rep = run_bench(smoke=args.smoke, out=args.out, do_check=args.check)
+    rep = run_bench(smoke=args.smoke, out=args.out, do_check=args.check,
+                    max_warmup_s=args.max_warmup_s)
     w = rep["warmup"]
     print(f"  first offload: lazy {w['lazy']['first_offload_wall_s']:.3f}s"
           f" -> warmed {w['warmed']['first_offload_wall_s']:.3f}s "
@@ -423,7 +472,9 @@ def main(argv=None) -> int:
           f"{w['warmed']['p95_offload_wall_s']:.3f}s")
     print(f"  executables: lazy {w['lazy']['executables_total']} "
           f"(all steady) vs warmed {w['warmed']['executables_total']} "
-          f"(steady {w['warmed']['steady_compiles']})")
+          f"(budget {EXEC_BUDGET}, steady "
+          f"{w['warmed']['steady_compiles']}, warmup "
+          f"{w['warmed']['warmup_wall_s']:.1f}s)")
     for mode in ("device", "host"):
         r = rep["cache"][mode]
         print(f"  tiles/{mode}: {r['tile_bytes_per_offload']:.0f} B/offload"
@@ -432,7 +483,9 @@ def main(argv=None) -> int:
     c = rep["coalesce"]
     print(f"  coalesce: wave {c['off']['mean_wave']:.2f} -> "
           f"{c['on']['mean_wave']:.2f}, promoted "
-          f"{c['on']['promoted_jobs']}, p95 e2e "
+          f"{c['on']['promoted_jobs']}, mixed-plan waves "
+          f"{c['off']['mixed_plan_waves']}->{c['on']['mixed_plan_waves']},"
+          f" p95 e2e "
           f"{c['off']['p95_e2e_s']:.3f}s -> {c['on']['p95_e2e_s']:.3f}s")
     print(f"  promotion inference-F1 cost: "
           f"{c['promotion_inference_f1_delta']}; scenario rendering-F1 "

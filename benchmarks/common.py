@@ -135,8 +135,16 @@ def get_part():
 
 
 def paper_delay_model() -> InferenceDelayModel:
-    """LM^inf_beta(N_d) from the FULL ViTDet-L FLOP curve, anchored to the
-    paper's measured 281 ms full-res inference delay."""
+    """LM^inf_beta(N_d) from the FULL ViTDet-L FLOP curve, anchored to
+    the paper's measured 281 ms full-res inference delay.
+
+    Deliberately the EXACT-length curve: Algorithm 1 uses this model to
+    discriminate configs, and the padded-bucket cost
+    (``backbone_flops(..., length_edges=...)``) is a step function that
+    erases the marginal-latency differences it selects on (see
+    bench_reuse._inf_delay_model).  Serving-side accounting of the
+    collapsed executable grid costs the padded bucket instead (edge
+    coalescer, bench_serving)."""
     cfg = get_config("vitdet-l")
     part = vb.vit_partition(cfg)
     return InferenceDelayModel.fit_from_flops(

@@ -24,9 +24,13 @@ python benchmarks/bench_reuse.py --smoke \
 
 echo "== serving hot-path smoke (warmup / device cache / coalescing) =="
 # --check enforces the zero-stall gates: steady-state compile count 0
-# after warmup, zero tile bytes with the device-resident cache, waves
-# strictly larger with coalescing, scenario F1 deltas 0.000
-python benchmarks/bench_serving.py --smoke --check \
+# after warmup, the COLLAPSED compile surface (executables_total <= the
+# bench's EXEC_BUDGET=16 — a regression back toward the old 56-exec
+# (n_low, n_reuse)-keyed grid fails fast), warmup wall time within
+# --max-warmup-s, zero tile bytes with the device-resident cache, waves
+# strictly larger with coalescing (plus mixed-n_low waves sharing one
+# executable), scenario F1 deltas 0.000
+python benchmarks/bench_serving.py --smoke --check --max-warmup-s 90 \
     --out benchmarks/artifacts/BENCH_serving.smoke.json
 
 echo "CI OK"

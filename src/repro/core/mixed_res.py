@@ -164,7 +164,140 @@ def pack_positions(pos_grid: jnp.ndarray, part: Partition,
 
 
 # ---------------------------------------------------------------------------
+# padded (length-bucketed) packing — the collapsed-executable layout.
+#
+# The sequence is described at WINDOW granularity by a PlanLayout
+# (core.partition): a (nw_pad,) gather into the window bank
+# [all full-res windows | one low window per region], padded with
+# replicas of window 0.  All shapes depend only on the length bucket,
+# so any (n_low, n_reuse) mix shares one executable; validity is the
+# runtime count ``nw`` (traced i32), not the shape.
+
+
+def window_bank(x_grid: jnp.ndarray, part: Partition,
+                x_low_grid: Optional[jnp.ndarray] = None, *,
+                backend: Optional[str] = None) -> jnp.ndarray:
+    """(B, Hp, Wp, C) -> (B, nR*d^2 + nR, w^2, C) window bank: every
+    full-res window of every region, then every region's LOW window."""
+    regions = grid_to_region_windows(x_grid, part)        # B,nR,d^2,w^2,C
+    B, nR, dd, w2, C = regions.shape
+    if x_low_grid is None:
+        x_low_grid = downsample_grid(x_grid, part.downsample,
+                                     backend=backend)
+    low = low_grid_to_windows(x_low_grid, part)           # B,nR,w^2,C
+    return jnp.concatenate([regions.reshape(B, nR * dd, w2, C), low],
+                           axis=1)
+
+
+def pack_padded(x_grid: jnp.ndarray, part: Partition,
+                win_src: jnp.ndarray,
+                x_low_grid: Optional[jnp.ndarray] = None, *,
+                backend: Optional[str] = None) -> jnp.ndarray:
+    """Build the length-bucketed mixed sequence.
+
+    win_src: (nw_pad,) shared or (B, nw_pad) per-sample window gather
+    (PlanLayout.win_src).  Returns tokens (B, nw_pad * w^2, C).  A
+    window gathered from the bank carries exactly the bytes the exact-
+    shape :func:`pack_mixed` would have packed, so the padded sequence
+    is bit-identical to the exact one on its valid prefix.
+    """
+    bank = window_bank(x_grid, part, x_low_grid, backend=backend)
+    if win_src.ndim == 2:
+        windows = jnp.take_along_axis(bank, win_src[:, :, None, None],
+                                      axis=1)
+    else:
+        windows = bank[:, win_src]
+    B = windows.shape[0]
+    return windows.reshape(B, -1, windows.shape[-1])
+
+
+def pack_positions_padded(pos_grid: jnp.ndarray, part: Partition,
+                          win_src: jnp.ndarray) -> jnp.ndarray:
+    """Positional embeddings for the padded mixed sequence (low windows
+    receive the mean embedding of their d x d patch groups, exactly as
+    :func:`pack_positions`)."""
+    if win_src.ndim == 2:
+        B = win_src.shape[0]
+        grid = jnp.broadcast_to(pos_grid[None], (B,) + pos_grid.shape)
+        return pack_padded(grid, part, win_src)
+    return pack_padded(pos_grid[None], part, win_src)[0]
+
+
+def restore_padded(tokens: jnp.ndarray, part: Partition,
+                   win_dst: jnp.ndarray, low_src: jnp.ndarray,
+                   low_ids: jnp.ndarray, *,
+                   backend: Optional[str] = None,
+                   reuse_ids: Optional[jnp.ndarray] = None,
+                   reuse_tiles: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Restore the full-resolution sequence from a padded mixed one.
+
+    tokens: (B, nw_pad * w^2, D).  FULL windows scatter window-level at
+    ``win_dst`` (pad and LOW windows carry the sentinel slot, sliced
+    off); LOW windows are gathered back out at ``low_src``, upsampled,
+    and scattered region-level at ``low_ids``; REUSE tiles splice at
+    ``reuse_ids``.  Pad entries of every id array already point at the
+    sentinel (PlanLayout builds them host-side), so no traced dup
+    masking is needed.  Output: (B, Hp*Wp, D) window-blocked.
+    """
+    B, _, D = tokens.shape
+    w, d = part.window, part.downsample
+    w2 = w * w
+    nR, dd = part.n_regions, part.windows_per_full_region
+    windows = tokens.reshape(B, -1, w2, D)                # B,nw_pad,w2,D
+    per_sample = win_dst.ndim == 2
+    b = jnp.arange(B)[:, None]
+
+    # FULL windows: window-level scatter into nR*d^2 slots + sentinel
+    buf = jnp.zeros((B, nR * dd + 1, w2, D), tokens.dtype)
+    if per_sample:
+        buf = buf.at[b, win_dst].set(windows)
+    else:
+        buf = buf.at[:, win_dst].set(windows)
+    out = buf[:, :nR * dd].reshape(B, nR, dd, w2, D)
+
+    # LOW windows: gather, upsample, region-level scatter (+ sentinel row)
+    if per_sample:
+        low_part = jnp.take_along_axis(windows,
+                                       low_src[:, :, None, None], axis=1)
+    else:
+        low_part = windows[:, low_src]
+    up = _upsample_low_windows(low_part.reshape(B, -1, w, w, D), part,
+                               backend=backend)
+    out = jnp.concatenate(
+        [out, jnp.zeros((B, 1, dd, w2, D), tokens.dtype)], axis=1)
+    if per_sample:
+        out = out.at[b, low_ids].set(up)
+        if reuse_ids is not None:
+            out = out.at[b, reuse_ids].set(reuse_tiles.astype(tokens.dtype))
+    else:
+        out = out.at[:, low_ids].set(up)
+        if reuse_ids is not None:
+            out = out.at[:, reuse_ids].set(
+                reuse_tiles.astype(tokens.dtype))
+    out = out[:, :nR]
+    return out.reshape(B, part.grid_h * part.grid_w, D)
+
+
+# ---------------------------------------------------------------------------
 # restoration (paper §III-B)
+
+
+def _upsample_low_windows(low_part: jnp.ndarray, part: Partition, *,
+                          backend: Optional[str] = None) -> jnp.ndarray:
+    """Nearest-neighbour upsample LOW windows (B, n, w, w, D) ->
+    (B, n, d^2, w^2, D) window-blocked full-region tiles (the shared op
+    of :func:`restore_full` and :func:`restore_padded`)."""
+    B, nL = low_part.shape[:2]
+    D = low_part.shape[-1]
+    w, d = part.window, part.downsample
+    if dispatch.use_pallas(backend):
+        up = dispatch.nn_upsample(low_part.reshape(B * nL, w, w, D), d)
+        up = up.reshape(B, nL, w * d, w * d, D)      # B,nL,r,r,D
+    else:
+        up = jnp.repeat(jnp.repeat(low_part, d, axis=2), d, axis=3)
+    up = up.reshape(B, nL, d, w, d, w, D)
+    return up.transpose(0, 1, 2, 4, 3, 5, 6).reshape(
+        B, nL, d * d, w * w, D)
 
 
 def _dups_to_sentinel(ids: jnp.ndarray, sentinel: int) -> jnp.ndarray:
@@ -211,14 +344,7 @@ def restore_full(tokens: jnp.ndarray, part: Partition,
     nL = low_part.shape[1]
 
     # nearest-neighbour upsample low windows: (w, w) -> (r, r) -> (d^2, w^2)
-    if dispatch.use_pallas(backend):
-        up = dispatch.nn_upsample(low_part.reshape(B * nL, w, w, D), d)
-        up = up.reshape(B, nL, w * d, w * d, D)      # B,nL,r,r,D
-    else:
-        up = jnp.repeat(jnp.repeat(low_part, d, axis=2), d, axis=3)
-    up = up.reshape(B, up.shape[1], d, w, d, w, D)
-    up = up.transpose(0, 1, 2, 4, 3, 5, 6).reshape(
-        B, up.shape[1], d * d, w * w, D)
+    up = _upsample_low_windows(low_part, part, backend=backend)
 
     sentinel = part.n_regions
     out = jnp.zeros((B, part.n_regions + 1, d * d, w * w, D), tokens.dtype)

@@ -136,6 +136,49 @@ def bucket_set(n_regions: int, n_buckets: int = 4) -> Tuple[int, ...]:
     return tuple(edges)
 
 
+# ---------------------------------------------------------------------------
+# token-length buckets (the collapsed executable grid): instead of one
+# executable per (n_low bucket, n_reuse bucket), the serving hot path
+# pads the window-blocked sequence UP to one of a few LENGTH buckets and
+# carries (which regions, how many are valid) as runtime i32 data.  A
+# "length" is a WINDOW count — the sequence is a concatenation of
+# whole w*w-token windows, so n_tokens = n_windows * w^2 exactly.
+
+N_LENGTH_BUCKETS = 3
+
+
+def length_bucket_set(part: Partition,
+                      n_edges: int = N_LENGTH_BUCKETS) -> Tuple[int, ...]:
+    """Window-count bucket edges over the reachable sequence lengths.
+
+    Edges are multiples of ``d^2`` (a whole full-res region) so a bucket
+    always fits an integral mix of regions; the top edge is the full-
+    resolution window count, so every transmittable plan has a bucket.
+    """
+    dd = part.windows_per_full_region
+    nw_max = part.n_regions * dd
+    step = -(-nw_max // max(n_edges, 1))          # ceil
+    step = -(-step // dd) * dd                    # round up to d^2 multiple
+    edges = list(range(step, nw_max, step))
+    edges.append(nw_max)
+    return tuple(edges)
+
+
+def length_bucket(n_windows: int, edges: Sequence[int]) -> int:
+    """Round a window count UP to the nearest length-bucket edge.
+
+    Padding up is the only safe direction: pad windows are inert (masked
+    out of global attention, routed to the sentinel row at restoration),
+    while rounding down would drop transmitted windows.
+    """
+    assert n_windows >= 1, f"empty sequence: n_windows={n_windows}"
+    for edge in sorted(edges):
+        if n_windows <= edge:
+            return edge
+    raise ValueError(f"sequence of {n_windows} windows exceeds largest "
+                     f"length bucket {max(edges)}")
+
+
 # batch-size buckets (serving hot path): waves are padded UP to the next
 # edge so the compiled-executable grid is bounded in B as well — without
 # this, every distinct wave size B is a fresh XLA trace at serve time.
@@ -288,3 +331,103 @@ def stack_plan_ids(plans: Sequence["RegionPlan"], n_low: int, n_reuse: int
     return (np.stack([f for f, _, _ in ids]).astype(np.int32),
             np.stack([l for _, l, _ in ids]).astype(np.int32),
             np.stack([r for _, _, r in ids]).astype(np.int32))
+
+
+# ---------------------------------------------------------------------------
+# padded plan layouts (host-side): the mask-traced description of ONE
+# RegionPlan inside a length bucket.  All shapes depend only on the
+# bucket (``nw_pad``) and the partition — (n_low, n_reuse) are runtime
+# data, so every plan mix at one length bucket shares one executable.
+
+
+def plan_n_windows(plan: "RegionPlan", part: Partition) -> int:
+    """Transmitted window count of a plan (its pre-padding length)."""
+    return part.n_windows(plan.n_low, plan.n_reuse)
+
+
+@dataclass(frozen=True)
+class PlanLayout:
+    """Padded window-level layout of one plan at a length bucket.
+
+    Sequence convention matches the legacy exact-shape pack: full-region
+    windows first (regions ascending, d^2 windows each, row-major), then
+    one window per LOW region (ascending), then pad windows up to
+    ``nw_pad``.  Pad windows replicate source window 0 so their content
+    stays finite; every consumer routes them to a sentinel.
+
+      win_src    (nw_pad,)     source window in the packed window bank
+                               [full windows (nR*d^2) | low windows (nR)]
+      win_dst    (nw_pad,)     restoration slot of a FULL window in the
+                               full-res window grid; LOW and pad windows
+                               carry the sentinel slot nR*d^2
+      low_src    (n_regions,)  sequence position of the i-th LOW window
+                               (pads read position 0, discarded)
+      low_ids    (n_regions,)  destination region of the i-th LOW window
+                               (pads carry the sentinel region nR)
+      reuse_ids  (n_regions,)  REUSE regions (pads carry the sentinel)
+      nw         valid window count (i32 runtime input; tokens beyond
+                 nw * w^2 are masked out of pre-restoration global
+                 attention and zeroed by the window-attention valid flag)
+      key        fingerprint bytes, computed ONCE here so downstream
+                 caches (packed_positions) key in O(1)
+    """
+    nw: int
+    n_low: int
+    n_reuse: int
+    win_src: np.ndarray
+    win_dst: np.ndarray
+    low_src: np.ndarray
+    low_ids: np.ndarray
+    reuse_ids: np.ndarray
+    key: bytes
+
+
+def plan_layout(states: np.ndarray, nw_pad: int,
+                part: Partition) -> PlanLayout:
+    """Build the padded layout of a plan for the ``nw_pad`` bucket."""
+    states = np.asarray(states).reshape(-1)
+    nR, dd = part.n_regions, part.windows_per_full_region
+    assert states.shape[0] == nR
+    full = np.nonzero(states == FULL)[0]
+    low = np.nonzero(states == LOW)[0]
+    reuse = np.nonzero(states == REUSE)[0]
+    nw = len(full) * dd + len(low)
+    if not 1 <= nw <= nw_pad:
+        raise ValueError(f"plan needs {nw} windows; bucket holds {nw_pad}")
+
+    sent_w = nR * dd
+    win_src = np.zeros((nw_pad,), np.int32)
+    win_dst = np.full((nw_pad,), sent_w, np.int32)
+    slots = (full[:, None] * dd + np.arange(dd)[None, :]).reshape(-1)
+    win_src[:len(slots)] = slots
+    win_dst[:len(slots)] = slots
+    low_src = np.zeros((nR,), np.int32)
+    low_ids = np.full((nR,), nR, np.int32)
+    win_src[len(slots):nw] = sent_w + low
+    low_src[:len(low)] = np.arange(len(slots), nw)
+    low_ids[:len(low)] = low
+    win_src[nw:] = win_src[0]            # pads replicate a real window
+    reuse_pad = np.full((nR,), nR, np.int32)
+    reuse_pad[:len(reuse)] = reuse
+
+    key = b"".join((np.int64([nw, nw_pad]).tobytes(), win_src.tobytes(),
+                    low_src.tobytes(), low_ids.tobytes(),
+                    reuse_pad.tobytes()))
+    return PlanLayout(nw=nw, n_low=len(low), n_reuse=len(reuse),
+                      win_src=win_src, win_dst=win_dst, low_src=low_src,
+                      low_ids=low_ids, reuse_ids=reuse_pad, key=key)
+
+
+def stack_plan_layouts(layouts: Sequence[PlanLayout]
+                       ) -> Tuple[dict, bytes]:
+    """Per-sample (B, ·) arrays + (B,) valid counts for a wave, plus the
+    wave's combined layout fingerprint."""
+    arrays = {
+        "win_src": np.stack([l.win_src for l in layouts]),
+        "win_dst": np.stack([l.win_dst for l in layouts]),
+        "low_src": np.stack([l.low_src for l in layouts]),
+        "low_ids": np.stack([l.low_ids for l in layouts]),
+        "reuse_ids": np.stack([l.reuse_ids for l in layouts]),
+        "nw": np.array([l.nw for l in layouts], np.int32),
+    }
+    return arrays, b"|".join(l.key for l in layouts)

@@ -20,7 +20,7 @@ relative-position bias inside attention (absolute learned pos-emb only).
 from __future__ import annotations
 
 from collections import OrderedDict
-from typing import Dict, Optional
+from typing import Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -28,7 +28,8 @@ import numpy as np
 
 from repro.core import det_head as dh
 from repro.core import mixed_res as mr
-from repro.core.partition import Partition, make_partition
+from repro.core.partition import (Partition, length_bucket as
+                                  pt_length_bucket, make_partition)
 from repro.models import attention as attn
 from repro.models import layers as L
 from repro.models.config import ModelConfig
@@ -107,10 +108,14 @@ def embed_patches(cfg: ModelConfig, params, image: jnp.ndarray,
 #
 # pack_positions is pure data movement on the (trainable but
 # inference-frozen) pos_emb grid; re-packing it inside every eager
-# forward_features call is wasted work.  The cache is keyed on
-# (pos_emb identity, partition, n_low, region-id bytes) and is bypassed
+# forward_features call is wasted work.  The cache key is
+# (pos_emb identity, partition, layout fingerprint) and is bypassed
 # whenever any input is a tracer (jit/grad see the uncached computation,
-# so training and compiled paths are unaffected).
+# so training and compiled paths are unaffected).  The fingerprint is
+# ``ids_key`` when the caller precomputed one (PlanLayout.key — built
+# ONCE at plan-layout time, so cache hits are O(1) with no host sync);
+# legacy callers without a key fall back to hashing the id bytes per
+# call (one d2h per array — the cost the serving hot path now avoids).
 
 
 _POS_CACHE: "OrderedDict[tuple, tuple]" = OrderedDict()
@@ -121,23 +126,37 @@ def _concrete(*xs) -> bool:
     return not any(isinstance(x, jax.core.Tracer) for x in xs)
 
 
+def _ids_fingerprint(*ids: jnp.ndarray) -> bytes:
+    return b"|".join(np.ascontiguousarray(np.asarray(a)).tobytes()
+                     for a in ids)
+
+
 def packed_positions(pos: jnp.ndarray, part: Partition,
                      full_ids: Optional[jnp.ndarray],
-                     low_ids: Optional[jnp.ndarray]) -> jnp.ndarray:
-    """Cached pack of the positional grid for the (mixed or full) layout.
+                     low_ids: Optional[jnp.ndarray], *,
+                     win_src: Optional[jnp.ndarray] = None,
+                     ids_key: Optional[bytes] = None) -> jnp.ndarray:
+    """Cached pack of the positional grid for the requested layout.
 
-    full_ids/low_ids None -> full-resolution window-blocked layout;
-    (B, n) per-sample ids produce a (B, n_tokens, D) batch.
+    full_ids/low_ids None and win_src None -> full-resolution
+    window-blocked layout; (B, n) per-sample ids produce a
+    (B, n_tokens, D) batch.  ``win_src`` selects the length-bucketed
+    padded layout (mixed_res.pack_positions_padded) instead of the
+    exact-shape one.  ``ids_key``: precomputed layout fingerprint for
+    O(1) cache hits.
     """
-    mixed = low_ids is not None
-    if mixed:
+    if win_src is not None:
+        if not _concrete(pos, win_src):
+            return mr.pack_positions_padded(pos, part, win_src)
+        key = (id(pos), part, "padded", tuple(win_src.shape),
+               ids_key if ids_key is not None
+               else _ids_fingerprint(win_src))
+    elif low_ids is not None:
         if not _concrete(pos, full_ids, low_ids):
             return mr.pack_positions(pos, part, full_ids, low_ids)
         key = (id(pos), part, tuple(low_ids.shape),
-               bytes(memoryview(np.ascontiguousarray(
-                   jax.device_get(full_ids)))),
-               bytes(memoryview(np.ascontiguousarray(
-                   jax.device_get(low_ids)))))
+               ids_key if ids_key is not None
+               else _ids_fingerprint(full_ids, low_ids))
     else:
         if not _concrete(pos):
             return mr.grid_to_full_seq(pos[None], part)[0]
@@ -149,8 +168,12 @@ def packed_positions(pos: jnp.ndarray, part: Partition,
     if hit is not None and hit[0] is pos:
         _POS_CACHE.move_to_end(key)
         return hit[1]
-    packed = (mr.pack_positions(pos, part, full_ids, low_ids) if mixed
-              else mr.grid_to_full_seq(pos[None], part)[0])
+    if win_src is not None:
+        packed = mr.pack_positions_padded(pos, part, win_src)
+    elif low_ids is not None:
+        packed = mr.pack_positions(pos, part, full_ids, low_ids)
+    else:
+        packed = mr.grid_to_full_seq(pos[None], part)[0]
     while len(_POS_CACHE) >= _POS_CACHE_MAX:
         _POS_CACHE.popitem(last=False)    # LRU: evict the oldest only
     _POS_CACHE[key] = (pos, packed)
@@ -162,13 +185,21 @@ def packed_positions(pos: jnp.ndarray, part: Partition,
 
 
 def _vit_block(cfg: ModelConfig, p, x, *, window: int,
+               kv_len: Optional[jnp.ndarray] = None,
+               win_valid: Optional[jnp.ndarray] = None,
                backend: Optional[str] = None) -> jnp.ndarray:
-    """x: (B, T, D) window-blocked.  window=0 -> global attention."""
+    """x: (B, T, D) window-blocked.  window=0 -> global attention.
+
+    kv_len/win_valid: (B,) traced validity of a length-bucketed padded
+    sequence — pad tokens are masked out of global attention keys, pad
+    windows' window-attention outputs are zeroed.
+    """
     B, T, D = x.shape
     h = L.apply_norm(cfg, p["ln1"], x)
     positions = jnp.zeros((B, T), jnp.int32)      # no RoPE in ViT
     a = attn.attention_forward(cfg, p["attn"], h, positions,
                                causal=False, window=window, rope=False,
+                               kv_len=kv_len, win_valid=win_valid,
                                backend=backend)
     x = x + a
     h = L.apply_norm(cfg, p["ln2"], x)
@@ -182,7 +213,9 @@ def forward_features(cfg: ModelConfig, params, image: jnp.ndarray,
                      backend: Optional[str] = None,
                      reuse_ids: Optional[jnp.ndarray] = None,
                      reuse_tiles: Optional[jnp.ndarray] = None,
-                     capture_beta: int = 0):
+                     capture_beta: int = 0,
+                     layout: Optional[Dict] = None,
+                     ids_key: Optional[bytes] = None):
     """Backbone forward.  Returns the (B, Hp, Wp, D) full-res feature map
     (or ``(feats, tiles)`` when ``capture_beta > 0``, see below).
 
@@ -193,6 +226,22 @@ def forward_features(cfg: ModelConfig, params, image: jnp.ndarray,
     beta: restoration point, 0..n_subsets (static).
     backend: kernel backend ("auto" | "pallas" | "xla", kernels.dispatch)
     for the window/global attention and pool/upsample hot paths.
+
+    layout: the length-bucketed padded alternative to full_ids/low_ids
+    (serving hot path): a dict of PlanLayout arrays — ``win_src`` /
+    ``win_dst`` (·, nw_pad), ``low_src`` / ``low_ids`` / ``reuse_ids``
+    (·, n_regions), ``nw`` valid window counts — each (n,) shared or
+    (B, n) per-sample.  Shapes depend only on the LENGTH BUCKET; which
+    regions are LOW/REUSE and how many windows are real is runtime i32
+    data, so one executable serves every (n_low, n_reuse) mix.  Pad
+    windows are masked out of pre-restoration global attention
+    (``kv_len``), zeroed by window attention's per-window valid flag,
+    and routed to the sentinel row at restoration — the valid prefix is
+    bit-identical to the exact-shape forward (tests/test_padded_plans).
+    Requires ``beta >= 1``; reuse regions splice from ``reuse_tiles``
+    shaped (B, n_regions, d^2, w^2, D) (pad rows land on the sentinel).
+    ids_key: optional precomputed layout fingerprint for the eager
+    positional-embedding cache (PlanLayout.key).
 
     Temporal reuse (partition.RegionPlan):
     reuse_ids/reuse_tiles: regions ABSENT from the transmitted sequence,
@@ -214,11 +263,20 @@ def forward_features(cfg: ModelConfig, params, image: jnp.ndarray,
     M = blocks_per_subset(cfg)
     N = v.n_subsets
     w2 = part.window * part.window
+    padded = layout is not None
     n_reuse = 0 if reuse_ids is None else reuse_ids.shape[-1]
     has_low = low_ids is not None and low_ids.shape[-1] > 0
-    mixed = (has_low or n_reuse > 0) and beta > 0
+    mixed = (padded and beta > 0) or ((has_low or n_reuse > 0)
+                                      and beta > 0)
     assert 0 <= beta <= N
     assert 0 <= capture_beta <= N
+    if padded:
+        assert full_ids is None and low_ids is None and reuse_ids is None
+        if beta == 0:
+            # restore-at-input (paper's "Subset 0"): upsampled full-
+            # length sequence from block 0 — REUSE tiles cannot splice
+            # here (they are restoration-point features)
+            assert reuse_tiles is None
     if n_reuse > 0:
         assert beta >= 1, "REUSE regions need a restoration point >= 1"
         assert reuse_tiles is not None
@@ -228,14 +286,38 @@ def forward_features(cfg: ModelConfig, params, image: jnp.ndarray,
 
     x_full = embed_patches(cfg, params, image, backend=backend)  # B,Hp,Wp,D
     pos = params["pos_emb"]
-    if mixed:
+    kv_len = win_valid = None
+    if padded:
+        # the collapsed executable serves every plan mix, so the pooled
+        # grid is always packed (a reuse-only sample simply never
+        # gathers from the low half of the window bank)
+        x_low = embed_patches(cfg, params, image, part.downsample, backend)
+        tokens = mr.pack_padded(x_full, part, layout["win_src"],
+                                x_low_grid=x_low, backend=backend)
+        if beta == 0:                     # restore at input: full length
+            tokens = mr.restore_padded(tokens, part, layout["win_dst"],
+                                       layout["low_src"],
+                                       layout["low_ids"],
+                                       backend=backend)
+            tokens = tokens + packed_positions(pos, part, None, None)
+        else:
+            tokens = tokens + packed_positions(pos, part, None, None,
+                                               win_src=layout["win_src"],
+                                               ids_key=ids_key)
+            win_valid = jnp.asarray(layout["nw"], jnp.int32)
+            kv_len = win_valid * w2
+            if win_valid.ndim == 0:
+                win_valid = win_valid[None]
+                kv_len = kv_len[None]
+    elif mixed:
         # reuse-only plans (n_low = 0) never read the pooled grid — skip
         # the downsampled patch-embedding pass entirely
         x_low = (embed_patches(cfg, params, image, part.downsample,
                                backend) if has_low else None)
         tokens, _ = mr.pack_mixed(x_full, part, full_ids, low_ids,
                                   x_low_grid=x_low, backend=backend)
-        tokens = tokens + packed_positions(pos, part, full_ids, low_ids)
+        tokens = tokens + packed_positions(pos, part, full_ids, low_ids,
+                                           ids_key=ids_key)
     else:
         if has_low:                                           # beta == 0
             x_low = embed_patches(cfg, params, image, part.downsample,
@@ -256,12 +338,19 @@ def forward_features(cfg: ModelConfig, params, image: jnp.ndarray,
             params_blk = params["blocks"][idx]
             is_global = m == M - 1
             if is_global and not restored and beta == s + 1:
-                tokens = mr.restore_full(tokens, part, full_ids, low_ids,
-                                         backend=backend,
-                                         reuse_ids=(reuse_ids if n_reuse
-                                                    else None),
-                                         reuse_tiles=(reuse_tiles if n_reuse
-                                                      else None))
+                if padded:
+                    tokens = mr.restore_padded(
+                        tokens, part, layout["win_dst"],
+                        layout["low_src"], layout["low_ids"],
+                        backend=backend,
+                        reuse_ids=(layout["reuse_ids"]
+                                   if reuse_tiles is not None else None),
+                        reuse_tiles=reuse_tiles)
+                else:
+                    tokens = mr.restore_full(
+                        tokens, part, full_ids, low_ids, backend=backend,
+                        reuse_ids=(reuse_ids if n_reuse else None),
+                        reuse_tiles=(reuse_tiles if n_reuse else None))
                 restored = True
             if is_global and capture_beta == s + 1:
                 B = tokens.shape[0]
@@ -270,6 +359,8 @@ def forward_features(cfg: ModelConfig, params, image: jnp.ndarray,
                                        w2, tokens.shape[-1])
             tokens = _vit_block(cfg, params_blk, tokens,
                                 window=0 if is_global else w2,
+                                kv_len=None if restored else kv_len,
+                                win_valid=None if restored else win_valid,
                                 backend=backend)
     # beta <= N always restores: beta == N hits the LAST global block.
 
@@ -283,15 +374,19 @@ def forward_features(cfg: ModelConfig, params, image: jnp.ndarray,
 def forward_det(cfg: ModelConfig, params, image,
                 full_ids=None, low_ids=None, beta: int = 0,
                 backend: Optional[str] = None,
-                reuse_ids=None, reuse_tiles=None, capture_beta: int = 0):
+                reuse_ids=None, reuse_tiles=None, capture_beta: int = 0,
+                layout: Optional[Dict] = None,
+                ids_key: Optional[bytes] = None):
     """Full model: backbone + dense head.  Returns det_head outputs (or
     ``(outputs, tiles)`` when ``capture_beta > 0`` — the per-region
     restoration-point feature tiles that refresh the client's
-    FeatureCache for temporal reuse)."""
+    FeatureCache for temporal reuse).  ``layout`` selects the
+    length-bucketed padded forward (see forward_features)."""
     feats = forward_features(cfg, params, image, full_ids, low_ids, beta,
                              backend=backend, reuse_ids=reuse_ids,
                              reuse_tiles=reuse_tiles,
-                             capture_beta=capture_beta)
+                             capture_beta=capture_beta, layout=layout,
+                             ids_key=ids_key)
     if capture_beta:
         feats, tiles = feats
         return dh.det_head_forward(cfg, params["head"], feats), tiles
@@ -302,14 +397,13 @@ def forward_det(cfg: ModelConfig, params, image,
 # FLOP accounting (used by the latency model and Fig. 5 benchmark)
 
 
-def backbone_flops(cfg: ModelConfig, n_low: int, beta: int,
-                   n_reuse: int = 0) -> float:
-    """Analytic attention+MLP FLOPs of the backbone for a given config.
-
-    Mirrors forward_features' block schedule; used to parameterise the
-    inference-delay linear models LM^inf_beta(N_d, N_r) (paper §IV-D,
-    extended with the temporal-reuse term: reused regions contribute NO
-    tokens before the restoration point).
+def backbone_flops_windows(cfg: ModelConfig, n_windows: int,
+                           beta: int) -> float:
+    """Analytic attention+MLP FLOPs with the PRE-restoration sequence
+    pinned to ``n_windows`` windows (``n_windows * w^2`` tokens) — the
+    cost of a length-bucketed padded forward, where pad windows are
+    masked but still computed.  ``beta == 0`` or a full-length
+    ``n_windows`` degenerates to the plain full-resolution cost.
     """
     part = vit_partition(cfg)
     D, F = cfg.d_model, cfg.d_ff
@@ -317,9 +411,8 @@ def backbone_flops(cfg: ModelConfig, n_low: int, beta: int,
     N = cfg.vit.n_subsets
     w2 = part.window * part.window
 
-    n_mixed = part.n_tokens(n_low, n_reuse)
+    n_mixed = n_windows * w2
     n_full = part.grid_h * part.grid_w
-    nw_mixed = part.n_windows(n_low, n_reuse)
     nw_full = part.n_regions * part.windows_per_full_region
 
     def block_flops(n_tok, n_win):
@@ -332,7 +425,7 @@ def backbone_flops(cfg: ModelConfig, n_low: int, beta: int,
         return proj + att + mlp
 
     total = 0.0
-    restored = not ((n_low > 0 or n_reuse > 0) and beta > 0)
+    restored = beta <= 0
     for s in range(N):
         for m in range(M):
             is_global = m == M - 1
@@ -341,5 +434,34 @@ def backbone_flops(cfg: ModelConfig, n_low: int, beta: int,
             if restored:
                 total += block_flops(n_full, 0 if is_global else nw_full)
             else:
-                total += block_flops(n_mixed, 0 if is_global else nw_mixed)
+                total += block_flops(n_mixed, 0 if is_global else n_windows)
     return total
+
+
+def backbone_flops(cfg: ModelConfig, n_low: int, beta: int,
+                   n_reuse: int = 0,
+                   length_edges: Optional[Sequence[int]] = None) -> float:
+    """Analytic attention+MLP FLOPs of the backbone for a given config.
+
+    Mirrors forward_features' block schedule; used to parameterise the
+    inference-delay linear models LM^inf_beta(N_d, N_r) (paper §IV-D,
+    extended with the temporal-reuse term: reused regions contribute NO
+    tokens before the restoration point).
+
+    ``length_edges``: cost the PADDED length bucket the serving hot path
+    actually runs (partition.length_bucket_set) instead of the exact
+    mixed length — what LM^inf must model once executables are keyed on
+    length buckets rather than (n_low, n_reuse).
+    """
+    part = vit_partition(cfg)
+    mixed = (n_low > 0 or n_reuse > 0) and beta > 0
+    if not mixed:
+        return backbone_flops_windows(
+            cfg, part.n_regions * part.windows_per_full_region, 0)
+    nw = part.n_windows(n_low, n_reuse)
+    if length_edges is not None:
+        # the degenerate all-reuse point (0 transmitted windows) is not
+        # servable (policies keep >= 1 transmitted region) but delay-
+        # model fits probe it — cost it at the smallest bucket
+        nw = pt_length_bucket(max(nw, 1), length_edges)
+    return backbone_flops_windows(cfg, nw, beta)

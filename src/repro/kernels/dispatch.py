@@ -67,12 +67,15 @@ def use_pallas(backend: Optional[str] = None) -> bool:
 
 
 def window_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
-                     window: int) -> jnp.ndarray:
+                     window: int,
+                     win_valid: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """Pallas non-overlapping window attention (ViTDet window blocks).
 
     q: (B, T, H, Dh); k/v: (B, T, KV, Dh); T % window == 0.
+    ``win_valid``: optional (B,) valid-window counts — pad windows of a
+    length-bucketed sequence emit zeros.
     """
-    return _win.window_attention(q, k, v, window)
+    return _win.window_attention(q, k, v, window, win_valid=win_valid)
 
 
 def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,

@@ -19,11 +19,14 @@ from repro.kernels.window_attention import kernel as K
                                              "interpret"))
 def window_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                      window: int, *, scale: Optional[float] = None,
+                     win_valid: Optional[jnp.ndarray] = None,
                      wb: int = K.DEFAULT_WB,
                      interpret: Optional[bool] = None) -> jnp.ndarray:
     """Drop-in for models.attention.window_sdpa.
 
     q: (B, T, H, Dh); k/v: (B, T, KV, Dh); T % window == 0.
+    ``win_valid``: optional (B,) i32 valid-window counts (length-bucketed
+    padded sequences) — pad windows' outputs are zeroed in-kernel.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -44,8 +47,13 @@ def window_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
             x = jnp.pad(x, ((0, 0), (0, 0), (0, w2p - window), (0, 0)))
         return x
 
+    flags = None
+    if win_valid is not None:
+        flags = (jnp.arange(W)[None, :] < win_valid[:, None]) \
+            .astype(jnp.int32).reshape(B * W, 1)
     out = K.window_attention_kernel(
         to_blocks(q, H), to_blocks(k, KV), to_blocks(v, KV),
-        scale=scale, w2_valid=window, wb=wb, interpret=interpret)
+        scale=scale, w2_valid=window, wb=wb, interpret=interpret,
+        win_flags=flags)
     out = jnp.moveaxis(out[:, :, :window, :], 1, 2)  # (BW, w2, H, Dh)
     return out.reshape(B, T, H, Dh)

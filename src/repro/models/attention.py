@@ -103,22 +103,34 @@ def _sdpa_dense(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
 
 
 def window_sdpa(q, k, v, window: int, *,
+                win_valid: Optional[jnp.ndarray] = None,
                 backend: Optional[str] = None) -> jnp.ndarray:
     """Non-overlapping local window attention over a 1-D sequence.
 
     q/k/v: (B, T, H, Dh) with T % window == 0.  Each window attends only
     to itself (ViTDet-style window attention, 1-D layout).  ``backend``
     routes to the Pallas window-attention kernel (kernels.dispatch).
+
+    ``win_valid``: optional (B,) i32 count of VALID windows per sample
+    (length-bucketed padded sequences, core.partition.PlanLayout): pad
+    windows beyond the count have their outputs zeroed, so padded lanes
+    carry deterministic content on both backends.  Window attention is
+    window-local, so valid windows are unaffected either way.
     """
     if dispatch.use_pallas(backend):
-        return dispatch.window_attention(q, k, v, window)
+        return dispatch.window_attention(q, k, v, window,
+                                         win_valid=win_valid)
     B, T, H, Dh = q.shape
     W = T // window
     qw = q.reshape(B, W, window, H, Dh).reshape(B * W, window, H, Dh)
     kw = k.reshape(B, W, window, k.shape[2], Dh).reshape(B * W, window, -1, Dh)
     vw = v.reshape(B, W, window, v.shape[2], Dh).reshape(B * W, window, -1, Dh)
     out = sdpa(qw, kw, vw, causal=False)
-    return out.reshape(B, W, window, H, Dh).reshape(B, T, H, Dh)
+    out = out.reshape(B, W, window, H, Dh)
+    if win_valid is not None:
+        keep = jnp.arange(W)[None, :] < win_valid[:, None]       # (B, W)
+        out = jnp.where(keep[:, :, None, None, None], out, 0)
+    return out.reshape(B, T, H, Dh)
 
 
 # ---------------------------------------------------------------------------
@@ -180,18 +192,26 @@ def _project_qkv(cfg: ModelConfig, p, x, positions, rope: bool = True):
 def attention_forward(cfg: ModelConfig, p, x, positions, *,
                       causal: bool = True, window: int = 0,
                       rope: bool = True,
+                      kv_len: Optional[jnp.ndarray] = None,
+                      win_valid: Optional[jnp.ndarray] = None,
                       backend: Optional[str] = None) -> jnp.ndarray:
     """Full-sequence attention (training / prefill without cache reuse).
 
     ``backend`` selects the kernel backend (kernels.dispatch): window
     blocks route to the Pallas window-attention kernel, global blocks to
     the Pallas flash kernel; ``"xla"`` keeps the pure-jnp paths.
+
+    Length-bucketed padded sequences thread their traced validity here:
+    ``kv_len`` (B,) masks pad KEYS out of global attention (the sdpa
+    masked path — never routed to the Pallas flash kernel), ``win_valid``
+    (B,) flags whole pad windows for window attention.
     """
     q, k, v = _project_qkv(cfg, p, x, positions, rope)
     if window > 0:
-        out = window_sdpa(q, k, v, window, backend=backend)
+        out = window_sdpa(q, k, v, window, win_valid=win_valid,
+                          backend=backend)
     else:
-        out = sdpa(q, k, v, causal=causal, backend=backend)
+        out = sdpa(q, k, v, causal=causal, kv_len=kv_len, backend=backend)
     out = out.reshape(x.shape[0], x.shape[1], cfg.q_dim) @ p["w_o"]
     if cfg.attention_bias:
         out = out + p["b_o"]

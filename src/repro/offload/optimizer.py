@@ -191,9 +191,21 @@ def pareto_frontier(Z: List[Dict]) -> List[Dict]:
 
 def knee_point(front: List[Dict]) -> Dict:
     """Max distance to the chord between the frontier's extreme points
-    (the trade-off-utility knee the paper cites [37])."""
+    (the trade-off-utility knee the paper cites [37]).
+
+    A frontier of <= 2 points has no interior knee.  Fall back to the
+    MAX-ACCURACY point: select() only reaches the knee when the system
+    is healthy (stale states already take the min-latency branch), and
+    on a degenerate two-point frontier — the static-scene case where
+    the config space collapses to "downsample nothing" vs "downsample
+    everything" — the min-latency fallback silently trades the entire
+    accuracy gap for latency the healthy state doesn't need.  The
+    a_floor guard only catches this when the estimator's A-hat for the
+    aggressive point is honest; this fallback stays safe when it is
+    not.
+    """
     if len(front) <= 2:
-        return front[0]
+        return front[-1]
     pts = np.array([[z["T"], z["A"]] for z in front])
     # normalise both objectives to [0, 1]
     lo, hi = pts.min(0), pts.max(0)

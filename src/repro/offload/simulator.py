@@ -40,34 +40,44 @@ SIZE_SCALE = (1920 * 1080) / (512 * 512)
 
 
 # ---------------------------------------------------------------------------
-# server model wrapper — the bucketed-executable serving hot path.
+# server model wrapper — the length-bucketed serving hot path.
 #
 # EVERY inference (solo N=1, batched multi-client wave, padded or
-# coalesced) runs through ONE code path, infer_wave: per-sample (B, n)
-# region-id layouts, the wave padded UP to a batch bucket, against an
-# AOT-compiled executable keyed on the bounded grid
-#     (n_low bucket, n_reuse bucket, beta, capture point, B bucket).
-# warmup() compiles that grid off the critical path at replica start;
-# after it, a steady-state compile is telemetry (stats.steady_compiles)
-# that tests and bench_serving treat as a failure.
+# coalesced) runs through ONE code path, infer_wave: mask-traced padded
+# plan layouts (core.partition.PlanLayout), the wave padded UP to a
+# batch bucket, against an AOT-compiled executable keyed on the
+# collapsed grid
+#     (length bucket, beta, capture point, B bucket).
+# (n_low, n_reuse) are runtime i32 DATA, not shape — any plan mix at one
+# length bucket shares one executable.  warmup() compiles the grid off
+# the critical path at replica start; after it, a steady-state compile
+# is telemetry (stats.steady_compiles) that tests and bench_serving
+# treat as a failure.
+
+# argument order of a mixed executable's layout arrays
+_LAYOUT_ARGS = ("win_src", "win_dst", "low_src", "low_ids", "reuse_ids",
+                "nw")
 
 
 class ServerModel:
-    """Server-side detector with an AOT-compiled bucketed-executable
-    grid and device-resident feature caches.
+    """Server-side detector with an AOT-compiled length-bucketed
+    executable grid and device-resident feature caches.
 
-    ``n_low`` is rounded DOWN to a bucket edge (partition.bucket_n_low)
-    before it keys an executable, so a policy emitting varied masks
-    compiles at most a bounded set of forwards instead of one per
-    distinct region count; extra selected regions beyond the bucket stay
-    full-res (the accuracy-safe direction).  ``n_reuse`` is NOT
-    re-bucketed here — reuse plans must arrive bucket-exact (a reused
-    region ships zero payload bytes, so codec and server must agree on
-    the transmitted set; offload.optimizer.build_reuse_plan enforces
-    it).  Wave sizes are padded UP to ``b_buckets`` edges with copies of
-    sample 0; padded rows are dropped from the decoded detections and
-    never touch a FeatureCache, so within one executable the padding is
-    bit-invisible (pinned by tests).
+    The transmitted window count of a plan is rounded UP to a
+    ``length_edges`` bucket (partition.length_bucket_set); WHICH regions
+    are LOW/REUSE and how many windows are real travel as runtime i32
+    inputs (PlanLayout), so executables are keyed on
+    ``(length bucket, beta, capture, B bucket)`` only — ~len(edges)+1
+    executables per (beta, B) instead of one per (n_low, n_reuse)
+    bucket pair, and waves may mix arbitrary (n_low, n_reuse) plans at
+    one length bucket.  Mixed executables always capture restoration-
+    point tiles (capture == beta; callers without a session drop them)
+    and full-res executables capture at the deployment's canonical
+    ``full_capture`` point, so sessionful and stateless traffic share
+    one grid.  Wave sizes are padded UP to ``b_buckets`` edges with
+    copies of sample 0; padded rows are dropped from the decoded
+    detections and never touch a FeatureCache, so within one executable
+    the padding is bit-invisible (pinned by tests).
 
     ``device_cache=True`` keeps captured restoration-point tiles as
     device arrays end to end: reuse gathers and cache refreshes are
@@ -86,7 +96,8 @@ class ServerModel:
                  backend: Optional[str] = "auto", jit: bool = True,
                  n_buckets: int = 4,
                  b_buckets: Tuple[int, ...] = pt.BATCH_BUCKETS,
-                 device_cache: bool = True):
+                 device_cache: bool = True,
+                 n_length_buckets: int = pt.N_LENGTH_BUCKETS):
         self.cfg = cfg
         self.params = params
         self.part = vb.vit_partition(cfg)
@@ -97,14 +108,34 @@ class ServerModel:
         self.n_buckets = n_buckets
         self.b_buckets = tuple(sorted(b_buckets))
         self.device_cache = device_cache
-        self._fns: Dict[Tuple[int, int, int, int, int], Callable] = {}
+        self.length_edges = pt.length_bucket_set(self.part,
+                                                 n_length_buckets)
+        # canonical capture point of the FULL-RES executable: sessions
+        # bootstrap with full-res offloads that capture tiles at their
+        # beta; stateless callers share that executable and drop the
+        # tiles, so capture never fragments the grid (set by warmup)
+        self.full_capture = 0
+        self._fns: Dict[Tuple[int, int, int, int], Callable] = {}
+        self._zero_tiles: Dict[int, jnp.ndarray] = {}
         self.stats = ServingStats()
 
     def bucket(self, n_low: int) -> int:
+        """Legacy policy-side n_low bucket (plan EMISSION still rounds
+        down; the executable grid no longer keys on it)."""
         return pt.bucket_n_low(n_low, self.part.n_regions, self.n_buckets)
 
     def batch_bucket(self, b: int) -> int:
         return pt.batch_bucket(b, self.b_buckets)
+
+    def length_bucket(self, n_windows: int) -> int:
+        return pt.length_bucket(n_windows, self.length_edges)
+
+    def plan_length_bucket(self, plan: RegionPlan) -> int:
+        """The length bucket a plan's transmitted windows land in
+        (0 = the dedicated full-resolution executable)."""
+        if plan.n_low == 0 and plan.n_reuse == 0:
+            return 0
+        return self.length_bucket(pt.plan_n_windows(plan, self.part))
 
     def _decode(self, outs):
         from repro.core import det_head as dh
@@ -114,8 +145,7 @@ class ServerModel:
     # ------------------------------------------------------------------
     # executable grid
 
-    def _build_fn(self, n_low: int, beta: int, n_reuse: int,
-                  capture: int) -> Callable:
+    def _build_fn(self, lb: int, beta: int, capture: int) -> Callable:
         cfg, backend = self.cfg, self.backend
 
         def finish(outs):
@@ -124,80 +154,102 @@ class ServerModel:
                 return self._decode(outs), tiles
             return self._decode(outs)
 
-        if n_low == 0 and n_reuse == 0:
+        if lb == 0:
             def fn(params, img):
                 return finish(vb.forward_det(cfg, params, img,
                                              backend=backend,
                                              capture_beta=capture))
-        elif n_reuse == 0:
-            def fn(params, img, full_ids, low_ids):
-                return finish(vb.forward_det(cfg, params, img, full_ids,
-                                             low_ids, beta,
-                                             backend=backend,
-                                             capture_beta=capture))
         else:
-            def fn(params, img, full_ids, low_ids, reuse_ids,
-                   reuse_tiles):
-                return finish(vb.forward_det(cfg, params, img, full_ids,
-                                             low_ids, beta,
-                                             backend=backend,
-                                             reuse_ids=reuse_ids,
-                                             reuse_tiles=reuse_tiles,
-                                             capture_beta=capture))
+            def fn(params, img, win_src, win_dst, low_src, low_ids,
+                   reuse_ids, nw, reuse_tiles, ids_key=None):
+                layout = {"win_src": win_src, "win_dst": win_dst,
+                          "low_src": low_src, "low_ids": low_ids,
+                          "reuse_ids": reuse_ids, "nw": nw}
+                # beta == 0 restores at input — reuse tiles are
+                # restoration-point features and cannot splice there
+                # (infer_wave bars reuse plans from beta=0 waves)
+                return finish(vb.forward_det(
+                    cfg, params, img, beta=beta, backend=backend,
+                    layout=layout,
+                    reuse_tiles=reuse_tiles if beta >= 1 else None,
+                    capture_beta=capture, ids_key=ids_key))
         return fn
 
-    def _arg_structs(self, n_low: int, n_reuse: int, batch: int) -> List:
-        """ShapeDtypeStructs of one executable's data arguments."""
+    def _arg_structs(self, lb: int, batch: int) -> List:
+        """ShapeDtypeStructs of one executable's data arguments — shapes
+        depend only on (length bucket, B bucket)."""
         part = self.part
         H, W = self.cfg.vit.img_size
         sds = [jax.ShapeDtypeStruct((batch, H, W, 3), jnp.float32)]
-        if n_low > 0 or n_reuse > 0:
-            n_full = part.n_regions - n_low - n_reuse
-            sds.append(jax.ShapeDtypeStruct((batch, n_full), jnp.int32))
-            sds.append(jax.ShapeDtypeStruct((batch, n_low), jnp.int32))
-        if n_reuse > 0:
-            sds.append(jax.ShapeDtypeStruct((batch, n_reuse), jnp.int32))
+        if lb > 0:
+            nR = part.n_regions
+            sds.append(jax.ShapeDtypeStruct((batch, lb), jnp.int32))
+            sds.append(jax.ShapeDtypeStruct((batch, lb), jnp.int32))
+            for _ in ("low_src", "low_ids", "reuse_ids"):
+                sds.append(jax.ShapeDtypeStruct((batch, nR), jnp.int32))
+            sds.append(jax.ShapeDtypeStruct((batch,), jnp.int32))
             sds.append(jax.ShapeDtypeStruct(
-                (batch, n_reuse, part.windows_per_full_region,
+                (batch, nR, part.windows_per_full_region,
                  part.tokens_low_region, self.cfg.d_model), jnp.float32))
         return sds
 
-    def _get_fn(self, n_low: int, beta: int, n_reuse: int = 0,
-                capture: int = 0, batch: int = 1) -> Callable:
-        key = (n_low, n_reuse, beta, capture, batch)
+    def _get_fn(self, lb: int, beta: int, capture: int = 0,
+                batch: int = 1) -> Callable:
+        key = (lb, beta, capture, batch)
         if key not in self._fns:
-            fn = self._build_fn(n_low, beta, n_reuse, capture)
+            fn = self._build_fn(lb, beta, capture)
             if self.jit:
                 # AOT: lower + compile against the key's exact shapes.
                 # The executable can never silently retrace, so each
                 # cache miss is exactly one XLA compile — the telemetry
                 # below is the whole compile surface.
                 fn = jax.jit(fn).lower(
-                    self.params, *self._arg_structs(n_low, n_reuse,
-                                                    batch)).compile()
+                    self.params, *self._arg_structs(lb, batch)).compile()
                 self.stats.note_compile(key)
             self._fns[key] = fn
         return self._fns[key]
+
+    def _exec_key(self, n_low: int, n_reuse: int, beta: int,
+                  cap: int) -> Tuple[int, int, int]:
+        """Collapse a legacy (n_low, n_reuse, beta, capture) plan shape
+        onto the (length bucket, beta, capture) executable it runs on.
+        Full-res entries canonicalise through :meth:`_full_cap`, so a
+        deployment that really configures several distinct full-res
+        capture points warms each of them (no-capture requests fold
+        into ``full_capture``)."""
+        if n_low == 0 and n_reuse == 0:
+            return (0, 0, self._full_cap(cap))
+        lb = self.length_bucket(self.part.n_windows(n_low, n_reuse))
+        return (lb, beta, beta)
 
     def warmup(self, plan_space, batch_buckets: Optional[Tuple[int, ...]]
                = None) -> int:
         """AOT-compile the executable grid off the critical path.
 
-        ``plan_space``: iterable of (n_low bucket, n_reuse bucket, beta,
-        capture point) tuples — the plan shapes the deployment's config
-        space can emit (see :meth:`default_plan_space`).  Each is
-        compiled for every batch bucket.  Returns the number of
-        executables compiled; afterwards ``stats.steady_compiles``
-        counts every further compile (a steady-state stall).
+        ``plan_space``: iterable of (n_low, n_reuse, beta, capture
+        point) tuples — the plan shapes the deployment's config space
+        can emit (see :meth:`default_plan_space`).  The space is
+        COLLAPSED onto the (length bucket, beta, capture, B bucket)
+        grid: every (n_low, n_reuse) pair maps to its padded length
+        bucket, mixed captures canonicalise to beta, and full-res
+        captures to the deployment-wide ``full_capture`` point.  Each
+        surviving key is compiled for every batch bucket.  Returns the
+        number of executables compiled; afterwards
+        ``stats.steady_compiles`` counts every further compile (a
+        steady-state stall).
         """
         t0 = time.perf_counter()
         before = self.stats.compiles
         space = dict.fromkeys(tuple(p) for p in plan_space)
-        for (n_low, n_reuse, beta, cap) in space:
-            if n_low == 0 and n_reuse == 0:
-                beta = 0                      # serve-time normalisation
+        self.full_capture = max(
+            [self.full_capture] + [cap for (n_low, n_reuse, _, cap)
+                                   in space
+                                   if n_low == 0 and n_reuse == 0])
+        keys = dict.fromkeys(self._exec_key(n_low, n_reuse, beta, cap)
+                             for (n_low, n_reuse, beta, cap) in space)
+        for (lb, beta, cap) in keys:
             for b in (batch_buckets or self.b_buckets):
-                self._get_fn(n_low, beta, n_reuse, cap, b)
+                self._get_fn(lb, beta, cap, b)
         if self.device_cache:
             self._warm_tile_ops(space, batch_buckets or self.b_buckets)
         return self.stats.finish_warmup(t0, before, time.perf_counter())
@@ -213,10 +265,13 @@ class ServerModel:
         tile = (part.n_regions, part.windows_per_full_region,
                 part.tokens_low_region, self.cfg.d_model)
         dummy = jnp.zeros(tile, jnp.float32)
-        reuse_edges = {n_reuse for (_, n_reuse, _, _) in space if n_reuse}
-        for n_reuse in reuse_edges:
-            mr.gather_tiles(dummy, jnp.zeros((n_reuse,), jnp.int32))
-        if any(cap for (_, _, _, cap) in space):
+        if any(n_reuse for (_, n_reuse, _, _) in space):
+            # reuse gathers are (n_regions,)-padded — one shape for all
+            mr.gather_tiles(dummy, jnp.zeros((part.n_regions,),
+                                             jnp.int32))
+        if any(cap for (_, _, _, cap) in space) or \
+                any(n_low or n_reuse for (n_low, n_reuse, _, _) in space):
+            # mixed executables always capture, so take/refresh are hot
             mr.refresh_tiles(jnp.zeros(tile, jnp.float32), dummy)
             for b in batch_buckets:
                 mr.take_sample_tiles(jnp.zeros((b,) + tile, jnp.float32),
@@ -227,10 +282,12 @@ class ServerModel:
                            captures: Sequence[int] = (0,),
                            full_res: bool = True) -> List[Tuple[int, int,
                                                                 int, int]]:
-        """The bounded plan grid a config space induces: every n_low
-        bucket edge x bucket-exact n_reuse x beta x capture point.
-        Mixed plans capture at their own beta when the session captures
-        at all (``captures`` lists the extra full-res capture points)."""
+        """The plan grid a config space induces: every n_low bucket edge
+        x n_reuse edge x beta x capture point.  Mixed plans capture at
+        their own beta when the session captures at all (``captures``
+        lists the extra full-res capture points).  :meth:`warmup`
+        collapses this onto the (length bucket, beta, capture, B)
+        executable grid."""
         edges = pt.bucket_set(self.part.n_regions, self.n_buckets)
         space: List[Tuple[int, int, int, int]] = []
         if full_res:
@@ -257,31 +314,33 @@ class ServerModel:
     # ------------------------------------------------------------------
     # the one serving entry point
 
-    def plan_buckets(self, plan: RegionPlan) -> Tuple[int, int]:
-        """(bucketed n_low, bucket-exact n_reuse) for a plan."""
-        n_reuse = plan.n_reuse
-        assert pt.bucket_n_low(n_reuse, self.part.n_regions,
-                               self.n_buckets) == n_reuse, \
-            f"reuse plan not bucket-exact: n_reuse={n_reuse}"
-        return self.bucket(plan.n_low), n_reuse
+    def _full_cap(self, want: int) -> int:
+        """Canonical capture point of the full-res executable: requests
+        for no capture (or the deployment's point) share ``full_capture``
+        and simply drop the tiles."""
+        if want == 0 or want == self.full_capture:
+            return self.full_capture
+        return want
 
     def infer_wave(self, frames: np.ndarray, plans: Sequence[RegionPlan],
                    beta: int = 0,
-                   caches: Optional[Sequence[FeatureCache]] = None,
+                   caches: Optional[Sequence[Optional[FeatureCache]]]
+                   = None,
                    frame_ids: Optional[Sequence[int]] = None,
                    capture_beta: int = 0,
-                   n_low_override: Optional[int] = None
+                   lb_override: Optional[int] = None
                    ) -> List[List[Dict]]:
-        """Serve one wave (B >= 1 frames) through the bucketed grid.
+        """Serve one wave (B >= 1 frames) through the collapsed grid.
 
-        frames: (B, H, W, 3); plans: per-sample RegionPlans sharing one
-        (n_low bucket, bucket-exact n_reuse) pair; caches/frame_ids: the
-        per-client FeatureCaches of sessionful (reuse/capture) jobs —
-        each sample splices from and refreshes its OWN cache, never
-        another's.  ``n_low_override``: run the wave at a SMALLER n_low
-        bucket than the plans' own (cross-bucket coalescing) — surplus
-        LOW selections revert to FULL, the accuracy-safe direction,
-        via partition.plan_to_region_ids' bucket trimming.
+        frames: (B, H, W, 3); plans: per-sample RegionPlans — ANY
+        (n_low, n_reuse) mix is servable in one executable; the wave
+        runs at the length bucket of its LONGEST plan (or
+        ``lb_override``, which may only pad further — the coalescing
+        direction, zero resolution changes, zero accuracy question).
+        caches/frame_ids: the per-client FeatureCaches of sessionful
+        (reuse/capture) jobs — entries may be None for stateless jobs
+        co-batched into a sessionful wave; each sample splices from and
+        refreshes its OWN cache, never another's.
 
         The wave is padded up to the next batch bucket with copies of
         sample 0; padded rows are dropped from the decoded detections
@@ -291,26 +350,14 @@ class ServerModel:
         frames = np.asarray(frames)
         B = frames.shape[0]
         assert len(plans) == B and B >= 1
-        buckets = [self.plan_buckets(p) for p in plans]
-        n_reuse = buckets[0][1]
-        assert all(b[1] == n_reuse for b in buckets), \
-            f"wave mixes n_reuse buckets: {buckets}"
-        if n_low_override is None:
-            n_low = buckets[0][0]
-            assert all(b[0] == n_low for b in buckets), \
-                f"wave mixes n_low buckets: {buckets}"
-        else:
-            n_low = n_low_override
-            assert all(b[0] >= n_low for b in buckets), \
-                f"coalescing may only shrink n_low buckets: " \
-                f"{buckets} -> {n_low}"
-        beta_eff = beta if (n_low > 0 or n_reuse > 0) else 0
-        cap = 0
         if caches is not None:
             assert len(caches) == B
-            cap = beta if beta >= 1 else capture_beta
-        assert n_reuse == 0 or (caches is not None and beta >= 1), \
-            "REUSE regions need feature caches and a restoration point"
+        for i, p in enumerate(plans):
+            assert p.n_reuse == 0 or (caches is not None
+                                      and caches[i] is not None
+                                      and beta >= 1), \
+                "REUSE regions need feature caches and a restoration point"
+        full_res = all(p.n_low == 0 and p.n_reuse == 0 for p in plans)
 
         Bp = self.batch_bucket(B)
         npad = Bp - B
@@ -321,31 +368,45 @@ class ServerModel:
             return np.concatenate([a, np.repeat(a[:1], npad, axis=0)])
 
         imgs = jnp.asarray(pad_rows(frames))
-        reuse_rows: List[np.ndarray] = [np.zeros((0,), np.int32)] * B
-        if n_low == 0 and n_reuse == 0:
-            fn = self._get_fn(0, 0, 0, cap, Bp)
+        layouts: Optional[List[pt.PlanLayout]] = None
+        if full_res and lb_override is None:
+            store_cap = capture_beta if caches is not None else 0
+            exec_cap = self._full_cap(store_cap)
+            fn = self._get_fn(0, 0, exec_cap, Bp)
             out = fn(self.params, imgs)
         else:
-            full_b, low_b, reuse_b = pt.stack_plan_ids(plans, n_low,
-                                                       n_reuse)
-            full_b, low_b, reuse_b = (pad_rows(full_b), pad_rows(low_b),
-                                      pad_rows(reuse_b))
-            fn = self._get_fn(n_low, beta_eff, n_reuse, cap, Bp)
-            if n_reuse == 0:
-                out = fn(self.params, imgs, jnp.asarray(full_b),
-                         jnp.asarray(low_b))
-            else:
-                reuse_rows = [reuse_b[i] for i in range(B)]
-                tiles_in = self._gather_wave_tiles(caches, reuse_rows,
-                                                   npad)
-                out = fn(self.params, imgs, jnp.asarray(full_b),
-                         jnp.asarray(low_b), jnp.asarray(reuse_b),
-                         tiles_in)
-        if cap:
+            # beta == 0 with a mixed plan is the paper's restore-at-
+            # input case (full-length compute, upsampled input) — it has
+            # no restoration point, so reuse plans are barred (per-plan
+            # assert above) and tiles are never captured
+            beta_eff = beta if not full_res else max(beta, 1)
+            nws = [pt.plan_n_windows(p, self.part) for p in plans]
+            lb = (self.length_bucket(max(nws)) if lb_override is None
+                  else lb_override)
+            assert lb >= max(nws) and lb in self.length_edges, \
+                f"lb_override {lb} cannot hold {max(nws)} windows " \
+                f"(edges {self.length_edges})"
+            layouts = [pt.plan_layout(p.states, lb, self.part)
+                       for p in plans]
+            arrays, wave_key = pt.stack_plan_layouts(layouts)
+            tiles_in = self._wave_tiles(layouts, caches, npad)
+            # mixed execs always capture at their restoration point;
+            # beta_eff == 0 has none, so it never captures
+            exec_cap = beta_eff
+            store_cap = beta_eff if caches is not None else 0
+            fn = self._get_fn(lb, beta_eff, exec_cap, Bp)
+            args = [jnp.asarray(pad_rows(arrays[k]))
+                    for k in _LAYOUT_ARGS]
+            kw = {} if self.jit else {"ids_key": wave_key}
+            out = fn(self.params, imgs, *args, tiles_in, **kw)
+
+        if exec_cap:
             (boxes, scores, classes), tiles_out = out
-            self._refresh_caches(caches, tiles_out, reuse_rows, cap,
-                                 frame_ids if frame_ids is not None
-                                 else [-1] * B)
+            if store_cap and caches is not None:
+                self._refresh_caches(caches, tiles_out, layouts,
+                                     store_cap,
+                                     frame_ids if frame_ids is not None
+                                     else [-1] * B)
         else:
             boxes, scores, classes = out
         self.stats.offloads += B
@@ -353,34 +414,79 @@ class ServerModel:
                                            self.score_thresh)
                 for i in range(B)]
 
-    def _gather_wave_tiles(self, caches, reuse_rows: List[np.ndarray],
-                           npad: int) -> jnp.ndarray:
-        """(Bp, n_reuse, d^2, w^2, D) stacked per-sample reuse tiles.
+    def _zeros_tiles(self, Bp: int) -> jnp.ndarray:
+        """Cached all-zero reuse-tiles input for reuse-free waves (a
+        device-side fill — no h2d traffic, allocated once per B)."""
+        z = self._zero_tiles.get(Bp)
+        if z is None:
+            part = self.part
+            z = jnp.zeros((Bp, part.n_regions,
+                           part.windows_per_full_region,
+                           part.tokens_low_region, self.cfg.d_model),
+                          jnp.float32)
+            self._zero_tiles[Bp] = z
+        return z
 
-        Device-resident caches stack on device — zero h2d tile bytes;
-        host caches are uploaded (and accounted) here."""
-        gathered = [c.gather(r) for c, r in zip(caches, reuse_rows)]
-        gathered += [gathered[0]] * npad
-        if all(not isinstance(g, np.ndarray) for g in gathered):
-            return jnp.stack(gathered)
-        host = np.stack([np.asarray(g) for g in gathered])
-        self.stats.tile_bytes_h2d += host[:len(reuse_rows)].nbytes
-        return jnp.asarray(host)
+    def _wave_tiles(self, layouts: List[pt.PlanLayout], caches,
+                    npad: int) -> jnp.ndarray:
+        """(Bp, n_regions, d^2, w^2, D) stacked per-sample reuse tiles.
 
-    def _refresh_caches(self, caches, tiles_out, reuse_rows, cap: int,
+        Rows are (n_regions,)-padded: entries past a sample's n_reuse
+        gather clipped garbage that the restoration scatter routes to
+        the sentinel.  Device-resident caches stack on device — zero
+        h2d tile bytes; host caches are uploaded (and accounted) here.
+        """
+        B = len(layouts)
+        if caches is None or all(l.n_reuse == 0 for l in layouts):
+            return self._zeros_tiles(B + npad)
+        part = self.part
+        tile = (part.n_regions, part.windows_per_full_region,
+                part.tokens_low_region, self.cfg.d_model)
+        gathered, host_bytes = [], 0
+        for l, c in zip(layouts, caches):
+            if l.n_reuse == 0 or c is None or c.tiles is None:
+                gathered.append(None)
+                continue
+            ids = np.where(l.reuse_ids < part.n_regions, l.reuse_ids, 0)
+            g = c.gather(ids)
+            if isinstance(g, np.ndarray):
+                # only the real rows are payload; the clipped pad rows
+                # are an artifact of the padded gather
+                host_bytes += g[:l.n_reuse].nbytes
+            gathered.append(g)
+        if host_bytes == 0:
+            rows = [g if g is not None else jnp.zeros(tile, jnp.float32)
+                    for g in gathered]
+            rows += [rows[0]] * npad
+            return jnp.stack(rows)
+        self.stats.tile_bytes_h2d += host_bytes
+        rows = [np.asarray(g) if g is not None
+                else np.zeros(tile, np.float32) for g in gathered]
+        rows += [rows[0]] * npad
+        return jnp.asarray(np.stack(rows))
+
+    def _refresh_caches(self, caches, tiles_out, layouts, cap: int,
                         frame_ids) -> None:
-        """Refresh each real sample's cache with its captured tiles.
-        Padded rows are never written back."""
-        B = len(reuse_rows)
+        """Refresh each real sessionful sample's cache with its captured
+        tiles.  Padded rows and cache-less samples are never written."""
+        B = len(caches)
+        reuse_rows = [l.reuse_ids[:l.n_reuse] if l is not None
+                      else np.zeros((0,), np.int32)
+                      for l in (layouts or [None] * B)]
         if self.device_cache:
             for i, c in enumerate(caches[:B]):
+                if c is None:
+                    continue
                 c.update(mr.take_sample_tiles(tiles_out, np.int32(i)),
                          reuse_rows[i], cap, frame_ids[i])
         else:
             tiles_np = np.asarray(tiles_out)
-            self.stats.tile_bytes_d2h += tiles_np[:B].nbytes
-            for i, c in enumerate(caches[:B]):
-                c.update(tiles_np[i], reuse_rows[i], cap, frame_ids[i])
+            live = [i for i, c in enumerate(caches[:B]) if c is not None]
+            self.stats.tile_bytes_d2h += sum(tiles_np[i].nbytes
+                                             for i in live)
+            for i in live:
+                caches[i].update(tiles_np[i], reuse_rows[i], cap,
+                                 frame_ids[i])
 
     # ------------------------------------------------------------------
     # N=1 conveniences (thin wrappers over infer_wave)

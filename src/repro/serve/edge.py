@@ -19,17 +19,19 @@ One edge replica serves N concurrent device streams:
   * :class:`MultiClientSimulation` multiplexes N (video, trace, policy)
     device streams onto that replica with an event-driven wave
     scheduler.  Offloads queue at the edge (kept sorted on insert);
-    waves form from whatever compatible jobs — same (n_low bucket,
-    n_reuse bucket, beta, capture point) — have arrived when the
-    replica frees up; the resulting queueing delay is folded into
-    Eq. (2)'s end-to-end latency (``parts["queue"]``).  With
-    ``EdgeConfig.coalesce`` the scheduler additionally promotes a
-    pending job from a LARGER n_low bucket into the forming wave's
-    smaller bucket (surplus LOW regions revert to FULL — the
-    accuracy-safe direction partition.plan_to_region_ids already
-    implements) whenever a cost model built on ``backbone_flops`` and
+    waves form from whatever compatible jobs — same (length bucket,
+    beta, capture point) — have arrived when the replica frees up;
+    ANY (n_low, n_reuse) mix at one length bucket is compatible, since
+    the collapsed executable grid carries plan layouts as runtime data
+    (core.partition.PlanLayout).  The resulting queueing delay is
+    folded into Eq. (2)'s end-to-end latency (``parts["queue"]``).
+    With ``EdgeConfig.coalesce`` the scheduler additionally promotes a
+    pending job from a SMALLER length bucket into the forming wave's
+    larger bucket — the job's plan is untouched, it is merely padded
+    further (zero resolution changes, zero accuracy question) —
+    whenever a cost model built on ``backbone_flops_windows`` and
     ``batch_alpha`` says the queueing delay saved exceeds the extra
-    compute bought.
+    padded compute bought.
 
 The single-client :class:`~repro.offload.simulator.Simulation` is the
 N=1 case: both drive the same per-frame step methods
@@ -61,30 +63,28 @@ class BatchedServerModel(ServerModel):
     Kept as the multi-client API surface; both entry points are thin
     adapters over the inherited :meth:`ServerModel.infer_wave`, so solo
     B=1 calls and batched waves share one executable grid (and one
-    warmup) per (n_low bucket, n_reuse bucket, beta, capture, B bucket).
+    warmup) per (length bucket, beta, capture, B bucket).
     """
 
     def infer_batch(self, frames: np.ndarray,
                     masks: Sequence[Optional[np.ndarray]],
                     beta: int = 0) -> List[List[Dict]]:
-        """Batched inference over same-bucket frames.
+        """Batched inference over frames with ARBITRARY per-frame masks.
 
         frames: (B, H, W, 3); masks: per-frame (n_regions,) binary masks
-        (or None for full-res).  Every mask must land in the SAME n_low
-        bucket — that is the wave compatibility contract the scheduler
-        enforces.  Returns per-frame detection lists.
+        (or None for full-res).  Masks may land in DIFFERENT n_low
+        buckets — the wave runs at the length bucket of its longest
+        plan, shorter plans are padded (the collapsed-executable
+        contract).  An all-full-res batch keeps the dedicated full-res
+        executable.  Returns per-frame detection lists.
         """
         B = frames.shape[0]
         assert len(masks) == B
-        n_lows = [0 if m is None else self.bucket(int(m.sum()))
-                  for m in masks]
-        assert all(n == n_lows[0] for n in n_lows), \
-            f"wave mixes n_low buckets: {n_lows}"
-        plans = [RegionPlan.from_mask(m) if m is not None and n_lows[0] > 0
+        plans = [RegionPlan.from_mask(m) if m is not None
+                 and int(np.asarray(m).sum()) > 0
                  else RegionPlan(np.zeros((self.part.n_regions,), np.int8))
                  for m in masks]
-        return self.infer_wave(frames, plans, beta,
-                               n_low_override=n_lows[0])
+        return self.infer_wave(frames, plans, beta)
 
     def infer_plans(self, frames: np.ndarray,
                     plans: Sequence[RegionPlan],
@@ -140,11 +140,19 @@ class EdgeStats:
     wave_sizes: List[int] = field(default_factory=list)
     queue_delays: List[float] = field(default_factory=list)
     jobs: List[Dict] = field(default_factory=list)
-    promoted: int = 0                     # jobs coalesced across buckets
+    promoted: int = 0            # jobs coalesced across length buckets
+    # distinct n_low values per wave: > 1 means plans with different
+    # region counts shared ONE executable (the collapsed-grid win)
+    wave_n_low_mix: List[int] = field(default_factory=list)
 
     @property
     def mean_wave_size(self) -> float:
         return float(np.mean(self.wave_sizes)) if self.wave_sizes else 0.0
+
+    @property
+    def mixed_plan_waves(self) -> int:
+        """Waves that batched >= 2 distinct n_low values."""
+        return sum(1 for m in self.wave_n_low_mix if m > 1)
 
 
 class MultiClientSimulation:
@@ -190,20 +198,23 @@ class MultiClientSimulation:
         bisect.insort(self.pending, (ci, job),
                       key=lambda cj: cj[1]["arrival"])
 
-    def _job_key(self, job: Dict) -> Tuple[int, int, int, int]:
-        """Wave compatibility: (n_low bucket, n_reuse bucket, beta,
-        capture point).  Sessionful (reuse-capable) jobs capture
-        restoration-point tiles, so their compiled forward differs from
-        stateless jobs even at (n_low, n_reuse, beta) parity — the
-        capture field keeps them in separate waves."""
-        n_low = self.server.bucket(job["n_d"])
-        n_reuse = job.get("n_r", 0)
-        beta = job["beta"] if (n_low > 0 or n_reuse > 0) else 0
-        if self.clients[self._client_of(job)].feature_cache is None:
-            cap = 0
-        else:
-            cap = beta if beta >= 1 else job.get("capture_beta", 0)
-        return (n_low, n_reuse, beta, cap)
+    def _job_key(self, job: Dict) -> Tuple[int, int, int]:
+        """Wave compatibility: (length bucket, beta, capture point) —
+        the collapsed executable key.  (n_low, n_reuse) are runtime
+        data, so any plan mix at one length bucket co-batches; mixed
+        executables always capture (capture == beta), so sessionful and
+        stateless jobs co-batch too.  Full-res jobs (length bucket 0)
+        keep the dedicated full-res executable at the deployment's
+        canonical capture point."""
+        plan: RegionPlan = job["plan"]
+        lb = self.server.plan_length_bucket(plan)
+        if lb == 0:
+            want = (job.get("capture_beta", 0)
+                    if self.clients[self._client_of(job)].feature_cache
+                    is not None else 0)
+            return (0, 0, self.server._full_cap(want))
+        beta = job["beta"]
+        return (lb, beta, beta)
 
     def _client_of(self, job: Dict) -> int:
         return job["_client"]
@@ -220,29 +231,30 @@ class MultiClientSimulation:
             t_inf = t_inf * (1.0 + self.ec.batch_alpha * (B - 1))
         return t_dec + t_inf
 
-    def _try_promote(self, job: Dict, jk: Tuple[int, int, int, int],
-                     hk: Tuple[int, int, int, int],
+    def _try_promote(self, job: Dict, jk: Tuple[int, int, int],
+                     hk: Tuple[int, int, int],
                      wave: List[Tuple[int, Dict]]) -> bool:
-        """Coalesce ``job`` (bucket key ``jk``) into a wave of key ``hk``.
+        """Coalesce ``job`` (key ``jk``) into a wave of key ``hk``.
 
-        Only a SHRINK of the n_low bucket is ever legal: the surplus LOW
-        selections revert to FULL (partition.plan_to_region_ids), which
-        costs compute but never accuracy.  The reuse set is bucket-exact
-        (zero bytes were shipped for it) and the restoration/capture
-        points shape the executable, so those must match outright.
-        Promotes iff the queueing delay the job avoids (waiting out this
-        wave's service) exceeds the extra compute it buys: the
+        Only padding UP is ever legal: the job's plan is untouched, its
+        sequence is merely padded to the wave's LARGER length bucket —
+        zero resolution changes, zero accuracy question (pad windows are
+        masked/inert).  The restoration point shapes the executable, so
+        beta must match outright; full-res jobs (length bucket 0) keep
+        their dedicated executable and are never promoted.  Promotes iff
+        the queueing delay the job avoids (waiting out this wave's
+        service) exceeds the extra compute it buys: the padded-length
         flops-scaled inference-time increase plus its ``batch_alpha``
         marginal share of the wave.
         """
-        n_low_w, n_reuse_w, beta_w, cap_w = hk
-        n_low_j, n_reuse_j, beta_j, cap_j = jk
-        if not (n_reuse_j == n_reuse_w and beta_j == beta_w
-                and cap_j == cap_w and n_low_j > n_low_w):
+        lb_w, beta_w, cap_w = hk
+        lb_j, beta_j, cap_j = jk
+        if not (beta_j == beta_w and cap_j == cap_w
+                and 0 < lb_j < lb_w):
             return False
         cfg = self.server.cfg
-        f_own = vb.backbone_flops(cfg, n_low_j, beta_j, n_reuse_j)
-        f_new = vb.backbone_flops(cfg, n_low_w, beta_w, n_reuse_w)
+        f_own = vb.backbone_flops_windows(cfg, lb_j, beta_j)
+        f_new = vb.backbone_flops_windows(cfg, lb_w, beta_w)
         t_inf_new = job["t_inf"] * (f_new / f_own)
         extra = (t_inf_new - job["t_inf"]) \
             + self.ec.batch_alpha * t_inf_new
@@ -250,28 +262,42 @@ class MultiClientSimulation:
         if saved <= extra:
             return False
         job["t_inf_exec"] = t_inf_new
-        job["promoted_n_low"] = n_low_j
+        job["promoted_lb"] = lb_w
         self.stats.promoted += 1
         return True
 
     # ------------------------------------------------------------------
     def _run_wave(self, wave: List[Tuple[int, Dict]], t_start: float,
-                  key: Tuple[int, int, int, int]) -> float:
+                  key: Tuple[int, int, int]) -> float:
         """Batched inference + Eq. (2) bookkeeping for one wave.
         Returns the time the replica frees up."""
-        n_low, n_reuse, beta, cap = key
+        lb, beta, cap = key
         imgs = np.stack([j["decoded"] for _, j in wave])
         plans = [j["plan"] for _, j in wave]
-        if cap or n_reuse > 0:
+        caches = [self.clients[ci].feature_cache for ci, _ in wave]
+        want_cap = 0
+        if lb == 0:
+            # full-res waves carry per-job capture intent: a sessionful
+            # job that did NOT ask for capture shares the (capturing)
+            # canonical executable but must not have its cache
+            # refreshed — drop its cache from the wave.  Capturing jobs
+            # in one wave share a single want (the wave key separates
+            # distinct nonzero capture points).
+            wants = [j.get("capture_beta", 0) if c is not None else 0
+                     for c, (_, j) in zip(caches, wave)]
+            want_cap = max(wants)
+            caches = [c if w > 0 else None
+                      for c, w in zip(caches, wants)]
+        if cap or any(c is not None for c in caches):
+            dets = self.server.infer_wave(
+                imgs, plans, beta, caches=caches,
+                frame_ids=[j["frame"] for _, j in wave],
+                capture_beta=want_cap if lb == 0 else 0,
+                lb_override=lb if lb > 0 else None)
+        else:
             dets = self.server.infer_wave(
                 imgs, plans, beta,
-                caches=[self.clients[ci].feature_cache for ci, _ in wave],
-                frame_ids=[j["frame"] for _, j in wave],
-                capture_beta=cap if beta < 1 else 0,
-                n_low_override=n_low)
-        else:
-            dets = self.server.infer_wave(imgs, plans, beta,
-                                          n_low_override=n_low)
+                lb_override=lb if lb > 0 else None)
 
         B = len(wave)
         t_dec = max(j["t_dec"] for _, j in wave)
@@ -281,6 +307,8 @@ class MultiClientSimulation:
         done = t_start + t_dec + t_inf
 
         self.stats.wave_sizes.append(B)
+        self.stats.wave_n_low_mix.append(
+            len({p.n_low for p in plans}))
         for (ci, job), d in zip(wave, dets):
             q = t_start - job["arrival"]
             self.clients[ci]._finish_offload(job, d, queue_delay=q,
@@ -288,7 +316,7 @@ class MultiClientSimulation:
             self.stats.queue_delays.append(q)
             rec = {"client": ci, "frame": job["frame"], "wave_size": B,
                    "queue": q, "e2e": job["e2e"],
-                   "promoted": "promoted_n_low" in job}
+                   "promoted": "promoted_lb" in job}
             if self.ec.keep_dets:
                 rec["dets"] = d
             self.stats.jobs.append(rec)

@@ -84,7 +84,8 @@ class ServeEngine:
         self._decode_fns: Dict = {}
         self.wave_latencies: List[float] = []
         # compile-surface telemetry: every executable is keyed on static
-        # shapes (prompt bucket, n_low, n_reuse, beta, B bucket), so a
+        # shapes (prompt bucket, POOLED length n_low + n_reuse, beta,
+        # B bucket — the sequence-side length-bucket collapse), so a
         # key miss is exactly one XLA compile; after warmup() a miss is
         # a steady-state stall (stats.steady_compiles)
         self.stats = ServingStats()
@@ -171,15 +172,26 @@ class ServeEngine:
                 return logits, state
         return fn
 
-    def _get_prefill(self, T: int, n_low: int, beta: int,
-                     n_reuse: int = 0, batch: int = 1) -> Callable:
-        key = ("prefill", T, n_low, n_reuse, beta, batch)
+    def _get_prefill(self, T: int, n_pool: int, beta: int,
+                     batch: int = 1) -> Callable:
+        """Prefill executable for the POOLED-LENGTH key.
+
+        ``n_pool`` is the total pooled span count (n_low + n_reuse): the
+        seq pack's static shapes depend on the packed LENGTH
+        ``T - n_pool * (span - window)`` only, so keying on the sum
+        collapses every (n_low, n_reuse) split of it onto one executable
+        — the sequence-side analogue of the vision edge's length-bucket
+        grid.  Which spans are pooled stays runtime data (the pack
+        arrays), gated per wave by the span-layout identity in
+        :meth:`_wave_key`.
+        """
+        key = ("prefill", T, n_pool, beta, batch)
         if key not in self._prefill_fns:
-            mixed = (n_low > 0 or n_reuse > 0) and beta > 0
+            mixed = n_pool > 0 and beta > 0
             fn = self._build_prefill(beta, mixed)
             # every argument shape is pinned by the key (tokens (B, T),
             # state from init_decode_state(B), pack sizes from the
-            # bucket counts), so this jit traces exactly once
+            # pooled-length key), so this jit traces exactly once
             self._prefill_fns[key] = jax.jit(fn, donate_argnums=(2,))
             self.stats.note_compile(key)
         return self._prefill_fns[key]
@@ -247,14 +259,18 @@ class ServeEngine:
                 toks = jnp.zeros((B, T), jnp.int32)
                 state = registry.init_decode_state(cfg, B, sc.max_len,
                                                    sc.cache_dtype)
-                self._get_prefill(T, 0, 0, 0, B)(self.params, toks, state)
-                for (n_low, n_reuse, beta) in (plan_space or ()):
-                    if (n_low == 0 and n_reuse == 0) or beta == 0:
-                        continue
-                    pack = self._pack_for(T, n_low, n_reuse)
+                self._get_prefill(T, 0, 0, B)(self.params, toks, state)
+                # collapse the plan space onto pooled-length keys:
+                # (4, 0) and (0, 4) share one executable
+                pools = dict.fromkeys(
+                    (n_low + n_reuse, beta)
+                    for (n_low, n_reuse, beta) in (plan_space or ())
+                    if (n_low + n_reuse) > 0 and beta > 0)
+                for (n_pool, beta) in pools:
+                    pack = self._pack_for(T, n_pool, 0)
                     state = registry.init_decode_state(cfg, B, sc.max_len,
                                                        sc.cache_dtype)
-                    self._get_prefill(T, n_low, beta, n_reuse, B)(
+                    self._get_prefill(T, n_pool, beta, B)(
                         self.params, jnp.zeros((B, T), jnp.int32), state,
                         jnp.asarray(pack["mix_idx"]),
                         jnp.asarray(pack["pos_mix"]),
@@ -343,13 +359,13 @@ class ServeEngine:
             mask[r0.low_spans(n_low)] = 1
             mask[self._effective_reuse(r0)] = 1
             pack = self._pack_for(T, n_low, n_reuse, mask)
-            fn = self._get_prefill(T, n_low, beta, n_reuse, Bp)
+            fn = self._get_prefill(T, n_low + n_reuse, beta, Bp)
             logits, state = fn(self.params, jnp.asarray(toks), state,
                                jnp.asarray(pack["mix_idx"]),
                                jnp.asarray(pack["pos_mix"]),
                                jnp.asarray(pack["restore_idx"]))
         else:
-            fn = self._get_prefill(T, 0, 0, 0, Bp)
+            fn = self._get_prefill(T, 0, 0, Bp)
             logits, state = fn(self.params, jnp.asarray(toks), state)
 
         # refresh reuse sessions: effective reuse spans age by one, every

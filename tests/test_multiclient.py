@@ -80,22 +80,31 @@ def test_infer_batch_matches_solo_different_masks(setup):
                                    rtol=1e-4, atol=0.1)
 
 
-def test_infer_batch_rejects_mixed_buckets(setup):
-    _, server, part = setup
-    frames = np.zeros((2, SIZE, SIZE, 3), np.float32)
+def test_infer_batch_serves_mixed_buckets(setup):
+    """Masks in DIFFERENT n_low buckets co-batch on the collapsed grid:
+    the wave runs at the longer plan's length bucket and each frame
+    matches its solo run (old behaviour: AssertionError)."""
+    params, server, part = setup
+    rng = np.random.default_rng(7)
+    frames = rng.uniform(0, 1, (2, SIZE, SIZE, 3)).astype(np.float32)
     m0 = np.zeros(part.n_regions, np.int32)
     m0[:4] = 1
     m1 = np.zeros(part.n_regions, np.int32)
     m1[:8] = 1
-    with pytest.raises(AssertionError):
-        server.infer_batch(frames, [m0, m1], beta=2)
+    batched = server.infer_batch(frames, [m0, m1], beta=2)
+    for i, m in enumerate((m0, m1)):
+        solo = server.infer(frames[i], m, beta=2)
+        assert len(batched[i]) == len(solo)
+        np.testing.assert_allclose(_boxes(batched[i]), _boxes(solo),
+                                   rtol=1e-4, atol=0.1)
 
 
 def test_server_cache_stays_bucketed(setup):
-    """Varied masks must not grow _fns beyond n_buckets x betas."""
+    """Varied masks must not grow _fns beyond length buckets x betas:
+    EVERY (n_low, n_reuse) mix collapses onto the few length-bucket
+    executables."""
     params, _, part = setup
-    server = ServerModel(SIM, params, top_k=8, score_thresh=0.0,
-                         n_buckets=4)
+    server = ServerModel(SIM, params, top_k=8, score_thresh=0.0)
     rng = np.random.default_rng(1)
     frame = rng.uniform(0, 1, (SIZE, SIZE, 3)).astype(np.float32)
     betas = (1, 2)
@@ -103,9 +112,7 @@ def test_server_cache_stays_bucketed(setup):
         mask = np.zeros(part.n_regions, np.int32)
         mask[:n] = 1
         server.infer(frame, mask, beta=betas[n % len(betas)])
-    n_edges = len(set(server.bucket(n)
-                      for n in range(part.n_regions + 1)))
-    assert len(server._fns) <= n_edges * len(betas) + 1   # +1 full-res
+    assert len(server._fns) <= len(server.length_edges) * len(betas)
 
 
 def test_stack_region_ids_shapes(setup):

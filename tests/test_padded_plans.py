@@ -1,0 +1,334 @@
+"""Length-bucketed padded plans (the collapsed executable grid).
+
+Parity contract: the masked padded-length forward must reproduce the
+exact-length forward.  For plans whose pre-restoration schedule is
+window-attention only (beta == 1) the two are BIT-identical — window
+attention is window-local, pack/restore are pure data movement, and pad
+windows are routed to the sentinel.  For beta >= 2 a pre-restoration
+GLOBAL block reduces over the padded key count, so across the two
+(different-shape) executables results agree to ULP only — the repo's
+usual cross-executable contract (see test_serving_hotpath's docstring);
+pad keys contribute exactly zero probability either way.  Within ONE
+executable (wave vs solo at the same length/batch bucket) everything is
+bit-exact, including waves that mix different n_low values.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.vitdet_l import SIM
+from repro.core import mixed_res as mr
+from repro.core import partition as pt
+from repro.core import vit_backbone as vb
+from repro.core.partition import LOW, REUSE, RegionPlan
+from repro.models import registry
+from repro.offload.simulator import ServerModel
+
+SIZE = SIM.vit.img_size[0]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = registry.init_params(SIM, jax.random.PRNGKey(0))
+    return params, vb.vit_partition(SIM)
+
+
+def _frames(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.uniform(0, 1, (n, SIZE, SIZE, 3)).astype(np.float32)
+
+
+def _mask(part, lows):
+    m = np.zeros(part.n_regions, np.int32)
+    m[list(lows)] = 1
+    return m
+
+
+def _random_plan(part, rng, with_reuse=True):
+    n_low = int(rng.integers(0, part.n_regions - 5))
+    n_reuse = int(rng.integers(0, 5)) if with_reuse else 0
+    ids = rng.permutation(part.n_regions)
+    states = np.zeros((part.n_regions,), np.int8)
+    states[ids[:n_low]] = LOW
+    states[ids[n_low:n_low + n_reuse]] = REUSE
+    if n_low == 0 and n_reuse == 0:
+        states[ids[0]] = LOW
+    return RegionPlan(states)
+
+
+# ---------------------------------------------------------------------------
+# length buckets + plan layouts (host-side)
+
+
+def test_length_bucket_set_and_rounding(setup):
+    _, part = setup
+    edges = pt.length_bucket_set(part)
+    assert edges == (24, 48, 64)        # SIM: 64 full-res windows
+    assert edges[-1] == part.n_regions * part.windows_per_full_region
+    assert all(e % part.windows_per_full_region == 0 for e in edges)
+    assert pt.length_bucket(1, edges) == 24
+    assert pt.length_bucket(24, edges) == 24
+    assert pt.length_bucket(25, edges) == 48
+    assert pt.length_bucket(64, edges) == 64
+    with pytest.raises(ValueError):
+        pt.length_bucket(65, edges)
+    with pytest.raises(AssertionError):
+        pt.length_bucket(0, edges)
+
+
+def test_plan_layout_structure(setup):
+    _, part = setup
+    nR, dd = part.n_regions, part.windows_per_full_region
+    states = np.zeros((nR,), np.int8)
+    states[[3, 7]] = LOW
+    states[[5]] = REUSE
+    lay = pt.plan_layout(states, 64, part)
+    assert (lay.nw, lay.n_low, lay.n_reuse) == ((nR - 3) * dd + 2, 2, 1)
+    # full windows carry matching src/dst slots, in region order
+    full = [r for r in range(nR) if states[r] == 0]
+    want = [r * dd + k for r in full for k in range(dd)]
+    assert lay.win_src[:len(want)].tolist() == want
+    assert lay.win_dst[:len(want)].tolist() == want
+    # the two LOW windows follow, gathered from the low half of the bank
+    assert lay.win_src[len(want):lay.nw].tolist() == [nR * dd + 3,
+                                                      nR * dd + 7]
+    assert lay.low_src[:2].tolist() == [len(want), len(want) + 1]
+    assert lay.low_ids[:2].tolist() == [3, 7]
+    # pads: sentinel destinations, replicated window-0 sources
+    assert np.all(lay.win_dst[lay.nw:] == nR * dd)
+    assert np.all(lay.win_src[lay.nw:] == lay.win_src[0])
+    assert np.all(lay.low_ids[2:] == nR)
+    assert lay.reuse_ids[:1].tolist() == [5]
+    assert np.all(lay.reuse_ids[1:] == nR)
+    # the fingerprint is precomputed once (O(1) pos-cache keys)
+    assert isinstance(lay.key, bytes) and len(lay.key) > 0
+    other = states.copy()
+    other[4] = LOW                            # different plan, same bucket
+    assert lay.key != pt.plan_layout(other, 64, part).key
+    with pytest.raises(ValueError):
+        pt.plan_layout(states, 48, part)      # 54 windows don't fit 48
+
+
+def test_pack_restore_padded_match_exact_bitwise(setup):
+    """pack_padded / restore_padded are pure data movement: on the same
+    values they are BIT-identical to the exact-shape pack/restore."""
+    _, part = setup
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(2, part.grid_h, part.grid_w, 8))
+                    .astype(np.float32))
+    states = np.zeros((part.n_regions,), np.int8)
+    states[[1, 6, 9]] = LOW
+    states[[2, 12]] = REUSE
+    plan = RegionPlan(states)
+    fi, li, ri = pt.plan_to_region_ids(states, 3, 2)
+    tiles = jnp.asarray(rng.normal(
+        size=(2, 2, part.windows_per_full_region, part.tokens_low_region,
+              8)).astype(np.float32))
+
+    exact_tok, _ = mr.pack_mixed(x, part, jnp.asarray(fi), jnp.asarray(li))
+    lay = pt.plan_layout(states, 64, part)
+    pad_tok = mr.pack_padded(x, part, jnp.asarray(lay.win_src))
+    n_tok = part.n_tokens(3, 2)
+    np.testing.assert_array_equal(np.asarray(pad_tok[:, :n_tok]),
+                                  np.asarray(exact_tok))
+
+    exact_res = mr.restore_full(exact_tok, part, jnp.asarray(fi),
+                                jnp.asarray(li), reuse_ids=jnp.asarray(ri),
+                                reuse_tiles=tiles)
+    tiles_pad = jnp.zeros((2, part.n_regions,
+                           part.windows_per_full_region,
+                           part.tokens_low_region, 8), jnp.float32)
+    tiles_pad = tiles_pad.at[:, :2].set(tiles)
+    pad_res = mr.restore_padded(pad_tok, part, jnp.asarray(lay.win_dst),
+                                jnp.asarray(lay.low_src),
+                                jnp.asarray(lay.low_ids),
+                                reuse_ids=jnp.asarray(lay.reuse_ids),
+                                reuse_tiles=tiles_pad)
+    np.testing.assert_array_equal(np.asarray(pad_res),
+                                  np.asarray(exact_res))
+
+
+# ---------------------------------------------------------------------------
+# forward parity: padded-length vs exact-length
+
+
+def _forward_pair(params, part, img, plan, beta, rng):
+    fi, li, ri = pt.plan_to_region_ids(plan.states, plan.n_low,
+                                       plan.n_reuse)
+    tiles = rng.normal(size=(1, plan.n_reuse,
+                             part.windows_per_full_region,
+                             part.tokens_low_region, SIM.d_model)) \
+        .astype(np.float32)
+    kw = {}
+    if plan.n_reuse:
+        kw = dict(reuse_ids=jnp.asarray(ri), reuse_tiles=jnp.asarray(tiles))
+    exact = vb.forward_features(SIM, params, img, jnp.asarray(fi),
+                                jnp.asarray(li), beta, **kw)
+
+    lb = pt.length_bucket(pt.plan_n_windows(plan, part),
+                          pt.length_bucket_set(part))
+    lay = pt.plan_layout(plan.states, lb, part)
+    layout = {k: jnp.asarray(getattr(lay, k))
+              for k in ("win_src", "win_dst", "low_src", "low_ids",
+                        "reuse_ids")}
+    layout["nw"] = jnp.asarray([lay.nw], jnp.int32)
+    tiles_pad = np.zeros((1, part.n_regions,
+                          part.windows_per_full_region,
+                          part.tokens_low_region, SIM.d_model), np.float32)
+    if plan.n_reuse:
+        tiles_pad[0, :plan.n_reuse] = tiles[0]
+    padded = vb.forward_features(
+        SIM, params, img, beta=beta, layout=layout,
+        reuse_tiles=jnp.asarray(tiles_pad) if plan.n_reuse else None)
+    return np.asarray(exact), np.asarray(padded)
+
+
+def test_padded_forward_bit_identical_at_beta1(setup):
+    """Randomized plans, beta=1 (window-only pre-restoration schedule):
+    the padded-length forward is BIT-identical to the exact-length one."""
+    params, part = setup
+    img = jnp.asarray(_frames(1, seed=7))
+    for trial in range(4):
+        rng = np.random.default_rng(20 + trial)
+        plan = _random_plan(part, rng)
+        exact, padded = _forward_pair(params, part, img, plan, 1, rng)
+        np.testing.assert_array_equal(exact, padded)
+
+
+def test_padded_beta0_restores_at_input(setup):
+    """beta=0 with a mask (the paper's "Subset 0" restore-at-input
+    case, driven by examples/quickstart.py) serves through the padded
+    grid and is BIT-identical to the exact-length forward — restoration
+    happens before any block, so no cross-shape attention runs."""
+    params, part = setup
+    img = jnp.asarray(_frames(1, seed=11))
+    states = np.zeros((part.n_regions,), np.int8)
+    states[[0, 3, 11]] = LOW
+    fi, li, _ = pt.plan_to_region_ids(states, 3, 0)
+    exact = vb.forward_features(SIM, params, img, jnp.asarray(fi),
+                                jnp.asarray(li), 0)
+    lay = pt.plan_layout(states, 64, part)
+    layout = {k: jnp.asarray(getattr(lay, k))
+              for k in ("win_src", "win_dst", "low_src", "low_ids",
+                        "reuse_ids")}
+    layout["nw"] = jnp.asarray([lay.nw], jnp.int32)
+    padded = vb.forward_features(SIM, params, img, beta=0, layout=layout)
+    np.testing.assert_array_equal(np.asarray(exact), np.asarray(padded))
+    # and through the serving entry point
+    server = ServerModel(SIM, params, top_k=8, score_thresh=0.0)
+    dets = server.infer(_frames(1, seed=11)[0], _mask(part, (0, 3, 11)),
+                        beta=0)
+    assert isinstance(dets, list)
+    assert list(server._fns) == [(64, 0, 0, 1)]
+
+
+def test_padded_forward_matches_exact_all_betas(setup):
+    """Randomized (n_low, n_reuse, beta) plans: padded vs exact forward.
+    beta >= 2 crosses two executables with different global-attention
+    key counts, so the match is ULP-level (see module docstring)."""
+    params, part = setup
+    img = jnp.asarray(_frames(1, seed=8))
+    for trial in range(6):
+        rng = np.random.default_rng(40 + trial)
+        plan = _random_plan(part, rng)
+        beta = int(rng.integers(2, SIM.vit.n_subsets + 1))
+        exact, padded = _forward_pair(params, part, img, plan, beta, rng)
+        np.testing.assert_allclose(exact, padded, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# the satellite wave test: three different n_low values, ONE executable
+
+
+def test_wave_mixing_three_n_low_values_matches_solo(setup):
+    """A wave whose three samples have three DIFFERENT n_low values runs
+    in one executable and matches each plan's solo run bit-identically
+    (solo pinned to the same (length bucket, B bucket) executable)."""
+    params, part = setup
+    server = ServerModel(SIM, params, top_k=8, score_thresh=0.0,
+                         b_buckets=(4,))
+    frames = _frames(3, seed=9)
+    plans = [RegionPlan.from_mask(_mask(part, range(n)))
+             for n in (2, 5, 9)]                  # 58/49/37 w -> lb 64
+    wave = server.infer_wave(frames, plans, beta=2)
+    assert server.stats.compiles == 1
+    assert list(server._fns) == [(64, 2, 2, 4)]
+    for i, plan in enumerate(plans):
+        solo = server.infer_wave(frames[i][None], [plan], beta=2,
+                                 lb_override=64)[0]
+        assert wave[i] == solo            # dict floats compare bitwise
+    assert server.stats.compiles == 1     # still the one executable
+
+
+def test_wave_mixing_n_low_close_to_natural_solo(setup):
+    """The same mixed wave vs each plan's NATURAL solo run (own length
+    bucket, own B bucket): agreement to the usual tolerances."""
+    params, part = setup
+    server = ServerModel(SIM, params, top_k=8, score_thresh=0.0)
+    frames = _frames(3, seed=10)
+    plans = [RegionPlan.from_mask(_mask(part, range(n)))
+             for n in (2, 5, 9)]
+    wave = server.infer_wave(frames, plans, beta=2)
+    for i, plan in enumerate(plans):
+        solo = server.infer_wave(frames[i][None], [plan], beta=2)[0]
+        assert len(wave[i]) == len(solo)
+        a = np.array([d["box"] for d in wave[i]], np.float64)
+        b = np.array([d["box"] for d in solo], np.float64)
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=0.1)
+
+
+# ---------------------------------------------------------------------------
+# packed-positions cache: O(1) keys from precomputed fingerprints
+
+
+def test_packed_positions_padded_hits_with_ids_key(setup):
+    _, part = setup
+    pos = jnp.asarray(np.random.default_rng(0).normal(
+        size=(part.grid_h, part.grid_w, 8)).astype(np.float32))
+    states = np.zeros((part.n_regions,), np.int8)
+    states[:2] = LOW
+    lay = pt.plan_layout(states, 64, part)
+    saved = dict(vb._POS_CACHE)
+    vb._POS_CACHE.clear()
+    try:
+        a = vb.packed_positions(pos, part, None, None,
+                                win_src=jnp.asarray(lay.win_src),
+                                ids_key=lay.key)
+        # a FRESH equal-content array hits through the precomputed key
+        b = vb.packed_positions(pos, part, None, None,
+                                win_src=jnp.asarray(lay.win_src.copy()),
+                                ids_key=lay.key)
+        assert a is b
+        assert len(vb._POS_CACHE) == 1
+        # the legacy no-key fallback is self-consistent (content hash)
+        c = vb.packed_positions(pos, part, None, None,
+                                win_src=jnp.asarray(lay.win_src))
+        d = vb.packed_positions(pos, part, None, None,
+                                win_src=jnp.asarray(lay.win_src.copy()))
+        assert d is c
+        np.testing.assert_array_equal(np.asarray(c), np.asarray(a))
+        np.testing.assert_array_equal(
+            np.asarray(a),
+            np.asarray(mr.pack_positions_padded(pos, part,
+                                                jnp.asarray(lay.win_src))))
+    finally:
+        vb._POS_CACHE.clear()
+        vb._POS_CACHE.update(saved)
+
+
+def test_backbone_flops_padded_length(setup):
+    """backbone_flops with length_edges costs the padded bucket: a
+    monotone step function of the plan, >= the exact-length cost."""
+    _, part = setup
+    edges = pt.length_bucket_set(part)
+    exact = [vb.backbone_flops(SIM, n, 2) for n in range(17)]
+    padded = [vb.backbone_flops(SIM, n, 2, length_edges=edges)
+              for n in range(17)]
+    assert all(p >= e for p, e in zip(padded, exact))
+    # n_low 6..13 share the 48-window bucket -> identical padded cost
+    assert len({padded[n] for n in range(6, 14)}) == 1
+    # full res is never padded
+    assert padded[0] == exact[0]
+    assert vb.backbone_flops_windows(SIM, 64, 2) == \
+        vb.backbone_flops(SIM, 0, 0)

@@ -457,10 +457,11 @@ def test_two_client_cache_isolation(setup):
 
 def test_server_fn_cache_stays_bounded_with_reuse(setup):
     """Plans over many frames must key a bounded set of compiled fns:
-    (n_low buckets) x (n_reuse buckets) x betas x capture points."""
+    (length buckets) x betas (+ the full-res executable) — the
+    (n_low, n_reuse) mix is runtime data on the collapsed grid."""
     _, server, part = setup
     n_before = len(server._fns)
     c = _client(server, part, seed=7, n_frames=8)
     c.run("parkS")
     grown = len(server._fns) - n_before
-    assert grown <= 3 * 2    # few (n_low, n_reuse) pairs at one (beta, cap)
+    assert grown <= len(server.length_edges) + 1   # +1 full-res

@@ -273,6 +273,30 @@ def test_engine_warmup_steady_state_zero_compiles(setup):
 
 
 @pytest.mark.slow
+def test_prefill_key_collapses_low_reuse_splits(setup):
+    """(n_low, n_reuse) splits of one POOLED length share one prefill
+    executable: warming the (1, 1) split covers a (2, 0) wave — the
+    sequence-side analogue of the vision edge's length-bucket grid."""
+    cfg, params = setup
+    rng = np.random.default_rng(9)
+    span = cfg.mixed_res.window * cfg.mixed_res.downsample
+    n_spans = T // span
+    engine = ServeEngine(cfg, params, ServeConfig(
+        max_batch=2, max_len=T + NEW + 8, buckets=(T,)))
+    n = engine.warmup(plan_space=[(1, 1, 2)])       # pooled length 2
+    assert n == engine.stats.compiles > 0
+    mask = np.zeros(n_spans, np.int32)
+    mask[:2] = 1                                    # n_low 2, n_reuse 0
+    engine.submit(Request(
+        rid=0, prompt=rng.integers(0, cfg.vocab_size, (T,))
+        .astype(np.int32), max_new_tokens=NEW, low_span_mask=mask,
+        beta=2))
+    assert len(engine.run()) == 1
+    assert engine.stats.steady_compiles == 0, \
+        engine.stats.steady_compile_keys
+
+
+@pytest.mark.slow
 def test_engine_padded_wave_tokens_bit_identical_to_solo(setup):
     """B=3 wave padded to the B=4 executable decodes token-identically
     to solo runs through the same executable (single batch bucket)."""

@@ -1,12 +1,14 @@
-"""Zero-stall serving hot path: AOT-warmed batch-bucketed executables,
-padded waves, device-resident feature caches, cross-bucket coalescing.
+"""Zero-stall serving hot path: AOT-warmed executables on the COLLAPSED
+(length bucket, beta, capture, B bucket) grid, padded waves,
+device-resident feature caches, cross-bucket coalescing.
 
-Bit-identity contract pinned here: within ONE executable (same batch
-bucket), XLA results are invariant to pad content and row order — so a
-padded wave matches a solo run EXACTLY whenever both land on the same
-B bucket.  Tests that need bit-identity therefore configure a single
-batch bucket; cross-bucket comparisons are ULP-level only and use the
-repo's usual tolerances.
+Bit-identity contract pinned here: within ONE executable (same length
+bucket AND batch bucket), XLA results are invariant to pad content and
+row order — so a padded wave matches a solo run EXACTLY whenever both
+land on the same (lb, B) pair.  Tests that need bit-identity therefore
+configure a single batch bucket (and pin lb via ``lb_override`` where
+the natural buckets differ); cross-bucket comparisons are ULP-level
+only and use the repo's usual tolerances.
 """
 import jax
 import jax.numpy as jnp
@@ -104,8 +106,60 @@ def test_unwarmed_shape_is_counted_as_steady_compile(setup):
     assert server.stats.steady_compiles == 0
     server.infer(_frames(1)[0], _mask(vb.vit_partition(SIM), range(4)),
                  beta=2)
+    # 4 LOW regions -> 52 transmitted windows -> the 64 length bucket
     assert server.stats.steady_compiles == 1
-    assert server.stats.steady_compile_keys == [(4, 0, 2, 0, 1)]
+    assert server.stats.steady_compile_keys == [(64, 2, 2, 1)]
+
+
+def test_collapsed_grid_key_is_length_bucket(setup):
+    """Plans with different (n_low, n_reuse) but one padded length share
+    ONE executable — the tentpole collapse."""
+    params, part = setup
+    server = ServerModel(SIM, params, top_k=8, score_thresh=0.0,
+                         b_buckets=(1,))
+    assert server.length_edges == (24, 48, 64)
+    frame = _frames(1)[0]
+    # n_low 6..13 all land in the 48 bucket (64 - 3*n_low windows)
+    for lows in (range(6), range(9), range(13)):
+        server.infer(frame, _mask(part, lows), beta=2)
+    assert server.stats.compiles == 1
+    assert list(server._fns) == [(48, 2, 2, 1)]
+
+
+def test_warmup_covers_every_distinct_full_res_capture(setup):
+    """A deployment configuring SEVERAL full-res capture points warms
+    each of them (no-capture requests fold into the canonical
+    full_capture) — no steady-state compile when the smaller capture
+    point is served."""
+    params, part = setup
+    server = ServerModel(SIM, params, top_k=8, score_thresh=0.0)
+    server.warmup([(0, 0, 0, 0), (0, 0, 0, 2), (0, 0, 0, 4)],
+                  batch_buckets=(1,))
+    assert server.full_capture == 4
+    assert set(server._fns) == {(0, 0, 4, 1), (0, 0, 2, 1)}
+    cache = FeatureCache(part.n_regions, max_age=4)
+    full = RegionPlan(np.zeros((part.n_regions,), np.int8))
+    server.infer_wave(_frames(1), [full], caches=[cache],
+                      frame_ids=[0], capture_beta=2)
+    assert server.stats.steady_compiles == 0
+    assert cache.warm and cache.beta == 2
+
+
+def test_full_res_wave_respects_per_job_capture_intent(setup):
+    """infer_wave with a caches list but capture_beta=0 (a sessionful
+    client that did NOT request capture) must leave the cache cold even
+    though the canonical full-res executable captures tiles."""
+    params, part = setup
+    server = ServerModel(SIM, params, top_k=8, score_thresh=0.0)
+    server.warmup(server.default_plan_space(betas=(2,), captures=(0, 2)),
+                  batch_buckets=(1,))
+    assert server.full_capture == 2
+    cache = FeatureCache(part.n_regions, max_age=4)
+    full = RegionPlan(np.zeros((part.n_regions,), np.int8))
+    server.infer_wave(_frames(1), [full], caches=[cache], frame_ids=[0],
+                      capture_beta=0)
+    assert not cache.warm and cache.tiles is None
+    assert server.stats.steady_compiles == 0
 
 
 # ---------------------------------------------------------------------------
@@ -195,30 +249,35 @@ def test_padded_reuse_wave_never_touches_pad_caches(setup):
 
 
 def test_coalesced_job_bit_identical_to_solo_at_promoted_bucket(setup):
-    """n_low_override runs a larger-bucket plan under the wave's smaller
-    bucket (surplus LOW -> FULL) and matches the solo run of the same
-    promoted configuration bit-identically."""
+    """A wave mixing length buckets runs at the LARGEST one (shorter
+    plans pad further — zero resolution changes) and each sample matches
+    the solo run of the same padded configuration bit-identically."""
     params, part = setup
     server = ServerModel(SIM, params, top_k=8, score_thresh=0.0,
                          b_buckets=(2,))
     frames = _frames(2, seed=4)
-    plan_a = RegionPlan.from_mask(_mask(part, range(4)))      # bucket 4
-    plan_b = RegionPlan.from_mask(_mask(part, range(8)))      # bucket 8
-    wave = server.infer_wave(frames, [plan_a, plan_b], beta=2,
-                             n_low_override=4)
+    plan_a = RegionPlan.from_mask(_mask(part, range(4)))   # 52 w -> lb 64
+    plan_b = RegionPlan.from_mask(_mask(part, range(8)))   # 40 w -> lb 48
+    wave = server.infer_wave(frames, [plan_a, plan_b], beta=2)
+    assert list(server._fns) == [(64, 2, 2, 2)]            # one executable
     solo_b = server.infer_wave(frames[1][None], [plan_b], beta=2,
-                               n_low_override=4)[0]
+                               lb_override=64)[0]
     assert wave[1] == solo_b
     solo_a = server.infer_wave(frames[0][None], [plan_a], beta=2)[0]
     assert wave[0] == solo_a
 
 
-def test_override_may_only_shrink(setup):
+def test_override_may_only_pad(setup):
+    """lb_override may only pad FURTHER (and must be a bucket edge):
+    shrinking below the plan's window count would drop transmitted
+    windows."""
     params, part = setup
     server = ServerModel(SIM, params, top_k=8, score_thresh=0.0)
-    plan = RegionPlan.from_mask(_mask(part, range(4)))
+    plan = RegionPlan.from_mask(_mask(part, range(4)))     # 52 windows
     with pytest.raises(AssertionError):
-        server.infer_wave(_frames(1), [plan], beta=2, n_low_override=8)
+        server.infer_wave(_frames(1), [plan], beta=2, lb_override=48)
+    with pytest.raises(AssertionError):
+        server.infer_wave(_frames(1), [plan], beta=2, lb_override=60)
 
 
 class TwoBucketPolicy(Policy):
@@ -280,13 +339,15 @@ def test_coalescing_grows_waves_and_matches_solo(setup):
     assert mc_on.stats.promoted > 0
     assert mc_on.stats.mean_wave_size > mc_off.stats.mean_wave_size
 
-    promoted = [j for j in completed.values() if "promoted_n_low" in j]
+    promoted = [j for j in completed.values() if "promoted_lb" in j]
     assert promoted
     for job in promoted:
-        n_low_exec = server.bucket(job["n_d"])
+        # a promoted job ran padded to the wave's length bucket; the
+        # solo run of the same padded configuration (same executable:
+        # single batch bucket) must match bit-exactly
         solo = server.infer_wave(
             job["decoded"][None], [job["plan"]], job["beta"],
-            n_low_override=min(4, n_low_exec))[0]
+            lb_override=job["promoted_lb"])[0]
         assert job["dets"] == solo
 
 
@@ -367,7 +428,10 @@ def test_feature_cache_update_donates_stale_device_buffer():
 
 
 def _fake_job(arrival, n_d=4, frame=0):
+    states = np.zeros((16,), np.int8)
+    states[:n_d] = 1                              # LOW
     return {"arrival": arrival, "n_d": n_d, "n_r": 0, "beta": 2,
+            "plan": RegionPlan(states),
             "frame": frame, "_client": 0, "t_dec": 0.0, "t_inf": 0.1}
 
 
