@@ -7,9 +7,10 @@ import time
 
 def main(argv=None) -> int:
     from benchmarks import (bench_backbone, bench_multiclient, bench_reuse,
-                            bench_serving, fig5_restoration, fig8_overall,
-                            fig9_delays, fig10_codec, fig11_overhead,
-                            fig12_ablation, roofline, table2_estimator)
+                            bench_robustness, bench_serving,
+                            fig5_restoration, fig8_overall, fig9_delays,
+                            fig10_codec, fig11_overhead, fig12_ablation,
+                            roofline, table2_estimator)
 
     only = set(argv[1:]) if argv and len(argv) > 1 else None
     suites = [
@@ -17,6 +18,7 @@ def main(argv=None) -> int:
         ("bench_multiclient", bench_multiclient),
         ("bench_reuse", bench_reuse),
         ("bench_serving", bench_serving),
+        ("bench_robustness", bench_robustness),
         ("fig5", fig5_restoration),
         ("table2", table2_estimator),
         ("fig8", fig8_overall),

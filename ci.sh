@@ -33,4 +33,16 @@ echo "== serving hot-path smoke (warmup / device cache / coalescing) =="
 python benchmarks/bench_serving.py --smoke --check --max-warmup-s 90 \
     --out benchmarks/artifacts/BENCH_serving.smoke.json
 
+echo "== robustness fault-matrix smoke (faults / deadlines / epochs) =="
+# --check enforces the failure-model gates: every faulted run's
+# rendering F1 recovers to within F1_TOL of the no-fault median inside
+# RECOVERY_FRAMES, blackouts actually hit deadlines and engage the
+# degradation ladder, an edge restart yields stale-epoch NACKs (and
+# ZERO stale-epoch splices served — structural, the replica raises
+# before splicing), overload both degrades and sheds with exact
+# shed/REJECTED accounting, and no client ends wedged on an in-flight
+# offload (the no-hang gate)
+python benchmarks/bench_robustness.py --smoke --check \
+    --out benchmarks/artifacts/BENCH_robustness.smoke.json
+
 echo "CI OK"

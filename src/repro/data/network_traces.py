@@ -3,7 +3,13 @@
 12.2–135.5 Mbps; mean RTT ~39 ms (4G) / ~34 ms (5G).
 
 AR(1) log-throughput with occasional deep fades (handover/blockage),
-deterministic per (kind, index).
+deterministic per (kind, index).  ``make_trace`` can additionally bake
+deterministic impairments INTO the trace — uplink blackouts, handover
+storms (alternating-second micro-blackouts), and bufferbloat RTT
+inflation — seeded independently of the base process, so the base trace
+is byte-identical whether or not impairments are requested.  (The
+offload-side alternative is layering offload/faults.FaultInjector on an
+untouched trace; the knobs here serve trace-only consumers.)
 """
 from __future__ import annotations
 
@@ -13,6 +19,9 @@ from typing import List, Tuple
 
 import numpy as np
 
+# throughput during a baked-in blackout second (dead but finite)
+BLACKOUT_TPUT_BPS = 1e3
+
 
 @dataclass
 class NetworkTrace:
@@ -20,9 +29,17 @@ class NetworkTrace:
     kind: str                 # "4g" | "5g"
     tput_bps: np.ndarray      # (T,) per-second uplink throughput
     rtt_s: np.ndarray         # (T,) per-second RTT
+    # past-end behaviour of ``at``: "hold" freezes the final second
+    # (the legacy implicit behaviour, now explicit), "wrap" loops the
+    # trace — long simulations over short traces pick one deliberately
+    extend: str = "hold"
 
     def at(self, t: float) -> Tuple[float, float]:
-        i = min(int(t), len(self.tput_bps) - 1)
+        n = len(self.tput_bps)
+        if self.extend == "wrap":
+            i = int(t) % n
+        else:
+            i = min(int(t), n - 1)
         return float(self.tput_bps[i]), float(self.rtt_s[i])
 
     @property
@@ -30,7 +47,13 @@ class NetworkTrace:
         return float(self.tput_bps.mean() / 1e6)
 
 
-def make_trace(kind: str, index: int, duration_s: int = 300) -> NetworkTrace:
+def make_trace(kind: str, index: int, duration_s: int = 300, *,
+               blackouts: int = 0, blackout_s: Tuple[float, float] = (2, 6),
+               storms: int = 0, storm_s: Tuple[float, float] = (4, 10),
+               bufferbloat: int = 0,
+               bloat_s: Tuple[float, float] = (5, 15),
+               bloat_factor: Tuple[float, float] = (3.0, 8.0),
+               extend: str = "hold") -> NetworkTrace:
     # NOT hash(): str hashing is salted per process (PYTHONHASHSEED), so
     # trace statistics would differ from run to run
     seed = zlib.crc32(f"{kind}-{index}".encode())
@@ -62,8 +85,33 @@ def make_trace(kind: str, index: int, duration_s: int = 300) -> NetworkTrace:
 
     rtt = np.clip(rtt_mean * (1.0 + 0.5 * (mean_mbps / tput - 1.0)),
                   0.015, 0.5)
+    tput = tput * 1e6
+
+    # impairment overlays, seeded SEPARATELY so knob-free calls return
+    # the byte-identical base trace
+    if blackouts or storms or bufferbloat:
+        irng = np.random.default_rng(
+            zlib.crc32(f"{kind}-{index}-impair".encode()))
+
+        def window(span: Tuple[float, float]) -> Tuple[int, int]:
+            dur = int(np.ceil(irng.uniform(*span)))
+            t0 = int(irng.integers(0, max(duration_s - dur, 1)))
+            return t0, min(t0 + dur, duration_s)
+
+        for _ in range(blackouts):
+            a, b = window(blackout_s)
+            tput[a:b] = BLACKOUT_TPUT_BPS
+        for _ in range(storms):
+            a, b = window(storm_s)
+            # handover storm: the uplink drops every other second
+            tput[a:b:2] = BLACKOUT_TPUT_BPS
+        for _ in range(bufferbloat):
+            a, b = window(bloat_s)
+            rtt[a:b] = np.clip(rtt[a:b] * irng.uniform(*bloat_factor),
+                               None, 3.0)
+
     return NetworkTrace(name=f"{kind}-{index:02d}", kind=kind,
-                        tput_bps=tput * 1e6, rtt_s=rtt)
+                        tput_bps=tput, rtt_s=rtt, extend=extend)
 
 
 def trace_set(n_per_kind: int = 30, duration_s: int = 300

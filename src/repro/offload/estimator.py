@@ -211,25 +211,48 @@ class InferenceDelayModel:
 
 @dataclass
 class ThroughputEstimator:
-    """Short-window mean of recent observations (paper: last two)."""
+    """Short-window mean of recent observations (paper: last two).
+
+    Hardened for the failure model: ``min_tput_bps`` floors the estimate
+    (a blackout-era near-zero sample would otherwise drive Eq. (2)'s
+    transmission-delay terms toward infinity and wedge config
+    selection), and observations older than ``max_age_s`` relative to
+    the newest are expired rather than averaged — after a blackout the
+    first fresh sample speaks alone instead of being blended with the
+    pre-blackout world.  Callers that pass no ``t`` keep the legacy
+    pure-window behaviour (each observation ages the horizon by 1 s).
+    """
     window: int = 2
+    min_tput_bps: float = 5e4
+    max_age_s: float = 30.0
     obs_tput: List[float] = field(default_factory=list)
     obs_rtt: List[float] = field(default_factory=list)
+    obs_t: List[float] = field(default_factory=list)
 
-    def observe(self, tput_bps: float, rtt_s: float) -> None:
+    def observe(self, tput_bps: float, rtt_s: float,
+                t: Optional[float] = None) -> None:
+        if t is None:
+            t = (self.obs_t[-1] + 1.0) if self.obs_t else 0.0
+        # expire stale observations BEFORE the window trim so a lone
+        # fresh post-gap sample is not averaged with a pre-gap one
+        while self.obs_t and t - self.obs_t[0] > self.max_age_s:
+            del self.obs_tput[0], self.obs_rtt[0], self.obs_t[0]
         self.obs_tput.append(tput_bps)
         self.obs_rtt.append(rtt_s)
+        self.obs_t.append(t)
         # only the last ``window`` observations are ever read — trim so
         # long-running clients don't grow the lists without bound
         if len(self.obs_tput) > self.window:
             del self.obs_tput[:-self.window]
             del self.obs_rtt[:-self.window]
+            del self.obs_t[:-self.window]
 
     @property
     def throughput(self) -> float:
         if not self.obs_tput:
             return 10e6
-        return float(np.mean(self.obs_tput[-self.window:]))
+        return max(self.min_tput_bps,
+                   float(np.mean(self.obs_tput[-self.window:])))
 
     @property
     def rtt(self) -> float:

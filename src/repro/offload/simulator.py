@@ -31,9 +31,12 @@ from repro.offload import detection as det
 from repro.offload import motion as mo
 from repro.offload.codec import CodecDelayModel, MixedResCodec
 from repro.offload.estimator import ThroughputEstimator
+from repro.offload.faults import (DegradationLadder, FaultInjector,
+                                  RobustConfig, fresh_rstats)
 from repro.offload.optimizer import OffloadConfig, SystemState
 from repro.offload.tracker import LKTracker
-from repro.serve.request import FeatureCache, ServingStats
+from repro.serve.request import (FeatureCache, ServingStats,
+                                 StaleCacheEpoch)
 
 # payload scale: our 512x512 luma codec vs the paper's 1080p YUV frames
 SIZE_SCALE = (1920 * 1080) / (512 * 512)
@@ -118,6 +121,28 @@ class ServerModel:
         self._fns: Dict[Tuple[int, int, int, int], Callable] = {}
         self._zero_tiles: Dict[int, jnp.ndarray] = {}
         self.stats = ServingStats()
+        # cache generation: bumped by restart(); FeatureCache tiles
+        # captured under an older epoch can never be spliced again
+        self.epoch = 0
+
+    def restart(self, preserve_executables: bool = False) -> int:
+        """Crash-restart this replica.
+
+        Bumps the cache epoch — every FeatureCache tile captured before
+        this moment belongs to a dead replica and any REUSE plan still
+        carrying it is refused (StaleCacheEpoch) — and, unless
+        ``preserve_executables`` (a bench shortcut when the outage is
+        modelled in sim time only), wipes the warmed executable grid so
+        the new process must re-warm (compiles count toward warmup
+        again, not steady-state stalls).  Returns the new epoch.
+        """
+        self.epoch += 1
+        self.stats.restarts += 1
+        if not preserve_executables:
+            self._fns.clear()
+            self._zero_tiles.clear()
+            self.stats.warmed = False
+        return self.epoch
 
     def bucket(self, n_low: int) -> int:
         """Legacy policy-side n_low bucket (plan EMISSION still rounds
@@ -357,6 +382,23 @@ class ServerModel:
                                       and caches[i] is not None
                                       and beta >= 1), \
                 "REUSE regions need feature caches and a restoration point"
+        if caches is not None:
+            # epoch guard: no splice ever reads tiles from a dead
+            # replica — a REUSE plan whose cache predates the last
+            # restart is refused outright (the client must invalidate
+            # and bootstrap FULL)
+            for i, p in enumerate(plans):
+                c = caches[i]
+                if p.n_reuse > 0 and c is not None \
+                        and getattr(c, "epoch", 0) != self.epoch:
+                    self.stats.stale_epoch_rejects += 1
+                    raise StaleCacheEpoch(
+                        f"sample {i}: REUSE plan carries cache epoch "
+                        f"{getattr(c, 'epoch', 0)} but the replica is at "
+                        f"epoch {self.epoch}")
+            self.stats.reuse_splices += sum(
+                1 for i, p in enumerate(plans)
+                if p.n_reuse > 0 and caches[i] is not None)
         full_res = all(p.n_low == 0 and p.n_reuse == 0 for p in plans)
 
         Bp = self.batch_bucket(B)
@@ -478,7 +520,8 @@ class ServerModel:
                 if c is None:
                     continue
                 c.update(mr.take_sample_tiles(tiles_out, np.int32(i)),
-                         reuse_rows[i], cap, frame_ids[i])
+                         reuse_rows[i], cap, frame_ids[i],
+                         epoch=self.epoch)
         else:
             tiles_np = np.asarray(tiles_out)
             live = [i for i, c in enumerate(caches[:B]) if c is not None]
@@ -486,7 +529,7 @@ class ServerModel:
                                              for i in live)
             for i in live:
                 caches[i].update(tiles_np[i], reuse_rows[i], cap,
-                                 frame_ids[i])
+                                 frame_ids[i], epoch=self.epoch)
 
     # ------------------------------------------------------------------
     # N=1 conveniences (thin wrappers over infer_wave)
@@ -581,7 +624,9 @@ class Simulation:
                  trace, policy: Policy, server: ServerModel,
                  part: Partition, patch_px: int, fps: int = 10,
                  delay_model: Optional[CodecDelayModel] = None,
-                 inf_delay=None):
+                 inf_delay=None,
+                 faults: Optional[FaultInjector] = None,
+                 robust: Optional[RobustConfig] = None):
         self.frames = frames
         self.gt_dets = gt_dets            # full-res model outputs per frame
         self.trace = trace
@@ -603,6 +648,16 @@ class Simulation:
         self.feature_cache: Optional[FeatureCache] = (
             FeatureCache(part.n_regions, max_age=policy.reuse_k)
             if policy.reuse_k > 0 else None)
+
+        # failure model: fault schedule + the deadline/retry/backoff
+        # state machine (both optional — None keeps the legacy
+        # fault-free, deadline-free lifecycle byte-identical)
+        self.faults = faults
+        self.robust = robust
+        self.ladder = (DegradationLadder(robust) if robust is not None
+                       else None)
+        self.rstats = fresh_rstats()
+        self.offload_seq = 0
 
         # runtime state
         self.cache_dets: List[Dict] = []
@@ -630,8 +685,16 @@ class Simulation:
 
     def _should_offload(self, frame_idx: int) -> bool:
         """Back-to-back: a new offload starts as soon as none is in
-        flight (frame 0 is skipped — the motion model needs a delta)."""
-        return self.inflight is None and frame_idx > 0
+        flight (frame 0 is skipped — the motion model needs a delta).
+        After a failure, the ladder's exponential backoff additionally
+        holds the retry until ``retry_at`` — while it holds (and at shed
+        level), rendering rides the LK tracker."""
+        if self.inflight is not None or frame_idx <= 0:
+            return False
+        if self.ladder is not None \
+                and frame_idx * self.dt < self.ladder.retry_at:
+            return False
+        return True
 
     def _note_offload_gap(self, frame_idx: int, res: SimResult) -> None:
         if self.last_offload_frame >= 0:
@@ -658,6 +721,10 @@ class Simulation:
         finishes the job via :meth:`_finish_offload` (immediately for the
         single-client path, at wave time for the batched edge)."""
         decision = self.policy.decide(self, frame_idx)
+        if self.ladder is not None:
+            # retries after failures go out degraded: FULL regions
+            # promoted to LOW (lowest motion first), quality dropped
+            decision = self.ladder.degrade(decision, self.m)
         quality = decision["quality"]
         beta = decision["beta"]
         plan: Optional[RegionPlan] = decision.get("plan")
@@ -685,6 +752,8 @@ class Simulation:
         beta_eff = beta if (n_d > 0 or n_r > 0) else 0
 
         tput, rtt = self.trace.at(now)
+        if self.faults is not None:
+            tput, rtt = self.faults.net(now, tput, rtt)
         job = {
             "frame": frame_idx, "submit": now, "decoded": decoded,
             "mask": mask, "n_d": n_d, "beta": beta_eff,
@@ -698,7 +767,17 @@ class Simulation:
                                                    n_reuse=n_r),
             "t_inf": self._inf_delay_s(beta_eff, n_d, n_r),
             "done_at": float("inf"), "dets": None,
+            "seq": self.offload_seq,
+            # SLO-derived deadline: past it the client abandons the
+            # offload and the LK tracker covers the gap
+            "deadline": (now + self.robust.slo_s
+                         if self.robust is not None else float("inf")),
         }
+        self.offload_seq += 1
+        if decision.get("degraded"):
+            job["degraded"] = decision["degraded"]
+            job["demoted"] = decision.get("demoted")
+            self.rstats["degraded_offloads"] += 1
         self.inflight = job
         self.last_offload_frame = frame_idx
         return job
@@ -709,9 +788,16 @@ class Simulation:
                         t_inf: Optional[float] = None) -> None:
         """Server side of an offload: attach detections and finalise the
         Eq. (2) end-to-end latency.  ``queue_delay`` (and wave-amortised
-        ``t_dec``/``t_inf`` overrides) come from the edge scheduler."""
+        ``t_dec``/``t_inf`` overrides) come from the edge scheduler.
+        The fault schedule hooks in here: edge stalls stretch the
+        service time, and a dropped response (or one arriving at a
+        crashed replica) marks the job LOST — its result never comes
+        back, only the client-side deadline reaps it."""
         t_dec = job["t_dec"] if t_dec is None else t_dec
         t_inf = job["t_inf"] if t_inf is None else t_inf
+        arrival = job["submit"] + job["t_enc"] + job["t_up"]
+        if self.faults is not None:
+            t_inf = t_inf + self.faults.stall_extra(arrival + queue_delay)
         e2e = (job["t_enc"] + job["t_up"] + queue_delay + t_dec + t_inf
                + job["rtt"])
         job["dets"] = dets
@@ -720,33 +806,83 @@ class Simulation:
         job["done_at"] = job["submit"] + e2e
         job["parts"] = {"enc": job["t_enc"], "net": job["t_up"] + job["rtt"],
                         "dec": t_dec, "inf": t_inf, "queue": queue_delay}
+        if self.faults is not None:
+            if self.faults.response_dropped(job["seq"]) \
+                    or self.faults.edge_down(arrival):
+                job["lost"] = True
+                job["done_at"] = float("inf")
+            elif self.faults.response_duplicated(job["seq"]):
+                job["dup"] = True
 
     def _start_offload(self, frame_idx: int, now: float, res: SimResult):
         """Single-client path: prepare + immediate (dedicated) server
         inference on the decoded mixed frame."""
         job = self._prepare_offload(frame_idx, now, res)
-        if self.feature_cache is not None:
-            dets = self.server.infer_plan(job["decoded"], job["plan"],
-                                          job["beta"],
-                                          cache=self.feature_cache,
-                                          frame_idx=job["frame"],
-                                          capture_beta=job["capture_beta"])
-        else:
-            dets = self.server.infer(job["decoded"],
-                                     job["mask"] if job["n_d"] > 0 else None,
-                                     job["beta"])
+        try:
+            if self.feature_cache is not None:
+                dets = self.server.infer_plan(
+                    job["decoded"], job["plan"], job["beta"],
+                    cache=self.feature_cache, frame_idx=job["frame"],
+                    capture_beta=job["capture_beta"])
+            else:
+                dets = self.server.infer(
+                    job["decoded"],
+                    job["mask"] if job["n_d"] > 0 else None, job["beta"])
+        except StaleCacheEpoch:
+            # control-plane NACK from a restarted edge: the splice was
+            # refused; the completion path invalidates the cache and the
+            # next offload bootstraps FULL at the new epoch
+            job["stale_epoch"] = True
+            job["done_at"] = now + job["rtt"]
+            job["dets"] = []
+            return
         self._finish_offload(job, dets)
 
     def _complete_offload(self, res: SimResult, now_frame: int) -> Dict:
         fl = self.inflight
         self.inflight = None
+        if fl.get("stale_epoch"):
+            # the edge refused the splice (tiles from a dead replica):
+            # drop the dead cache and bootstrap FULL next offload — no
+            # backoff, the edge is healthy, just a new generation
+            self.rstats["stale_epoch_nacks"] += 1
+            if self.feature_cache is not None:
+                self.feature_cache.invalidate()
+            return fl
+        if fl.get("rejected"):
+            # edge admission shed: REJECTED response — track locally,
+            # retry degraded after backoff
+            self.rstats["rejected"] += 1
+            if self.ladder is not None:
+                self.ladder.on_failure(fl["done_at"])
+                self.rstats["max_ladder_level"] = max(
+                    self.rstats["max_ladder_level"], self.ladder.level)
+            return fl
+        if fl["frame"] <= self.cache_frame:
+            # stale response: older than the rendered head — discarded,
+            # never rendered
+            self.rstats["stale_discards"] += 1
+            return fl
+        if fl.get("dup"):
+            # the duplicate copy arrives later, behind the (advanced)
+            # rendered head, and dies on the staleness guard above
+            self.rstats["dup_discards"] += 1
         res.e2e_latency.append(fl["e2e"])
         res.inference_f1.append(fl["inf_f1"])
         res.delay_parts.append(fl["parts"])
         res.sizes.append(fl["size"])
-        self.net_est.observe(fl["tput"], fl["rtt"])
+        self.net_est.observe(fl["tput"], fl["rtt"], t=fl["done_at"])
         self.policy.observe_completion(fl["e2e"])
+        if self.ladder is not None:
+            self.ladder.on_success()
 
+        if self.feature_cache is not None \
+                and fl.get("demoted") is not None and len(fl["demoted"]):
+            # ladder-demoted regions went out LOW: their freshly captured
+            # tiles are low-fidelity stopgaps, so expire them from the
+            # reuse-eligible set rather than letting one degraded offload
+            # poison the next K splices
+            self.feature_cache.expire(fl["demoted"])
         self.cache_dets = fl["dets"]
         self.cache_frame = fl["frame"]
         if self.policy.use_tracker:
@@ -756,6 +892,57 @@ class Simulation:
                 self.tracker.step(self.frames[fi])
             self.tracker_frame = max(now_frame - 1, fl["frame"])
         return fl
+
+    def _poll_inflight(self, now: float, now_frame: int,
+                       res: SimResult) -> Optional[Dict]:
+        """Deadline-bounded completion check: deliver a response due by
+        ``now`` unless its deadline passed first — a LOST job (response
+        never coming) or a LATE one (arriving past the deadline, behind
+        the rendered head) is abandoned and the tracker covers the gap.
+        Returns the job on delivery, else None."""
+        job = self.inflight
+        if job is None:
+            return None
+        deadline = job.get("deadline", float("inf"))
+        if np.isfinite(job["done_at"]) \
+                and job["done_at"] <= min(now, deadline):
+            return self._complete_offload(res, now_frame)
+        if now >= deadline:
+            self._abandon_offload(job, min(now, job["deadline"]))
+        return None
+
+    def _abandon_offload(self, job: Dict, now: float) -> None:
+        """Client-side timeout: give up on the offload, climb the
+        degradation ladder, and back off before retrying."""
+        self.inflight = None
+        job["abandoned"] = True
+        if job.get("lost"):
+            self.rstats["lost_responses"] += 1
+        else:
+            self.rstats["timeouts"] += 1
+            if np.isfinite(job["done_at"]):
+                # the response does arrive eventually — after the
+                # deadline — and is discarded, never rendered
+                self.rstats["late_discards"] += 1
+        if self.ladder is not None:
+            self.ladder.on_failure(now)
+            self.rstats["max_ladder_level"] = max(
+                self.rstats["max_ladder_level"], self.ladder.level)
+
+    def _edge_fault_tick(self, prev: float, now: float) -> None:
+        """Single-client path owns its replica, so it applies edge
+        crash-restarts itself (the multi-client engine drives the shared
+        replica's restarts instead): bump the epoch, wipe executables,
+        and lose any response that died with the old process."""
+        if self.faults is None:
+            return
+        for (r, outage) in self.faults.restarts_between(prev, now):
+            self.server.restart()
+            self.rstats["edge_restarts"] += 1
+            j = self.inflight
+            if j is not None and j["submit"] <= r and j["done_at"] > r:
+                j["lost"] = True
+                j["done_at"] = float("inf")
 
     def _render_tick(self, frame_idx: int, res: SimResult) -> None:
         # rendering for this frame: exact cache hit, else tracker
@@ -767,6 +954,7 @@ class Simulation:
                 self.tracker.step(self.frames[frame_idx])
                 self.tracker_frame = frame_idx
             rendered = self.tracker.boxes()
+            self.rstats["tracker_frames"] += 1
             res.overhead.setdefault("tracker_wall", []).append(
                 time.perf_counter() - t0)
         res.rendering_f1.append(det.frame_f1(rendered,
@@ -777,20 +965,23 @@ class Simulation:
         res = SimResult(policy=self.policy.name, video=video_name,
                         trace=getattr(self.trace, "name", "trace"))
         n = len(self.frames)
+        prev = -1.0
         for fi in range(n):
             now = fi * self.dt
 
+            self._edge_fault_tick(prev, now)
             self._motion_tick(fi, res)
-            # completions due by now
-            if self.inflight and self.inflight["done_at"] <= now:
-                self._complete_offload(res, fi)
-            # schedule next offload (back-to-back upon completion)
+            # completions due by now (deadline-bounded)
+            self._poll_inflight(now, fi, res)
+            # schedule next offload (back-to-back upon completion,
+            # backed off after failures)
             if self._should_offload(fi):
                 self._note_offload_gap(fi, res)
                 self._start_offload(fi, now, res)
             self._render_tick(fi, res)
+            prev = now
         # flush the final in-flight offload: its latency / delay parts /
         # inference F1 belong in the result even though the clip ended
-        if self.inflight is not None:
-            self._complete_offload(res, n)
+        # (unless its deadline already reaped it)
+        self._poll_inflight(float("inf"), n, res)
         return res

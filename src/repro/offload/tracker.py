@@ -74,14 +74,27 @@ class Track:
     score: float
     tid: int
     alive: bool = True
+    conf: float = 1.0     # decays while the box coasts without flow
 
 
 class LKTracker:
-    """Multi-object optical-flow tracker with catch-up tracking."""
+    """Multi-object optical-flow tracker with catch-up tracking.
 
-    def __init__(self, levels: int = 3, grid: int = 4):
+    A frame where a box yields too few surviving flow points (blackout-
+    length gaps with large motion, texture-free crops) no longer kills
+    the track outright: the box HOLDS position and its confidence decays
+    by ``hold_decay``; only when confidence drops below ``conf_floor``
+    does the track die.  ``retention`` sums confidences, so kappa in
+    Algorithm 1 degrades smoothly (and stays finite) instead of
+    cliff-dropping to 0 on one bad frame.
+    """
+
+    def __init__(self, levels: int = 3, grid: int = 4,
+                 hold_decay: float = 0.7, conf_floor: float = 0.2):
         self.levels = levels
         self.grid = grid
+        self.hold_decay = hold_decay
+        self.conf_floor = conf_floor
         self.prev_gray: Optional[np.ndarray] = None
         self.tracks: List[Track] = []
         self._n_init = 0
@@ -102,10 +115,12 @@ class LKTracker:
 
     @property
     def retention(self) -> float:
-        """kappa: fraction of objects continuously tracked since reinit."""
+        """kappa: confidence-weighted fraction of objects still tracked
+        since reinit (1.0 while every box keeps finding flow; a coasting
+        box contributes its decayed confidence)."""
         if self._n_init == 0:
             return 1.0
-        return sum(t.alive for t in self.tracks) / self._n_init
+        return sum(t.conf for t in self.tracks if t.alive) / self._n_init
 
     def boxes(self) -> List[Dict]:
         return [{"box": t.box, "cls": t.cls, "score": t.score,
@@ -160,7 +175,10 @@ class LKTracker:
                             abs(dy_total) < H * 0.2:
                         flows.append((dx_total, dy_total))
             if len(flows) < max(2, self.grid):
-                t.alive = False
+                # hold position, decay confidence; die only at the floor
+                t.conf *= self.hold_decay
+                if t.conf < self.conf_floor:
+                    t.alive = False
                 continue
             f = np.median(np.asarray(flows), axis=0)
             nx1, ny1, nx2, ny2 = x1 + f[0], y1 + f[1], x2 + f[0], y2 + f[1]
@@ -168,6 +186,7 @@ class LKTracker:
                 t.alive = False
                 continue
             t.box = (nx1, ny1, nx2, ny2)
+            t.conf = 1.0
 
         self.prev_gray = gray
         return self.boxes()

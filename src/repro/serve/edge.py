@@ -47,9 +47,11 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core import partition as pt
 from repro.core import vit_backbone as vb
-from repro.core.partition import (RegionPlan, stack_plan_ids,
+from repro.core.partition import (FULL, LOW, RegionPlan, stack_plan_ids,
                                   stack_region_ids)
+from repro.offload.faults import FaultInjector
 from repro.offload.simulator import ServerModel, Simulation, SimResult
 from repro.serve.request import FeatureCache
 
@@ -132,6 +134,21 @@ class EdgeConfig:
     # keep full per-job detection lists in EdgeStats.jobs (benchmarks
     # opt in; long simulations must not grow without bound)
     keep_dets: bool = False
+    # edge-side admission control: when the queue is hot, first DEGRADE
+    # incoming jobs (promote FULL regions to LOW so the job drops a
+    # length bucket — the coalescing cost model's flops scaling prices
+    # the new service time), then SHED with an explicit REJECTED
+    # response the client handles by tracking locally
+    admission: bool = False
+    degrade_depth: int = 4           # pending jobs before degrading
+    shed_depth: int = 10             # pending jobs before shedding
+    degrade_backlog_s: float = 1.0   # or replica backlog seconds
+    shed_backlog_s: float = 2.5
+    degrade_beta: int = 2            # restoration point degraded
+    #                                  full-res jobs restore at
+    # crash-restart shortcut for benches: model the outage in sim time
+    # but keep host-process executables warm (tests pin the real wipe)
+    preserve_executables: bool = False
 
 
 @dataclass
@@ -144,6 +161,12 @@ class EdgeStats:
     # distinct n_low values per wave: > 1 means plans with different
     # region counts shared ONE executable (the collapsed-grid win)
     wave_n_low_mix: List[int] = field(default_factory=list)
+    # robustness telemetry
+    degraded: int = 0            # jobs admission control degraded
+    shed: int = 0                # jobs REJECTED at admission
+    restarts: int = 0            # crash-restarts of the replica
+    stale_nacks: int = 0         # REUSE jobs refused on epoch mismatch
+    lost_jobs: int = 0           # jobs that died with the replica
 
     @property
     def mean_wave_size(self) -> float:
@@ -167,12 +190,18 @@ class MultiClientSimulation:
     def __init__(self, clients: Sequence[Simulation],
                  server: BatchedServerModel,
                  ec: Optional[EdgeConfig] = None,
-                 on_complete: Optional[Callable[[int, Dict], None]] = None):
+                 on_complete: Optional[Callable[[int, Dict], None]] = None,
+                 faults: Optional[FaultInjector] = None):
         assert clients, "need at least one client"
         self.clients = list(clients)
         self.server = server
         self.ec = ec or EdgeConfig()
         self.on_complete = on_complete
+        # edge-plane fault schedule (crash-restarts, service stalls,
+        # arrivals into an outage).  Network/response-plane faults
+        # belong on the CLIENTS' injectors — keep the planes on separate
+        # injectors or edge stalls would be double-counted.
+        self.faults = faults
         self.dt = self.clients[0].dt
         assert all(c.dt == self.dt for c in self.clients), \
             "clients must share a frame rate"
@@ -194,9 +223,79 @@ class MultiClientSimulation:
     def _enqueue(self, ci: int, job: Dict) -> None:
         """Insert a job keeping ``pending`` sorted by edge arrival time —
         the scheduler never re-sorts (satellite fix: the old per-tick
-        sort was O(n log n) on every frame even when nothing arrived)."""
+        sort was O(n log n) on every frame even when nothing arrived).
+
+        Admission control happens here, at arrival: under queue pressure
+        the job is first degraded (FULL -> LOW), and past the shed
+        threshold it is REJECTED outright — an explicit response the
+        client's completion path turns into tracker-only rendering plus
+        a backed-off degraded retry."""
+        if self.faults is not None and self.faults.edge_down(
+                job["arrival"]):
+            # arrived at a crashed replica: never answered
+            job["lost"] = True
+            job["done_at"] = float("inf")
+            self.stats.lost_jobs += 1
+            return
+        if self.ec.admission:
+            depth = len(self.pending)
+            backlog = max(self.free_at - job["arrival"], 0.0)
+            if depth >= self.ec.shed_depth \
+                    or backlog >= self.ec.shed_backlog_s:
+                job["rejected"] = True
+                job["done_at"] = job["arrival"] + job["rtt"]
+                job["dets"] = []
+                self.stats.shed += 1
+                return
+            if (depth >= self.ec.degrade_depth
+                    or backlog >= self.ec.degrade_backlog_s) \
+                    and self._degrade_job(ci, job):
+                self.stats.degraded += 1
         bisect.insort(self.pending, (ci, job),
                       key=lambda cj: cj[1]["arrival"])
+
+    def _degrade_job(self, ci: int, job: Dict) -> bool:
+        """Promote FULL regions of an arriving job to LOW so it drops at
+        least one length bucket — the payload is already uploaded, so
+        this buys edge COMPUTE (shorter sequence), priced by the same
+        ``backbone_flops_windows`` scaling the coalescer uses.  REUSE
+        regions are untouched.  Returns True if the job changed."""
+        part = self.server.part
+        plan: RegionPlan = job["plan"]
+        states = np.asarray(plan.states).copy()
+        full_ids = np.nonzero(states == FULL)[0]
+        if len(full_ids) == 0:
+            return False
+        dd = part.windows_per_full_region
+        nw = part.n_windows(plan.n_low, plan.n_reuse)
+        # current effective length: the dedicated full-res executable
+        # runs the full sequence; mixed plans run at their bucket
+        lb_cur = (nw if plan.n_low == 0 and plan.n_reuse == 0
+                  else self.server.length_bucket(nw))
+        nw_min = nw - len(full_ids) * (dd - 1)
+        targets = [e for e in self.server.length_edges
+                   if nw_min <= e < lb_cur]
+        if not targets:
+            return False
+        target = max(targets)            # one bucket down: degrade least
+        k = int(np.ceil((nw - target) / (dd - 1)))
+        states[full_ids[:k]] = LOW
+        new_plan = RegionPlan(states.astype(np.int8))
+        beta = int(job["beta"]) if int(job["beta"]) >= 1 \
+            else self.ec.degrade_beta
+        f_own = vb.backbone_flops_windows(
+            self.server.cfg, lb_cur,
+            int(job["beta"]) if plan.n_low or plan.n_reuse else 0)
+        f_new = vb.backbone_flops_windows(self.server.cfg, target, beta)
+        job["t_inf_exec"] = job["t_inf"] * (f_new / f_own)
+        job["plan"] = new_plan
+        job["mask"] = new_plan.low_mask()
+        job["n_d"] = int(new_plan.n_low)
+        job["beta"] = beta
+        job["t_dec"] = self.clients[ci].delay_model.decode_delay(
+            part, new_plan.n_low, n_reuse=new_plan.n_reuse)
+        job["edge_degraded"] = True
+        return True
 
     def _job_key(self, job: Dict) -> Tuple[int, int, int]:
         """Wave compatibility: (length bucket, beta, capture point) —
@@ -272,6 +371,25 @@ class MultiClientSimulation:
         """Batched inference + Eq. (2) bookkeeping for one wave.
         Returns the time the replica frees up."""
         lb, beta, cap = key
+        live = []
+        for ci, job in wave:
+            cache = self.clients[ci].feature_cache
+            if job["plan"].n_reuse > 0 and cache is not None \
+                    and getattr(cache, "epoch", 0) != self.server.epoch:
+                # REUSE against tiles captured under a dead replica:
+                # instant control-plane NACK, never a splice — the
+                # client invalidates and bootstraps FULL at the new
+                # epoch (completion path handles it)
+                job["stale_epoch"] = True
+                job["done_at"] = t_start + job["rtt"]
+                job["dets"] = []
+                self.server.stats.stale_epoch_rejects += 1
+                self.stats.stale_nacks += 1
+                continue
+            live.append((ci, job))
+        if not live:
+            return self.free_at
+        wave = live
         imgs = np.stack([j["decoded"] for _, j in wave])
         plans = [j["plan"] for _, j in wave]
         caches = [self.clients[ci].feature_cache for ci, _ in wave]
@@ -304,6 +422,10 @@ class MultiClientSimulation:
         t_inf = max(j.get("t_inf_exec", j["t_inf"]) for _, j in wave)
         if B > 1:
             t_inf = t_inf * (1.0 + self.ec.batch_alpha * (B - 1))
+        if self.faults is not None:
+            # edge service stall (GC pause / preemption) for work
+            # starting inside the stall window
+            t_inf = t_inf + self.faults.stall_extra(t_start)
         done = t_start + t_dec + t_inf
 
         self.stats.wave_sizes.append(B)
@@ -335,6 +457,10 @@ class MultiClientSimulation:
         and the kept remainder is a subsequence, so order is preserved
         without re-sorting.
         """
+        if any(j.get("abandoned") for _, j in self.pending):
+            # the client gave up on these (deadline) — don't serve them
+            self.pending = [cj for cj in self.pending
+                            if not cj[1].get("abandoned")]
         while self.pending:
             head = self.pending[0]
             t_start = max(self.free_at, head[1]["arrival"])
@@ -359,6 +485,26 @@ class MultiClientSimulation:
             self.free_at = self._run_wave(wave, t_start, hk)
 
     # ------------------------------------------------------------------
+    def _edge_fault_tick(self, prev: float, now: float) -> None:
+        """Apply the shared replica's crash-restarts: bump the cache
+        epoch (wiping executables unless the bench shortcut keeps them),
+        hold the replica down for the outage, and lose the queue — jobs
+        pending in a crashed process are never answered; their clients'
+        deadlines reap them."""
+        if self.faults is None:
+            return
+        for (r, outage) in self.faults.restarts_between(prev, now):
+            self.server.restart(
+                preserve_executables=self.ec.preserve_executables)
+            self.stats.restarts += 1
+            self.free_at = max(self.free_at, r + outage)
+            for ci, job in self.pending:
+                job["lost"] = True
+                job["done_at"] = float("inf")
+            self.stats.lost_jobs += len(self.pending)
+            self.pending = []
+
+    # ------------------------------------------------------------------
     def run(self, video_names: Optional[Sequence[str]] = None
             ) -> List[SimResult]:
         """Run all streams to completion.  Returns per-client results."""
@@ -369,17 +515,18 @@ class MultiClientSimulation:
                    for i, c in enumerate(self.clients)]
 
         n_max = max(len(c.frames) for c in self.clients)
+        prev = -1.0
         for fi in range(n_max):
             now = fi * self.dt
+            self._edge_fault_tick(prev, now)
             self._drain(now)
             for ci, c in enumerate(self.clients):
                 if fi >= len(c.frames):
                     continue
                 c._motion_tick(fi, results[ci])
-                if c.inflight is not None and c.inflight["done_at"] <= now:
-                    job = c._complete_offload(results[ci], fi)
-                    if self.on_complete:
-                        self.on_complete(ci, job)
+                job = c._poll_inflight(now, fi, results[ci])
+                if job is not None and self.on_complete:
+                    self.on_complete(ci, job)
                 if c._should_offload(fi):
                     c._note_offload_gap(fi, results[ci])
                     job = c._prepare_offload(fi, now, results[ci])
@@ -388,12 +535,14 @@ class MultiClientSimulation:
                     job["_client"] = ci
                     self._enqueue(ci, job)
                 c._render_tick(fi, results[ci])
+            prev = now
 
-        # end of all clips: run the edge dry and flush in-flight offloads
+        # end of all clips: run the edge dry and flush in-flight
+        # offloads (each client's deadline still applies)
         self._drain(float("inf"))
         for ci, c in enumerate(self.clients):
-            if c.inflight is not None:
-                job = c._complete_offload(results[ci], len(c.frames))
-                if self.on_complete:
-                    self.on_complete(ci, job)
+            job = c._poll_inflight(float("inf"), len(c.frames),
+                                   results[ci])
+            if job is not None and self.on_complete:
+                self.on_complete(ci, job)
         return results

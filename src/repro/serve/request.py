@@ -19,6 +19,14 @@ from typing import List, Optional, Tuple
 import numpy as np
 
 
+class StaleCacheEpoch(RuntimeError):
+    """A REUSE plan tried to splice tiles captured under a cache epoch
+    that died with a restarted replica.  The server refuses the splice
+    (the invariant: no splice ever reads tiles from a dead replica); the
+    client must invalidate its FeatureCache and bootstrap FULL again.
+    """
+
+
 @dataclass
 class ServingStats:
     """Replica-side serving telemetry: the compile surface and tile
@@ -39,6 +47,14 @@ class ServingStats:
     offloads: int = 0
     tile_bytes_d2h: int = 0
     tile_bytes_h2d: int = 0
+    # robustness telemetry: crash-restarts of this replica, reuse
+    # splices actually served, and splices REFUSED because the client's
+    # tiles were captured under a pre-restart epoch (StaleCacheEpoch) —
+    # bench_robustness gates on stale splices SERVED staying zero, which
+    # is structural: a mismatched epoch always raises before splicing
+    restarts: int = 0
+    reuse_splices: int = 0
+    stale_epoch_rejects: int = 0
 
     @property
     def tile_bytes(self) -> int:
@@ -79,6 +95,10 @@ class FeatureCache:
     tiles were captured at — reuse is only valid at the SAME restoration
     point.  ``age[j]``: consecutive offloads region j has been reused;
     at ``max_age`` (K) the region is forced back to FULL/LOW.
+    ``epoch``: the replica generation the tiles were captured under
+    (ServerModel.epoch); a restart bumps the replica's generation, so a
+    REUSE plan carrying an old epoch is refused (StaleCacheEpoch) and
+    the client must :meth:`invalidate` and bootstrap FULL again.
     """
     n_regions: int
     max_age: int = 4
@@ -87,6 +107,7 @@ class FeatureCache:
     age: np.ndarray = None
     frame: int = -1
     warm: bool = False
+    epoch: int = 0
 
     def __post_init__(self):
         if self.age is None:
@@ -117,11 +138,32 @@ class FeatureCache:
                                    jnp.asarray(reuse_ids, jnp.int32))
         return self.tiles[np.asarray(reuse_ids, np.int64)]
 
+    def expire(self, ids) -> None:
+        """Force regions out of the reuse-eligible set (age pinned to
+        ``max_age``) without dropping their tiles: used for regions the
+        degradation ladder transmitted at LOW fidelity — a stopgap, not
+        a durable splice source.  They re-enter reuse only after a
+        genuine FULL re-transmission resets their age."""
+        ids = np.asarray(ids, np.int64).reshape(-1)
+        self.age[ids] = self.max_age
+
+    def invalidate(self) -> None:
+        """Drop every cached tile and the warm flag — the edge replied
+        StaleCacheEpoch (or the session is otherwise dead); the next
+        offload must be a FULL bootstrap."""
+        self.tiles = None
+        self.age = np.zeros((self.n_regions,), np.int32)
+        self.beta = -1
+        self.frame = -1
+        self.warm = False
+
     # ------------------------------------------------------------------
-    def note(self, reuse_ids: np.ndarray, beta: int, frame: int) -> None:
+    def note(self, reuse_ids: np.ndarray, beta: int, frame: int,
+             epoch: Optional[int] = None) -> None:
         """Bookkeeping-only refresh: regions in ``reuse_ids`` were reused
         this offload (age + 1), every other region was transmitted
-        (age reset to 0)."""
+        (age reset to 0).  ``epoch``: the replica generation serving the
+        refresh (None keeps the current one — legacy callers)."""
         ids = np.asarray(reuse_ids, np.int64).reshape(-1)
         new_age = np.zeros((self.n_regions,), np.int32)
         new_age[ids] = self.age[ids] + 1
@@ -129,9 +171,11 @@ class FeatureCache:
         self.beta = int(beta)
         self.frame = int(frame)
         self.warm = True
+        if epoch is not None:
+            self.epoch = int(epoch)
 
     def update(self, tiles, reuse_ids: np.ndarray,
-               beta: int, frame: int) -> None:
+               beta: int, frame: int, epoch: Optional[int] = None) -> None:
         """Full refresh after a forward that captured tiles.
 
         Device tiles stay on device; when the cache already holds a
@@ -149,7 +193,7 @@ class FeatureCache:
                 self.tiles = mr.refresh_tiles(self.tiles, tiles)
             else:
                 self.tiles = tiles
-        self.note(reuse_ids, beta, frame)
+        self.note(reuse_ids, beta, frame, epoch=epoch)
 
 
 @dataclass

@@ -1,0 +1,539 @@
+"""Failure-aware offloading: fault injection, deadline-bounded offload
+lifecycle, cache epochs, and edge admission control (PR 6).
+
+Ordering note: the tests that CRASH-RESTART the shared module server
+without ``preserve_executables`` (wiping its compiled grid) run LAST in
+this file so earlier tests keep their lazily-compiled executables.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.vitdet_l import SIM
+from repro.core import vit_backbone as vb
+from repro.core.partition import FULL, LOW, REUSE, RegionPlan
+from repro.data import synthetic_video as sv
+from repro.data.network_traces import make_trace
+from repro.models import registry
+from repro.offload.estimator import ThroughputEstimator
+from repro.offload.faults import (BLACKOUT_TPUT_BPS, DegradationLadder,
+                                  FaultInjector, FaultSpec, FaultyTrace,
+                                  RobustConfig)
+from repro.offload.optimizer import build_reuse_plan
+from repro.offload.simulator import Policy, ServerModel, Simulation
+from repro.offload.tracker import LKTracker
+from repro.serve.edge import (BatchedServerModel, EdgeConfig,
+                              MultiClientSimulation)
+from repro.serve.request import FeatureCache, StaleCacheEpoch
+
+PATCH = SIM.vit.patch_size
+SIZE = SIM.vit.img_size[0]
+
+
+# ---------------------------------------------------------------------------
+# pure-python layer: injector, trace knobs, estimator, tracker, ladder
+
+
+def test_fault_injector_deterministic_per_profile_index():
+    a = FaultInjector.from_profile("blackout", 3)
+    b = FaultInjector.from_profile("blackout", 3)
+    c = FaultInjector.from_profile("blackout", 4)
+    assert a.spec == b.spec
+    assert a.spec != c.spec
+    with pytest.raises(ValueError):
+        FaultInjector.from_profile("nope")
+
+
+def test_faulty_trace_blackout_and_bloat_windows():
+    base = make_trace("4g", 0, duration_s=30)
+    inj = FaultInjector(FaultSpec(blackouts=((5.0, 2.0),),
+                                  bufferbloat=((10.0, 3.0, 5.0),)))
+    tr = FaultyTrace(base, inj)
+    t_in, r_in = tr.at(5.5)
+    assert t_in <= BLACKOUT_TPUT_BPS
+    assert tr.at(3.0) == base.at(3.0)          # outside: untouched
+    t_bl, r_bl = tr.at(11.0)
+    tb, rb = base.at(11.0)
+    assert r_bl == pytest.approx(rb * 5.0)
+    assert t_bl == pytest.approx(tb * 0.7)
+    # handover storm: periodic micro-blackouts inside the window
+    storm = FaultInjector(FaultSpec(storms=((0.0, 4.0, 1.0, 0.5),)))
+    assert storm.uplink_down(0.2) and not storm.uplink_down(0.7)
+    assert storm.uplink_down(1.3) and not storm.uplink_down(4.5)
+
+
+def test_make_trace_impairment_knobs():
+    base = make_trace("4g", 7)
+    again = make_trace("4g", 7, blackouts=0, storms=0, bufferbloat=0)
+    np.testing.assert_array_equal(base.tput_bps, again.tput_bps)
+
+    bl = make_trace("4g", 7, blackouts=1)
+    dead = bl.tput_bps == BLACKOUT_TPUT_BPS
+    assert 2 <= dead.sum() <= 6
+    # deterministic overlays too
+    np.testing.assert_array_equal(bl.tput_bps,
+                                  make_trace("4g", 7, blackouts=1).tput_bps)
+    # outside the blackout the base process is untouched
+    np.testing.assert_array_equal(base.tput_bps[~dead], bl.tput_bps[~dead])
+
+    st = make_trace("4g", 7, storms=1)
+    storm_dead = st.tput_bps == BLACKOUT_TPUT_BPS
+    assert storm_dead.sum() >= 2
+    # alternating seconds: no two consecutive dead seconds
+    assert not (storm_dead[:-1] & storm_dead[1:]).any()
+
+    bb = make_trace("4g", 7, bufferbloat=1)
+    assert (bb.rtt_s > base.rtt_s).any()
+    assert bb.rtt_s.max() <= 3.0
+
+
+def test_trace_at_past_end_hold_vs_wrap():
+    hold = make_trace("4g", 1, duration_s=20)
+    assert hold.extend == "hold"
+    assert hold.at(1e6) == (float(hold.tput_bps[-1]), float(hold.rtt_s[-1]))
+    wrap = make_trace("4g", 1, duration_s=20, extend="wrap")
+    assert wrap.at(20.0) == wrap.at(0.0)
+    assert wrap.at(45.0) == wrap.at(5.0)
+    # the extend mode changes only lookup, not the data
+    np.testing.assert_array_equal(hold.tput_bps, wrap.tput_bps)
+
+
+def test_throughput_estimator_floor():
+    est = ThroughputEstimator(window=2)
+    est.observe(1e3, 0.04)             # blackout-era sample
+    est.observe(1e3, 0.04)
+    assert est.throughput == est.min_tput_bps
+    assert est.throughput > 0          # Eq. (2) terms stay finite
+
+
+def test_throughput_estimator_staleness_horizon():
+    est = ThroughputEstimator(window=2, max_age_s=30.0)
+    est.observe(20e6, 0.04, t=0.0)
+    est.observe(10e6, 0.04, t=1.0)
+    assert est.throughput == pytest.approx(15e6)
+    # first sample after a long blackout: pre-gap samples expire instead
+    # of being averaged across the outage
+    est.observe(2e6, 0.04, t=100.0)
+    assert len(est.obs_tput) == 1
+    assert est.throughput == pytest.approx(2e6)
+    # legacy t-free path ages 1s per observation (window test unchanged)
+    legacy = ThroughputEstimator(window=2)
+    for i in range(50):
+        legacy.observe(10e6 + i, 0.04)
+    assert legacy.throughput == pytest.approx(10e6 + 48.5)
+
+
+def test_tracker_holds_position_through_featureless_gap():
+    flat = np.full((96, 96, 3), 0.5, np.float32)   # zero gradients
+    tr = LKTracker()
+    tr.reinit(flat, [{"box": (20, 30, 40, 50), "cls": 0}])
+    box0 = tr.tracks[0].box
+    tr.step(flat)
+    # the box HOLDS position with decayed confidence, not instant death
+    assert tr.boxes(), "track must survive one featureless frame"
+    assert tr.tracks[0].box == box0
+    assert 0.0 < tr.retention < 1.0
+    kappas = [tr.retention]
+    for _ in range(8):
+        tr.step(flat)
+        kappas.append(tr.retention)
+    # kappa decays monotonically to a finite value; the track eventually
+    # dies at the confidence floor instead of degenerating
+    assert all(0.0 <= k <= 1.0 and np.isfinite(k) for k in kappas)
+    assert not tr.boxes()
+
+
+def test_degradation_ladder_backoff_and_recovery():
+    rc = RobustConfig(backoff_base_s=0.2, backoff_max_s=1.0,
+                      recover_after=2)
+    lad = DegradationLadder(rc)
+    assert lad.level == 0 and lad.retry_at == 0.0
+    lad.on_failure(1.0)
+    assert lad.level == 1 and lad.retry_at == pytest.approx(1.2)
+    lad.on_failure(2.0)
+    assert lad.level == 2 and lad.retry_at == pytest.approx(2.4)
+    lad.on_failure(3.0)
+    lad.on_failure(4.0)
+    assert lad.level == rc.ladder_max and lad.shedding
+    assert lad.backoff == rc.backoff_max_s
+    # successes: backoff resets at once, level steps down every
+    # ``recover_after`` completions
+    lad.on_success()
+    assert lad.backoff == rc.backoff_base_s and lad.retry_at == 0.0
+    assert lad.level == rc.ladder_max
+    lad.on_success()
+    assert lad.level == rc.ladder_max - 1
+
+
+def test_degradation_ladder_degrade_rewrites_plan():
+    lad = DegradationLadder(RobustConfig())
+    m = np.linspace(0, 1, 16).astype(np.float32)
+    base = {"mask": np.zeros(16, np.int32), "quality": 95, "beta": 0}
+    assert lad.degrade(base, m) is base              # level 0: identity
+    lad.on_failure(0.0)
+    d1 = lad.degrade(dict(base), m)
+    assert d1["plan"].n_low == 8 and d1["quality"] == 85
+    assert d1["beta"] == lad.rc.degrade_beta
+    # lowest-motion regions go LOW first
+    assert d1["mask"][:8].sum() == 8
+    lad.on_failure(1.0)
+    d2 = lad.degrade(dict(base), m)
+    assert d2["plan"].n_low == 16 and d2["quality"] == 75
+
+
+def test_degradation_ladder_never_touches_reuse():
+    lad = DegradationLadder(RobustConfig())
+    lad.on_failure(0.0)
+    lad.on_failure(1.0)                  # level 2: ALL FULL -> LOW
+    states = np.zeros(16, np.int8)
+    states[:4] = REUSE
+    states[4:6] = LOW
+    plan = RegionPlan(states)
+    d = lad.degrade({"plan": plan, "mask": plan.low_mask(),
+                     "quality": 90, "beta": 2}, None)
+    out = np.asarray(d["plan"].states)
+    assert (out[:4] == REUSE).all()
+    assert (out[4:] == LOW).all()
+
+
+def test_demoted_regions_are_not_splice_sources():
+    """A ladder-demoted region goes out LOW, so its captured tile is a
+    low-fidelity stopgap: ``degrade`` reports the demoted ids and
+    ``FeatureCache.expire`` pins them at the staleness bound — they must
+    not be reused until a genuine FULL re-transmission resets their age
+    (one degraded offload must not poison the next K splices)."""
+    lad = DegradationLadder(RobustConfig())
+    lad.on_failure(0.0)                              # level 1
+    m = np.linspace(0, 1, 16).astype(np.float32)
+    d = lad.degrade({"mask": np.zeros(16, np.int32), "quality": 95,
+                     "beta": 0}, m)
+    demoted = np.asarray(d["demoted"])
+    assert demoted.size == 8
+    assert (np.asarray(d["plan"].states)[demoted] == LOW).all()
+
+    c = FeatureCache(16, max_age=4)
+    c.note(np.array([], np.int64), beta=2, frame=0, epoch=1)
+    assert c.eligible(2).all()
+    c.expire(demoted)
+    elig = c.eligible(2)
+    assert not elig[demoted].any() and c.warm     # tiles kept, just cold
+    assert elig.sum() == 16 - demoted.size
+    # a FULL re-transmission (not in reuse_ids) resets the age and the
+    # region re-enters the eligible set
+    c.note(np.array([], np.int64), beta=2, frame=1, epoch=1)
+    assert c.eligible(2).all()
+
+
+def test_feature_cache_epoch_and_invalidate():
+    c = FeatureCache(8, max_age=2)
+    c.note(np.array([], np.int64), beta=2, frame=0, epoch=5)
+    assert c.warm and c.epoch == 5
+    # age reset on transmit, forced FULL at K: region reused twice hits
+    # the staleness bound and drops out of the eligible set
+    c.note(np.array([0], np.int64), beta=2, frame=1, epoch=5)
+    c.note(np.array([0], np.int64), beta=2, frame=2, epoch=5)
+    assert c.age[0] == 2 and not c.eligible(2)[0]
+    assert c.eligible(2)[1:].all()
+    # epoch-less note keeps the current epoch (legacy callers)
+    c.note(np.array([], np.int64), beta=2, frame=3)
+    assert c.epoch == 5
+    c.invalidate()
+    assert not c.warm and c.tiles is None and not c.eligible(2).any()
+
+
+# ---------------------------------------------------------------------------
+# server-backed: deadline lifecycle, epochs, admission control
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = registry.init_params(SIM, jax.random.PRNGKey(0))
+    server = BatchedServerModel(SIM, params, top_k=8, score_thresh=0.0)
+    return params, server, vb.vit_partition(SIM)
+
+
+class FixedPolicy(Policy):
+    name = "fixed"
+    use_tracker = True
+
+    def __init__(self, n_regions, lows=(0, 1, 2, 3), beta=2):
+        self.n_regions = n_regions
+        self.lows = list(lows)
+        self.beta = beta
+
+    def decide(self, sim, frame_idx):
+        mask = np.zeros(self.n_regions, np.int32)
+        mask[self.lows] = 1
+        return {"mask": mask, "quality": 85, "beta": self.beta}
+
+
+class FullResPolicy(Policy):
+    name = "fullres"
+    use_tracker = True
+
+    def __init__(self, n_regions):
+        self.n_regions = n_regions
+
+    def decide(self, sim, frame_idx):
+        return {"mask": np.zeros(self.n_regions, np.int32),
+                "quality": 95, "beta": 0}
+
+
+class FixedReusePolicy(Policy):
+    name = "fixed-reuse"
+    use_tracker = True
+    reuse_k = 3
+
+    def __init__(self, n_regions, lows=(0, 1, 2, 3), beta=2):
+        self.n_regions = n_regions
+        self.lows = list(lows)
+        self.beta = beta
+
+    def decide(self, sim, frame_idx):
+        mask = np.zeros(self.n_regions, np.int32)
+        mask[self.lows] = 1
+        cache = sim.feature_cache
+        elig = (cache.eligible(self.beta) if cache is not None
+                else np.zeros(self.n_regions, bool))
+        plan = build_reuse_plan(sim.part, mask, sim.m, elig)
+        return {"mask": mask, "quality": 85, "beta": self.beta,
+                "plan": plan, "capture_beta": self.beta}
+
+
+def _client(server, part, seed, policy, video="parkS", n_frames=12,
+            inf_delay=None, faults=None, robust=None):
+    frames, _ = sv.make_clip(video, n_frames, size=SIZE, seed=seed)
+    gt = [server.infer(f) for f in frames]
+    trace = make_trace("4g", seed, duration_s=60)
+    return Simulation(frames, gt, trace, policy, server, part, PATCH,
+                      fps=10, inf_delay=inf_delay, faults=faults,
+                      robust=robust)
+
+
+def test_deadline_timeout_sheds_to_tracker(setup):
+    """Inference slower than the SLO: every offload is abandoned at its
+    deadline, the ladder climbs to shed, and rendering rides the LK
+    tracker for the whole clip — no hang, no stale render."""
+    _, server, part = setup
+    c = _client(server, part, seed=3,
+                policy=FixedPolicy(part.n_regions), n_frames=12,
+                inf_delay=lambda beta, n_d: 60.0,
+                robust=RobustConfig(slo_s=0.3, backoff_base_s=0.2))
+    res = c.run("v")
+    assert c.inflight is None
+    assert res.e2e_latency == []               # nothing ever completed
+    assert c.rstats["timeouts"] >= 2
+    assert c.rstats["max_ladder_level"] >= 2
+    assert c.rstats["degraded_offloads"] >= 1  # retries went out degraded
+    assert len(res.rendering_f1) == 12
+    assert c.rstats["tracker_frames"] > 0
+
+
+def test_lost_response_reaped_then_degraded_retry_completes(setup):
+    """A dropped response never arrives: the deadline reaps it, the
+    retry goes out degraded and completes; a duplicated response is
+    discarded without changing what is rendered."""
+    _, server, part = setup
+    faults = FaultInjector(FaultSpec(drop_responses=(0,)))
+    c = _client(server, part, seed=4,
+                policy=FixedPolicy(part.n_regions), n_frames=20,
+                faults=faults,
+                robust=RobustConfig(slo_s=0.5, backoff_base_s=0.2))
+    res = c.run("v")
+    assert c.rstats["lost_responses"] == 1
+    assert c.rstats["degraded_offloads"] >= 1
+    assert len(res.e2e_latency) >= 1           # recovery happened
+    assert c.inflight is None
+
+
+def test_duplicated_response_never_rendered(setup):
+    _, server, part = setup
+    base = _client(server, part, seed=5,
+                   policy=FixedPolicy(part.n_regions), n_frames=10)
+    res_base = base.run("v")
+    dup = _client(server, part, seed=5,
+                  policy=FixedPolicy(part.n_regions), n_frames=10,
+                  faults=FaultInjector(FaultSpec(dup_responses=(0,))))
+    res_dup = dup.run("v")
+    assert dup.rstats["dup_discards"] == 1
+    np.testing.assert_allclose(res_base.rendering_f1, res_dup.rendering_f1)
+    np.testing.assert_allclose(res_base.e2e_latency, res_dup.e2e_latency)
+
+
+def test_stale_epoch_splice_refused_and_rebootstrap(setup):
+    """The restart invariant, server-side: a REUSE plan whose cache
+    predates the replica's epoch raises StaleCacheEpoch (never splices);
+    after a FULL re-bootstrap at the new epoch, reuse serves again."""
+    _, server, part = setup
+    frames, _ = sv.make_clip("parkS", 2, size=SIZE, seed=9)
+    cache = FeatureCache(part.n_regions, max_age=3)
+    full = RegionPlan(np.zeros(part.n_regions, np.int8))
+    e0 = server.epoch
+    server.infer_plan(frames[0], full, 0, cache=cache, frame_idx=0,
+                      capture_beta=2)
+    assert cache.warm and cache.epoch == e0
+
+    states = np.zeros(part.n_regions, np.int8)
+    states[:4] = REUSE
+    states[4:8] = LOW
+    reuse_plan = RegionPlan(states)
+    splices_before = server.stats.reuse_splices
+    server.infer_plan(frames[1], reuse_plan, 2, cache=cache, frame_idx=1)
+    assert server.stats.reuse_splices == splices_before + 1
+
+    server.restart(preserve_executables=True)
+    rejects_before = server.stats.stale_epoch_rejects
+    with pytest.raises(StaleCacheEpoch):
+        server.infer_plan(frames[1], reuse_plan, 2, cache=cache,
+                          frame_idx=1)
+    assert server.stats.stale_epoch_rejects == rejects_before + 1
+
+    # the recovery contract: invalidate, bootstrap FULL, reuse again
+    cache.invalidate()
+    server.infer_plan(frames[0], full, 0, cache=cache, frame_idx=2,
+                      capture_beta=2)
+    assert cache.epoch == server.epoch == e0 + 1
+    server.infer_plan(frames[1], reuse_plan, 2, cache=cache, frame_idx=3)
+    assert server.stats.reuse_splices == splices_before + 2
+
+
+def test_epoch_bump_isolates_clients(setup):
+    """Two-client invariant: one client's post-restart recovery never
+    touches the other's tiles — the other cache keeps its (dead) epoch
+    and tiles untouched until its own refusal + re-bootstrap."""
+    _, server, part = setup
+    frames, _ = sv.make_clip("parkS", 2, size=SIZE, seed=11)
+    full = RegionPlan(np.zeros(part.n_regions, np.int8))
+    ca = FeatureCache(part.n_regions, max_age=3)
+    cb = FeatureCache(part.n_regions, max_age=3)
+    server.infer_plan(frames[0], full, 0, cache=ca, frame_idx=0,
+                      capture_beta=2)
+    server.infer_plan(frames[0], full, 0, cache=cb, frame_idx=0,
+                      capture_beta=2)
+    e_old = server.epoch
+    tiles_b = cb.tiles
+    server.restart(preserve_executables=True)
+
+    # client A recovers: invalidate + FULL bootstrap at the new epoch
+    ca.invalidate()
+    server.infer_plan(frames[1], full, 0, cache=ca, frame_idx=1,
+                      capture_beta=2)
+    assert ca.epoch == server.epoch == e_old + 1
+    # client B's session is untouched by A's recovery...
+    assert cb.epoch == e_old and cb.tiles is tiles_b and cb.warm
+    # ...and its stale tiles remain unsplicable
+    states = np.zeros(part.n_regions, np.int8)
+    states[:4] = REUSE
+    with pytest.raises(StaleCacheEpoch):
+        server.infer_plan(frames[1], RegionPlan(states), 2, cache=cb,
+                          frame_idx=1)
+
+
+def test_admission_control_degrades_then_sheds(setup):
+    """Sustained overload at the edge: arrivals are first DEGRADED
+    (FULL -> LOW, one length bucket down) and past the shed threshold
+    REJECTED; rejected clients count the explicit response and keep
+    rendering from the tracker."""
+    _, server, part = setup
+    slow = lambda beta, n_d: 1.5
+    # mutually incompatible configs (different length buckets) so waves
+    # serialize and the backlog builds for real
+    policies = [FullResPolicy(part.n_regions),
+                FixedPolicy(part.n_regions, lows=(0, 1, 2, 3)),
+                FixedPolicy(part.n_regions, lows=tuple(range(8)))]
+    n = 60
+    clients = [
+        _client(server, part, seed=20 + i, policy=p, n_frames=n,
+                inf_delay=slow, robust=RobustConfig(slo_s=8.0))
+        for i, p in enumerate(policies)
+    ]
+    ec = EdgeConfig(batched=True, admission=True,
+                    degrade_backlog_s=0.3, shed_backlog_s=1.0,
+                    degrade_depth=2, shed_depth=4)
+    mc = MultiClientSimulation(clients, server, ec)
+    results = mc.run()
+    assert mc.stats.degraded >= 1
+    assert mc.stats.shed >= 1
+    assert sum(c.rstats["rejected"] for c in clients) == mc.stats.shed
+    assert all(c.inflight is None for c in clients)
+    for r in results:
+        assert len(r.rendering_f1) == n
+        for e2e, parts in zip(r.e2e_latency, r.delay_parts):
+            assert e2e == pytest.approx(parts["enc"] + parts["net"]
+                                        + parts["dec"] + parts["inf"]
+                                        + parts["queue"])
+
+
+def test_mc_edge_restart_loses_queue_and_clients_recover(setup):
+    """Crash-restart of the shared replica: the pending queue dies, the
+    outage holds the replica down, stale-epoch reuse is NACKed, and
+    every client re-bootstraps and completes offloads afterwards."""
+    _, server, part = setup
+    # 4 s clip: the lost in-flight job needs its 1 s deadline plus the
+    # backoff to elapse BEFORE the retry/NACK/re-bootstrap cycle runs
+    clients = [
+        _client(server, part, seed=30 + i,
+                policy=FixedReusePolicy(part.n_regions), n_frames=40,
+                robust=RobustConfig(slo_s=1.0))
+        for i in range(2)
+    ]
+    faults = FaultInjector(FaultSpec(edge_restarts=((0.55, 0.2),)))
+    ec = EdgeConfig(batched=True, preserve_executables=True)
+    mc = MultiClientSimulation(clients, server, ec, faults=faults)
+    results = mc.run()
+    assert mc.stats.restarts == 1
+    # each client completed offloads AFTER the restart (recovery)
+    for c, r in zip(clients, results):
+        assert len(r.e2e_latency) >= 2
+        assert c.feature_cache.epoch == server.epoch
+        assert c.inflight is None
+    # work died with the old process or was refused on epoch grounds
+    assert (mc.stats.lost_jobs + mc.stats.stale_nacks
+            + sum(c.rstats["stale_epoch_nacks"] for c in clients)) >= 1
+
+
+# ---------------------------------------------------------------------------
+# real-wipe restarts LAST (they cold the module server's compiled grid)
+
+
+def test_restart_wipes_executables_and_bumps_epoch(setup):
+    """The real restart contract: warmed executables die with the
+    process (compiles after it count as re-warmup, not steady stalls)
+    and the epoch advances."""
+    params, _, _ = setup
+    srv = ServerModel(SIM, params, top_k=8, score_thresh=0.0)
+    # populate the grid without paying XLA compiles
+    srv._fns[(0, 0, 0, 1)] = lambda *a: None
+    srv._zero_tiles[1] = np.zeros(1)
+    srv.stats.warmed = True
+    e = srv.epoch
+    srv.restart()
+    assert srv.epoch == e + 1
+    assert srv.stats.restarts == 1
+    assert not srv._fns and not srv._zero_tiles
+    assert not srv.stats.warmed
+    # the bench shortcut keeps the grid but still bumps the epoch
+    srv._fns[(0, 0, 0, 1)] = lambda *a: None
+    srv.stats.warmed = True
+    srv.restart(preserve_executables=True)
+    assert srv.epoch == e + 2 and srv._fns and srv.stats.warmed
+
+
+def test_single_client_edge_restart_recovers(setup):
+    """End-to-end single-client crash-restart (REAL wipe): the in-flight
+    response dies, reuse is refused once, the client re-bootstraps FULL
+    and finishes the clip with offloads completing again."""
+    _, server, part = setup
+    faults = FaultInjector(FaultSpec(edge_restarts=((0.45, 0.2),)))
+    c = _client(server, part, seed=40,
+                policy=FixedReusePolicy(part.n_regions), n_frames=40,
+                faults=faults, robust=RobustConfig(slo_s=1.0))
+    res = c.run("v")
+    assert c.rstats["edge_restarts"] == 1
+    assert c.rstats["stale_epoch_nacks"] >= 1
+    assert c.feature_cache.epoch == server.epoch
+    assert len(res.e2e_latency) >= 2           # completions resumed
+    assert c.inflight is None
+    # staleness bound K honoured across the failure: ages were zeroed
+    # by the re-bootstrap, never carried across the epoch bump
+    assert (c.feature_cache.age <= c.feature_cache.max_age).all()
