@@ -1,4 +1,5 @@
-"""Multi-client edge-serving benchmark — batched waves vs. sequential.
+"""Multi-client edge-serving benchmark — batched waves vs. sequential,
+barrier vs. continuous scheduling.
 
 Emits ``BENCH_multiclient.json`` with one row per (n_clients, mode):
 
@@ -6,14 +7,23 @@ Emits ``BENCH_multiclient.json`` with one row per (n_clients, mode):
                            SIMULATED time (the edge-capacity metric);
   * ``p50_e2e_s`` / ``p95_e2e_s`` — Eq. (2) end-to-end latency incl.
                            queueing delay at the shared replica;
-  * ``p50_queue_s`` / ``mean_wave`` — scheduler telemetry;
+  * ``p50_queue_s`` / ``p95_queue_s`` — queueing delay percentiles,
+                           with the per-job BREAKDOWN surfaced as
+                           ``p50_queue_admit_s`` (arrival -> bound to a
+                           wave) + ``p50_queue_slot_s`` (bound ->
+                           compute start);
+  * ``device_idle_frac`` / ``decode_hidden_s`` / ``mean_wave`` —
+                           scheduler telemetry (the continuous policy's
+                           overlap win);
   * ``wall_s``           — real wall-clock of the run (the batched
                            forward also wins real compute time).
 
-Modes: ``batched`` (waves of same-(n_low bucket, beta) frames through
-one batched ``forward_det``) vs. ``sequential`` (one frame per wave) on
-the SAME workload.  The harness also cross-checks that batched
-detections match sequential detections box-for-box.
+Modes: ``batched`` (barrier waves of same-(n_low bucket, beta) frames
+through one batched ``forward_det``), ``continuous`` (same waves, but
+decode/h2d staging overlapped under compute and late admission into
+padded B-bucket slots — serve/scheduler.py), and ``sequential`` (one
+frame per wave) on the SAME workload.  The harness also cross-checks
+that all three modes' detections match box-for-box.
 
 Standalone:  python benchmarks/bench_multiclient.py [--smoke] [--out P]
 Harness:     picked up by benchmarks/run.py as the ``bench_multiclient``
@@ -110,10 +120,12 @@ def make_clients(server: BatchedServerModel, n_clients: int,
 
 
 def run_mode(server: BatchedServerModel, n_clients: int, n_frames: int,
-             batched: bool, gt_cache: Dict) -> Dict:
+             batched: bool, gt_cache: Dict,
+             scheduler: str = "barrier") -> Dict:
     clients = make_clients(server, n_clients, n_frames, gt_cache)
     mc = MultiClientSimulation(clients, server,
                                EdgeConfig(batched=batched,
+                                          scheduler=scheduler,
                                           keep_dets=True))
     t0 = time.perf_counter()
     results = mc.run([VIDEOS[i % len(VIDEOS)] for i in range(n_clients)])
@@ -121,16 +133,27 @@ def run_mode(server: BatchedServerModel, n_clients: int, n_frames: int,
 
     e2e = np.array([x for r in results for x in r.e2e_latency], np.float64)
     queue = np.asarray(mc.stats.queue_delays, np.float64)
+    admit = np.asarray(mc.stats.queue_admit, np.float64)
+    slot = np.asarray(mc.stats.queue_slot, np.float64)
     sim_seconds = n_frames / FPS
+
+    def p(x, q):
+        return float(np.percentile(x, q)) if x.size else 0.0
+
     return {
         "n_clients": n_clients,
-        "mode": "batched" if batched else "sequential",
+        "mode": ("continuous" if scheduler == "continuous"
+                 else "batched" if batched else "sequential"),
         "offloads": int(e2e.size),
         "throughput_fps": float(e2e.size / sim_seconds),
         "p50_e2e_s": float(np.percentile(e2e, 50)) if e2e.size else None,
         "p95_e2e_s": float(np.percentile(e2e, 95)) if e2e.size else None,
-        "p50_queue_s": (float(np.percentile(queue, 50))
-                        if queue.size else 0.0),
+        "p50_queue_s": p(queue, 50),
+        "p95_queue_s": p(queue, 95),
+        "p50_queue_admit_s": p(admit, 50),
+        "p50_queue_slot_s": p(slot, 50),
+        "device_idle_frac": mc.stats.device_idle_frac,
+        "decode_hidden_s": mc.stats.decode_hidden_s,
         "mean_wave": mc.stats.mean_wave_size,
         "wall_s": wall,
         "_jobs": {f"{j['client']}:{j['frame']}": j["dets"]
@@ -161,16 +184,24 @@ def run_bench(smoke: bool = False, out: Path = DEFAULT_OUT,
     for n in client_counts:
         row_b = run_mode(server, n, n_frames, batched=True,
                          gt_cache=gt_cache)
+        row_c = run_mode(server, n, n_frames, batched=True,
+                         gt_cache=gt_cache, scheduler="continuous")
         row_s = run_mode(server, n, n_frames, batched=False,
                          gt_cache=gt_cache)
-        jobs_b, jobs_s = row_b.pop("_jobs"), row_s.pop("_jobs")
+        jobs_b = row_b.pop("_jobs")
+        jobs_c = row_c.pop("_jobs")
+        jobs_s = row_s.pop("_jobs")
         shared = set(jobs_b) & set(jobs_s)
+        shared_c = set(jobs_b) & set(jobs_c)
         match[n] = {
             "compared": len(shared),
             "all_match": bool(shared) and all(
                 _dets_close(jobs_b[k], jobs_s[k]) for k in shared),
+            "compared_continuous": len(shared_c),
+            "continuous_match": bool(shared_c) and all(
+                _dets_close(jobs_b[k], jobs_c[k]) for k in shared_c),
         }
-        rows.extend([row_b, row_s])
+        rows.extend([row_b, row_c, row_s])
 
     report = {
         "meta": {
@@ -225,7 +256,9 @@ def main(argv=None) -> int:
               f"wave {r['mean_wave']:.2f}")
     for n, m in rep["detections_match"].items():
         print(f"  {n}c detections batched==sequential: {m['all_match']} "
-              f"({m['compared']} jobs)")
+              f"({m['compared']} jobs)  "
+              f"continuous==batched: {m['continuous_match']} "
+              f"({m['compared_continuous']} jobs)")
     return 0
 
 

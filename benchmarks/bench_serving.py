@@ -21,7 +21,16 @@ Emits ``BENCH_serving.json`` with three sections:
                    included) on a multi-length-bucket workload with and
                    without cross-bucket coalescing, plus rendering-F1
                    deltas on the parkS/driveN scenarios (promotion only
-                   ever PADS the sequence, so the deltas must be 0.000).
+                   ever PADS the sequence, so the deltas must be 0.000);
+  * ``scheduling`` — barrier vs. continuous wave scheduling
+                   (``EdgeConfig(scheduler=...)``) on a contended
+                   4-client workload against ONE pre-warmed replica:
+                   p50 queue delay and ``device_idle_frac`` (continuous
+                   must beat barrier on both — the decode/h2d overlap
+                   win), zero steady-state compiles and ZERO new
+                   executable keys for the continuous run (it must
+                   reuse the warmed grid), and a 0.000 rendering-F1
+                   delta (scheduling moves timestamps, never boxes).
 
 Standalone:  python benchmarks/bench_serving.py [--smoke] [--check]
                     [--max-warmup-s S]
@@ -339,6 +348,83 @@ def bench_coalesce(n_frames: int) -> Dict:
 
 
 # ---------------------------------------------------------------------------
+# section 4: barrier vs. continuous wave scheduling
+
+
+def _run_sched(server, part, video_specs, n_frames, scheduler,
+               gt_cache) -> Dict:
+    clients = _bucket_clients(server, part, video_specs, n_frames,
+                              gt_cache)
+    mc = MultiClientSimulation(clients, server,
+                               EdgeConfig(batched=True,
+                                          scheduler=scheduler))
+    results = mc.run([v for v, _ in video_specs])
+    e2e = np.array([x for r in results for x in r.e2e_latency], np.float64)
+    queue = np.asarray(mc.stats.queue_delays, np.float64)
+    admit = np.asarray(mc.stats.queue_admit, np.float64)
+    slot = np.asarray(mc.stats.queue_slot, np.float64)
+    rf1 = {}
+    for r in results:
+        rf1.setdefault(r.video, []).extend(r.rendering_f1)
+
+    def p(x, q):
+        return float(np.percentile(x, q)) if x.size else 0.0
+
+    return {
+        "scheduler": scheduler,
+        "offloads": int(e2e.size),
+        "p50_e2e_s": p(e2e, 50),
+        "p95_e2e_s": p(e2e, 95),
+        "p50_queue_s": p(queue, 50),
+        "p95_queue_s": p(queue, 95),
+        "p50_queue_admit_s": p(admit, 50),
+        "p50_queue_slot_s": p(slot, 50),
+        "device_idle_frac": mc.stats.device_idle_frac,
+        "decode_hidden_s": mc.stats.decode_hidden_s,
+        "mean_wave": mc.stats.mean_wave_size,
+        "median_rendering_f1": {v: float(np.median(x))
+                                for v, x in rf1.items()},
+    }
+
+
+def bench_scheduling(n_frames: int) -> Dict:
+    part = vb.vit_partition(SIM)
+    server = BatchedServerModel(SIM, _params(), top_k=8, score_thresh=0.0)
+    gt_cache: Dict = {}
+    # 4 same-bucket clients on a static scene: the shared replica is a
+    # genuine bottleneck (FULL_RES_DELAY_S service model at 10 FPS), so
+    # barrier waves idle the device through every decode window and
+    # queue arrivals behind it; continuous stages decode/h2d under the
+    # running wave.  parkS is static, so the timing shift cannot move
+    # which boxes a frame renders — the F1 delta gate is exact.
+    specs = [("parkS", range(4))] * 4
+    # ground truth BEFORE warmup (full-res solo inference), then warm
+    # the grid the workload needs — every compile after this point is a
+    # steady-state stall, and the continuous run must add ZERO keys
+    for video, _ in specs:
+        key = (video, n_frames)
+        if key not in gt_cache:
+            frames, _ = sv.make_clip(video, n_frames, size=SIZE, seed=23)
+            gt_cache[key] = (frames, [server.infer(f) for f in frames])
+    server.warmup(server.default_plan_space(betas=(BETA,)))
+
+    barrier = _run_sched(server, part, specs, n_frames, "barrier",
+                         gt_cache)
+    keys0, compiles0 = set(server._fns), server.stats.compiles
+    cont = _run_sched(server, part, specs, n_frames, "continuous",
+                      gt_cache)
+    new_keys = sorted(list(k) for k in set(server._fns) - keys0)
+    f1_delta = {v: cont["median_rendering_f1"][v]
+                - barrier["median_rendering_f1"][v]
+                for v in barrier["median_rendering_f1"]}
+    return {"barrier": barrier, "continuous": cont,
+            "steady_compiles": server.stats.steady_compiles,
+            "continuous_new_executables": new_keys,
+            "continuous_new_compiles": server.stats.compiles - compiles0,
+            "rendering_f1_delta": f1_delta}
+
+
+# ---------------------------------------------------------------------------
 
 
 def check(report: Dict,
@@ -383,6 +469,27 @@ def check(report: Dict,
     for v, d in c["rendering_f1_delta"].items():
         if abs(d) > 1e-12:
             errs.append(f"rendering-F1 delta on {v}: {d:+.4f}")
+    s = report["scheduling"]
+    if not (s["continuous"]["p50_queue_s"]
+            < s["barrier"]["p50_queue_s"]):
+        errs.append(f"continuous did not cut p50 queue delay: "
+                    f"{s['continuous']['p50_queue_s']:.3f}s >= "
+                    f"{s['barrier']['p50_queue_s']:.3f}s")
+    if not (s["continuous"]["device_idle_frac"]
+            < s["barrier"]["device_idle_frac"]):
+        errs.append(f"continuous did not cut device idle: "
+                    f"{s['continuous']['device_idle_frac']:.3f} >= "
+                    f"{s['barrier']['device_idle_frac']:.3f}")
+    if s["steady_compiles"] != 0:
+        errs.append(f"scheduling workload compiled in steady state: "
+                    f"{s['steady_compiles']}")
+    if s["continuous_new_executables"] or s["continuous_new_compiles"]:
+        errs.append(f"continuous scheduling grew the executable grid: "
+                    f"+{s['continuous_new_compiles']} compiles "
+                    f"{s['continuous_new_executables']}")
+    for v, d in s["rendering_f1_delta"].items():
+        if abs(d) > 1e-12:
+            errs.append(f"scheduler rendering-F1 delta on {v}: {d:+.4f}")
     return errs
 
 
@@ -409,6 +516,7 @@ def run_bench(smoke: bool = False, out: Path = DEFAULT_OUT,
         "warmup": bench_warmup(4 if smoke else 8),
         "cache": bench_cache(n_frames),
         "coalesce": bench_coalesce(n_frames),
+        "scheduling": bench_scheduling(n_frames),
     }
     errs = check(report, max_warmup_s=max_warmup_s)
     report["check"] = {"passed": not errs, "errors": errs}
@@ -445,6 +553,13 @@ def run(ctx: dict) -> list:
          f"wave {c['off']['mean_wave']:.2f}->{c['on']['mean_wave']:.2f} "
          f"promoted={c['on']['promoted_jobs']} "
          f"mixed_waves={c['on']['mixed_plan_waves']}"),
+        ("bench_serving/scheduling",
+         rep["scheduling"]["continuous"]["p50_queue_s"] * 1e6,
+         f"queue p50 "
+         f"{rep['scheduling']['barrier']['p50_queue_s']:.3f}s->"
+         f"{rep['scheduling']['continuous']['p50_queue_s']:.3f}s "
+         f"idle {rep['scheduling']['barrier']['device_idle_frac']:.2f}->"
+         f"{rep['scheduling']['continuous']['device_idle_frac']:.2f}"),
     ]
     ctx["bench_serving"] = rows
     return rows
@@ -490,6 +605,14 @@ def main(argv=None) -> int:
     print(f"  promotion inference-F1 cost: "
           f"{c['promotion_inference_f1_delta']}; scenario rendering-F1 "
           f"deltas {c['rendering_f1_delta']}")
+    s = rep["scheduling"]
+    print(f"  scheduling: queue p50 {s['barrier']['p50_queue_s']:.3f}s "
+          f"(barrier) -> {s['continuous']['p50_queue_s']:.3f}s "
+          f"(continuous), idle {s['barrier']['device_idle_frac']:.3f} -> "
+          f"{s['continuous']['device_idle_frac']:.3f}, decode hidden "
+          f"{s['continuous']['decode_hidden_s']:.2f}s, new execs "
+          f"{s['continuous_new_compiles']}, F1 deltas "
+          f"{s['rendering_f1_delta']}")
     print(f"  check: {'OK' if rep['check']['passed'] else 'FAILED'} "
           f"{rep['check']['errors']}")
     return 0 if rep["check"]["passed"] or not args.check else 1

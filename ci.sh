@@ -22,14 +22,18 @@ echo "== temporal-reuse ablation smoke =="
 python benchmarks/bench_reuse.py --smoke \
     --out benchmarks/artifacts/BENCH_reuse.smoke.json
 
-echo "== serving hot-path smoke (warmup / device cache / coalescing) =="
+echo "== serving hot-path smoke (warmup / cache / coalesce / sched) =="
 # --check enforces the zero-stall gates: steady-state compile count 0
 # after warmup, the COLLAPSED compile surface (executables_total <= the
 # bench's EXEC_BUDGET=16 — a regression back toward the old 56-exec
 # (n_low, n_reuse)-keyed grid fails fast), warmup wall time within
 # --max-warmup-s, zero tile bytes with the device-resident cache, waves
 # strictly larger with coalescing (plus mixed-n_low waves sharing one
-# executable), scenario F1 deltas 0.000
+# executable), scenario F1 deltas 0.000, and the scheduling-plane
+# gates: continuous scheduling beats barrier on p50 queue delay AND
+# device_idle_frac on the contended 4-client workload, reuses the
+# warmed executable grid (zero new keys, zero steady-state compiles),
+# and moves only timestamps (rendering-F1 delta 0.000)
 python benchmarks/bench_serving.py --smoke --check --max-warmup-s 90 \
     --out benchmarks/artifacts/BENCH_serving.smoke.json
 

@@ -37,6 +37,7 @@ from repro.offload.optimizer import OffloadConfig, SystemState
 from repro.offload.tracker import LKTracker
 from repro.serve.request import (FeatureCache, ServingStats,
                                  StaleCacheEpoch)
+from repro.serve.scheduler import SoloScheduler
 
 # payload scale: our 512x512 luma codec vs the paper's 1080p YUV frames
 SIZE_SCALE = (1920 * 1080) / (512 * 512)
@@ -60,6 +61,34 @@ SIZE_SCALE = (1920 * 1080) / (512 * 512)
 # argument order of a mixed executable's layout arrays
 _LAYOUT_ARGS = ("win_src", "win_dst", "low_src", "low_ids", "reuse_ids",
                 "nw")
+
+
+@dataclass
+class StagedWave:
+    """A wave's decoded frames, already padded to their B bucket and
+    shipped to the device (:meth:`ServerModel.stage_frames`) — the h2d
+    of wave N+1 overlaps wave N's compute under JAX async dispatch."""
+    B: int                   # real rows; imgs carries Bp >= B
+    imgs: jnp.ndarray
+
+
+@dataclass
+class PendingWave:
+    """An in-flight wave result: the forward has been DISPATCHED but
+    the blocking host-side detection decode has not run.  The scheduler
+    defers :meth:`wait` until the next wave is on the device, so host
+    decode hides under device compute."""
+    boxes: jnp.ndarray
+    scores: jnp.ndarray
+    classes: jnp.ndarray
+    B: int
+    score_thresh: float
+
+    def wait(self) -> List[List[Dict]]:
+        return [det.detections_from_arrays(
+                    self.boxes[i], self.scores[i], self.classes[i],
+                    self.score_thresh)
+                for i in range(self.B)]
 
 
 class ServerModel:
@@ -100,7 +129,8 @@ class ServerModel:
                  n_buckets: int = 4,
                  b_buckets: Tuple[int, ...] = pt.BATCH_BUCKETS,
                  device_cache: bool = True,
-                 n_length_buckets: int = pt.N_LENGTH_BUCKETS):
+                 n_length_buckets: int = pt.N_LENGTH_BUCKETS,
+                 donate_frames: bool = True):
         self.cfg = cfg
         self.params = params
         self.part = vb.vit_partition(cfg)
@@ -108,6 +138,11 @@ class ServerModel:
         self.score_thresh = score_thresh
         self.backend = backend
         self.jit = jit
+        # donate the staged frame buffer to the executable so XLA can
+        # reuse it as scratch — each wave stages a fresh array, so the
+        # buffer is never read again.  CPU XLA ignores donation (and
+        # warns), so the gate keeps the host path quiet.
+        self._donate = donate_frames and jax.default_backend() != "cpu"
         self.n_buckets = n_buckets
         self.b_buckets = tuple(sorted(b_buckets))
         self.device_cache = device_cache
@@ -228,7 +263,9 @@ class ServerModel:
                 # The executable can never silently retrace, so each
                 # cache miss is exactly one XLA compile — the telemetry
                 # below is the whole compile surface.
-                fn = jax.jit(fn).lower(
+                fn = jax.jit(
+                    fn,
+                    donate_argnums=(1,) if self._donate else ()).lower(
                     self.params, *self._arg_structs(lb, batch)).compile()
                 self.stats.note_compile(key)
             self._fns[key] = fn
@@ -347,14 +384,30 @@ class ServerModel:
             return self.full_capture
         return want
 
-    def infer_wave(self, frames: np.ndarray, plans: Sequence[RegionPlan],
+    def stage_frames(self, frames: np.ndarray) -> StagedWave:
+        """Asynchronously stage a wave's decoded frames on the device.
+
+        Pads up to the B bucket on the host, then ``jax.device_put``
+        enqueues the h2d copy WITHOUT blocking — called while the
+        previous wave still computes, the transfer overlaps it.  The
+        result feeds :meth:`infer_wave` in place of the host array.
+        """
+        frames = np.asarray(frames)
+        B = frames.shape[0]
+        npad = self.batch_bucket(B) - B
+        if npad:
+            frames = np.concatenate(
+                [frames, np.repeat(frames[:1], npad, axis=0)])
+        return StagedWave(B=B, imgs=jax.device_put(frames))
+
+    def infer_wave(self, frames, plans: Sequence[RegionPlan],
                    beta: int = 0,
                    caches: Optional[Sequence[Optional[FeatureCache]]]
                    = None,
                    frame_ids: Optional[Sequence[int]] = None,
                    capture_beta: int = 0,
-                   lb_override: Optional[int] = None
-                   ) -> List[List[Dict]]:
+                   lb_override: Optional[int] = None,
+                   defer: bool = False):
         """Serve one wave (B >= 1 frames) through the collapsed grid.
 
         frames: (B, H, W, 3); plans: per-sample RegionPlans — ANY
@@ -371,9 +424,19 @@ class ServerModel:
         sample 0; padded rows are dropped from the decoded detections
         and never touch a cache (within one executable the result is
         bit-invariant to pad content — pinned by tests).
+
+        ``frames`` may be a :class:`StagedWave` (pre-padded device
+        array from :meth:`stage_frames`) and ``defer=True`` returns a
+        :class:`PendingWave` instead of decoded detections — together
+        the continuous scheduler's async-overlap path.
         """
-        frames = np.asarray(frames)
-        B = frames.shape[0]
+        staged: Optional[StagedWave] = None
+        if isinstance(frames, StagedWave):
+            staged = frames
+            B = staged.B
+        else:
+            frames = np.asarray(frames)
+            B = frames.shape[0]
         assert len(plans) == B and B >= 1
         if caches is not None:
             assert len(caches) == B
@@ -409,7 +472,13 @@ class ServerModel:
                 return a
             return np.concatenate([a, np.repeat(a[:1], npad, axis=0)])
 
-        imgs = jnp.asarray(pad_rows(frames))
+        if staged is not None:
+            assert staged.imgs.shape[0] == Bp, \
+                f"staged wave padded to {staged.imgs.shape[0]} rows " \
+                f"but the B bucket is {Bp}"
+            imgs = staged.imgs
+        else:
+            imgs = jnp.asarray(pad_rows(frames))
         layouts: Optional[List[pt.PlanLayout]] = None
         if full_res and lb_override is None:
             store_cap = capture_beta if caches is not None else 0
@@ -452,9 +521,9 @@ class ServerModel:
         else:
             boxes, scores, classes = out
         self.stats.offloads += B
-        return [det.detections_from_arrays(boxes[i], scores[i], classes[i],
-                                           self.score_thresh)
-                for i in range(B)]
+        pending = PendingWave(boxes, scores, classes, B,
+                              self.score_thresh)
+        return pending if defer else pending.wait()
 
     def _zeros_tiles(self, Bp: int) -> jnp.ndarray:
         """Cached all-zero reuse-tiles input for reuse-free waves (a
@@ -658,6 +727,11 @@ class Simulation:
                        else None)
         self.rstats = fresh_rstats()
         self.offload_seq = 0
+        # the N=1 scheduling plane: immediate dedicated execution with
+        # the shared stale-epoch NACK + crash-restart semantics
+        # (serve/scheduler.py — the multi-client engine swaps in a
+        # WaveScheduler over the same per-frame step methods)
+        self.scheduler = SoloScheduler(self)
 
         # runtime state
         self.cache_dets: List[Dict] = []
@@ -815,28 +889,10 @@ class Simulation:
                 job["dup"] = True
 
     def _start_offload(self, frame_idx: int, now: float, res: SimResult):
-        """Single-client path: prepare + immediate (dedicated) server
-        inference on the decoded mixed frame."""
+        """Single-client path: prepare, then hand to the scheduling
+        plane (immediate dedicated inference for N=1)."""
         job = self._prepare_offload(frame_idx, now, res)
-        try:
-            if self.feature_cache is not None:
-                dets = self.server.infer_plan(
-                    job["decoded"], job["plan"], job["beta"],
-                    cache=self.feature_cache, frame_idx=job["frame"],
-                    capture_beta=job["capture_beta"])
-            else:
-                dets = self.server.infer(
-                    job["decoded"],
-                    job["mask"] if job["n_d"] > 0 else None, job["beta"])
-        except StaleCacheEpoch:
-            # control-plane NACK from a restarted edge: the splice was
-            # refused; the completion path invalidates the cache and the
-            # next offload bootstraps FULL at the new epoch
-            job["stale_epoch"] = True
-            job["done_at"] = now + job["rtt"]
-            job["dets"] = []
-            return
-        self._finish_offload(job, dets)
+        self.scheduler.submit(job, now)
 
     def _complete_offload(self, res: SimResult, now_frame: int) -> Dict:
         fl = self.inflight
@@ -930,19 +986,11 @@ class Simulation:
                 self.rstats["max_ladder_level"], self.ladder.level)
 
     def _edge_fault_tick(self, prev: float, now: float) -> None:
-        """Single-client path owns its replica, so it applies edge
-        crash-restarts itself (the multi-client engine drives the shared
-        replica's restarts instead): bump the epoch, wipe executables,
-        and lose any response that died with the old process."""
-        if self.faults is None:
-            return
-        for (r, outage) in self.faults.restarts_between(prev, now):
-            self.server.restart()
-            self.rstats["edge_restarts"] += 1
-            j = self.inflight
-            if j is not None and j["submit"] <= r and j["done_at"] > r:
-                j["lost"] = True
-                j["done_at"] = float("inf")
+        """Single-client path owns its replica: crash-restarts apply
+        through the shared scheduling plane (the multi-client engine
+        drives the shared replica's restarts through the same
+        ``edge_restart_tick`` helper)."""
+        self.scheduler.fault_tick(prev, now)
 
     def _render_tick(self, frame_idx: int, res: SimResult) -> None:
         # rendering for this frame: exact cache hit, else tracker

@@ -17,43 +17,41 @@ One edge replica serves N concurrent device streams:
     :meth:`ServerModel.infer_wave` — waves pad UP to a batch bucket, so
     the executable set stays the bounded warmup grid.
   * :class:`MultiClientSimulation` multiplexes N (video, trace, policy)
-    device streams onto that replica with an event-driven wave
-    scheduler.  Offloads queue at the edge (kept sorted on insert);
-    waves form from whatever compatible jobs — same (length bucket,
-    beta, capture point) — have arrived when the replica frees up;
-    ANY (n_low, n_reuse) mix at one length bucket is compatible, since
-    the collapsed executable grid carries plan layouts as runtime data
-    (core.partition.PlanLayout).  The resulting queueing delay is
-    folded into Eq. (2)'s end-to-end latency (``parts["queue"]``).
-    With ``EdgeConfig.coalesce`` the scheduler additionally promotes a
-    pending job from a SMALLER length bucket into the forming wave's
-    larger bucket — the job's plan is untouched, it is merely padded
-    further (zero resolution changes, zero accuracy question) —
-    whenever a cost model built on ``backbone_flops_windows`` and
-    ``batch_alpha`` says the queueing delay saved exceeds the extra
-    padded compute bought.
+    device streams onto that replica.  ALL batch formation lives in the
+    scheduling plane (:mod:`repro.serve.scheduler`): offloads queue at
+    the edge and a :class:`~repro.serve.scheduler.WaveScheduler` policy
+    — ``EdgeConfig(scheduler="barrier")`` wave-at-a-time, or
+    ``"continuous"`` with decode/h2d staging overlapped under compute
+    and late admission into padded B-bucket slots — forms waves of
+    compatible jobs (same (length bucket, beta, capture point); ANY
+    (n_low, n_reuse) mix co-batches, since the collapsed executable
+    grid carries plan layouts as runtime data).  The resulting queueing
+    delay is folded into Eq. (2)'s end-to-end latency
+    (``parts["queue"]``, split into admission and slot wait);
+    ``EdgeConfig.coalesce`` additionally promotes pending jobs across
+    length buckets under the ``backbone_flops_windows`` cost model.
 
-The single-client :class:`~repro.offload.simulator.Simulation` is the
-N=1 case: both drive the same per-frame step methods
+This module is deliberately thin: the simulation drives per-frame
+client steps and the fault clock; the scheduler owns the queue, the
+admission control, the cost model, and the wave execution.  The
+single-client :class:`~repro.offload.simulator.Simulation` is the N=1
+case: both drive the same per-frame step methods
 (_motion_tick/_prepare_offload/_finish_offload/_complete_offload/
-_render_tick); only the server call differs (dedicated vs. waved).
+_render_tick); only the scheduling plane differs (SoloScheduler vs.
+WaveScheduler).
 """
 from __future__ import annotations
 
-import bisect
-import warnings
-from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import partition as pt
-from repro.core import vit_backbone as vb
-from repro.core.partition import (FULL, LOW, RegionPlan, stack_plan_ids,
-                                  stack_region_ids)
+from repro.core.partition import RegionPlan, stack_plan_ids, stack_region_ids
 from repro.offload.faults import FaultInjector
 from repro.offload.simulator import ServerModel, Simulation, SimResult
 from repro.serve.request import FeatureCache
+from repro.serve.scheduler import (EdgeConfig, EdgeStats, WaveScheduler,
+                                   make_scheduler)
 
 __all__ = ["BatchedServerModel", "EdgeConfig", "EdgeStats",
            "MultiClientSimulation", "stack_plan_ids", "stack_region_ids"]
@@ -115,69 +113,6 @@ class BatchedServerModel(ServerModel):
 # event-driven multi-client engine
 
 
-@dataclass
-class EdgeConfig:
-    max_batch: int = 8
-    # serving mode: batched waves vs. one-job-at-a-time (the sequential
-    # baseline bench_multiclient.py compares against)
-    batched: bool = True
-    # marginal service time of each extra frame in a wave, as a fraction
-    # of the solo inference delay: service = t_inf * (1 + alpha * (B-1)).
-    # alpha < 1 is the batching win; alpha = 1 degenerates to sequential.
-    # (wave compatibility buckets come from the server's n_buckets —
-    # they MUST match infer_wave's bucketing, so there is no knob here)
-    batch_alpha: float = 0.35
-    # cross-bucket wave coalescing: promote a pending job from a larger
-    # n_low bucket into the forming wave's smaller bucket when the
-    # queueing delay saved exceeds the extra compute (cost model below)
-    coalesce: bool = False
-    # keep full per-job detection lists in EdgeStats.jobs (benchmarks
-    # opt in; long simulations must not grow without bound)
-    keep_dets: bool = False
-    # edge-side admission control: when the queue is hot, first DEGRADE
-    # incoming jobs (promote FULL regions to LOW so the job drops a
-    # length bucket — the coalescing cost model's flops scaling prices
-    # the new service time), then SHED with an explicit REJECTED
-    # response the client handles by tracking locally
-    admission: bool = False
-    degrade_depth: int = 4           # pending jobs before degrading
-    shed_depth: int = 10             # pending jobs before shedding
-    degrade_backlog_s: float = 1.0   # or replica backlog seconds
-    shed_backlog_s: float = 2.5
-    degrade_beta: int = 2            # restoration point degraded
-    #                                  full-res jobs restore at
-    # crash-restart shortcut for benches: model the outage in sim time
-    # but keep host-process executables warm (tests pin the real wipe)
-    preserve_executables: bool = False
-
-
-@dataclass
-class EdgeStats:
-    """Edge-side telemetry: wave sizes, queueing, and per-job outcomes."""
-    wave_sizes: List[int] = field(default_factory=list)
-    queue_delays: List[float] = field(default_factory=list)
-    jobs: List[Dict] = field(default_factory=list)
-    promoted: int = 0            # jobs coalesced across length buckets
-    # distinct n_low values per wave: > 1 means plans with different
-    # region counts shared ONE executable (the collapsed-grid win)
-    wave_n_low_mix: List[int] = field(default_factory=list)
-    # robustness telemetry
-    degraded: int = 0            # jobs admission control degraded
-    shed: int = 0                # jobs REJECTED at admission
-    restarts: int = 0            # crash-restarts of the replica
-    stale_nacks: int = 0         # REUSE jobs refused on epoch mismatch
-    lost_jobs: int = 0           # jobs that died with the replica
-
-    @property
-    def mean_wave_size(self) -> float:
-        return float(np.mean(self.wave_sizes)) if self.wave_sizes else 0.0
-
-    @property
-    def mixed_plan_waves(self) -> int:
-        """Waves that batched >= 2 distinct n_low values."""
-        return sum(1 for m in self.wave_n_low_mix if m > 1)
-
-
 class MultiClientSimulation:
     """N device streams -> one shared edge replica.
 
@@ -185,6 +120,14 @@ class MultiClientSimulation:
     this same replica as their ``server`` so a standalone N=1 run uses
     identical weights).  ``on_complete(client_idx, job)`` fires as each
     offload's result reaches its client.
+
+    Batch formation, admission control, coalescing, and the replica's
+    fault application all live in ``self.scheduler`` (a
+    :class:`~repro.serve.scheduler.WaveScheduler` chosen by
+    ``EdgeConfig.scheduler``); the legacy ``pending`` / ``free_at`` /
+    ``max_wave`` / ``_enqueue`` / ``_drain`` / ``_run_wave`` surface is
+    kept as thin delegates so callers (and test monkeypatches of
+    ``_run_wave``) keep working.
     """
 
     def __init__(self, clients: Sequence[Simulation],
@@ -205,304 +148,47 @@ class MultiClientSimulation:
         self.dt = self.clients[0].dt
         assert all(c.dt == self.dt for c in self.clients), \
             "clients must share a frame rate"
-        self.pending: List[Tuple[int, Dict]] = []   # (client_idx, job)
-        self.free_at = 0.0                          # replica busy horizon
-        # a wave can never exceed the largest batch bucket — padding
-        # only rounds UP, so an oversized wave would have no executable
-        self.max_wave = min(self.ec.max_batch, max(self.server.b_buckets))
-        if self.max_wave < self.ec.max_batch:
-            warnings.warn(
-                f"EdgeConfig.max_batch={self.ec.max_batch} exceeds the "
-                f"server's largest batch bucket "
-                f"{max(self.server.b_buckets)}; waves are capped at "
-                f"{self.max_wave} — raise b_buckets to serve bigger "
-                f"waves", stacklevel=2)
-        self.stats = EdgeStats()
+        self.scheduler: WaveScheduler = make_scheduler(
+            server, self.clients, self.ec, faults=faults, host=self)
+        self.stats = self.scheduler.stats
 
     # ------------------------------------------------------------------
+    # scheduling-plane delegates (the legacy surface)
+
+    @property
+    def pending(self) -> List[Tuple[int, Dict]]:
+        return self.scheduler.pending
+
+    @pending.setter
+    def pending(self, value: List[Tuple[int, Dict]]) -> None:
+        self.scheduler.pending = value
+
+    @property
+    def free_at(self) -> float:
+        return self.scheduler.free_at
+
+    @free_at.setter
+    def free_at(self, value: float) -> None:
+        self.scheduler.free_at = value
+
+    @property
+    def max_wave(self) -> int:
+        return self.scheduler.max_wave
+
     def _enqueue(self, ci: int, job: Dict) -> None:
-        """Insert a job keeping ``pending`` sorted by edge arrival time —
-        the scheduler never re-sorts (satellite fix: the old per-tick
-        sort was O(n log n) on every frame even when nothing arrived).
-
-        Admission control happens here, at arrival: under queue pressure
-        the job is first degraded (FULL -> LOW), and past the shed
-        threshold it is REJECTED outright — an explicit response the
-        client's completion path turns into tracker-only rendering plus
-        a backed-off degraded retry."""
-        if self.faults is not None and self.faults.edge_down(
-                job["arrival"]):
-            # arrived at a crashed replica: never answered
-            job["lost"] = True
-            job["done_at"] = float("inf")
-            self.stats.lost_jobs += 1
-            return
-        if self.ec.admission:
-            depth = len(self.pending)
-            backlog = max(self.free_at - job["arrival"], 0.0)
-            if depth >= self.ec.shed_depth \
-                    or backlog >= self.ec.shed_backlog_s:
-                job["rejected"] = True
-                job["done_at"] = job["arrival"] + job["rtt"]
-                job["dets"] = []
-                self.stats.shed += 1
-                return
-            if (depth >= self.ec.degrade_depth
-                    or backlog >= self.ec.degrade_backlog_s) \
-                    and self._degrade_job(ci, job):
-                self.stats.degraded += 1
-        bisect.insort(self.pending, (ci, job),
-                      key=lambda cj: cj[1]["arrival"])
-
-    def _degrade_job(self, ci: int, job: Dict) -> bool:
-        """Promote FULL regions of an arriving job to LOW so it drops at
-        least one length bucket — the payload is already uploaded, so
-        this buys edge COMPUTE (shorter sequence), priced by the same
-        ``backbone_flops_windows`` scaling the coalescer uses.  REUSE
-        regions are untouched.  Returns True if the job changed."""
-        part = self.server.part
-        plan: RegionPlan = job["plan"]
-        states = np.asarray(plan.states).copy()
-        full_ids = np.nonzero(states == FULL)[0]
-        if len(full_ids) == 0:
-            return False
-        dd = part.windows_per_full_region
-        nw = part.n_windows(plan.n_low, plan.n_reuse)
-        # current effective length: the dedicated full-res executable
-        # runs the full sequence; mixed plans run at their bucket
-        lb_cur = (nw if plan.n_low == 0 and plan.n_reuse == 0
-                  else self.server.length_bucket(nw))
-        nw_min = nw - len(full_ids) * (dd - 1)
-        targets = [e for e in self.server.length_edges
-                   if nw_min <= e < lb_cur]
-        if not targets:
-            return False
-        target = max(targets)            # one bucket down: degrade least
-        k = int(np.ceil((nw - target) / (dd - 1)))
-        states[full_ids[:k]] = LOW
-        new_plan = RegionPlan(states.astype(np.int8))
-        beta = int(job["beta"]) if int(job["beta"]) >= 1 \
-            else self.ec.degrade_beta
-        f_own = vb.backbone_flops_windows(
-            self.server.cfg, lb_cur,
-            int(job["beta"]) if plan.n_low or plan.n_reuse else 0)
-        f_new = vb.backbone_flops_windows(self.server.cfg, target, beta)
-        job["t_inf_exec"] = job["t_inf"] * (f_new / f_own)
-        job["plan"] = new_plan
-        job["mask"] = new_plan.low_mask()
-        job["n_d"] = int(new_plan.n_low)
-        job["beta"] = beta
-        job["t_dec"] = self.clients[ci].delay_model.decode_delay(
-            part, new_plan.n_low, n_reuse=new_plan.n_reuse)
-        job["edge_degraded"] = True
-        return True
-
-    def _job_key(self, job: Dict) -> Tuple[int, int, int]:
-        """Wave compatibility: (length bucket, beta, capture point) —
-        the collapsed executable key.  (n_low, n_reuse) are runtime
-        data, so any plan mix at one length bucket co-batches; mixed
-        executables always capture (capture == beta), so sessionful and
-        stateless jobs co-batch too.  Full-res jobs (length bucket 0)
-        keep the dedicated full-res executable at the deployment's
-        canonical capture point."""
-        plan: RegionPlan = job["plan"]
-        lb = self.server.plan_length_bucket(plan)
-        if lb == 0:
-            want = (job.get("capture_beta", 0)
-                    if self.clients[self._client_of(job)].feature_cache
-                    is not None else 0)
-            return (0, 0, self.server._full_cap(want))
-        beta = job["beta"]
-        return (lb, beta, beta)
-
-    def _client_of(self, job: Dict) -> int:
-        return job["_client"]
-
-    # ------------------------------------------------------------------
-    # cross-bucket coalescing cost model
-
-    def _wave_service_s(self, wave: List[Tuple[int, Dict]]) -> float:
-        """Modelled service time of a wave (decode + amortised infer)."""
-        B = len(wave)
-        t_dec = max(j["t_dec"] for _, j in wave)
-        t_inf = max(j.get("t_inf_exec", j["t_inf"]) for _, j in wave)
-        if B > 1:
-            t_inf = t_inf * (1.0 + self.ec.batch_alpha * (B - 1))
-        return t_dec + t_inf
-
-    def _try_promote(self, job: Dict, jk: Tuple[int, int, int],
-                     hk: Tuple[int, int, int],
-                     wave: List[Tuple[int, Dict]]) -> bool:
-        """Coalesce ``job`` (key ``jk``) into a wave of key ``hk``.
-
-        Only padding UP is ever legal: the job's plan is untouched, its
-        sequence is merely padded to the wave's LARGER length bucket —
-        zero resolution changes, zero accuracy question (pad windows are
-        masked/inert).  The restoration point shapes the executable, so
-        beta must match outright; full-res jobs (length bucket 0) keep
-        their dedicated executable and are never promoted.  Promotes iff
-        the queueing delay the job avoids (waiting out this wave's
-        service) exceeds the extra compute it buys: the padded-length
-        flops-scaled inference-time increase plus its ``batch_alpha``
-        marginal share of the wave.
-        """
-        lb_w, beta_w, cap_w = hk
-        lb_j, beta_j, cap_j = jk
-        if not (beta_j == beta_w and cap_j == cap_w
-                and 0 < lb_j < lb_w):
-            return False
-        cfg = self.server.cfg
-        f_own = vb.backbone_flops_windows(cfg, lb_j, beta_j)
-        f_new = vb.backbone_flops_windows(cfg, lb_w, beta_w)
-        t_inf_new = job["t_inf"] * (f_new / f_own)
-        extra = (t_inf_new - job["t_inf"]) \
-            + self.ec.batch_alpha * t_inf_new
-        saved = self._wave_service_s(wave)
-        if saved <= extra:
-            return False
-        job["t_inf_exec"] = t_inf_new
-        job["promoted_lb"] = lb_w
-        self.stats.promoted += 1
-        return True
-
-    # ------------------------------------------------------------------
-    def _run_wave(self, wave: List[Tuple[int, Dict]], t_start: float,
-                  key: Tuple[int, int, int]) -> float:
-        """Batched inference + Eq. (2) bookkeeping for one wave.
-        Returns the time the replica frees up."""
-        lb, beta, cap = key
-        live = []
-        for ci, job in wave:
-            cache = self.clients[ci].feature_cache
-            if job["plan"].n_reuse > 0 and cache is not None \
-                    and getattr(cache, "epoch", 0) != self.server.epoch:
-                # REUSE against tiles captured under a dead replica:
-                # instant control-plane NACK, never a splice — the
-                # client invalidates and bootstraps FULL at the new
-                # epoch (completion path handles it)
-                job["stale_epoch"] = True
-                job["done_at"] = t_start + job["rtt"]
-                job["dets"] = []
-                self.server.stats.stale_epoch_rejects += 1
-                self.stats.stale_nacks += 1
-                continue
-            live.append((ci, job))
-        if not live:
-            return self.free_at
-        wave = live
-        imgs = np.stack([j["decoded"] for _, j in wave])
-        plans = [j["plan"] for _, j in wave]
-        caches = [self.clients[ci].feature_cache for ci, _ in wave]
-        want_cap = 0
-        if lb == 0:
-            # full-res waves carry per-job capture intent: a sessionful
-            # job that did NOT ask for capture shares the (capturing)
-            # canonical executable but must not have its cache
-            # refreshed — drop its cache from the wave.  Capturing jobs
-            # in one wave share a single want (the wave key separates
-            # distinct nonzero capture points).
-            wants = [j.get("capture_beta", 0) if c is not None else 0
-                     for c, (_, j) in zip(caches, wave)]
-            want_cap = max(wants)
-            caches = [c if w > 0 else None
-                      for c, w in zip(caches, wants)]
-        if cap or any(c is not None for c in caches):
-            dets = self.server.infer_wave(
-                imgs, plans, beta, caches=caches,
-                frame_ids=[j["frame"] for _, j in wave],
-                capture_beta=want_cap if lb == 0 else 0,
-                lb_override=lb if lb > 0 else None)
-        else:
-            dets = self.server.infer_wave(
-                imgs, plans, beta,
-                lb_override=lb if lb > 0 else None)
-
-        B = len(wave)
-        t_dec = max(j["t_dec"] for _, j in wave)
-        t_inf = max(j.get("t_inf_exec", j["t_inf"]) for _, j in wave)
-        if B > 1:
-            t_inf = t_inf * (1.0 + self.ec.batch_alpha * (B - 1))
-        if self.faults is not None:
-            # edge service stall (GC pause / preemption) for work
-            # starting inside the stall window
-            t_inf = t_inf + self.faults.stall_extra(t_start)
-        done = t_start + t_dec + t_inf
-
-        self.stats.wave_sizes.append(B)
-        self.stats.wave_n_low_mix.append(
-            len({p.n_low for p in plans}))
-        for (ci, job), d in zip(wave, dets):
-            q = t_start - job["arrival"]
-            self.clients[ci]._finish_offload(job, d, queue_delay=q,
-                                             t_dec=t_dec, t_inf=t_inf)
-            self.stats.queue_delays.append(q)
-            rec = {"client": ci, "frame": job["frame"], "wave_size": B,
-                   "queue": q, "e2e": job["e2e"],
-                   "promoted": "promoted_lb" in job}
-            if self.ec.keep_dets:
-                rec["dets"] = d
-            self.stats.jobs.append(rec)
-        return done
+        self.scheduler.enqueue(ci, job)
 
     def _drain(self, now: float) -> None:
-        """Schedule every wave that can START before ``now``.
+        self.scheduler.drain(now)
 
-        The replica serves one wave at a time.  When it frees up, the
-        earliest-arrived pending job seeds a wave; compatible jobs
-        (same (n_low bucket, n_reuse bucket, beta, capture)) that have
-        ALREADY arrived join it, up to ``max_batch`` — plus, with
-        coalescing on, arrived jobs from LARGER n_low buckets whose
-        promotion the cost model approves.  ``pending`` is kept sorted
-        on insert (:meth:`_enqueue`); the loop only ever removes jobs,
-        and the kept remainder is a subsequence, so order is preserved
-        without re-sorting.
-        """
-        if any(j.get("abandoned") for _, j in self.pending):
-            # the client gave up on these (deadline) — don't serve them
-            self.pending = [cj for cj in self.pending
-                            if not cj[1].get("abandoned")]
-        while self.pending:
-            head = self.pending[0]
-            t_start = max(self.free_at, head[1]["arrival"])
-            if t_start >= now:
-                return
-            hk = self._job_key(head[1])
-            wave, rest = [head], []
-            for cj in self.pending[1:]:
-                joinable = (self.ec.batched
-                            and len(wave) < self.max_wave
-                            and cj[1]["arrival"] <= t_start)
-                if joinable:
-                    jk = self._job_key(cj[1])
-                    joinable = jk == hk or (
-                        self.ec.coalesce
-                        and self._try_promote(cj[1], jk, hk, wave))
-                if joinable:
-                    wave.append(cj)
-                else:
-                    rest.append(cj)
-            self.pending = rest
-            self.free_at = self._run_wave(wave, t_start, hk)
+    def _run_wave(self, wave: List[Tuple[int, Dict]], t_start: float,
+                  key: Tuple[int, int, int]) -> float:
+        """Execution hook the scheduler dispatches through — tests
+        monkeypatch this to intercept waves."""
+        return self.scheduler.execute_wave(wave, t_start, key)
 
-    # ------------------------------------------------------------------
     def _edge_fault_tick(self, prev: float, now: float) -> None:
-        """Apply the shared replica's crash-restarts: bump the cache
-        epoch (wiping executables unless the bench shortcut keeps them),
-        hold the replica down for the outage, and lose the queue — jobs
-        pending in a crashed process are never answered; their clients'
-        deadlines reap them."""
-        if self.faults is None:
-            return
-        for (r, outage) in self.faults.restarts_between(prev, now):
-            self.server.restart(
-                preserve_executables=self.ec.preserve_executables)
-            self.stats.restarts += 1
-            self.free_at = max(self.free_at, r + outage)
-            for ci, job in self.pending:
-                job["lost"] = True
-                job["done_at"] = float("inf")
-            self.stats.lost_jobs += len(self.pending)
-            self.pending = []
+        self.scheduler.fault_tick(prev, now)
 
     # ------------------------------------------------------------------
     def run(self, video_names: Optional[Sequence[str]] = None

@@ -46,6 +46,7 @@ from repro.core.partition import bucket_n_low
 from repro.models import registry
 from repro.models.config import ModelConfig
 from repro.models.transformer import LOCAL, ParallelCtx
+from repro.serve.scheduler import form_wave
 from repro.serve.request import (FeatureCache, Request, Response,
                                  ServingStats)
 
@@ -281,18 +282,13 @@ class ServeEngine:
     def _form_wave(self) -> Optional[List[Request]]:
         if not self.queue:
             return None
-        # group by the head request's wave key; single pass keeps queue
-        # order and avoids the O(n^2) remove-per-request drain.  Waves
+        # batch formation lives in the scheduling plane: one head-key
+        # grouping pass (serve/scheduler.form_wave) shared with the
+        # edge wave schedulers — single pass keeps queue order.  Waves
         # are additionally capped at the largest batch bucket — padding
         # only rounds UP, so a larger wave would have no executable.
         cap = min(self.sc.max_batch, max(self.sc.b_buckets))
-        hk = self._wave_key(self.queue[0])
-        wave, rest = [], []
-        for r in self.queue:
-            if len(wave) < cap and self._wave_key(r) == hk:
-                wave.append(r)
-            else:
-                rest.append(r)
+        wave, rest, _ = form_wave(self.queue, self._wave_key, cap)
         self.queue = rest
         return wave
 

@@ -1,0 +1,394 @@
+"""The unified scheduling plane (serve/scheduler.py).
+
+Fast tests drive the schedulers directly with fake jobs/servers (pure
+host-side timing — no model, no compile); the slow ones record a real
+closed-loop arrival pattern and replay it through both policies to pin
+scheduler equivalence:
+
+  * BarrierScheduler is bit-identical to the closed-loop (pre-refactor)
+    waves for a recorded arrival pattern.
+  * ContinuousScheduler produces the same per-frame output on that
+    pattern — only timestamps (queue/e2e) may differ, and its p50
+    queue delay is no worse.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.vitdet_l import SIM
+from repro.core import vit_backbone as vb
+from repro.core.partition import RegionPlan
+from repro.data import synthetic_video as sv
+from repro.data.network_traces import make_trace
+from repro.models import registry
+from repro.offload.faults import FaultInjector, FaultSpec
+from repro.offload.simulator import Policy, Simulation
+from repro.serve.edge import (BatchedServerModel, EdgeConfig,
+                              MultiClientSimulation)
+from repro.serve.scheduler import (BarrierScheduler, ContinuousScheduler,
+                                   edge_restart_tick, form_wave,
+                                   make_scheduler)
+
+PATCH = SIM.vit.patch_size
+SIZE = SIM.vit.img_size[0]
+
+
+# ---------------------------------------------------------------------------
+# fakes: pure host-side scheduling, no model
+
+
+class _FakeStats:
+    stale_epoch_rejects = 0
+
+
+class _FakeServer:
+    b_buckets = (1, 2, 4, 8)
+    epoch = 0
+
+    def __init__(self):
+        self.stats = _FakeStats()
+        self.restarts = []
+
+    def plan_length_bucket(self, plan):
+        return 48
+
+    def batch_bucket(self, b):
+        return next(e for e in self.b_buckets if e >= b)
+
+    def infer_wave(self, frames, plans, beta, **kw):
+        return [[] for _ in plans]
+
+    def stage_frames(self, frames):
+        return np.asarray(frames)
+
+    def restart(self, preserve_executables=False):
+        self.epoch += 1
+        self.restarts.append(preserve_executables)
+        return self.epoch
+
+
+class _FakeClient:
+    feature_cache = None
+
+    def __init__(self):
+        self.finished = []
+
+    def _finish_offload(self, job, dets, queue_delay=0.0, t_dec=None,
+                        t_inf=None):
+        t_dec = job["t_dec"] if t_dec is None else t_dec
+        t_inf = job["t_inf"] if t_inf is None else t_inf
+        job["e2e"] = queue_delay + t_dec + t_inf
+        job["done_at"] = job["arrival"] + job["e2e"]
+        job["parts"] = {"queue": queue_delay, "dec": t_dec, "inf": t_inf}
+        job["dets"] = dets
+        self.finished.append(job)
+
+
+def _fake_job(arrival, frame=0, ci=0, t_dec=0.1, t_inf=0.5):
+    plan = RegionPlan(np.array([1] * 4 + [0] * 12, np.int8))
+    return {"arrival": arrival, "frame": frame, "_client": ci,
+            "t_dec": t_dec, "t_inf": t_inf, "beta": 2, "plan": plan,
+            "rtt": 0.0, "decoded": np.zeros((2, 2, 3), np.float32),
+            "submit": arrival, "t_enc": 0.0, "t_up": 0.0}
+
+
+def _sched(cls, n_clients=2, **ec_kw):
+    clients = [_FakeClient() for _ in range(n_clients)]
+    ec = EdgeConfig(**ec_kw)
+    return cls(_FakeServer(), clients, ec), clients
+
+
+# ---------------------------------------------------------------------------
+# form_wave: the one shared grouping pass
+
+
+def test_form_wave_groups_by_head_key_and_caps():
+    items = [("a", 1), ("b", 1), ("c", 2), ("d", 1), ("e", 1)]
+    wave, rest, hk = form_wave(items, key_fn=lambda it: it[1], cap=3)
+    assert hk == 1
+    assert [n for n, _ in wave] == ["a", "b", "d"]      # queue order
+    assert [n for n, _ in rest] == ["c", "e"]           # order preserved
+
+    wave, rest, _ = form_wave(items, key_fn=lambda it: it[1], cap=1)
+    assert len(wave) == 1 and len(rest) == 4
+
+
+def test_form_wave_admit_and_promote_hooks():
+    items = [("a", 1), ("b", 2), ("c", 1)]
+    promoted = []
+    wave, rest, _ = form_wave(
+        items, key_fn=lambda it: it[1], cap=8,
+        admit=lambda it: it[0] != "c",
+        promote=lambda it, k, hk, w: promoted.append(it[0]) or True)
+    assert [n for n, _ in wave] == ["a", "b"]           # b promoted in
+    assert promoted == ["b"]
+    assert [n for n, _ in rest] == ["c"]                # admit cut
+
+
+def test_unknown_scheduler_name_raises():
+    with pytest.raises(ValueError, match="unknown EdgeConfig.scheduler"):
+        make_scheduler(_FakeServer(), [_FakeClient()],
+                       EdgeConfig(scheduler="warp"))
+
+
+# ---------------------------------------------------------------------------
+# modelled timelines: barrier vs continuous
+
+
+def test_barrier_queue_is_all_admission_wait():
+    sched, clients = _sched(BarrierScheduler)
+    sched.enqueue(0, _fake_job(0.0, frame=0, ci=0))
+    sched.enqueue(1, _fake_job(0.2, frame=0, ci=1))
+    sched.drain(float("inf"))
+    # barrier: wave 1 = [A] (B arrived after its start); B waits out the
+    # whole service (decode + infer) and then decodes again, serially
+    assert sched.stats.wave_sizes == [1, 1]
+    assert sched.free_at == pytest.approx(1.2)          # 0.6 + 0.6
+    np.testing.assert_allclose(sched.stats.queue_delays, [0.0, 0.4])
+    np.testing.assert_allclose(sched.stats.queue_admit,
+                               sched.stats.queue_delays)
+    assert all(s == 0.0 for s in sched.stats.queue_slot)
+    # the replica idles through wave 2's decode: busy 1.0s of [0.1, 1.2]
+    assert sched.stats.device_idle_frac == pytest.approx(1 - 1.0 / 1.1)
+
+
+def test_continuous_overlaps_decode_with_compute():
+    sched, clients = _sched(ContinuousScheduler)
+    sched.enqueue(0, _fake_job(0.0, frame=0, ci=0))
+    sched.enqueue(1, _fake_job(0.2, frame=0, ci=1))
+    sched.drain(float("inf"))
+    # wave 2's decode (0.2 -> 0.3) hides under wave 1's compute
+    # (0.1 -> 0.6): compute restarts immediately at 0.6, not 0.7
+    assert sched.stats.wave_sizes == [1, 1]
+    assert sched.free_at == pytest.approx(1.1)
+    np.testing.assert_allclose(sched.stats.queue_delays, [0.0, 0.3])
+    assert sched.stats.decode_hidden_s == pytest.approx(0.1)
+    # back-to-back compute: zero idle between first and last wave
+    assert sched.stats.device_idle_frac == pytest.approx(0.0)
+    # Eq. (2) still decomposes with the job's OWN t_dec
+    b = clients[1].finished[0]
+    assert b["e2e"] == pytest.approx(0.3 + 0.1 + 0.5)
+    assert b["parts"]["queue_admit"] + b["parts"]["queue_slot"] \
+        == pytest.approx(b["parts"]["queue"])
+
+
+def test_continuous_matches_barrier_when_uncontended():
+    """With no replica contention the two policies are the same
+    timeline: overlap only removes waiting, never adds service."""
+    for cls in (BarrierScheduler, ContinuousScheduler):
+        sched, clients = _sched(cls)
+        sched.enqueue(0, _fake_job(0.0, ci=0))
+        sched.enqueue(1, _fake_job(5.0, ci=1))          # replica long idle
+        sched.drain(float("inf"))
+        assert sched.free_at == pytest.approx(5.6)
+        assert all(q == 0.0 for q in sched.stats.queue_delays)
+
+
+def test_continuous_admits_late_job_into_pad_slot():
+    """A job whose decode outlasts the wave's compute start may still
+    claim a padded B-bucket slot (3 -> 4 pads anyway) when the cost
+    model prices the wave's wait below the job's queueing."""
+    sched, clients = _sched(ContinuousScheduler, n_clients=4)
+    for ci in range(3):
+        sched.enqueue(ci, _fake_job(0.0, frame=0, ci=ci, t_dec=0.05))
+    late = _fake_job(0.03, frame=0, ci=3, t_dec=0.05)   # staged at 0.08
+    sched.enqueue(3, late)
+    sched.drain(float("inf"))
+    assert sched.stats.wave_sizes == [4]
+    # the wave waited for the late job's staging: compute at 0.08
+    assert late["parts"]["queue"] == pytest.approx(0.0)
+    assert sched.free_at == pytest.approx(
+        0.08 + 0.5 * (1 + 0.35 * 3))
+    assert sched.stats.queue_delays[0] == pytest.approx(0.03)
+
+
+def test_continuous_never_grows_the_padded_bucket_for_late_jobs():
+    """A late-staging job may only fill a PAD row: at B=2 (its own
+    bucket edge) admission would re-shape the executable, so the job
+    waits for the next wave instead."""
+    sched, clients = _sched(ContinuousScheduler, n_clients=3)
+    for ci in range(2):
+        sched.enqueue(ci, _fake_job(0.0, frame=0, ci=ci, t_dec=0.05))
+    sched.enqueue(2, _fake_job(0.03, frame=0, ci=2, t_dec=0.05))
+    sched.drain(float("inf"))
+    assert sched.stats.wave_sizes == [2, 1]
+
+
+# ---------------------------------------------------------------------------
+# the shared crash-restart plane (satellite: _edge_fault_tick dedup)
+
+
+def test_edge_restart_tick_applies_each_event_once():
+    server = _FakeServer()
+    inj = FaultInjector(FaultSpec(edge_restarts=((0.5, 0.2), (1.5, 0.1))))
+    events = edge_restart_tick(server, inj, -1.0, 1.0)
+    assert events == [(0.5, 0.2)] and server.epoch == 1
+    events = edge_restart_tick(server, inj, 1.0, 2.0,
+                               preserve_executables=True)
+    assert events == [(1.5, 0.1)] and server.epoch == 2
+    assert server.restarts == [False, True]
+    assert edge_restart_tick(server, None, -1.0, 99.0) == []
+
+
+def test_wave_scheduler_restart_loses_queue_and_holds_replica():
+    inj = FaultInjector(FaultSpec(edge_restarts=((0.5, 0.4),)))
+    clients = [_FakeClient(), _FakeClient()]
+    sched = BarrierScheduler(_FakeServer(), clients, EdgeConfig(),
+                             faults=inj)
+    j0, j1 = _fake_job(0.3, ci=0), _fake_job(0.4, ci=1)
+    sched.enqueue(0, j0)
+    sched.enqueue(1, j1)
+    sched.fault_tick(0.2, 0.6)
+    assert sched.pending == [] and sched.stats.lost_jobs == 2
+    assert j0["lost"] and j1["lost"]
+    assert sched.free_at == pytest.approx(0.9)          # r + outage
+    assert sched.stats.restarts == 1 and sched.server.epoch == 1
+
+
+def test_solo_and_mc_restart_recovery_match(monkeypatch):
+    """Satellite pin: both planes now apply restarts through ONE helper
+    (edge_restart_tick) and recover identically — same epoch bumps,
+    same restart counts, and the N=1 multi-client run keeps matching
+    the solo run under the same fault schedule (PR 6 behaviour)."""
+    from repro.offload.faults import RobustConfig
+
+    params = registry.init_params(SIM, jax.random.PRNGKey(0))
+    server_a = BatchedServerModel(SIM, params, top_k=8, score_thresh=0.0)
+    server_b = BatchedServerModel(SIM, params, top_k=8, score_thresh=0.0)
+    spec = FaultSpec(edge_restarts=((0.55, 0.2),))
+
+    def client(server, faults=None):
+        frames, _ = sv.make_clip("walkS", 40, size=SIZE, seed=11)
+        gt = [server.infer(f) for f in frames]
+        return Simulation(frames, gt, make_trace("4g", 11, duration_s=60),
+                          _FixedPolicy([0, 1, 2, 3]), server,
+                          vb.vit_partition(SIM), PATCH, fps=10,
+                          faults=faults, robust=RobustConfig(slo_s=1.0))
+
+    solo = client(server_a, faults=FaultInjector(spec))
+    r_solo = solo.run("v")
+    mc = MultiClientSimulation([client(server_b)], server_b,
+                               EdgeConfig(),
+                               faults=FaultInjector(spec))
+    r_mc = mc.run(["v"])[0]
+    assert solo.rstats["edge_restarts"] == 1
+    assert mc.stats.restarts == 1
+    assert server_a.epoch == server_b.epoch == 1
+    # both replicas recovered: offloads completed after the restart
+    # (frame 6 = 0.6 s > the 0.55 s crash)
+    assert len(r_solo.e2e_latency) >= 2 and solo.cache_frame > 6
+    assert len(r_mc.e2e_latency) >= 2 and mc.clients[0].cache_frame > 6
+
+
+# ---------------------------------------------------------------------------
+# closed-loop replay equivalence (slow: real model inference)
+
+
+class _FixedPolicy(Policy):
+    name = "fixed"
+    use_tracker = True
+
+    def __init__(self, lows, beta=2, n_regions=16):
+        self.lows = lows
+        self.beta = beta
+        self.n_regions = n_regions
+
+    def decide(self, sim, frame_idx):
+        mask = np.zeros(self.n_regions, np.int32)
+        mask[self.lows] = 1
+        return {"mask": mask, "quality": 85, "beta": self.beta}
+
+
+@pytest.fixture(scope="module")
+def loop():
+    """One closed-loop barrier run + its recorded arrival pattern."""
+    params = registry.init_params(SIM, jax.random.PRNGKey(0))
+    server = BatchedServerModel(SIM, params, top_k=8, score_thresh=0.0)
+    part = vb.vit_partition(SIM)
+    slow = lambda beta, n_d: 0.5          # force queueing -> real waves
+
+    def clients():
+        return [Simulation(*_clip(server, i), make_trace("4g", i,
+                                                         duration_s=60),
+                           _FixedPolicy(list(range(4 * i, 4 * i + 4))),
+                           server, part, PATCH, fps=10, inf_delay=slow)
+                for i in range(3)]
+
+    def _clip(server, seed):
+        frames, _ = sv.make_clip("walkS", 12, size=SIZE, seed=seed)
+        return frames, [server.infer(f) for f in frames]
+
+    mc = MultiClientSimulation(clients(), server,
+                               EdgeConfig(batched=True, keep_dets=True))
+    recorded = []
+    orig = mc.scheduler.enqueue
+
+    def tap(ci, job):
+        recorded.append((ci, dict(job)))   # pre-execution snapshot
+        orig(ci, job)
+
+    mc.scheduler.enqueue = tap
+    mc.run()
+    return server, mc, recorded, clients
+
+
+def _replay(sched_cls, server, clients, recorded, **ec_kw):
+    """Feed a recorded arrival pattern through a fresh scheduler.
+
+    Formation only depends on jobs already arrived by each wave's
+    start, and every recorded job was enqueued before its wave could
+    run, so enqueue-all + one final drain reproduces the closed-loop
+    schedule exactly.
+    """
+    sched = sched_cls(server, clients, EdgeConfig(keep_dets=True, **ec_kw))
+    for ci, job in recorded:
+        sched.enqueue(ci, dict(job))
+    sched.drain(float("inf"))
+    return sched
+
+
+def _boxes(dets):
+    return np.array([d["box"] for d in dets], np.float64).reshape(-1, 4)
+
+
+@pytest.mark.slow
+def test_barrier_replay_is_bit_identical_to_closed_loop(loop):
+    """BarrierScheduler over the recorded pattern reproduces the
+    closed-loop (pre-refactor behaviour) waves bit-exactly: same wave
+    structure, same queue delays, same detections."""
+    server, mc, recorded, clients = loop
+    sched = _replay(BarrierScheduler, server, clients(), recorded)
+    assert sched.stats.wave_sizes == mc.stats.wave_sizes
+    np.testing.assert_array_equal(sched.stats.queue_delays,
+                                  mc.stats.queue_delays)
+    ref = {(j["client"], j["frame"]): j["dets"] for j in mc.stats.jobs}
+    got = {(j["client"], j["frame"]): j["dets"] for j in sched.stats.jobs}
+    assert set(ref) == set(got) and len(ref) > 3
+    for k in ref:
+        np.testing.assert_array_equal(_boxes(got[k]), _boxes(ref[k]))
+
+
+@pytest.mark.slow
+def test_continuous_replay_matches_barrier_output(loop):
+    """ContinuousScheduler == barrier output per frame on the same
+    recorded pattern — only timestamps may differ — with no worse p50
+    queue delay and zero new executables (the warmed grid serves it)."""
+    server, mc, recorded, clients = loop
+    keys_before = set(server._fns)
+    compiles_before = server.stats.compiles
+    sched = _replay(ContinuousScheduler, server, clients(), recorded,
+                    scheduler="continuous")
+    assert set(server._fns) == keys_before          # zero new keys
+    assert server.stats.compiles == compiles_before
+
+    ref = {(j["client"], j["frame"]): j["dets"] for j in mc.stats.jobs}
+    got = {(j["client"], j["frame"]): j["dets"] for j in sched.stats.jobs}
+    assert set(ref) == set(got)
+    for k in ref:
+        assert len(got[k]) == len(ref[k])
+        np.testing.assert_allclose(_boxes(got[k]), _boxes(ref[k]),
+                                   rtol=1e-5, atol=1e-5)
+    # timestamps: continuous can only shorten queueing on this pattern
+    assert (np.median(sched.stats.queue_delays)
+            <= np.median(mc.stats.queue_delays) + 1e-12)
+    assert sched.stats.decode_hidden_s > 0.0
