@@ -84,6 +84,29 @@ def bench_backbone(params, img, part, reps: int, backends) -> list:
             us = _timer(fn, params, img, fi, li, reps=reps)
             rows.append({"workload": "mixed", "beta": beta, "n_low": n_low,
                          "backend": backend, "us_per_call": us})
+
+    # the padded serving hot path (PlanLayout-driven, what ServerModel
+    # executes) — on the pallas backend this runs the fused
+    # prologue/epilogue kernels (kernels/fused_serving)
+    states = np.zeros((part.n_regions,), np.int8)
+    states[:n_low] = pt.LOW
+    lb = pt.length_bucket(pt.plan_n_windows(pt.RegionPlan(states), part),
+                          pt.length_bucket_set(part))
+    lay = pt.plan_layout(states, lb, part)
+    layout = {k: jnp.asarray(getattr(lay, k))
+              for k in ("win_src", "win_dst", "low_src", "low_ids",
+                        "reuse_ids", "out_src", "out_map")}
+    layout["nw"] = jnp.asarray([lay.nw], jnp.int32)
+    for backend in backends:
+        for beta in (1, 2):
+            fn = jax.jit(
+                lambda p, i, _beta=beta, _b=backend:
+                vb.forward_features(SIM, p, i, beta=_beta, layout=layout,
+                                    backend=_b))
+            us = _timer(fn, params, img, reps=reps)
+            rows.append({"workload": "padded", "beta": beta,
+                         "n_low": n_low, "backend": backend,
+                         "us_per_call": us})
     return rows
 
 
@@ -148,6 +171,43 @@ def run_bench(smoke: bool = False, out: Path = DEFAULT_OUT,
     return report
 
 
+def check_regressions(report: dict, baseline: Path = DEFAULT_OUT,
+                      tol: float = 1.15) -> list:
+    """Regression gate: compare fresh ``backbone`` rows against the
+    committed baseline per (workload, beta, backend); a row more than
+    ``tol``x slower is a failure.  Rows missing from the baseline and
+    baselines from a different device kind are skipped (the committed
+    numbers only bind the machine class that produced them)."""
+    try:
+        base = json.loads(Path(baseline).read_text())
+    except (OSError, ValueError):
+        print(f"[bench_backbone] no readable baseline at {baseline} — "
+              "check skipped")
+        return []
+    if base.get("meta", {}).get("device") != report["meta"]["device"]:
+        print(f"[bench_backbone] baseline device "
+              f"{base.get('meta', {}).get('device')!r} != current "
+              f"{report['meta']['device']!r} — check skipped")
+        return []
+    floors = {(r["workload"], r["beta"], r["backend"]): r["us_per_call"]
+              for r in base.get("backbone", [])}
+    fails = []
+    for r in report["backbone"]:
+        key = (r["workload"], r["beta"], r["backend"])
+        floor = floors.get(key)
+        if floor is None:
+            continue
+        if r["us_per_call"] > floor * tol:
+            fails.append(f"{key}: {r['us_per_call']:.0f} us > "
+                         f"{tol:.2f}x baseline {floor:.0f} us")
+    for f in fails:
+        print(f"[bench_backbone] REGRESSION {f}")
+    if not fails:
+        print(f"[bench_backbone] check ok: {len(report['backbone'])} rows "
+              f"within {tol:.2f}x of baseline")
+    return fails
+
+
 def run(ctx: dict) -> list:
     """benchmarks/run.py adapter: smoke settings, CSV rows.  Writes to
     the artifacts dir so harness runs never clobber the committed
@@ -176,12 +236,26 @@ def main(argv=None) -> int:
                     help="comma-separated backends to bench (default: "
                          "xla,pallas on TPU; xla only elsewhere — "
                          "pallas-interpret is a slow parity path)")
-    ap.add_argument("--out", type=Path, default=DEFAULT_OUT,
-                    help=f"output JSON path (default {DEFAULT_OUT})")
+    ap.add_argument("--out", type=Path, default=None,
+                    help=f"output JSON path (default {DEFAULT_OUT}; "
+                         "--check runs default to benchmarks/artifacts "
+                         "so they never clobber the committed baseline)")
+    ap.add_argument("--check", action="store_true",
+                    help="compare fresh rows against the committed "
+                         "BENCH_backbone.json per (workload, beta, "
+                         "backend); exit 1 on a >15%% regression")
     args = ap.parse_args(argv)
     backends = (tuple(b.strip() for b in args.backends.split(","))
                 if args.backends else None)
-    rep = run_bench(smoke=args.smoke, out=args.out, backends=backends)
+    out = args.out
+    if out is None:
+        if args.check:
+            out = Path(__file__).resolve().parent / "artifacts" \
+                / "BENCH_backbone.check.json"
+            out.parent.mkdir(parents=True, exist_ok=True)
+        else:
+            out = DEFAULT_OUT
+    rep = run_bench(smoke=args.smoke, out=out, backends=backends)
     for r in rep["backbone"]:
         beta = "-" if r["beta"] is None else r["beta"]
         print(f"  {r['workload']:>5} beta={beta} {r['backend']:>6}: "
@@ -189,6 +263,8 @@ def main(argv=None) -> int:
     s = rep["server_infer"]
     print(f"  server.infer jit {s['jit_us']:.0f} us vs eager "
           f"{s['eager_us']:.0f} us  ({s['speedup']:.1f}x)")
+    if args.check:
+        return 1 if check_regressions(rep) else 0
     return 0
 
 

@@ -9,9 +9,20 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== fast test lane (pytest -m 'not slow') =="
 python -m pytest -x -q
 
-echo "== backbone benchmark smoke =="
+echo "== pallas parity lane (REPRO_BACKEND=pallas, interpret mode) =="
+# pins the env-var override end to end: every kernel/dispatch test must
+# pass with the whole process forced onto the Pallas lane (interpret
+# mode off-TPU), including the backend-resolution tests themselves
+REPRO_BACKEND=pallas REPRO_AUTOTUNE=0 python -m pytest -x -q \
+    tests/test_kernels.py tests/test_backend_dispatch.py
+
+echo "== backbone benchmark smoke + regression gate =="
+# --check compares fresh rows against the committed BENCH_backbone.json
+# per (workload, beta, backend) and fails on a >15% regression (rows
+# from a different device kind are skipped); writes to artifacts, never
+# the committed baseline
 mkdir -p benchmarks/artifacts
-python benchmarks/bench_backbone.py --smoke \
+python benchmarks/bench_backbone.py --smoke --check \
     --out benchmarks/artifacts/BENCH_backbone.smoke.json
 
 echo "== multi-client serving bench smoke (2 clients) =="

@@ -365,6 +365,17 @@ class PlanLayout:
       low_ids    (n_regions,)  destination region of the i-th LOW window
                                (pads carry the sentinel region nR)
       reuse_ids  (n_regions,)  REUSE regions (pads carry the sentinel)
+      out_src    (nR*d^2,)     destination-major inverse of the scatter:
+                               the SOURCE window of every full-res grid
+                               slot — a packed sequence position for
+                               FULL/LOW regions, or ``nw_pad + j*d^2 + k``
+                               into the appended reuse-tile bank for the
+                               j-th REUSE region's sub-window k (the
+                               fused restore epilogue's gather indices,
+                               kernels.fused_serving)
+      out_map    (nR*d^2,)     token permutation per slot: 0 = identity
+                               (FULL/REUSE), k+1 = upsample map of
+                               sub-window k (LOW regions)
       nw         valid window count (i32 runtime input; tokens beyond
                  nw * w^2 are masked out of pre-restoration global
                  attention and zeroed by the window-attention valid flag)
@@ -379,6 +390,8 @@ class PlanLayout:
     low_src: np.ndarray
     low_ids: np.ndarray
     reuse_ids: np.ndarray
+    out_src: np.ndarray
+    out_map: np.ndarray
     key: bytes
 
 
@@ -410,12 +423,25 @@ def plan_layout(states: np.ndarray, nw_pad: int,
     reuse_pad = np.full((nR,), nR, np.int32)
     reuse_pad[:len(reuse)] = reuse
 
+    # destination-major inverse (fused restore epilogue): every grid
+    # slot names its source window.  The states partition the regions,
+    # so the inverse is total — no sentinel needed.
+    out_src = np.zeros((nR * dd,), np.int32)
+    out_map = np.zeros((nR * dd,), np.int32)
+    out_src[slots] = np.arange(len(slots), dtype=np.int32)
+    for j, r in enumerate(low):
+        out_src[r * dd:(r + 1) * dd] = len(slots) + j
+        out_map[r * dd:(r + 1) * dd] = np.arange(1, dd + 1)
+    for j, r in enumerate(reuse):
+        out_src[r * dd:(r + 1) * dd] = nw_pad + j * dd + np.arange(dd)
+
     key = b"".join((np.int64([nw, nw_pad]).tobytes(), win_src.tobytes(),
                     low_src.tobytes(), low_ids.tobytes(),
                     reuse_pad.tobytes()))
     return PlanLayout(nw=nw, n_low=len(low), n_reuse=len(reuse),
                       win_src=win_src, win_dst=win_dst, low_src=low_src,
-                      low_ids=low_ids, reuse_ids=reuse_pad, key=key)
+                      low_ids=low_ids, reuse_ids=reuse_pad,
+                      out_src=out_src, out_map=out_map, key=key)
 
 
 def stack_plan_layouts(layouts: Sequence[PlanLayout]
@@ -429,5 +455,7 @@ def stack_plan_layouts(layouts: Sequence[PlanLayout]
         "low_ids": np.stack([l.low_ids for l in layouts]),
         "reuse_ids": np.stack([l.reuse_ids for l in layouts]),
         "nw": np.array([l.nw for l in layouts], np.int32),
+        "out_src": np.stack([l.out_src for l in layouts]),
+        "out_map": np.stack([l.out_map for l in layouts]),
     }
     return arrays, b"|".join(l.key for l in layouts)

@@ -30,6 +30,7 @@ from repro.core import det_head as dh
 from repro.core import mixed_res as mr
 from repro.core.partition import (Partition, length_bucket as
                                   pt_length_bucket, make_partition)
+from repro.kernels import dispatch
 from repro.models import attention as attn
 from repro.models import layers as L
 from repro.models.config import ModelConfig
@@ -180,6 +181,26 @@ def packed_positions(pos: jnp.ndarray, part: Partition,
     return packed
 
 
+def pos_window_bank(pos: jnp.ndarray, part: Partition) -> jnp.ndarray:
+    """Cached (nR*d^2 + nR, w^2, D) window bank of the positional grid —
+    the fused pack/pos prologue gathers positions from this bank in the
+    same pass as the activations, so the layout-dependent gather no
+    longer needs a per-layout cache entry (one bank covers every plan).
+    """
+    if not _concrete(pos):
+        return mr.window_bank(pos[None], part)[0]
+    key = (id(pos), part, "bank")
+    hit = _POS_CACHE.get(key)
+    if hit is not None and hit[0] is pos:
+        _POS_CACHE.move_to_end(key)
+        return hit[1]
+    bank = mr.window_bank(pos[None], part)[0]
+    while len(_POS_CACHE) >= _POS_CACHE_MAX:
+        _POS_CACHE.popitem(last=False)
+    _POS_CACHE[key] = (pos, bank)
+    return bank
+
+
 # ---------------------------------------------------------------------------
 # blocks
 
@@ -287,13 +308,33 @@ def forward_features(cfg: ModelConfig, params, image: jnp.ndarray,
     x_full = embed_patches(cfg, params, image, backend=backend)  # B,Hp,Wp,D
     pos = params["pos_emb"]
     kv_len = win_valid = None
+    # fused serving lane (kernels.fused_serving): pack + pos-embed +
+    # pad zeroing fold into one prologue kernel and the restoration
+    # scatter into one destination-major gather epilogue, so the packed
+    # activations never round-trip HBM between the stages.  Engages on
+    # the Pallas backend when the layout carries the inverse maps
+    # (PlanLayout.out_src/out_map); legacy layout dicts fall back to the
+    # unfused path unchanged.
+    fused = (padded and beta >= 1 and "out_src" in layout
+             and dispatch.use_pallas(backend))
     if padded:
         # the collapsed executable serves every plan mix, so the pooled
         # grid is always packed (a reuse-only sample simply never
         # gathers from the low half of the window bank)
         x_low = embed_patches(cfg, params, image, part.downsample, backend)
-        tokens = mr.pack_padded(x_full, part, layout["win_src"],
-                                x_low_grid=x_low, backend=backend)
+        if fused:
+            # pad windows come out zero rather than window-0 replicas:
+            # window attention zeroes them anyway, global attention
+            # masks them via kv_len, restoration never reads them — the
+            # valid lanes are bit-identical to the unfused pack
+            bank = mr.window_bank(x_full, part, x_low, backend=backend)
+            tokens = dispatch.fused_pack_pos(bank,
+                                             pos_window_bank(pos, part),
+                                             layout["win_src"],
+                                             layout["nw"])
+        else:
+            tokens = mr.pack_padded(x_full, part, layout["win_src"],
+                                    x_low_grid=x_low, backend=backend)
         if beta == 0:                     # restore at input: full length
             tokens = mr.restore_padded(tokens, part, layout["win_dst"],
                                        layout["low_src"],
@@ -301,9 +342,10 @@ def forward_features(cfg: ModelConfig, params, image: jnp.ndarray,
                                        backend=backend)
             tokens = tokens + packed_positions(pos, part, None, None)
         else:
-            tokens = tokens + packed_positions(pos, part, None, None,
-                                               win_src=layout["win_src"],
-                                               ids_key=ids_key)
+            if not fused:
+                tokens = tokens + packed_positions(
+                    pos, part, None, None, win_src=layout["win_src"],
+                    ids_key=ids_key)
             win_valid = jnp.asarray(layout["nw"], jnp.int32)
             kv_len = win_valid * w2
             if win_valid.ndim == 0:
@@ -338,7 +380,13 @@ def forward_features(cfg: ModelConfig, params, image: jnp.ndarray,
             params_blk = params["blocks"][idx]
             is_global = m == M - 1
             if is_global and not restored and beta == s + 1:
-                if padded:
+                if fused:
+                    B, D = tokens.shape[0], tokens.shape[-1]
+                    tokens = dispatch.fused_restore(
+                        tokens.reshape(B, -1, w2, D), layout["out_src"],
+                        layout["out_map"], part.window, part.downsample,
+                        reuse_tiles=reuse_tiles)
+                elif padded:
                     tokens = mr.restore_padded(
                         tokens, part, layout["win_dst"],
                         layout["low_src"], layout["low_ids"],

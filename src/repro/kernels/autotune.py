@@ -1,0 +1,286 @@
+"""Block-size autotuner for the Pallas serving kernels.
+
+The kernels' tile sizes (flash ``bq``/``bk``, window-attention ``wb``,
+decode ``bs``) are fixed defaults chosen for one TPU generation; the
+right values differ per device kind and per shape regime.  This module
+sweeps a small candidate grid at ``warmup()`` time, times each candidate
+on the device, and caches the winner on disk keyed
+``(device kind, kernel, shape bucket)`` so later processes skip the
+sweep entirely.
+
+Knobs:
+
+  ``REPRO_AUTOTUNE=0``       disable — every lookup returns the fixed
+                             default (the escape hatch for CI or when a
+                             stale cache misbehaves).
+  ``REPRO_AUTOTUNE_CACHE``   override the cache directory
+                             (default ``~/.cache/repro/autotune``).
+
+Shape buckets round every dynamic dimension up to a power of two so the
+cache stays bounded; a lookup miss always falls back to the kernel's
+fixed default, never to a sweep in the hot path — sweeps only run from
+the explicit ``tune_*`` entry points called by warmup.
+
+Off-TPU the kernels run in interpret mode, where candidate timings are
+meaningless; sweeps are skipped there unless ``force=True`` (unit tests
+exercise the machinery that way).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import threading
+import time
+from pathlib import Path
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+ENV_VAR = "REPRO_AUTOTUNE"
+CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
+
+# candidate grids per kernel; first entry is never assumed — the fixed
+# ops.py default is always a candidate so tuning can only tie or win.
+FLASH_CANDIDATES = ({"bq": 128, "bk": 128}, {"bq": 128, "bk": 256},
+                    {"bq": 256, "bk": 256}, {"bq": 256, "bk": 512},
+                    {"bq": 512, "bk": 512})
+WINDOW_CANDIDATES = ({"wb": 4}, {"wb": 8}, {"wb": 16}, {"wb": 32})
+DECODE_CANDIDATES = ({"bs": 256}, {"bs": 512}, {"bs": 1024})
+
+_LOCK = threading.Lock()
+_TABLE: Dict[str, Dict[str, Dict]] = {}     # kernel -> bucket_key -> entry
+_LOADED_FOR: Optional[str] = None           # device kind the table is for
+
+
+def enabled() -> bool:
+    return os.environ.get(ENV_VAR, "1") != "0"
+
+
+def device_kind() -> str:
+    kind = jax.devices()[0].device_kind
+    return re.sub(r"[^A-Za-z0-9._-]+", "_", kind)
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def cache_dir() -> Path:
+    env = os.environ.get(CACHE_ENV)
+    if env:
+        return Path(env)
+    return Path.home() / ".cache" / "repro" / "autotune"
+
+
+def cache_path(kind: Optional[str] = None) -> Path:
+    return cache_dir() / f"{kind or device_kind()}.json"
+
+
+def bucket_key(**dims) -> str:
+    """Canonical bucket string: dims sorted by name, dynamic sizes
+    rounded up to the next power of two."""
+    parts = []
+    for name in sorted(dims):
+        val = dims[name]
+        if isinstance(val, (int,)) and not isinstance(val, bool):
+            val = _pow2(val)
+        parts.append(f"{name}={val}")
+    return ",".join(parts)
+
+
+def _pow2(n: int) -> int:
+    p = 1
+    while p < max(1, n):
+        p *= 2
+    return p
+
+
+# ---------------------------------------------------------------------------
+# cache table
+
+
+def _load(kind: str) -> None:
+    global _LOADED_FOR
+    if _LOADED_FOR == kind:
+        return
+    _TABLE.clear()
+    path = cache_path(kind)
+    try:
+        _TABLE.update(json.loads(path.read_text()))
+    except (OSError, ValueError):
+        pass
+    _LOADED_FOR = kind
+
+
+def _save(kind: str) -> None:
+    path = cache_path(kind)
+    try:
+        path.parent.mkdir(parents=True, exist_ok=True)
+        tmp = path.with_suffix(".tmp")
+        tmp.write_text(json.dumps(_TABLE, indent=1, sort_keys=True))
+        tmp.replace(path)
+    except OSError:
+        pass                            # cache is best-effort
+
+
+def clear_memory_cache() -> None:
+    """Drop the in-process table (tests; the disk file is untouched)."""
+    global _LOADED_FOR
+    with _LOCK:
+        _TABLE.clear()
+        _LOADED_FOR = None
+
+
+def lookup(kernel: str, bucket: str) -> Optional[Dict]:
+    """Tuned params for (kernel, bucket) or None.  Never sweeps."""
+    if not enabled():
+        return None
+    with _LOCK:
+        _load(device_kind())
+        entry = _TABLE.get(kernel, {}).get(bucket)
+    return dict(entry["params"]) if entry else None
+
+
+def block(kernel: str, bucket: str, default: Dict) -> Dict:
+    """Resolved block params: tuned winner if cached, else ``default``."""
+    tuned = lookup(kernel, bucket)
+    out = dict(default)
+    if tuned:
+        out.update({k: v for k, v in tuned.items() if k in out})
+    return out
+
+
+def record(kernel: str, bucket: str, params: Dict, us: float) -> None:
+    with _LOCK:
+        kind = device_kind()
+        _load(kind)
+        _TABLE.setdefault(kernel, {})[bucket] = {
+            "params": dict(params), "us": float(us)}
+        _save(kind)
+
+
+# ---------------------------------------------------------------------------
+# sweeping
+
+
+def _time_us(fn: Callable[[], jnp.ndarray], reps: int = 3) -> float:
+    fn().block_until_ready()            # compile + warm
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn().block_until_ready()
+        best = min(best, (time.perf_counter() - t0) * 1e6)
+    return best
+
+
+def tune(kernel: str, bucket: str, candidates: Sequence[Dict],
+         bench: Callable[[Dict], Optional[Callable[[], jnp.ndarray]]], *,
+         force: bool = False, reps: int = 3) -> Optional[Dict]:
+    """Sweep ``candidates`` for (kernel, bucket); cache and return the
+    winner.  ``bench(params)`` returns a nullary callable running the
+    kernel with those params, or None when the candidate is invalid for
+    the shape.  Returns the cached/tuned params, or None when tuning is
+    disabled or skipped (off-TPU without force)."""
+    if not enabled():
+        return None
+    cached = lookup(kernel, bucket)
+    if cached is not None:
+        return cached
+    if not (on_tpu() or force):
+        return None
+    results: List[Tuple[float, Dict]] = []
+    for params in candidates:
+        fn = bench(dict(params))
+        if fn is None:
+            continue
+        try:
+            results.append((_time_us(fn, reps=reps), dict(params)))
+        except Exception:               # candidate failed to lower/run
+            continue
+    if not results:
+        return None
+    us, params = min(results, key=lambda r: r[0])
+    record(kernel, bucket, params, us)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# kernel-specific entry points (called from warmup paths)
+
+
+def window_bucket(B: int, T: int, H: int, Dh: int, window: int,
+                  dtype) -> str:
+    return bucket_key(bw=B * (T // window), h=H, dh=Dh, w=window,
+                      dt=jnp.dtype(dtype).name)
+
+
+def flash_bucket(B: int, T: int, S: int, H: int, KV: int, Dh: int,
+                 causal: bool, dtype) -> str:
+    return bucket_key(b=B, t=T, s=S, h=H, kv=KV, dh=Dh, causal=causal,
+                      dt=jnp.dtype(dtype).name)
+
+
+def decode_bucket(B: int, S: int, H: int, KV: int, Dh: int, dtype) -> str:
+    return bucket_key(b=B, s=S, h=H, kv=KV, dh=Dh,
+                      dt=jnp.dtype(dtype).name)
+
+
+def tune_window(B: int, T: int, H: int, Dh: int, window: int, *,
+                KV: Optional[int] = None, dtype=jnp.float32,
+                force: bool = False) -> Optional[Dict]:
+    from repro.kernels.window_attention import ops as _win
+    KV = H if KV is None else KV
+    rng = jax.random.PRNGKey(0)
+    q = jax.random.normal(rng, (B, T, H, Dh), dtype)
+    k = jax.random.normal(rng, (B, T, KV, Dh), dtype)
+    v = jax.random.normal(rng, (B, T, KV, Dh), dtype)
+
+    def bench(params):
+        wb = params["wb"]
+        if wb > B * (T // window):
+            return None
+        return lambda: _win.window_attention(q, k, v, window, wb=wb)
+
+    return tune("window_attention",
+                window_bucket(B, T, H, Dh, window, dtype),
+                WINDOW_CANDIDATES, bench, force=force)
+
+
+def tune_flash(B: int, T: int, S: int, H: int, Dh: int, *,
+               KV: Optional[int] = None, causal: bool = False,
+               dtype=jnp.float32, force: bool = False) -> Optional[Dict]:
+    from repro.kernels.flash_attention import ops as _flash
+    KV = H if KV is None else KV
+    rng = jax.random.PRNGKey(0)
+    q = jax.random.normal(rng, (B, T, H, Dh), dtype)
+    k = jax.random.normal(rng, (B, S, KV, Dh), dtype)
+    v = jax.random.normal(rng, (B, S, KV, Dh), dtype)
+
+    def bench(params):
+        return lambda: _flash.flash_attention(
+            q, k, v, causal=causal, bq=params["bq"], bk=params["bk"])
+
+    return tune("flash_attention",
+                flash_bucket(B, T, S, H, KV, Dh, causal, dtype),
+                FLASH_CANDIDATES, bench, force=force)
+
+
+def tune_decode(B: int, S: int, H: int, Dh: int, *,
+                KV: Optional[int] = None, dtype=jnp.float32,
+                force: bool = False) -> Optional[Dict]:
+    from repro.kernels.decode_attention import ops as _dec
+    KV = H if KV is None else KV
+    rng = jax.random.PRNGKey(0)
+    q = jax.random.normal(rng, (B, 1, H, Dh), dtype)
+    k = jax.random.normal(rng, (B, S, KV, Dh), dtype)
+    v = jax.random.normal(rng, (B, S, KV, Dh), dtype)
+    kv_len = jnp.full((B,), S, jnp.int32)
+
+    def bench(params):
+        return lambda: _dec.decode_attention(q, k, v, kv_len,
+                                             bs=params["bs"])
+
+    return tune("decode_attention", decode_bucket(B, S, H, KV, Dh, dtype),
+                DECODE_CANDIDATES, bench, force=force)

@@ -12,25 +12,15 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import autotune
 from repro.kernels.decode_attention import kernel as K
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "bs", "interpret"))
-def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
-                     kv_len: jnp.ndarray, *, scale: Optional[float] = None,
-                     bs: int = K.DEFAULT_BS,
-                     interpret: Optional[bool] = None) -> jnp.ndarray:
-    """Drop-in for the decode path of models.attention (sdpa with kv_len).
-
-    q: (B, 1, H, Dh) single-token queries; k/v: (B, S, KV, Dh) cache;
-    kv_len: (B,) int32 valid lengths.  Returns (B, 1, H, Dh).
-    """
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+def _decode_jit(q, k, v, kv_len, *, scale, bs, interpret):
     B, _, H, Dh = q.shape
     S, KV = k.shape[1], k.shape[2]
     G = H // KV
-    scale = Dh ** -0.5 if scale is None else scale
 
     Gp = max(8, ((G + 7) // 8) * 8)
     bs_ = min(bs, max(8, S))
@@ -50,3 +40,28 @@ def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                                     scale=scale, bs=bs_,
                                     interpret=interpret)
     return out[:, :, :G, :].reshape(B, 1, H, Dh)
+
+
+def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     kv_len: jnp.ndarray, *, scale: Optional[float] = None,
+                     bs: Optional[int] = None,
+                     interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Drop-in for the decode path of models.attention (sdpa with kv_len).
+
+    q: (B, 1, H, Dh) single-token queries; k/v: (B, S, KV, Dh) cache;
+    kv_len: (B,) int32 valid lengths.  Returns (B, 1, H, Dh).
+    ``bs=None`` picks the autotuned cache-block size for this shape
+    bucket (kernel default when untuned).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, _, H, Dh = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    scale = float(Dh ** -0.5 if scale is None else scale)
+    if bs is None:
+        bs = autotune.block(
+            "decode_attention",
+            autotune.decode_bucket(B, S, H, KV, Dh, q.dtype),
+            {"bs": K.DEFAULT_BS})["bs"]
+    return _decode_jit(q, k, v, kv_len, scale=scale, bs=int(bs),
+                       interpret=bool(interpret))

@@ -11,46 +11,98 @@ Every dispatch site takes a ``backend`` argument:
   ``"auto"``    ``"pallas"`` on TPU, ``"xla"`` everywhere else.  Interpret
                 mode is a correctness tool, so auto never selects it for
                 the hot path.
-  ``None``      ``"xla"``.  The kernels define no custom VJP, so the
-                bare default must stay differentiable: training code
-                that never mentions a backend keeps its gradient path.
-                Inference entry points (``ServerModel``) opt into
-                ``"auto"`` explicitly.
+  ``None``      the process default (``set_backend``), else ``"auto"``.
+                The kernels define custom VJPs (window/flash attention
+                analytic backward, pooling closed forms), so the bare
+                default no longer has to force XLA for gradient safety:
+                training code that never mentions a backend rides the
+                Pallas lane on TPU and XLA elsewhere.
 
-The resolved choice can be forced globally with the ``REPRO_BACKEND``
-environment variable (useful for A/B runs of the benchmark harness
-without touching call sites).
+Backend resolution is a hot-path operation (every attention call in a
+traced forward hits it), so the ``REPRO_BACKEND`` environment variable
+is read ONCE at import and cached; it still overrides everything —
+useful for A/B runs of the benchmark harness without touching call
+sites.  Tests that monkeypatch the env var must call
+``refresh_from_env()`` afterwards.  Precedence, strongest first:
+
+  env var (cached) > per-call ``backend`` arg > ``set_backend()`` > auto
 
 Only the *shapes the kernels support* are routed to Pallas; anything
-else (per-batch ``kv_len`` masks, query offsets) stays on the XLA path —
-the dispatcher is a router, not a second implementation.
+else (query offsets, multi-token ``kv_len`` masks) stays on the XLA
+path — the dispatcher is a router, not a second implementation.
 """
 from __future__ import annotations
 
+import contextlib
 import os
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.decode_attention import ops as _decode
 from repro.kernels.flash_attention import ops as _flash
+from repro.kernels.fused_serving import ops as _fused
 from repro.kernels.mixed_res_pool import ops as _pool
 from repro.kernels.window_attention import ops as _win
 
 BACKENDS = ("auto", "pallas", "xla")
 ENV_VAR = "REPRO_BACKEND"
 
+_ENV_BACKEND: Optional[str] = None      # cached env override ('' -> None)
+_PROCESS_BACKEND: Optional[str] = None  # set_backend() default
 
-def resolve(backend: Optional[str] = None) -> str:
-    """Resolve a backend request to a concrete {"pallas", "xla"} choice."""
-    env = os.environ.get(ENV_VAR)
-    if env:
-        backend = env
-    if backend is None:
-        backend = "xla"      # grad-safe default; see module docstring
+
+def _check(backend: str) -> str:
     if backend not in BACKENDS:
         raise ValueError(f"backend must be one of {BACKENDS}, got "
                          f"{backend!r}")
+    return backend
+
+
+def refresh_from_env() -> Optional[str]:
+    """Re-read ``REPRO_BACKEND`` (tests that monkeypatch the env)."""
+    global _ENV_BACKEND
+    env = os.environ.get(ENV_VAR)
+    _ENV_BACKEND = _check(env) if env else None
+    return _ENV_BACKEND
+
+
+def set_backend(backend: Optional[str]) -> None:
+    """Set the process-wide default used when a call site passes
+    ``backend=None``.  ``None`` restores the built-in ``"auto"``."""
+    global _PROCESS_BACKEND
+    _PROCESS_BACKEND = _check(backend) if backend is not None else None
+
+
+def get_backend() -> Optional[str]:
+    """The current process default (None when unset)."""
+    return _PROCESS_BACKEND
+
+
+@contextlib.contextmanager
+def backend_scope(backend: Optional[str]):
+    """Temporarily set the process default (trace-time scoping: wrap a
+    jit trace to pin every ``backend=None`` site inside it).  A ``None``
+    scope is a no-op — the current default stays in force."""
+    if backend is None:
+        yield
+        return
+    prev = _PROCESS_BACKEND
+    set_backend(backend)
+    try:
+        yield
+    finally:
+        set_backend(prev)
+
+
+def resolve(backend: Optional[str] = None) -> str:
+    """Resolve a backend request to a concrete {"pallas", "xla"} choice."""
+    if _ENV_BACKEND is not None:
+        backend = _ENV_BACKEND
+    elif backend is None:
+        backend = _PROCESS_BACKEND if _PROCESS_BACKEND is not None else "auto"
+    _check(backend)
     if backend == "auto":
         return "pallas" if jax.default_backend() == "tpu" else "xla"
     return backend
@@ -60,10 +112,14 @@ def use_pallas(backend: Optional[str] = None) -> bool:
     return resolve(backend) == "pallas"
 
 
+refresh_from_env()
+
+
 # ---------------------------------------------------------------------------
 # thin wrappers over the kernel entry points (ops.py handles padding,
-# layout and interpret-mode selection; nothing to add here but a stable
-# import point that models/ can use without reaching into each kernel).
+# layout, autotuned block sizes and interpret-mode selection; nothing to
+# add here but a stable import point that models/ can use without
+# reaching into each kernel).
 
 
 def window_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
@@ -73,7 +129,7 @@ def window_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
 
     q: (B, T, H, Dh); k/v: (B, T, KV, Dh); T % window == 0.
     ``win_valid``: optional (B,) valid-window counts — pad windows of a
-    length-bucketed sequence emit zeros.
+    length-bucketed sequence emit zeros.  Differentiable (custom VJP).
     """
     return _win.window_attention(q, k, v, window, win_valid=win_valid)
 
@@ -82,9 +138,18 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                     causal: bool = False) -> jnp.ndarray:
     """Pallas flash attention (ViTDet global blocks / LM prefill).
 
-    q: (B, T, H, Dh); k/v: (B, S, KV, Dh).
+    q: (B, T, H, Dh); k/v: (B, S, KV, Dh).  Differentiable (custom VJP).
     """
     return _flash.flash_attention(q, k, v, causal=causal)
+
+
+def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     kv_len: jnp.ndarray) -> jnp.ndarray:
+    """Pallas one-token GQA decode against the KV cache.
+
+    q: (B, 1, H, Dh); k/v: (B, S, KV, Dh); kv_len: (B,) valid lengths.
+    """
+    return _decode.decode_attention(q, k, v, kv_len)
 
 
 def avg_pool(x: jnp.ndarray, d: int) -> jnp.ndarray:
@@ -95,3 +160,21 @@ def avg_pool(x: jnp.ndarray, d: int) -> jnp.ndarray:
 def nn_upsample(x: jnp.ndarray, d: int) -> jnp.ndarray:
     """Pallas nearest-neighbour upsample (restoration)."""
     return _pool.nn_upsample_2d(x, d)
+
+
+def fused_pack_pos(bank: jnp.ndarray, pos_bank: jnp.ndarray,
+                   win_src: jnp.ndarray, nw: jnp.ndarray) -> jnp.ndarray:
+    """Fused serving prologue: window-bank gather + positional-embedding
+    add + pad-window zeroing in one kernel (no HBM round-trip between
+    pack and pos-embed).  Returns packed tokens (B, nw_pad * w2, C)."""
+    return _fused.fused_pack_pos(bank, pos_bank, win_src, nw)
+
+
+def fused_restore(windows: jnp.ndarray, out_src: jnp.ndarray,
+                  out_map: jnp.ndarray, window: int, downsample: int,
+                  reuse_tiles: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Fused serving epilogue: destination-major restoration gather
+    (window un-pack + low-res upsample + reuse-tile splice) in one
+    kernel.  ``windows``: packed activations (B, nw_pad, w2, D)."""
+    return _fused.fused_restore(windows, out_src, out_map, window,
+                                downsample, reuse_tiles=reuse_tiles)

@@ -3,6 +3,13 @@
 Handles the (B, T, H, Dh) <-> (B, H, T, Dh) layout swap, pads T/S up to
 the block size (padded keys are masked in-kernel via the static
 ``kv_valid`` length), and picks interpret mode automatically off-TPU.
+
+The entry point carries a ``jax.custom_vjp``: the forward runs the
+Pallas kernel, the backward is the analytic softmax-attention gradient
+recomputed densely in plain jnp.  The dense recompute materialises the
+(T, S) score matrix per (kv head, group), so it targets training-scale
+sequences (the serving path never differentiates); it is exact and
+keeps the Pallas lane usable under ``jax.grad``.
 """
 from __future__ import annotations
 
@@ -12,28 +19,24 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import autotune
 from repro.kernels.flash_attention import kernel as K
+
+NEG_INF = K.NEG_INF
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-@functools.partial(jax.jit, static_argnames=("causal", "scale", "bq", "bk",
-                                             "interpret"))
-def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
-                    causal: bool = False, scale: Optional[float] = None,
-                    bq: int = K.DEFAULT_BQ, bk: int = K.DEFAULT_BK,
-                    interpret: Optional[bool] = None) -> jnp.ndarray:
-    """Drop-in for models.attention.sdpa (training/prefill path).
+def _round8(n: int) -> int:
+    """Smallest multiple of 8 >= n (sublane granularity)."""
+    return max(8, ((n + 7) // 8) * 8)
 
-    q: (B, T, H, Dh); k/v: (B, S, KV, Dh).  Returns (B, T, H, Dh).
-    """
-    if interpret is None:
-        interpret = not _on_tpu()
+
+def _forward(q, k, v, causal, scale, bq, bk, interpret):
     B, T, H, Dh = q.shape
     S = k.shape[1]
-    scale = Dh ** -0.5 if scale is None else scale
 
     bq_ = min(bq, _round8(T))
     bk_ = min(bk, _round8(S))
@@ -56,6 +59,68 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     return jnp.moveaxis(out, 1, 2)
 
 
-def _round8(n: int) -> int:
-    """Smallest multiple of 8 >= n (sublane granularity)."""
-    return max(8, ((n + 7) // 8) * 8)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash_attention(q, k, v, causal, scale, bq, bk, interpret):
+    return _forward(q, k, v, causal, scale, bq, bk, interpret)
+
+
+def _vjp_fwd(q, k, v, causal, scale, bq, bk, interpret):
+    return _forward(q, k, v, causal, scale, bq, bk, interpret), (q, k, v)
+
+
+def _vjp_bwd(causal, scale, bq, bk, interpret, res, g):
+    """Dense analytic backward (recomputes p; O(T*S) scores)."""
+    q, k, v = res
+    B, T, H, Dh = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    f32 = jnp.float32
+    qg = q.reshape(B, T, KV, G, Dh).astype(f32)
+    kk = k.astype(f32)
+    vv = v.astype(f32)
+    gg = g.reshape(B, T, KV, G, Dh).astype(f32)
+    s = jnp.einsum("btkgd,bskd->bkgts", qg, kk) * scale
+    if causal:
+        mask = jnp.arange(T)[:, None] >= jnp.arange(S)[None, :]
+        s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    dv = jnp.einsum("bkgts,btkgd->bskd", p, gg)
+    dp = jnp.einsum("btkgd,bskd->bkgts", gg, vv)
+    ds = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))
+    dq = jnp.einsum("bkgts,bskd->btkgd", ds, kk) * scale
+    dk = jnp.einsum("bkgts,btkgd->bskd", ds, qg) * scale
+    dq = dq.reshape(B, T, H, Dh).astype(q.dtype)
+    return dq, dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash_attention.defvjp(_vjp_fwd, _vjp_bwd)
+
+_entry = jax.jit(_flash_attention, static_argnums=(3, 4, 5, 6, 7))
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = False, scale: Optional[float] = None,
+                    bq: Optional[int] = None, bk: Optional[int] = None,
+                    interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Drop-in for models.attention.sdpa (training/prefill path).
+
+    q: (B, T, H, Dh); k/v: (B, S, KV, Dh).  Returns (B, T, H, Dh).
+    ``bq``/``bk`` default to the autotuned block sizes for this shape
+    bucket (kernel defaults when untuned).  Differentiable.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, T, H, Dh = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    scale = float(Dh ** -0.5 if scale is None else scale)
+
+    if bq is None or bk is None:
+        tuned = autotune.block(
+            "flash_attention",
+            autotune.flash_bucket(B, T, S, H, KV, Dh, causal, q.dtype),
+            {"bq": K.DEFAULT_BQ, "bk": K.DEFAULT_BK})
+        bq = tuned["bq"] if bq is None else bq
+        bk = tuned["bk"] if bk is None else bk
+
+    return _entry(q, k, v, bool(causal), scale, int(bq), int(bk),
+                  bool(interpret))

@@ -1,0 +1,2 @@
+from repro.kernels.fused_serving.ops import (  # noqa: F401
+    fused_pack_pos, fused_restore, upsample_token_maps)

@@ -1,0 +1,111 @@
+"""Entry points for the fused serving prologue/epilogue kernels.
+
+Normalises the PlanLayout arrays to per-sample rank, builds the static
+upsample permutation tables, appends the reuse-tile bank, and dispatches
+the Pallas kernels (interpret mode off-TPU).
+
+Token-map convention (``upsample_token_maps``): the restoration's
+nearest-neighbour upsample sends LOW-window token ``t`` of sub-window
+``k = di*d + dj`` to low token ``((di*w + wi)//d)*w + (dj*w + wj)//d``
+with ``t = wi*w + wj`` — map 0 is the identity (FULL windows and reuse
+tiles copy through unchanged).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.fused_serving import kernel as K
+
+
+@functools.lru_cache(maxsize=None)
+def upsample_token_maps(window: int, downsample: int) -> np.ndarray:
+    """(d^2 + 1, w^2) i32: maps[0] identity; maps[k+1][t] = the low-window
+    token that nearest-neighbour upsampling replicates into token ``t``
+    of full-region sub-window ``k`` (mixed_res._upsample_low_windows)."""
+    w, d = window, downsample
+    w2, dd = w * w, d * d
+    maps = np.zeros((dd + 1, w2), np.int32)
+    maps[0] = np.arange(w2)
+    t = np.arange(w2)
+    wi, wj = t // w, t % w
+    for di in range(d):
+        for dj in range(d):
+            maps[di * d + dj + 1] = ((di * w + wi) // d) * w \
+                + (dj * w + wj) // d
+    return maps
+
+
+@functools.lru_cache(maxsize=None)
+def _perm_table(window: int, downsample: int) -> np.ndarray:
+    """One-hot f32 permutation matrices of :func:`upsample_token_maps`:
+    (d^2 + 1, w^2, w^2) with perm[m][t, maps[m][t]] = 1."""
+    maps = upsample_token_maps(window, downsample)
+    n, w2 = maps.shape
+    perm = np.zeros((n, w2, w2), np.float32)
+    perm[np.arange(n)[:, None], np.arange(w2)[None, :], maps] = 1.0
+    return perm
+
+
+def _per_sample(ids, B: int) -> jnp.ndarray:
+    ids = jnp.asarray(ids, jnp.int32)
+    if ids.ndim == 1:
+        ids = jnp.broadcast_to(ids[None], (B,) + ids.shape)
+    return ids
+
+
+def fused_pack_pos(bank: jnp.ndarray, pos_bank: jnp.ndarray,
+                   win_src: jnp.ndarray, nw: jnp.ndarray, *,
+                   interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Fused pack + positional add + pad-window zeroing.
+
+    bank: (B, nR*d^2 + nR, w^2, C) window bank (mixed_res.window_bank);
+    pos_bank: (nR*d^2 + nR, w^2, C) positional window bank; win_src:
+    (nw_pad,) or (B, nw_pad); nw: scalar, (1,) or (B,).  Returns packed
+    tokens (B, nw_pad * w^2, C) — bit-identical to
+    ``pack_padded(...) + pack_positions_padded(...)`` on valid windows,
+    zeros on pad windows.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, _, w2, C = bank.shape
+    src = _per_sample(win_src, B)
+    nw = jnp.asarray(nw, jnp.int32).reshape(-1)
+    nw = jnp.broadcast_to(nw, (B,))
+    out = K.pack_pos_kernel(bank, pos_bank, src, nw, interpret=interpret)
+    return out.reshape(B, src.shape[1] * w2, C)
+
+
+def fused_restore(windows: jnp.ndarray, out_src: jnp.ndarray,
+                  out_map: jnp.ndarray, window: int, downsample: int,
+                  reuse_tiles: Optional[jnp.ndarray] = None, *,
+                  interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Fused destination-major restoration gather.
+
+    windows: (B, nw_pad, w^2, D) packed post-block activations; out_src /
+    out_map: (nout,) or (B, nout) PlanLayout inverse maps (nout =
+    nR*d^2; reuse sources are offset by nw_pad into the tile bank);
+    reuse_tiles: optional (B, nR, d^2, w^2, D).  Returns the full-res
+    window-blocked sequence (B, nout * w^2, D) — bit-identical to
+    ``mixed_res.restore_padded`` (pure data movement; the one-hot matmul
+    selects exactly one finite row).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, _, w2, D = windows.shape
+    src_idx = _per_sample(out_src, B)
+    map_idx = _per_sample(out_map, B)
+    nout = src_idx.shape[1]
+    if reuse_tiles is None:
+        tiles = jnp.zeros((B, nout, w2, D), windows.dtype)
+    else:
+        tiles = reuse_tiles.astype(windows.dtype).reshape(B, -1, w2, D)
+    src = jnp.concatenate([windows, tiles], axis=1)
+    perm = jnp.asarray(_perm_table(window, downsample))
+    out = K.restore_gather_kernel(src, perm, src_idx, map_idx,
+                                  interpret=interpret)
+    return out.reshape(B, nout * w2, D)

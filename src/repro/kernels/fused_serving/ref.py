@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for the fused serving kernels (parity targets).
+
+Both ops are data movement (+ one add), so kernel vs ref parity is
+exact bitwise equality, not a tolerance.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fused_pack_pos_ref(bank: jnp.ndarray, pos_bank: jnp.ndarray,
+                       win_src: jnp.ndarray, nw: jnp.ndarray) -> jnp.ndarray:
+    """bank: (B, nbank, w2, C); pos_bank: (nbank, w2, C);
+    win_src: (B, nw_pad); nw: (B,).  Returns (B, nw_pad, w2, C)."""
+    B, _, w2, C = bank.shape
+    nw_pad = win_src.shape[1]
+    packed = jnp.take_along_axis(bank, win_src[:, :, None, None], axis=1)
+    pos = pos_bank[win_src]                          # (B, nw_pad, w2, C)
+    valid = jnp.arange(nw_pad)[None, :] < nw[:, None]
+    return jnp.where(valid[:, :, None, None], packed + pos,
+                     jnp.zeros((), bank.dtype))
+
+
+def fused_restore_ref(src: jnp.ndarray, maps: jnp.ndarray,
+                      out_src: jnp.ndarray,
+                      out_map: jnp.ndarray) -> jnp.ndarray:
+    """src: (B, nsrc, w2, D); maps: (d^2+1, w2) i32 token gather maps;
+    out_src/out_map: (B, nout).  Returns (B, nout, w2, D)."""
+    blk = jnp.take_along_axis(src, out_src[:, :, None, None], axis=1)
+    sel = maps[out_map]                              # (B, nout, w2)
+    return jnp.take_along_axis(blk, sel[..., None], axis=2)

@@ -2,6 +2,10 @@
 
 Pads channels to the 128-lane tile and picks a row block that divides
 the grid; interpret mode off-TPU.
+
+Both ops carry closed-form ``jax.custom_vjp``s (average pool's adjoint
+is nearest-upsample / d^2 and vice versa), so the Pallas pooling lane
+is differentiable without an XLA fallback.
 """
 from __future__ import annotations
 
@@ -30,14 +34,7 @@ def _pad_c(x: jnp.ndarray, bc: int):
 
 
 @functools.partial(jax.jit, static_argnames=("d", "rb", "bc", "interpret"))
-def avg_pool_2d(x: jnp.ndarray, d: int, *, rb: int = K.DEFAULT_RB,
-                bc: int = K.DEFAULT_BC,
-                interpret: Optional[bool] = None) -> jnp.ndarray:
-    """Drop-in for core.mixed_res.downsample_grid.  x: (B, H, W, C)."""
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
-    if d == 1:
-        return x
+def _avg_pool_fwd(x, *, d, rb, bc, interpret):
     B, H, W, C0 = x.shape
     bc_ = min(bc, ((C0 + 7) // 8) * 8)
     x, C0 = _pad_c(x, bc_)
@@ -47,6 +44,64 @@ def avg_pool_2d(x: jnp.ndarray, d: int, *, rb: int = K.DEFAULT_RB,
 
 
 @functools.partial(jax.jit, static_argnames=("d", "rb", "bc", "interpret"))
+def _nn_upsample_fwd(x, *, d, rb, bc, interpret):
+    B, H, W, C0 = x.shape
+    bc_ = min(bc, ((C0 + 7) // 8) * 8)
+    x, C0 = _pad_c(x, bc_)
+    rb_ = _plan(H, rb)
+    out = K.nn_upsample_kernel(x, d, rb=rb_, bc=bc_, interpret=interpret)
+    return out[..., :C0]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4))
+def _avg_pool(x, d, rb, bc, interpret):
+    return _avg_pool_fwd(x, d=d, rb=rb, bc=bc, interpret=interpret)
+
+
+def _avg_pool_vfwd(x, d, rb, bc, interpret):
+    return _avg_pool(x, d, rb, bc, interpret), None
+
+
+def _avg_pool_vbwd(d, rb, bc, interpret, _, g):
+    # adjoint of mean pooling: broadcast each pooled cotangent back over
+    # its d x d block, scaled by 1/d^2
+    dx = jnp.repeat(jnp.repeat(g, d, axis=1), d, axis=2) / (d * d)
+    return (dx.astype(g.dtype),)
+
+
+_avg_pool.defvjp(_avg_pool_vfwd, _avg_pool_vbwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4))
+def _nn_upsample(x, d, rb, bc, interpret):
+    return _nn_upsample_fwd(x, d=d, rb=rb, bc=bc, interpret=interpret)
+
+
+def _nn_upsample_vfwd(x, d, rb, bc, interpret):
+    return _nn_upsample(x, d, rb, bc, interpret), None
+
+
+def _nn_upsample_vbwd(d, rb, bc, interpret, _, g):
+    # adjoint of nearest-neighbour replication: sum each d x d block
+    B, H, W, C = g.shape
+    dx = g.reshape(B, H // d, d, W // d, d, C).sum(axis=(2, 4))
+    return (dx.astype(g.dtype),)
+
+
+_nn_upsample.defvjp(_nn_upsample_vfwd, _nn_upsample_vbwd)
+
+
+def avg_pool_2d(x: jnp.ndarray, d: int, *, rb: int = K.DEFAULT_RB,
+                bc: int = K.DEFAULT_BC,
+                interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Drop-in for core.mixed_res.downsample_grid.  x: (B, H, W, C)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if d == 1:
+        return x
+    return _avg_pool(x, int(d), int(rb), int(bc), bool(interpret))
+
+
 def nn_upsample_2d(x: jnp.ndarray, d: int, *, rb: int = K.DEFAULT_RB,
                    bc: int = K.DEFAULT_BC,
                    interpret: Optional[bool] = None) -> jnp.ndarray:
@@ -55,9 +110,4 @@ def nn_upsample_2d(x: jnp.ndarray, d: int, *, rb: int = K.DEFAULT_RB,
         interpret = jax.default_backend() != "tpu"
     if d == 1:
         return x
-    B, H, W, C0 = x.shape
-    bc_ = min(bc, ((C0 + 7) // 8) * 8)
-    x, C0 = _pad_c(x, bc_)
-    rb_ = _plan(H, rb)
-    out = K.nn_upsample_kernel(x, d, rb=rb_, bc=bc_, interpret=interpret)
-    return out[..., :C0]
+    return _nn_upsample(x, int(d), int(rb), int(bc), bool(interpret))

@@ -159,8 +159,16 @@ def main(argv=None) -> int:
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--save-every", type=int, default=100)
     ap.add_argument("--model-par", type=int, default=1)
+    ap.add_argument("--backend", choices=("auto", "pallas", "xla"),
+                    default=None,
+                    help="kernel backend for the training graph "
+                         "(kernels.dispatch process default; the Pallas "
+                         "kernels are grad-capable via custom VJPs)")
     args = ap.parse_args(argv)
 
+    if args.backend is not None:
+        from repro.kernels import dispatch
+        dispatch.set_backend(args.backend)
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     mesh = make_mesh(args.model_par)
     out = train(cfg, args.steps, args.batch, args.seq,

@@ -35,9 +35,13 @@ def sdpa(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
 
     ``q_offset``: absolute position of q[0] (decode: pos; prefill: 0).
     ``kv_len``: optional per-batch valid cache length (B,) for decode.
-    ``backend``: kernel backend (kernels.dispatch); the Pallas flash
-    kernel handles the plain full-sequence case only — per-batch
-    ``kv_len`` masks and nonzero ``q_offset`` stay on the XLA path.
+    ``backend``: kernel backend (kernels.dispatch).  The Pallas lane
+    routes two shapes: the plain full-sequence case to the flash kernel,
+    and the one-token ``kv_len`` cache read (T == 1) to the decode
+    kernel (kernels/decode_attention).  Everything else — nonzero
+    ``q_offset``, multi-token ``kv_len`` masks (the padded ViT's
+    pre-restoration global blocks), explicit ``scale`` — stays on the
+    XLA path.
 
     Long sequences (T > 2*Q_CHUNK) are processed as a lax.scan over query
     blocks so the live logits buffer is (B, C, H, S) instead of the full
@@ -48,6 +52,11 @@ def sdpa(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
              and scale is None)
     if plain and dispatch.use_pallas(backend):
         return dispatch.flash_attention(q, k, v, causal=causal)
+    decode = (kv_len is not None and q.shape[1] == 1 and not causal
+              and isinstance(q_offset, int) and q_offset == 0
+              and scale is None)
+    if decode and dispatch.use_pallas(backend):
+        return dispatch.decode_attention(q, k, v, kv_len)
     T = q.shape[1]
     if T > 2 * Q_CHUNK:
         return _sdpa_blocked(q, k, v, causal=causal, q_offset=q_offset,

@@ -25,6 +25,7 @@ from repro.core import mixed_res as mr
 from repro.core import partition as pt
 from repro.core import vit_backbone as vb
 from repro.core.partition import Partition, RegionPlan
+from repro.kernels import autotune, dispatch
 from repro.models import registry
 from repro.models.config import ModelConfig
 from repro.offload import detection as det
@@ -60,7 +61,7 @@ SIZE_SCALE = (1920 * 1080) / (512 * 512)
 
 # argument order of a mixed executable's layout arrays
 _LAYOUT_ARGS = ("win_src", "win_dst", "low_src", "low_ids", "reuse_ids",
-                "nw")
+                "nw", "out_src", "out_map")
 
 
 @dataclass
@@ -221,10 +222,12 @@ class ServerModel:
                                              capture_beta=capture))
         else:
             def fn(params, img, win_src, win_dst, low_src, low_ids,
-                   reuse_ids, nw, reuse_tiles, ids_key=None):
+                   reuse_ids, nw, out_src, out_map, reuse_tiles,
+                   ids_key=None):
                 layout = {"win_src": win_src, "win_dst": win_dst,
                           "low_src": low_src, "low_ids": low_ids,
-                          "reuse_ids": reuse_ids, "nw": nw}
+                          "reuse_ids": reuse_ids, "nw": nw,
+                          "out_src": out_src, "out_map": out_map}
                 # beta == 0 restores at input — reuse tiles are
                 # restoration-point features and cannot splice there
                 # (infer_wave bars reuse plans from beta=0 waves)
@@ -248,6 +251,9 @@ class ServerModel:
             for _ in ("low_src", "low_ids", "reuse_ids"):
                 sds.append(jax.ShapeDtypeStruct((batch, nR), jnp.int32))
             sds.append(jax.ShapeDtypeStruct((batch,), jnp.int32))
+            for _ in ("out_src", "out_map"):
+                sds.append(jax.ShapeDtypeStruct(
+                    (batch, nR * part.windows_per_full_region), jnp.int32))
             sds.append(jax.ShapeDtypeStruct(
                 (batch, nR, part.windows_per_full_region,
                  part.tokens_low_region, self.cfg.d_model), jnp.float32))
@@ -302,6 +308,12 @@ class ServerModel:
         """
         t0 = time.perf_counter()
         before = self.stats.compiles
+        if dispatch.use_pallas(self.backend):
+            # sweep Pallas block sizes for the grid's attention shapes
+            # before any executable is traced, so the tuned winners are
+            # baked into the compiled graphs (no-op off-TPU or with
+            # REPRO_AUTOTUNE=0; later processes hit the disk cache)
+            self._autotune_kernels(batch_buckets or self.b_buckets)
         space = dict.fromkeys(tuple(p) for p in plan_space)
         self.full_capture = max(
             [self.full_capture] + [cap for (n_low, n_reuse, _, cap)
@@ -315,6 +327,20 @@ class ServerModel:
         if self.device_cache:
             self._warm_tile_ops(space, batch_buckets or self.b_buckets)
         return self.stats.finish_warmup(t0, before, time.perf_counter())
+
+    def _autotune_kernels(self, batch_buckets) -> None:
+        """Autotune window/flash block sizes for every (B bucket, length
+        bucket) attention shape the executable grid can run."""
+        part, cfg = self.part, self.cfg
+        w2 = part.window * part.window
+        T_full = part.grid_h * part.grid_w
+        for b in batch_buckets:
+            for lb in self.length_edges:
+                autotune.tune_window(b, lb * w2, cfg.n_heads,
+                                     cfg.head_dim, w2)
+            autotune.tune_window(b, T_full, cfg.n_heads, cfg.head_dim, w2)
+            autotune.tune_flash(b, T_full, T_full, cfg.n_heads,
+                                cfg.head_dim)
 
     def _warm_tile_ops(self, space, batch_buckets) -> None:
         """Compile the device-resident cache's jitted index ops

@@ -43,6 +43,7 @@ import numpy as np
 
 from repro.core import seq_mixed_res as smr
 from repro.core.partition import bucket_n_low
+from repro.kernels import autotune, dispatch
 from repro.models import registry
 from repro.models.config import ModelConfig
 from repro.models.transformer import LOCAL, ParallelCtx
@@ -68,6 +69,12 @@ class ServeConfig:
     # and are masked out of the responses) — the same batch-bucketing
     # contract as ServerModel.infer_wave on the vision edge
     b_buckets: Tuple[int, ...] = (1, 2, 4, 8)
+    # kernel backend for the prefill/decode executables ("auto" |
+    # "pallas" | "xla" | None = process default, kernels.dispatch).  On
+    # the Pallas lane the decode step runs through the one-token GQA
+    # decode kernel (kernels/decode_attention) instead of the dense
+    # masked sdpa.
+    backend: Optional[str] = None
 
 
 class ServeEngine:
@@ -153,23 +160,30 @@ class ServeEngine:
     # ------------------------------------------------------------------
     def _build_prefill(self, beta: int, mixed: bool) -> Callable:
         cfg, ctx = self.cfg, self.ctx
+        backend = self.sc.backend
+        # dispatch.backend_scope pins every backend=None dispatch site
+        # inside the jit TRACE, so the compiled executable carries the
+        # engine's kernel lane without threading a backend argument
+        # through the whole registry/transformer stack
         if not mixed:
             def fn(params, tokens, state):
-                hidden, state, _ = registry.prefill(
-                    cfg, params, {"tokens": tokens}, state, ctx)
-                from repro.models import transformer as tfm
-                logits = tfm.logits_from_hidden(cfg, params,
-                                                hidden[:, -1:, :], ctx)
+                with dispatch.backend_scope(backend):
+                    hidden, state, _ = registry.prefill(
+                        cfg, params, {"tokens": tokens}, state, ctx)
+                    from repro.models import transformer as tfm
+                    logits = tfm.logits_from_hidden(cfg, params,
+                                                    hidden[:, -1:, :], ctx)
                 return logits, state
         else:
             def fn(params, tokens, state, mix_idx, pos_mix, restore_idx):
                 pack = {"mix_idx": mix_idx, "pos_mix": pos_mix,
                         "restore_idx": restore_idx}
-                hidden, state, _ = smr.mixed_prefill(
-                    cfg, params, tokens, pack, beta, state, ctx)
-                from repro.models import transformer as tfm
-                logits = tfm.logits_from_hidden(cfg, params,
-                                                hidden[:, -1:, :], ctx)
+                with dispatch.backend_scope(backend):
+                    hidden, state, _ = smr.mixed_prefill(
+                        cfg, params, tokens, pack, beta, state, ctx)
+                    from repro.models import transformer as tfm
+                    logits = tfm.logits_from_hidden(cfg, params,
+                                                    hidden[:, -1:, :], ctx)
                 return logits, state
         return fn
 
@@ -207,9 +221,14 @@ class ServeEngine:
             # per-step XLA stall in steady-state serving.  All decode
             # paths index caches dynamically, so one executable serves
             # every position.
+            backend = self.sc.backend
+
             def fn(params, token, pos, state):
-                return registry.decode_step(cfg, params, token, pos, state,
-                                            ctx)
+                # trace-time backend pin: on the Pallas lane the cache
+                # read goes through kernels/decode_attention
+                with dispatch.backend_scope(backend):
+                    return registry.decode_step(cfg, params, token, pos,
+                                                state, ctx)
             self._decode_fns[key] = jax.jit(fn, donate_argnums=(3,))
             self.stats.note_compile(key)
         return self._decode_fns[key]
@@ -250,6 +269,13 @@ class ServeEngine:
                                           max(sc.b_buckets)))
             batch_buckets = tuple(b for b in sc.b_buckets if b <= cover)
         batches = tuple(batch_buckets)
+        if dispatch.use_pallas(sc.backend):
+            # sweep decode-kernel block sizes before any executable is
+            # traced so the winners are baked into the compiled graphs
+            for B in batches:
+                autotune.tune_decode(B, sc.max_len, cfg.n_heads,
+                                     cfg.head_dim, KV=cfg.n_kv_heads,
+                                     dtype=sc.cache_dtype)
         for B in batches:
             state = registry.init_decode_state(cfg, B, sc.max_len,
                                                sc.cache_dtype)

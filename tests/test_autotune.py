@@ -1,0 +1,106 @@
+"""Block-size autotuner (kernels.autotune): cache machinery, disk
+roundtrip, the REPRO_AUTOTUNE=0 escape hatch, and the ops.py default
+fallback.  Sweeps run with ``force=True`` (interpret-mode timings are
+meaningless but exercise the full machinery)."""
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import autotune
+from repro.kernels.window_attention import kernel as wk
+
+
+@pytest.fixture()
+def tmp_cache(tmp_path, monkeypatch):
+    monkeypatch.setenv(autotune.CACHE_ENV, str(tmp_path))
+    autotune.clear_memory_cache()
+    yield tmp_path
+    autotune.clear_memory_cache()
+
+
+def test_bucket_key_rounds_to_pow2():
+    assert autotune.bucket_key(b=3, h=8) == "b=4,h=8"
+    assert autotune.bucket_key(t=100, dt="float32") == "dt=float32,t=128"
+    # stable ordering regardless of kwarg order
+    assert autotune.bucket_key(b=2, a=1) == autotune.bucket_key(a=1, b=2)
+
+
+def test_block_falls_back_to_default(tmp_cache):
+    out = autotune.block("window_attention", "b=1",
+                         {"wb": wk.DEFAULT_WB})
+    assert out == {"wb": wk.DEFAULT_WB}
+
+
+def test_tune_records_and_persists(tmp_cache):
+    calls = []
+
+    def bench(params):
+        calls.append(params["x"])
+        # deterministic fake kernel: candidate 2 is "fastest" only in
+        # the sense that all run; min-of-reps picks whichever, we just
+        # assert a winner lands in the cache
+        return lambda: jnp.zeros((1,))
+
+    won = autotune.tune("fake_kernel", "b=1",
+                        ({"x": 1}, {"x": 2}), bench, force=True, reps=1)
+    assert won in ({"x": 1}, {"x": 2})
+    assert sorted(calls) == [1, 2]
+    # in-memory hit
+    assert autotune.lookup("fake_kernel", "b=1") == won
+    # disk roundtrip: a fresh process (cleared memory) reloads it
+    autotune.clear_memory_cache()
+    assert autotune.lookup("fake_kernel", "b=1") == won
+    data = json.loads(autotune.cache_path().read_text())
+    assert data["fake_kernel"]["b=1"]["params"] == won
+    # a second tune call is a cache hit: bench never runs again
+    calls.clear()
+    assert autotune.tune("fake_kernel", "b=1", ({"x": 1}, {"x": 2}),
+                         bench, force=True) == won
+    assert calls == []
+
+
+def test_tune_skips_invalid_and_failing_candidates(tmp_cache):
+    def bench(params):
+        if params["x"] == 1:
+            return None                      # invalid for the shape
+        if params["x"] == 2:
+            def boom():
+                raise RuntimeError("lowering failed")
+            return boom
+        return lambda: jnp.zeros((1,))
+
+    won = autotune.tune("fake2", "b=1", ({"x": 1}, {"x": 2}, {"x": 3}),
+                        bench, force=True, reps=1)
+    assert won == {"x": 3}
+    # all candidates invalid -> no winner, nothing cached
+    assert autotune.tune("fake3", "b=1", ({"x": 1},), bench,
+                         force=True) is None
+    assert autotune.lookup("fake3", "b=1") is None
+
+
+def test_autotune_disabled_env(tmp_cache, monkeypatch):
+    autotune.record("fake4", "b=1", {"x": 9}, 1.0)
+    monkeypatch.setenv(autotune.ENV_VAR, "0")
+    assert not autotune.enabled()
+    # disabled: lookups miss (defaults win) and sweeps are no-ops
+    assert autotune.lookup("fake4", "b=1") is None
+    assert autotune.block("fake4", "b=1", {"x": 0}) == {"x": 0}
+    assert autotune.tune("fake4", "b=2", ({"x": 1},),
+                         lambda p: (lambda: jnp.zeros((1,))),
+                         force=True) is None
+
+
+def test_tune_window_end_to_end(tmp_cache):
+    """The real window-attention sweep under force: records a winner the
+    ops.py wb=None path then resolves (and the kernel still validates)."""
+    won = autotune.tune_window(1, 64, 2, 16, 16, force=True)
+    assert won is not None and "wb" in won
+    bucket = autotune.window_bucket(1, 64, 2, 16, 16, jnp.float32)
+    assert autotune.block("window_attention", bucket,
+                          {"wb": wk.DEFAULT_WB})["wb"] == won["wb"]
+    # shape-bucketed: a different shape misses and falls back
+    other = autotune.window_bucket(4, 2048, 16, 64, 64, jnp.float32)
+    assert autotune.block("window_attention", other,
+                          {"wb": wk.DEFAULT_WB})["wb"] == wk.DEFAULT_WB

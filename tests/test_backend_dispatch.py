@@ -36,23 +36,87 @@ def _ids(part, n_low):
 # backend resolution
 
 
-def test_resolve_backends():
-    assert dispatch.resolve("xla") == "xla"
-    assert dispatch.resolve("pallas") == "pallas"
-    # auto never picks interpret-mode pallas for the hot path off-TPU
-    expect = "pallas" if jax.default_backend() == "tpu" else "xla"
-    assert dispatch.resolve("auto") == expect
-    # bare default stays grad-safe (kernels define no custom VJP)
-    assert dispatch.resolve(None) == "xla"
-    with pytest.raises(ValueError):
-        dispatch.resolve("cuda")
+def _no_env(monkeypatch):
+    """Neutralise any ambient REPRO_BACKEND (the CI parity lane runs
+    this file WITH it set) for the duration of a resolution test."""
+    monkeypatch.delenv(dispatch.ENV_VAR, raising=False)
+    dispatch.refresh_from_env()
+
+
+def _restore_env(monkeypatch):
+    monkeypatch.undo()
+    dispatch.refresh_from_env()
+    dispatch.set_backend(None)
+
+
+def test_resolve_backends(monkeypatch):
+    try:
+        _no_env(monkeypatch)
+        assert dispatch.resolve("xla") == "xla"
+        assert dispatch.resolve("pallas") == "pallas"
+        # auto never picks interpret-mode pallas for the hot path off-TPU
+        expect = "pallas" if jax.default_backend() == "tpu" else "xla"
+        assert dispatch.resolve("auto") == expect
+        # bare default == "auto" (the kernels are grad-capable via custom
+        # VJPs now, so None no longer has to force XLA for grad safety)
+        assert dispatch.resolve(None) == expect
+        with pytest.raises(ValueError):
+            dispatch.resolve("cuda")
+    finally:
+        _restore_env(monkeypatch)
 
 
 def test_resolve_env_override(monkeypatch):
-    monkeypatch.setenv(dispatch.ENV_VAR, "pallas")
-    assert dispatch.resolve("xla") == "pallas"
-    monkeypatch.setenv(dispatch.ENV_VAR, "xla")
-    assert dispatch.resolve("pallas") == "xla"
+    """REPRO_BACKEND is read ONCE per process (refresh_from_env for
+    tests) and outranks every per-call and process-default choice."""
+    try:
+        monkeypatch.setenv(dispatch.ENV_VAR, "pallas")
+        dispatch.refresh_from_env()
+        assert dispatch.resolve("xla") == "pallas"
+        dispatch.set_backend("xla")
+        assert dispatch.resolve(None) == "pallas"   # env > set_backend
+        monkeypatch.setenv(dispatch.ENV_VAR, "xla")
+        assert dispatch.resolve("pallas") == "pallas"  # stale until refresh
+        dispatch.refresh_from_env()
+        assert dispatch.resolve("pallas") == "xla"
+    finally:
+        _restore_env(monkeypatch)
+
+
+def test_set_backend_process_default(monkeypatch):
+    """set_backend() replaces the "auto" fallback for backend=None calls
+    only; explicit per-call choices still win."""
+    try:
+        _no_env(monkeypatch)
+        dispatch.set_backend("pallas")
+        assert dispatch.resolve(None) == "pallas"
+        assert dispatch.resolve("xla") == "xla"
+        dispatch.set_backend(None)
+        expect = "pallas" if jax.default_backend() == "tpu" else "xla"
+        assert dispatch.resolve(None) == expect
+        with pytest.raises(ValueError):
+            dispatch.set_backend("cuda")
+    finally:
+        _restore_env(monkeypatch)
+
+
+def test_backend_scope_pins_trace(monkeypatch):
+    """backend_scope() pins None-backend dispatch sites for its dynamic
+    extent — the ServeEngine wraps jit traces with it."""
+    try:
+        _no_env(monkeypatch)
+        with dispatch.backend_scope("pallas"):
+            assert dispatch.resolve(None) == "pallas"
+            with dispatch.backend_scope("xla"):
+                assert dispatch.resolve(None) == "xla"
+            assert dispatch.resolve(None) == "pallas"
+        expect = "pallas" if jax.default_backend() == "tpu" else "xla"
+        assert dispatch.resolve(None) == expect
+        # a None scope is a no-op: the current default stays in force
+        with dispatch.backend_scope(None):
+            assert dispatch.resolve(None) == expect
+    finally:
+        _restore_env(monkeypatch)
 
 
 # ---------------------------------------------------------------------------
@@ -140,9 +204,9 @@ def test_fused_qkv_bit_compatible(cfg):
 # sdpa / window_sdpa routing guards
 
 
-def test_sdpa_decode_args_stay_on_xla():
-    """kv_len / q_offset are unsupported by the flash kernel — the
-    dispatcher must fall back to XLA, not mis-route."""
+def test_sdpa_decode_routes_to_decode_kernel():
+    """The one-token kv_len shape (q_len 1, no offset, non-causal) now
+    routes to the Pallas GQA decode kernel; parity with XLA holds."""
     ks = jax.random.split(jax.random.PRNGKey(5), 3)
     q = jax.random.normal(ks[0], (2, 1, 4, 16))
     k = jax.random.normal(ks[1], (2, 32, 4, 16))
@@ -151,6 +215,29 @@ def test_sdpa_decode_args_stay_on_xla():
     ref = attn.sdpa(q, k, v, kv_len=kv_len, backend="xla")
     out = attn.sdpa(q, k, v, kv_len=kv_len, backend="pallas")
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL)
+
+
+def test_sdpa_unsupported_shapes_stay_on_xla():
+    """Shapes the decode kernel does NOT support — multi-token queries
+    with kv_len (padded ViT global blocks) and nonzero q_offset — must
+    fall back to XLA, not mis-route (parity pins the routing)."""
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    k = jax.random.normal(ks[1], (2, 32, 4, 16))
+    v = jax.random.normal(ks[2], (2, 32, 4, 16))
+    kv_len = jnp.array([7, 32])
+    # multi-token query + kv_len mask
+    qm = jax.random.normal(ks[0], (2, 8, 4, 16))
+    np.testing.assert_allclose(
+        np.asarray(attn.sdpa(qm, k, v, kv_len=kv_len, backend="pallas")),
+        np.asarray(attn.sdpa(qm, k, v, kv_len=kv_len, backend="xla")),
+        **TOL)
+    # one-token causal decode with an explicit query offset
+    q1 = jax.random.normal(ks[0], (2, 1, 4, 16))
+    np.testing.assert_allclose(
+        np.asarray(attn.sdpa(q1, k, v, kv_len=kv_len, causal=True,
+                             q_offset=16, backend="pallas")),
+        np.asarray(attn.sdpa(q1, k, v, kv_len=kv_len, causal=True,
+                             q_offset=16, backend="xla")), **TOL)
 
 
 def test_window_sdpa_backend_parity():

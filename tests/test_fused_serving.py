@@ -1,0 +1,204 @@
+"""Fused serving prologue/epilogue kernels (kernels/fused_serving).
+
+Contract: both kernels are pure data movement plus one in-dtype add, so
+they are BIT-identical to the unfused pack/pos-add/restore pipeline —
+at every beta, not just the window-only schedule.  The fused prologue
+zeroes pad windows where the unfused path carries window-0 replicas;
+that divergence is unobservable (window attention is window-local and
+zeroes pads via ``win_valid``, global blocks mask pad keys to exact-zero
+probability via ``kv_len``, and restoration never reads pads), which the
+whole-forward tests pin.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.vitdet_l import SIM
+from repro.core import mixed_res as mr
+from repro.core import partition as pt
+from repro.core import vit_backbone as vb
+from repro.core.partition import LOW, REUSE
+from repro.kernels.fused_serving import ops as fops
+from repro.kernels.fused_serving.ref import (fused_pack_pos_ref,
+                                             fused_restore_ref)
+from repro.models import registry
+
+SIZE = SIM.vit.img_size[0]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = registry.init_params(SIM, jax.random.PRNGKey(0))
+    return params, vb.vit_partition(SIM)
+
+
+# ---------------------------------------------------------------------------
+# kernel vs pure-jnp oracle (bitwise)
+
+
+def test_pack_pos_kernel_matches_ref():
+    rng = np.random.default_rng(0)
+    B, nbank, w2, C = 2, 12, 16, 8
+    bank = jnp.asarray(rng.standard_normal((B, nbank, w2, C)), jnp.float32)
+    pos = jnp.asarray(rng.standard_normal((nbank, w2, C)), jnp.float32)
+    src = jnp.asarray(rng.integers(0, nbank, (B, 7)), jnp.int32)
+    nw = jnp.asarray([5, 7], jnp.int32)
+    out = fops.fused_pack_pos(bank, pos, src, nw)
+    ref = fused_pack_pos_ref(bank, pos, src, nw)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(ref).reshape(B, -1, C))
+    # pad windows are exact zeros
+    np.testing.assert_array_equal(
+        np.asarray(out.reshape(B, 7, w2, C)[0, 5:]), 0.0)
+
+
+def test_restore_kernel_matches_ref():
+    rng = np.random.default_rng(1)
+    window, d = 4, 2
+    w2, dd = window * window, 4
+    B, nw_pad, nout, D = 2, 9, 12, 8
+    win = jnp.asarray(rng.standard_normal((B, nw_pad, w2, D)), jnp.float32)
+    out_src = jnp.asarray(rng.integers(0, nw_pad, (nout,)), jnp.int32)
+    out_map = jnp.asarray(rng.integers(0, dd + 1, (nout,)), jnp.int32)
+    got = fops.fused_restore(win, out_src, out_map, window, d)
+    maps = jnp.asarray(fops.upsample_token_maps(window, d))
+    ref = fused_restore_ref(
+        win, maps, jnp.broadcast_to(out_src[None], (B, nout)),
+        jnp.broadcast_to(out_map[None], (B, nout)))
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(ref).reshape(B, -1, D))
+
+
+def test_upsample_token_maps_match_mixed_res():
+    """maps[k+1] reproduces mixed_res._upsample_low_windows: upsampling
+    one low window and re-blocking equals gathering by the token map."""
+    rng = np.random.default_rng(2)
+    window, d = 8, 2
+    w2, dd = window * window, d * d
+    part = pt.make_partition(16, 16, window, d)
+    low = jnp.asarray(rng.standard_normal((1, 1, window, window, 5)),
+                      jnp.float32)
+    up = mr._upsample_low_windows(low, part)      # (1, 1, dd, w2, 5)
+    flat = low.reshape(1, 1, w2, 5)
+    maps = fops.upsample_token_maps(window, d)
+    for k in range(dd):
+        np.testing.assert_array_equal(np.asarray(up[0, 0, k]),
+                                      np.asarray(flat[0, 0, maps[k + 1]]))
+    np.testing.assert_array_equal(maps[0], np.arange(w2))
+
+
+# ---------------------------------------------------------------------------
+# PlanLayout inverse maps (out_src / out_map)
+
+
+def test_plan_layout_out_maps(setup):
+    _, part = setup
+    nR, dd = part.n_regions, part.windows_per_full_region
+    states = np.zeros((nR,), np.int8)
+    states[[3, 7]] = LOW
+    states[[5]] = REUSE
+    lay = pt.plan_layout(states, 64, part)
+    nw_pad = 64
+    # FULL region r, sub-window k reads packed slot (in packing order)
+    full = [r for r in range(nR) if states[r] == 0]
+    for j, r in enumerate(full):
+        for kk in range(dd):
+            assert lay.out_src[r * dd + kk] == j * dd + kk
+            assert lay.out_map[r * dd + kk] == 0
+    # LOW region j reads its single packed window through map k+1
+    n_full_w = len(full) * dd
+    for j, r in enumerate([3, 7]):
+        for kk in range(dd):
+            assert lay.out_src[r * dd + kk] == n_full_w + j
+            assert lay.out_map[r * dd + kk] == kk + 1
+    # REUSE region j reads the appended tile bank (offset nw_pad)
+    for kk in range(dd):
+        assert lay.out_src[5 * dd + kk] == nw_pad + 0 * dd + kk
+        assert lay.out_map[5 * dd + kk] == 0
+
+
+def test_fused_restore_matches_restore_padded(setup):
+    """On the same packed values the fused gather is bit-identical to
+    mixed_res.restore_padded (the sentinel-scatter epilogue it fuses)."""
+    _, part = setup
+    rng = np.random.default_rng(3)
+    nR, dd, w2 = (part.n_regions, part.windows_per_full_region,
+                  part.tokens_low_region)
+    states = np.zeros((nR,), np.int8)
+    states[[1, 6, 9]] = LOW
+    states[[2, 12]] = REUSE
+    lay = pt.plan_layout(states, 64, part)
+    D = 8
+    tok = jnp.asarray(rng.standard_normal((2, 64 * w2, D)), jnp.float32)
+    tiles = jnp.zeros((2, nR, dd, w2, D), jnp.float32)
+    tiles = tiles.at[:, :2].set(jnp.asarray(
+        rng.standard_normal((2, 2, dd, w2, D)), jnp.float32))
+    ref = mr.restore_padded(tok, part, jnp.asarray(lay.win_dst),
+                            jnp.asarray(lay.low_src),
+                            jnp.asarray(lay.low_ids),
+                            reuse_ids=jnp.asarray(lay.reuse_ids),
+                            reuse_tiles=tiles)
+    got = fops.fused_restore(tok.reshape(2, 64, w2, D),
+                             jnp.asarray(lay.out_src),
+                             jnp.asarray(lay.out_map), part.window,
+                             part.downsample, reuse_tiles=tiles)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# whole-forward parity: fused vs unfused, pallas vs xla
+
+
+def _layout_pair(part, states, lb):
+    lay = pt.plan_layout(states, lb, part)
+    full = {k: jnp.asarray(getattr(lay, k))
+            for k in ("win_src", "win_dst", "low_src", "low_ids",
+                      "reuse_ids", "out_src", "out_map")}
+    full["nw"] = jnp.asarray([lay.nw], jnp.int32)
+    legacy = {k: v for k, v in full.items()
+              if k not in ("out_src", "out_map")}
+    return full, legacy
+
+
+@pytest.mark.parametrize("beta", [1, 3])
+def test_fused_forward_bit_identical_to_unfused(setup, beta):
+    """The fused prologue+epilogue forward is BIT-identical to the
+    unfused padded Pallas forward at every beta (module docstring)."""
+    params, part = setup
+    rng = np.random.default_rng(7)
+    img = jnp.asarray(rng.uniform(0, 1, (1, SIZE, SIZE, 3))
+                      .astype(np.float32))
+    states = np.zeros((part.n_regions,), np.int8)
+    states[[1, 6, 9]] = LOW
+    states[[2, 12]] = REUSE
+    full, legacy = _layout_pair(part, states, 64)
+    tiles = np.zeros((1, part.n_regions, part.windows_per_full_region,
+                      part.tokens_low_region, SIM.d_model), np.float32)
+    tiles[0, :2] = rng.standard_normal(tiles.shape[1:])[:2]
+    tiles = jnp.asarray(tiles)
+    fused = vb.forward_features(SIM, params, img, beta=beta, layout=full,
+                                reuse_tiles=tiles, backend="pallas")
+    unfused = vb.forward_features(SIM, params, img, beta=beta,
+                                  layout=legacy, reuse_tiles=tiles,
+                                  backend="pallas")
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(unfused))
+
+
+def test_fused_forward_matches_exact_xla(setup):
+    """Fused padded Pallas forward vs the exact-length XLA forward —
+    the full cross-backend cross-shape contract (ULP-level)."""
+    params, part = setup
+    rng = np.random.default_rng(8)
+    img = jnp.asarray(rng.uniform(0, 1, (1, SIZE, SIZE, 3))
+                      .astype(np.float32))
+    states = np.zeros((part.n_regions,), np.int8)
+    states[[0, 4, 10]] = LOW
+    fi, li, _ = pt.plan_to_region_ids(states, 3, 0)
+    exact = vb.forward_features(SIM, params, img, jnp.asarray(fi),
+                                jnp.asarray(li), 2, backend="xla")
+    full, _ = _layout_pair(part, states, 64)
+    fused = vb.forward_features(SIM, params, img, beta=2, layout=full,
+                                backend="pallas")
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(exact),
+                               rtol=5e-5, atol=5e-5)
