@@ -63,9 +63,15 @@ def timer(fn, *args, reps: int = 5, warmup: int = 1) -> float:
 # server model (trained once on the synthetic domain, checkpointed)
 
 
-def train_server_params(steps: int = 1800, peak_lr: float = 1e-3,
+def train_server_params(steps: int = 1800, peak_lr: float = 5e-4,
                         batch: int = 2, log_every: int = 200):
-    """Train the sim ViTDet on synthetic clips (analytic GT targets)."""
+    """Train the sim ViTDet on synthetic clips (analytic GT targets).
+
+    peak_lr above ~5e-4 destabilises this run (the loss climbs back
+    after the warmup), leaving detection scores hovering around the
+    serving threshold — which makes every accuracy gate that compares
+    different arithmetic (the quantization calibration bound) flaky.
+    """
     from repro.optim.schedules import warmup_cosine
     params = registry_init()
     opt = adam.init_adam(params)
@@ -114,7 +120,7 @@ def registry_init():
 _SERVER: Optional[ServerModel] = None
 
 
-def get_server(train_steps: int = 1200) -> ServerModel:
+def get_server(train_steps: int = 1800) -> ServerModel:
     """The (cached) trained sim server model."""
     global _SERVER
     if _SERVER is not None:

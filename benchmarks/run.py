@@ -6,8 +6,8 @@ import time
 
 
 def main(argv=None) -> int:
-    from benchmarks import (bench_backbone, bench_multiclient, bench_reuse,
-                            bench_robustness, bench_serving,
+    from benchmarks import (bench_backbone, bench_multiclient, bench_quant,
+                            bench_reuse, bench_robustness, bench_serving,
                             fig5_restoration, fig8_overall, fig9_delays,
                             fig10_codec, fig11_overhead, fig12_ablation,
                             roofline, table2_estimator)
@@ -16,6 +16,7 @@ def main(argv=None) -> int:
     suites = [
         ("bench_backbone", bench_backbone),
         ("bench_multiclient", bench_multiclient),
+        ("bench_quant", bench_quant),
         ("bench_reuse", bench_reuse),
         ("bench_serving", bench_serving),
         ("bench_robustness", bench_robustness),

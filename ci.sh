@@ -18,12 +18,23 @@ REPRO_BACKEND=pallas REPRO_AUTOTUNE=0 python -m pytest -x -q \
 
 echo "== backbone benchmark smoke + regression gate =="
 # --check compares fresh rows against the committed BENCH_backbone.json
-# per (workload, beta, backend) and fails on a >15% regression (rows
-# from a different device kind are skipped); writes to artifacts, never
-# the committed baseline
+# per (workload, beta, backend, dtype) — the fp32 lane plus the
+# compressed int8 / int8+fp16 / fp16 weight lanes — and fails on a >15%
+# regression (rows from a different device kind are skipped); writes to
+# artifacts, never the committed baseline
 mkdir -p benchmarks/artifacts
 python benchmarks/bench_backbone.py --smoke --check \
     --out benchmarks/artifacts/BENCH_backbone.smoke.json
+
+echo "== quantized serving lane smoke + accuracy gate =="
+# --check enforces the compression deployment gates on the trained sim
+# server: an int8 point reaches >=3.5x compression, the calibration
+# gate SHIPS a point whose rendering-F1 delta stays <= 0.005 on every
+# calibration scenario (parkS, driveN), the quantized ServerModel
+# compiles the identical executable grid (no new keys), and serving
+# after warmup incurs zero steady-state compiles
+python benchmarks/bench_quant.py --smoke --check \
+    --out benchmarks/artifacts/BENCH_quant.smoke.json
 
 echo "== multi-client serving bench smoke (2 clients) =="
 python benchmarks/bench_multiclient.py --smoke --clients 1 2 \

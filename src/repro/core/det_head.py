@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from repro.models import layers as L
 from repro.models.config import ModelConfig
+from repro.quant import qtensor as qt
 
 STRIDES = (8, 16, 32)
 
@@ -28,7 +29,12 @@ def _conv_init(key, k, cin, cout, dtype):
 
 
 def conv2d(x, w, b=None):
-    """NHWC conv, SAME padding."""
+    """NHWC conv, SAME padding.  int8 QuantTensor weights dequantize at
+    entry (convs are a small share of backbone FLOPs; the int8 win there
+    is the 4x smaller resident weights, not an int8 conv kernel)."""
+    if isinstance(w, qt.QuantTensor):
+        w = w.dequant()
+        x = x.astype(w.dtype)
     out = jax.lax.conv_general_dilated(
         x, w, window_strides=(1, 1), padding="SAME",
         dimension_numbers=("NHWC", "HWIO", "NHWC"))

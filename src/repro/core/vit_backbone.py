@@ -34,6 +34,7 @@ from repro.kernels import dispatch
 from repro.models import attention as attn
 from repro.models import layers as L
 from repro.models.config import ModelConfig
+from repro.quant import qtensor as qt
 
 
 def vit_partition(cfg: ModelConfig) -> Partition:
@@ -101,7 +102,7 @@ def embed_patches(cfg: ModelConfig, params, image: jnp.ndarray,
         image = mr.downsample_grid(image, downsample, backend=backend)
     p = params["patch_embed"]
     patches = patchify(image, cfg.vit.patch_size)
-    return patches @ p["w"] + p["b"]
+    return qt.matmul(patches, p["w"]) + p["b"]
 
 
 # ---------------------------------------------------------------------------
@@ -306,7 +307,7 @@ def forward_features(cfg: ModelConfig, params, image: jnp.ndarray,
             "cannot capture tiles before the restoration point"
 
     x_full = embed_patches(cfg, params, image, backend=backend)  # B,Hp,Wp,D
-    pos = params["pos_emb"]
+    pos = qt.asarray(params["pos_emb"])
     kv_len = win_valid = None
     # fused serving lane (kernels.fused_serving): pack + pos-embed +
     # pad zeroing fold into one prologue kernel and the restoration

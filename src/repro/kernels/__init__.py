@@ -1,6 +1,6 @@
 """Pallas TPU kernels for the compute hot-spots of the system.
 
-Five kernels, each a package ``<name>/{kernel.py, ops.py, ref.py}``:
+Each kernel is a package ``<name>/{kernel.py, ops.py, ref.py}``:
 
   window_attention   ViTDet window attention over the window-blocked
                      mixed-resolution sequence — the paper's §III hot path.
@@ -12,6 +12,9 @@ Five kernels, each a package ``<name>/{kernel.py, ops.py, ref.py}``:
                      inter-chunk state, sequential grid over chunks.
   mixed_res_pool     d x d average-pool patch downsampling (mixed-res
                      packing hot spot, §III-A).
+  int8_matmul        int8 x int8 -> int32 blocked GEMM with per-channel
+                     dequant epilogue — the quantized weight lane
+                     (repro.quant) for QKV/MLP/head projections.
 
 TPU is the TARGET (pl.pallas_call + BlockSpec VMEM tiling, MXU-aligned
 block shapes); on this CPU container every kernel is validated with

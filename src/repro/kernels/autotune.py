@@ -37,6 +37,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 ENV_VAR = "REPRO_AUTOTUNE"
 CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
@@ -48,14 +49,32 @@ FLASH_CANDIDATES = ({"bq": 128, "bk": 128}, {"bq": 128, "bk": 256},
                     {"bq": 512, "bk": 512})
 WINDOW_CANDIDATES = ({"wb": 4}, {"wb": 8}, {"wb": 16}, {"wb": 32})
 DECODE_CANDIDATES = ({"bs": 256}, {"bs": 512}, {"bs": 1024})
+MATMUL_CANDIDATES = ({"bm": 128, "bn": 128, "bk": 128},
+                     {"bm": 256, "bn": 128, "bk": 128},
+                     {"bm": 128, "bn": 256, "bk": 256},
+                     {"bm": 256, "bn": 256, "bk": 256},
+                     {"bm": 512, "bn": 256, "bk": 256})
 
 _LOCK = threading.Lock()
 _TABLE: Dict[str, Dict[str, Dict]] = {}     # kernel -> bucket_key -> entry
 _LOADED_FOR: Optional[str] = None           # device kind the table is for
 
+_ENABLED: bool = os.environ.get(ENV_VAR, "1") != "0"
+
+
+def refresh_from_env() -> bool:
+    """Re-read ``REPRO_AUTOTUNE`` (tests that monkeypatch the env).
+
+    ``enabled()`` sits on the kernel-dispatch hot path (every ops.py
+    block-size resolution calls ``lookup``), so the env var is read once
+    at import and cached — same convention as kernels.dispatch."""
+    global _ENABLED
+    _ENABLED = os.environ.get(ENV_VAR, "1") != "0"
+    return _ENABLED
+
 
 def enabled() -> bool:
-    return os.environ.get(ENV_VAR, "1") != "0"
+    return _ENABLED
 
 
 def device_kind() -> str:
@@ -227,6 +246,15 @@ def decode_bucket(B: int, S: int, H: int, KV: int, Dh: int, dtype) -> str:
                       dt=jnp.dtype(dtype).name)
 
 
+def matmul_bucket(M: int, N: int, K: int, act_dtype, weight_dtype) -> str:
+    """GEMM bucket keyed on BOTH operand dtypes: the int8 lane and a
+    half-precision lane have different MXU tile economics, so an int8
+    sweep's winner must never answer an fp32/fp16 lookup (or vice
+    versa) — the dtype-separation contract tests/test_autotune pins."""
+    return bucket_key(m=M, n=N, k=K, adt=jnp.dtype(act_dtype).name,
+                      wdt=jnp.dtype(weight_dtype).name)
+
+
 def tune_window(B: int, T: int, H: int, Dh: int, window: int, *,
                 KV: Optional[int] = None, dtype=jnp.float32,
                 force: bool = False) -> Optional[Dict]:
@@ -284,3 +312,24 @@ def tune_decode(B: int, S: int, H: int, Dh: int, *,
 
     return tune("decode_attention", decode_bucket(B, S, H, KV, Dh, dtype),
                 DECODE_CANDIDATES, bench, force=force)
+
+
+def tune_matmul(M: int, N: int, K: int, *, out_dtype=jnp.float32,
+                force: bool = False) -> Optional[Dict]:
+    """Sweep the int8 GEMM block sizes for an (M, N, K) shape bucket."""
+    from repro.kernels.int8_matmul import ops as _mm
+    rng = np.random.default_rng(0)
+    xq = jnp.asarray(rng.integers(-127, 128, (M, K), dtype=np.int8))
+    wq = jnp.asarray(rng.integers(-127, 128, (K, N), dtype=np.int8))
+    sx = jnp.ones((M,), jnp.float32)
+    sw = jnp.ones((N,), jnp.float32)
+
+    def bench(params):
+        return lambda: _mm.int8_matmul(xq, wq, sx, sw,
+                                       out_dtype=out_dtype,
+                                       bm=params["bm"], bn=params["bn"],
+                                       bk=params["bk"])
+
+    return tune("int8_matmul",
+                matmul_bucket(M, N, K, jnp.int8, jnp.int8),
+                MATMUL_CANDIDATES, bench, force=force)

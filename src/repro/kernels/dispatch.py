@@ -43,14 +43,21 @@ import jax.numpy as jnp
 from repro.kernels.decode_attention import ops as _decode
 from repro.kernels.flash_attention import ops as _flash
 from repro.kernels.fused_serving import ops as _fused
+from repro.kernels.int8_matmul import ops as _int8
+from repro.kernels.int8_matmul import ref as _int8_ref
 from repro.kernels.mixed_res_pool import ops as _pool
 from repro.kernels.window_attention import ops as _win
 
 BACKENDS = ("auto", "pallas", "xla")
 ENV_VAR = "REPRO_BACKEND"
 
+QUANT_MODES = ("native", "dequant")
+QUANT_ENV_VAR = "REPRO_QUANT"
+
 _ENV_BACKEND: Optional[str] = None      # cached env override ('' -> None)
 _PROCESS_BACKEND: Optional[str] = None  # set_backend() default
+_ENV_QUANT: Optional[str] = None        # cached REPRO_QUANT override
+_PROCESS_QUANT: Optional[str] = None    # set_quant_mode() default
 
 
 def _check(backend: str) -> str:
@@ -60,11 +67,23 @@ def _check(backend: str) -> str:
     return backend
 
 
+def _check_quant(mode: str) -> str:
+    if mode not in QUANT_MODES:
+        raise ValueError(f"quant mode must be one of {QUANT_MODES}, got "
+                         f"{mode!r}")
+    return mode
+
+
 def refresh_from_env() -> Optional[str]:
-    """Re-read ``REPRO_BACKEND`` (tests that monkeypatch the env)."""
-    global _ENV_BACKEND
+    """Re-read the cached env overrides — ``REPRO_BACKEND`` and
+    ``REPRO_QUANT`` together (tests that monkeypatch either env).  Both
+    are resolved on hot paths (every attention / quantized-matmul call
+    in a traced forward), so neither is consulted per call."""
+    global _ENV_BACKEND, _ENV_QUANT
     env = os.environ.get(ENV_VAR)
     _ENV_BACKEND = _check(env) if env else None
+    qenv = os.environ.get(QUANT_ENV_VAR)
+    _ENV_QUANT = _check_quant(qenv) if qenv else None
     return _ENV_BACKEND
 
 
@@ -110,6 +129,59 @@ def resolve(backend: Optional[str] = None) -> str:
 
 def use_pallas(backend: Optional[str] = None) -> bool:
     return resolve(backend) == "pallas"
+
+
+# ---------------------------------------------------------------------------
+# quantized-execution mode — mirrors the backend machinery exactly.
+#
+#   "native"   QuantTensor matmuls run the int8 x int8 -> int32 lane
+#              (Pallas kernel on the pallas backend, the
+#              ``preferred_element_type=int32`` dot_general elsewhere)
+#              with dynamic per-row activation quantization.
+#   "dequant"  weights are dequantized to float and the plain GEMM runs
+#              — the numerically-transparent oracle the parity tests
+#              compare the native lane against.
+#
+# Precedence, strongest first (same contract as backends):
+#
+#   env REPRO_QUANT (cached) > per-call ``mode`` arg > set_quant_mode()
+#   > "native"
+
+
+def set_quant_mode(mode: Optional[str]) -> None:
+    """Process-wide default quant mode for ``mode=None`` call sites.
+    ``None`` restores the built-in ``"native"``."""
+    global _PROCESS_QUANT
+    _PROCESS_QUANT = _check_quant(mode) if mode is not None else None
+
+
+def get_quant_mode() -> Optional[str]:
+    """The current process default (None when unset)."""
+    return _PROCESS_QUANT
+
+
+@contextlib.contextmanager
+def quant_scope(mode: Optional[str]):
+    """Temporarily set the process quant mode (trace-time scoping, the
+    ``backend_scope`` twin).  A ``None`` scope is a no-op."""
+    if mode is None:
+        yield
+        return
+    prev = _PROCESS_QUANT
+    set_quant_mode(mode)
+    try:
+        yield
+    finally:
+        set_quant_mode(prev)
+
+
+def resolve_quant(mode: Optional[str] = None) -> str:
+    """Resolve a quant-mode request to {"native", "dequant"}."""
+    if _ENV_QUANT is not None:
+        return _ENV_QUANT
+    if mode is None:
+        return _PROCESS_QUANT if _PROCESS_QUANT is not None else "native"
+    return _check_quant(mode)
 
 
 refresh_from_env()
@@ -178,3 +250,20 @@ def fused_restore(windows: jnp.ndarray, out_src: jnp.ndarray,
     kernel.  ``windows``: packed activations (B, nw_pad, w2, D)."""
     return _fused.fused_restore(windows, out_src, out_map, window,
                                 downsample, reuse_tiles=reuse_tiles)
+
+
+def int8_matmul(xq: jnp.ndarray, wq: jnp.ndarray, sx: jnp.ndarray,
+                sw: jnp.ndarray, *, out_dtype=jnp.float32,
+                backend: Optional[str] = None) -> jnp.ndarray:
+    """Quantized GEMM for the int8 weight lane (repro.quant.qtensor).
+
+    xq: (M, K) int8 row-quantized activations; wq: (K, N) int8
+    per-output-channel weights; sx: (M,) / sw: (N,) f32 scales.  The
+    pallas backend runs the blocked int8 x int8 -> int32 kernel
+    (kernels/int8_matmul, autotuned per-dtype block sizes); the XLA
+    path is the ``dot_general(..., preferred_element_type=int32)``
+    reference — bit-exact against the kernel.
+    """
+    if use_pallas(backend):
+        return _int8.int8_matmul(xq, wq, sx, sw, out_dtype=out_dtype)
+    return _int8_ref.int8_matmul_ref(xq, wq, sx, sw, out_dtype=out_dtype)

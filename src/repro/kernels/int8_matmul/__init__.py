@@ -1,0 +1,4 @@
+from repro.kernels.int8_matmul.ops import int8_matmul
+from repro.kernels.int8_matmul.ref import int8_matmul_ref
+
+__all__ = ["int8_matmul", "int8_matmul_ref"]

@@ -1,0 +1,84 @@
+"""jit'd entry point for the int8 GEMM kernel.
+
+Pads (M, K, N) up to the resolved block sizes — zero padding is exact
+for integer accumulation — dispatches the Pallas kernel (interpret mode
+off-TPU) and slices the result back to the caller's shape.  Block sizes
+come from the per-dtype autotune cache when not given explicitly
+(``autotune.matmul_bucket`` keys carry both operand dtypes, so int8
+winners never leak into a hypothetical fp lane and vice versa).
+
+Inference-only: the quantized weight lane is a serving artifact, so no
+custom VJP — training always runs the float weights.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import autotune
+from repro.kernels.int8_matmul import kernel as K
+
+
+def _pow2ceil(n: int) -> int:
+    p = 1
+    while p < max(1, n):
+        p *= 2
+    return p
+
+
+def _impl(xq, wq, sx, sw, out_dtype, bm, bn, bk, interpret):
+    M, Kd = xq.shape
+    N = wq.shape[1]
+    Mp = -(-M // bm) * bm
+    Kp = -(-Kd // bk) * bk
+    Np = -(-N // bn) * bn
+    if (Mp, Kp) != (M, Kd):
+        xq = jnp.pad(xq, ((0, Mp - M), (0, Kp - Kd)))
+    if (Kp, Np) != (Kd, N):
+        wq = jnp.pad(wq, ((0, Kp - Kd), (0, Np - N)))
+    sx2 = jnp.pad(sx, (0, Mp - M)).reshape(Mp, 1).astype(jnp.float32)
+    sw2 = jnp.pad(sw, (0, Np - N)).reshape(1, Np).astype(jnp.float32)
+    out = K.int8_matmul_kernel(xq, wq, sx2, sw2,
+                               out_dtype=jnp.dtype(out_dtype),
+                               bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return out[:M, :N]
+
+
+_entry = jax.jit(_impl, static_argnums=(4, 5, 6, 7, 8))
+
+
+def int8_matmul(xq: jnp.ndarray, wq: jnp.ndarray,
+                sx: jnp.ndarray, sw: jnp.ndarray, *,
+                out_dtype=jnp.float32,
+                bm: Optional[int] = None, bn: Optional[int] = None,
+                bk: Optional[int] = None,
+                interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Quantized GEMM: ``(xq * sx[:, None]) @ (wq * sw[None, :])`` with
+    the contraction done in int8 x int8 -> int32.
+
+    xq: (M, K) int8 row-quantized activations; wq: (K, N) int8
+    per-output-channel weights; sx: (M,) f32; sw: (N,) f32.  Block sizes
+    default to the autotuned winner for this (shape, dtypes) bucket.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    M, Kd = xq.shape
+    N = wq.shape[1]
+    if bm is None or bn is None or bk is None:
+        blocks = autotune.block(
+            "int8_matmul",
+            autotune.matmul_bucket(M, N, Kd, xq.dtype, wq.dtype),
+            {"bm": K.DEFAULT_BM, "bn": K.DEFAULT_BN, "bk": K.DEFAULT_BK})
+        bm = bm if bm is not None else blocks["bm"]
+        bn = bn if bn is not None else blocks["bn"]
+        bk = bk if bk is not None else blocks["bk"]
+    # clamp blocks to the padded problem so tiny shapes don't inflate
+    # to a full default tile (int8 MXU tiles want >= (32, 128) but the
+    # kernel is shape-correct at any multiple-of-8 block)
+    bm = min(int(bm), max(32, _pow2ceil(M)))
+    bn = min(int(bn), max(128, _pow2ceil(N)))
+    bk = min(int(bk), max(128, _pow2ceil(Kd)))
+    return _entry(xq, wq, sx, sw, jnp.dtype(out_dtype).name,
+                  bm, bn, bk, bool(interpret))

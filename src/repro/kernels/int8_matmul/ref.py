@@ -1,0 +1,23 @@
+"""Pure-jnp reference for the int8 GEMM — the XLA fallback lane.
+
+Same contract as ops.int8_matmul: int8 x int8 accumulated in int32
+(``preferred_element_type`` keeps XLA from silently widening through
+float), per-row/per-channel scales applied in float32, cast to the
+requested output dtype.  Bit-exact against the Pallas kernel (integer
+accumulation has no rounding; the float epilogue is the same three
+operations in the same order).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def int8_matmul_ref(xq: jnp.ndarray, wq: jnp.ndarray,
+                    sx: jnp.ndarray, sw: jnp.ndarray,
+                    out_dtype=jnp.float32) -> jnp.ndarray:
+    """xq: (M, K) int8; wq: (K, N) int8; sx: (M,) f32; sw: (N,) f32."""
+    acc = jax.lax.dot_general(xq, wq, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.int32)
+    out = acc.astype(jnp.float32) * sx[:, None] * sw[None, :]
+    return out.astype(out_dtype)

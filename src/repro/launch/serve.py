@@ -37,6 +37,11 @@ def main(argv=None) -> int:
                     help="with --mixed: rotate the pooled spans across K "
                     "distinct layouts — same n_low, different content, so "
                     "requests split into K waves (the wave-key fix demo)")
+    ap.add_argument("--quant", choices=("fp32", "fp16", "bf16", "int8"),
+                    default="fp32",
+                    help="serving weight lane: int8 quantizes the "
+                    "projection weights (per-output-channel, "
+                    "repro.quant), fp16/bf16 cast the whole tree")
     args = ap.parse_args(argv)
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
@@ -46,6 +51,15 @@ def main(argv=None) -> int:
         args.mixed = False
 
     params = registry.init_params(cfg, jax.random.PRNGKey(0))
+    if args.quant != "fp32":
+        from repro.quant import DTYPES, qtensor, quantize_lm_params
+        bytes0 = qtensor.tree_bytes(params)
+        if args.quant == "int8":
+            params = quantize_lm_params(params)
+        else:
+            params = qtensor.cast_tree(params, DTYPES[args.quant])
+        print(f"[serve] quant={args.quant}: {bytes0 / 2**20:.1f} MiB -> "
+              f"{qtensor.tree_bytes(params) / 2**20:.1f} MiB")
     sc = ServeConfig(max_batch=args.batch,
                      max_len=args.prompt_len + args.max_new + 8,
                      buckets=(args.prompt_len,))

@@ -6,16 +6,44 @@ preallocated to the max sequence length and updated in place with
 """
 from __future__ import annotations
 
-from typing import Optional
+import contextlib
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import dispatch
 from repro.models.config import ModelConfig
 from repro.models.layers import apply_rope, dense_init, rms_norm
+from repro.quant import qtensor as qt
 
 NEG_INF = -2.0 ** 30   # large-finite: avoids NaN rows for fully-masked queries
+
+
+# ---------------------------------------------------------------------------
+# head-importance tap (quant.prune calibration)
+#
+# When armed, every EAGER attention_forward appends the per-head mean
+# |output| (pre-w_o) to the store — the ViT backbone makes exactly
+# n_layers attention calls per forward, in layer order, so the store
+# reshapes to (frames, layers, heads).  Traced calls never record (the
+# tap reads concrete values); the serving/training hot paths see one
+# ``is None`` check.
+
+_HEAD_TAP: Optional[List[np.ndarray]] = None
+
+
+@contextlib.contextmanager
+def head_tap(store: List[np.ndarray]):
+    """Arm the per-head output-magnitude tap for eager calibration."""
+    global _HEAD_TAP
+    prev = _HEAD_TAP
+    _HEAD_TAP = store
+    try:
+        yield store
+    finally:
+        _HEAD_TAP = prev
 
 
 # ---------------------------------------------------------------------------
@@ -171,7 +199,9 @@ def _project_qkv(cfg: ModelConfig, p, x, positions, rope: bool = True):
         # decode: the fused-weight concat below copies the whole QKV
         # weight per step, which dominates a single-token GEMV — keep
         # the three small GEMMs here.
-        q, k, v = x @ p["w_q"], x @ p["w_k"], x @ p["w_v"]
+        q = qt.matmul(x, p["w_q"])
+        k = qt.matmul(x, p["w_k"])
+        v = qt.matmul(x, p["w_v"])
         if cfg.attention_bias:
             q, k, v = q + p["b_q"], k + p["b_k"], v + p["b_v"]
     else:
@@ -179,9 +209,10 @@ def _project_qkv(cfg: ModelConfig, p, x, positions, rope: bool = True):
         # each output column depends only on its own weight column, so
         # the split results are bit-identical to the separate GEMMs
         # (test_backend_dispatch.py asserts this) while the MXU sees
-        # one big matmul.
-        w_qkv = jnp.concatenate([p["w_q"], p["w_k"], p["w_v"]], axis=1)
-        qkv = x @ w_qkv
+        # one big matmul.  concat_out fuses int8 QuantTensors the same
+        # way (per-output-channel scales concatenate with the columns).
+        w_qkv = qt.concat_out([p["w_q"], p["w_k"], p["w_v"]])
+        qkv = qt.matmul(x, w_qkv)
         if cfg.attention_bias:
             qkv = qkv + jnp.concatenate([p["b_q"], p["b_k"], p["b_v"]])
         q, k, v = jnp.split(qkv, (cfg.q_dim, cfg.q_dim + cfg.kv_dim),
@@ -221,7 +252,11 @@ def attention_forward(cfg: ModelConfig, p, x, positions, *,
                           backend=backend)
     else:
         out = sdpa(q, k, v, causal=causal, kv_len=kv_len, backend=backend)
-    out = out.reshape(x.shape[0], x.shape[1], cfg.q_dim) @ p["w_o"]
+    if _HEAD_TAP is not None and not isinstance(out, jax.core.Tracer):
+        _HEAD_TAP.append(np.asarray(jnp.mean(
+            jnp.abs(out.astype(jnp.float32)), axis=(0, 1, 3))))
+    out = qt.matmul(out.reshape(x.shape[0], x.shape[1], cfg.q_dim),
+                    p["w_o"])
     if cfg.attention_bias:
         out = out + p["b_o"]
     return out
@@ -243,7 +278,8 @@ def attention_prefill(cfg: ModelConfig, p, x, positions, cache, *,
                                           (0, 0, 0, 0)),
     }
     out = sdpa(q, k, v, causal=True)
-    out = out.reshape(x.shape[0], x.shape[1], cfg.q_dim) @ p["w_o"]
+    out = qt.matmul(out.reshape(x.shape[0], x.shape[1], cfg.q_dim),
+                    p["w_o"])
     if cfg.attention_bias:
         out = out + p["b_o"]
     return out, cache
@@ -263,7 +299,7 @@ def attention_decode(cfg: ModelConfig, p, x, pos, cache, *,
     }
     kv_len = jnp.full((B,), pos + 1)
     out = sdpa(q, cache["k"], cache["v"], kv_len=kv_len)
-    out = out.reshape(B, 1, cfg.q_dim) @ p["w_o"]
+    out = qt.matmul(out.reshape(B, 1, cfg.q_dim), p["w_o"])
     if cfg.attention_bias:
         out = out + p["b_o"]
     return out, cache

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.config import ModelConfig
+from repro.quant import qtensor as qt
 
 # ---------------------------------------------------------------------------
 # scan with a global unroll switch (cost-probe mode)
@@ -147,10 +148,10 @@ def init_mlp(cfg: ModelConfig, key, dtype, d_ff: Optional[int] = None):
 
 def apply_mlp(cfg: ModelConfig, p, x):
     if "w_gate" in p:
-        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
-        return h @ p["w_down"]
-    h = jax.nn.gelu(x @ p["w_up"] + p["b_up"], approximate=True)
-    return h @ p["w_down"] + p["b_down"]
+        h = jax.nn.silu(qt.matmul(x, p["w_gate"])) * qt.matmul(x, p["w_up"])
+        return qt.matmul(h, p["w_down"])
+    h = jax.nn.gelu(qt.matmul(x, p["w_up"]) + p["b_up"], approximate=True)
+    return qt.matmul(h, p["w_down"]) + p["b_down"]
 
 
 # ---------------------------------------------------------------------------

@@ -27,6 +27,7 @@ from repro.core import vit_backbone as vb
 from repro.core.partition import Partition, RegionPlan
 from repro.kernels import autotune, dispatch
 from repro.models import registry
+from repro.quant import qtensor as qt
 from repro.models.config import ModelConfig
 from repro.offload import detection as det
 from repro.offload import motion as mo
@@ -131,9 +132,27 @@ class ServerModel:
                  b_buckets: Tuple[int, ...] = pt.BATCH_BUCKETS,
                  device_cache: bool = True,
                  n_length_buckets: int = pt.N_LENGTH_BUCKETS,
-                 donate_frames: bool = True):
+                 donate_frames: bool = True,
+                 quant=None, calib_frames=None):
+        # ``quant``: optional quant.ptq.QuantSpec — compress the float
+        # tree (int8 / half-cast / head-pruned) BEFORE any executable is
+        # built, so the whole grid compiles against the compressed
+        # params and the grid keys never change.  ``calib_frames`` feeds
+        # head scoring when the spec prunes.  Pre-compressed trees (the
+        # calibration gate builds candidates itself) pass quant=None.
+        self.quant_report = None
+        if quant is not None:
+            from repro.quant import ptq
+            cfg, params, self.quant_report = ptq.compress(
+                cfg, params, quant, calib_frames=calib_frames)
         self.cfg = cfg
         self.params = params
+        # activation dtype of the serving grid.  Detected from the tree
+        # rather than a spec so pre-compressed params work: cast_tree
+        # always casts the patch-embed bias (QuantTensor scales stay f32
+        # and are useless as a probe), and activations take this dtype
+        # at the very first matmul.
+        self.act_dtype = jnp.dtype(params["patch_embed"]["b"].dtype)
         self.part = vb.vit_partition(cfg)
         self.top_k = top_k
         self.score_thresh = score_thresh
@@ -256,7 +275,8 @@ class ServerModel:
                     (batch, nR * part.windows_per_full_region), jnp.int32))
             sds.append(jax.ShapeDtypeStruct(
                 (batch, nR, part.windows_per_full_region,
-                 part.tokens_low_region, self.cfg.d_model), jnp.float32))
+                 part.tokens_low_region, self.cfg.d_model),
+                self.act_dtype))
         return sds
 
     def _get_fn(self, lb: int, beta: int, capture: int = 0,
@@ -334,13 +354,29 @@ class ServerModel:
         part, cfg = self.part, self.cfg
         w2 = part.window * part.window
         T_full = part.grid_h * part.grid_w
-        for b in batch_buckets:
+        dt = self.act_dtype          # per-dtype buckets: an fp16 grid
+        for b in batch_buckets:      # must never reuse fp32 winners
             for lb in self.length_edges:
                 autotune.tune_window(b, lb * w2, cfg.n_heads,
-                                     cfg.head_dim, w2)
-            autotune.tune_window(b, T_full, cfg.n_heads, cfg.head_dim, w2)
+                                     cfg.head_dim, w2, dtype=dt)
+            autotune.tune_window(b, T_full, cfg.n_heads, cfg.head_dim,
+                                 w2, dtype=dt)
             autotune.tune_flash(b, T_full, T_full, cfg.n_heads,
-                                cfg.head_dim)
+                                cfg.head_dim, dtype=dt)
+        if any(isinstance(l, qt.QuantTensor)
+               for l in jax.tree_util.tree_leaves(
+                   self.params,
+                   is_leaf=lambda x: isinstance(x, qt.QuantTensor))):
+            # int8 lane: sweep the GEMM blocks for the grid's matmul
+            # shapes (fused QKV / w_o / MLP at every sequence length)
+            qkv_n = cfg.q_dim + 2 * cfg.kv_dim
+            shapes = {(cfg.d_model, qkv_n), (cfg.q_dim, cfg.d_model),
+                      (cfg.d_model, cfg.d_ff), (cfg.d_ff, cfg.d_model)}
+            for b in batch_buckets:
+                for T in {T_full} | {lb * w2 for lb in self.length_edges}:
+                    for (K, N) in shapes:
+                        autotune.tune_matmul(b * T, N, K,
+                                             out_dtype=self.act_dtype)
 
     def _warm_tile_ops(self, space, batch_buckets) -> None:
         """Compile the device-resident cache's jitted index ops
@@ -352,7 +388,7 @@ class ServerModel:
         part = self.part
         tile = (part.n_regions, part.windows_per_full_region,
                 part.tokens_low_region, self.cfg.d_model)
-        dummy = jnp.zeros(tile, jnp.float32)
+        dummy = jnp.zeros(tile, self.act_dtype)
         if any(n_reuse for (_, n_reuse, _, _) in space):
             # reuse gathers are (n_regions,)-padded — one shape for all
             mr.gather_tiles(dummy, jnp.zeros((part.n_regions,),
@@ -360,10 +396,10 @@ class ServerModel:
         if any(cap for (_, _, _, cap) in space) or \
                 any(n_low or n_reuse for (n_low, n_reuse, _, _) in space):
             # mixed executables always capture, so take/refresh are hot
-            mr.refresh_tiles(jnp.zeros(tile, jnp.float32), dummy)
+            mr.refresh_tiles(jnp.zeros(tile, self.act_dtype), dummy)
             for b in batch_buckets:
-                mr.take_sample_tiles(jnp.zeros((b,) + tile, jnp.float32),
-                                     np.int32(0))
+                mr.take_sample_tiles(
+                    jnp.zeros((b,) + tile, self.act_dtype), np.int32(0))
 
     def default_plan_space(self, betas: Sequence[int],
                            reuse_edges: Sequence[int] = (0,),
@@ -560,7 +596,7 @@ class ServerModel:
             z = jnp.zeros((Bp, part.n_regions,
                            part.windows_per_full_region,
                            part.tokens_low_region, self.cfg.d_model),
-                          jnp.float32)
+                          self.act_dtype)
             self._zero_tiles[Bp] = z
         return z
 
@@ -592,13 +628,15 @@ class ServerModel:
                 host_bytes += g[:l.n_reuse].nbytes
             gathered.append(g)
         if host_bytes == 0:
-            rows = [g if g is not None else jnp.zeros(tile, jnp.float32)
+            rows = [g if g is not None
+                    else jnp.zeros(tile, self.act_dtype)
                     for g in gathered]
             rows += [rows[0]] * npad
             return jnp.stack(rows)
         self.stats.tile_bytes_h2d += host_bytes
         rows = [np.asarray(g) if g is not None
-                else np.zeros(tile, np.float32) for g in gathered]
+                else np.zeros(tile, np.dtype(self.act_dtype))
+                for g in gathered]
         rows += [rows[0]] * npad
         return jnp.asarray(np.stack(rows))
 

@@ -1,0 +1,33 @@
+"""Post-training quantization & head pruning for the serving lane.
+
+  qtensor    QuantTensor pytree, quant-aware matmul, tree utilities
+  ptq        QuantSpec + compress(): the (weight dtype, act dtype,
+             pruned heads) point applied to a ViTDet parameter tree
+  prune      head scoring (calibration-frame tap) + re-packing
+  calibrate  the accuracy gate: rendering-F1 delta bound on the
+             calibration scenarios decides which point ships
+
+``prune`` and ``calibrate`` import model/serving modules, so they load
+lazily — ``qtensor`` must stay importable from models.attention and
+models.layers without cycles.
+"""
+from repro.quant.ptq import (DEFAULT_CANDIDATES, DTYPES,  # noqa: F401
+                             QuantSpec, compress,
+                             quantize_lm_params, quantize_vitdet_params)
+from repro.quant.qtensor import (QuantTensor, asarray,  # noqa: F401
+                                 cast_tree, concat_out, matmul,
+                                 quantize_weight, tree_bytes)
+
+__all__ = [
+    "QuantTensor", "QuantSpec", "DEFAULT_CANDIDATES", "DTYPES",
+    "quantize_weight", "matmul", "asarray", "concat_out", "cast_tree",
+    "tree_bytes", "compress", "quantize_vitdet_params",
+    "quantize_lm_params", "prune", "calibrate",
+]
+
+
+def __getattr__(name):
+    if name in ("prune", "calibrate"):
+        import importlib
+        return importlib.import_module(f"repro.quant.{name}")
+    raise AttributeError(name)

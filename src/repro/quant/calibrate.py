@@ -1,0 +1,143 @@
+"""Accuracy-gated calibration: which compression point ships.
+
+Same discipline as the reuse/coalescing gates: ground truth is the
+fp32 full-resolution model's detections (the paper's rendering-accuracy
+definition), the metric is median rendering F1 over calibration clips,
+and a candidate passes when its F1 delta vs the fp32 model stays within
+``bound`` on EVERY calibration scenario — evaluated on both the
+full-resolution workload and the mixed-resolution serving workload
+(motion-derived plans at the deployment beta), so a quantization error
+that only shows up under mixed-res packing still trips the gate.
+
+:func:`calibrate` walks the candidate ladder ordered by compressed
+parameter bytes (most compressed first) and ships the FIRST point that
+holds the bound; if none do, the deployment stays fp32 (shipped is
+None).  ``ServerModel(cfg, params, quant=shipped)`` then compiles the
+16-executable grid against the compressed tree.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.quant import qtensor as qt
+from repro.quant.ptq import DEFAULT_CANDIDATES, QuantSpec, compress
+
+F1_BOUND = 0.005
+SCENARIOS = ("parkS", "driveN")
+
+
+@dataclass
+class CalibPoint:
+    """One evaluated candidate."""
+    spec: QuantSpec
+    bytes: int
+    ratio: float
+    deltas: Dict[str, float] = field(default_factory=dict)
+    passed: bool = False
+
+
+@dataclass
+class CalibReport:
+    shipped: Optional[QuantSpec]
+    points: List[CalibPoint]
+    bound: float
+    scenarios: Tuple[str, ...]
+    bytes_fp32: int
+
+
+def _median_f1(dets_a: List, dets_b: List) -> float:
+    from repro.offload.detection import frame_f1
+    return float(np.median([frame_f1(a, b)
+                            for a, b in zip(dets_a, dets_b)]))
+
+
+def _scenario_workload(cfg: ModelConfig, scenario: str, n_frames: int,
+                       seed: int):
+    """Calibration frames + per-frame serving masks (object-free
+    regions downsampled, the fig-5 workload)."""
+    from repro.core import vit_backbone as vb
+    from repro.data import synthetic_video as sv
+    from repro.offload import motion as mo
+    part = vb.vit_partition(cfg)
+    frames, gts = sv.make_clip(scenario, n_frames,
+                               size=cfg.vit.img_size[0], seed=seed)
+    masks = [(mo.region_density(g, part, cfg.vit.patch_size) == 0)
+             .astype(np.int32) for g in gts]
+    return frames, masks
+
+
+def scenario_delta(ref_server, cand_server, frames, masks,
+                   beta: int) -> float:
+    """max F1 delta of the candidate vs the fp32 reference on one clip,
+    over the full-res and mixed-res workloads.  Ground truth is the
+    reference model's FULL-RES detections."""
+    gt = [ref_server.infer(f) for f in frames]
+
+    def run(server):
+        full = [server.infer(f) for f in frames]
+        mixed = [server.infer(f, m if m.sum() else None,
+                              beta if m.sum() else 0)
+                 for f, m in zip(frames, masks)]
+        return full, mixed
+
+    ref_full, ref_mixed = (gt, [ref_server.infer(f, m if m.sum() else
+                                                 None,
+                                                 beta if m.sum() else 0)
+                                for f, m in zip(frames, masks)])
+    cand_full, cand_mixed = run(cand_server)
+    d_full = _median_f1(gt, ref_full) - _median_f1(gt, cand_full)
+    d_mixed = _median_f1(gt, ref_mixed) - _median_f1(gt, cand_mixed)
+    return float(max(d_full, d_mixed))
+
+
+def calibrate(cfg: ModelConfig, params,
+              candidates: Sequence[QuantSpec] = DEFAULT_CANDIDATES,
+              scenarios: Sequence[str] = SCENARIOS,
+              bound: float = F1_BOUND, n_frames: int = 8, beta: int = 2,
+              seed: int = 23, server_kw: Optional[Dict] = None,
+              calib_frames: Optional[Sequence[np.ndarray]] = None
+              ) -> CalibReport:
+    """Walk the candidate ladder and pick the shipped point.
+
+    ``server_kw`` forwards to ServerModel (backend, jit, buckets...).
+    ``calib_frames`` feeds head scoring for pruned candidates (default:
+    the first scenario's frames).
+    """
+    from repro.offload.simulator import ServerModel
+    kw = dict(server_kw or {})
+    ref = ServerModel(cfg, params, **kw)
+    bytes0 = qt.tree_bytes(params)
+
+    workloads = [(s,) + _scenario_workload(cfg, s, n_frames, seed)
+                 for s in scenarios]
+    if calib_frames is None and workloads:
+        calib_frames = workloads[0][1][:4]
+
+    # evaluate most-compressed-first: compress once per candidate, order
+    # by actual byte count, ship the first that holds the bound
+    compressed = []
+    for spec in candidates:
+        ccfg, cparams, rep = compress(cfg, params, spec,
+                                      calib_frames=calib_frames)
+        compressed.append((rep["bytes"], spec, ccfg, cparams, rep))
+    compressed.sort(key=lambda t: t[0])
+
+    points: List[CalibPoint] = []
+    shipped: Optional[QuantSpec] = None
+    for nbytes, spec, ccfg, cparams, rep in compressed:
+        cand = ServerModel(ccfg, cparams, **kw)
+        point = CalibPoint(spec=spec, bytes=nbytes, ratio=rep["ratio"])
+        for sname, frames, masks in workloads:
+            point.deltas[sname] = scenario_delta(ref, cand, frames,
+                                                 masks, beta)
+        point.passed = all(d <= bound for d in point.deltas.values())
+        points.append(point)
+        if point.passed and shipped is None:
+            shipped = spec
+            break                      # most compressed passing point
+    return CalibReport(shipped=shipped, points=points, bound=bound,
+                       scenarios=tuple(scenarios), bytes_fp32=bytes0)

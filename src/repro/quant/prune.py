@@ -1,0 +1,119 @@
+"""Attention-head pruning for the deployment config.
+
+The are-16-heads / nn_pruning recipe adapted to the ViTDet backbone:
+score each (layer, head) on calibration frames, drop the lowest-K per
+layer, and RE-PACK the parameter tree — w_q/w_k/w_v output columns,
+their biases, and w_o input rows are physically sliced and ``n_heads``
+shrinks in the config, so every downstream executable (the serving
+grid, the Pallas window/flash kernels) sees a genuinely narrower q_dim
+rather than a masked one.
+
+Head score = mean |head output| on calibration frames (captured by the
+eager tap in models.attention) x the Frobenius norm of the head's w_o
+rows — the magnitude of what the head actually contributes to the
+residual stream.  With no calibration frames the activation term drops
+and the w_o norm alone ranks heads (the weight-magnitude proxy).
+
+Exactness property (pinned by tests/test_quant.py): a pruned forward
+equals the dense forward with the dropped heads' w_o rows zeroed —
+softmax attention is independent per head, so removing a head only
+removes its additive w_o contribution.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as attn
+from repro.models.config import ModelConfig
+
+
+def w_o_head_norms(cfg: ModelConfig, params) -> np.ndarray:
+    """(n_layers, n_heads) Frobenius norm of each head's w_o rows."""
+    H, Dh = cfg.n_heads, cfg.head_dim
+    out = []
+    for blk in params["blocks"]:
+        w_o = np.asarray(blk["attn"]["w_o"], np.float32)   # (H*Dh, D)
+        out.append(np.linalg.norm(
+            w_o.reshape(H, Dh * w_o.shape[-1]), axis=1))
+    return np.stack(out)
+
+
+def score_heads(cfg: ModelConfig, params, frames: Sequence[np.ndarray],
+                ) -> np.ndarray:
+    """(n_layers, n_heads) head importance on calibration frames.
+
+    Runs the full-resolution forward EAGERLY (the tap needs concrete
+    values) on the XLA backend and multiplies the captured per-head
+    mean |output| by the head's w_o row norm.
+    """
+    from repro.core import vit_backbone as vb
+    store: List[np.ndarray] = []
+    with attn.head_tap(store):
+        for f in frames:
+            img = jnp.asarray(np.asarray(f, np.float32))[None]
+            vb.forward_features(cfg, params, img, backend="xla")
+    acts = np.stack(store).reshape(len(frames), cfg.n_layers,
+                                   cfg.n_heads)
+    return acts.mean(axis=0) * w_o_head_norms(cfg, params)
+
+
+def prune_heads(cfg: ModelConfig, params, k: int,
+                scores: Optional[np.ndarray] = None):
+    """Drop the ``k`` lowest-scoring heads per layer; returns the
+    re-packed ``(cfg, params)``.  ``scores``: (n_layers, n_heads),
+    default the w_o-norm proxy.  MHA only (ViTDet: H == KV)."""
+    if k <= 0:
+        return cfg, params, [list(range(cfg.n_heads))] * cfg.n_layers
+    assert cfg.n_heads == cfg.n_kv_heads, \
+        "head pruning supports MHA only (n_heads == n_kv_heads)"
+    H, Dh = cfg.n_heads, cfg.head_dim
+    assert 0 < k < H, f"cannot drop {k} of {H} heads"
+    if scores is None:
+        scores = w_o_head_norms(cfg, params)
+    assert scores.shape == (cfg.n_layers, H)
+
+    def slice_cols(w, keep):                      # (D, H*Dh) -> columns
+        D = w.shape[0]
+        return w.reshape(D, H, Dh)[:, keep].reshape(D, len(keep) * Dh)
+
+    def slice_vec(b, keep):                       # (H*Dh,) bias
+        return b.reshape(H, Dh)[keep].reshape(len(keep) * Dh)
+
+    blocks = []
+    kept: List[List[int]] = []
+    for l, blk in enumerate(params["blocks"]):
+        keep = np.sort(np.argsort(scores[l], kind="stable")[k:])
+        kept.append([int(i) for i in keep])
+        a = dict(blk["attn"])
+        for key in ("w_q", "w_k", "w_v"):
+            a[key] = slice_cols(a[key], keep)
+        for key in ("b_q", "b_k", "b_v"):
+            if key in a:
+                a[key] = slice_vec(a[key], keep)
+        w_o = a["w_o"]                            # (H*Dh, D)
+        a["w_o"] = w_o.reshape(H, Dh, w_o.shape[-1])[keep] \
+            .reshape(len(keep) * Dh, w_o.shape[-1])
+        blocks.append({**blk, "attn": a})
+    out = dict(params)
+    out["blocks"] = blocks
+    cfg2 = cfg.replace(n_heads=H - k, n_kv_heads=H - k)
+    return cfg2, out, kept
+
+
+def zero_heads(cfg: ModelConfig, params, dropped: Sequence[Sequence[int]]):
+    """The dense twin of :func:`prune_heads` for parity tests: zero the
+    listed heads' w_o rows per layer, leaving shapes unchanged."""
+    H, Dh = cfg.n_heads, cfg.head_dim
+    blocks = []
+    for l, blk in enumerate(params["blocks"]):
+        w_o = jnp.asarray(blk["attn"]["w_o"])
+        w3 = w_o.reshape(H, Dh, w_o.shape[-1])
+        mask = np.ones((H,), np.float32)
+        mask[list(dropped[l])] = 0.0
+        a = {**blk["attn"], "w_o": (w3 * mask[:, None, None])
+             .reshape(w_o.shape)}
+        blocks.append({**blk, "attn": a})
+    return {**params, "blocks": blocks}

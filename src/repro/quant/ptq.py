@@ -1,0 +1,176 @@
+"""Post-training compression of the ViTDet parameter tree.
+
+``QuantSpec`` names one point in the (weight dtype, activation dtype,
+pruned heads) space; :func:`compress` applies it — head pruning first
+(float slicing), then weight quantization / casting — and returns the
+re-packed ``(cfg, params, report)``.  The result is a drop-in params
+pytree: ``forward_features`` and the serving executables consume it
+transparently (every linear use-site routes through
+quant.qtensor.matmul), so ``ServerModel(cfg, params, quant=spec)`` is
+the whole deployment story.
+
+Weight dtypes:
+
+  "fp32"  identity (the baseline lane)
+  "fp16" / "bf16"  cast every float leaf; matmul sites cast
+          activations to match, so the whole backbone runs half
+  "int8"  per-output-channel symmetric QuantTensors for every linear
+          weight — fused QKV, w_o, MLP, patch embed, pos-emb grid and
+          the detection-head convs; biases and norm affines stay float
+          (they are < 1% of bytes and norm math runs f32 internally)
+
+The activation dtype knob composes: ``act_dtype="fp16"`` casts the
+residual-stream leaves (biases, norms, pos-emb) and retargets every
+QuantTensor's output dtype, so int8 weights can feed fp16 activations.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.quant import qtensor as qt
+
+DTYPES = {"fp32": jnp.float32, "fp16": jnp.float16, "bf16": jnp.bfloat16}
+
+
+@dataclass(frozen=True)
+class QuantSpec:
+    """One deployment compression point."""
+    weight_dtype: str = "int8"        # fp32 | fp16 | bf16 | int8
+    act_dtype: str = "fp32"           # fp32 | fp16 | bf16
+    prune_heads: int = 0              # heads dropped per layer
+
+    def __post_init__(self):
+        assert self.weight_dtype in ("fp32", "fp16", "bf16", "int8"), \
+            self.weight_dtype
+        assert self.act_dtype in DTYPES, self.act_dtype
+
+    @property
+    def act_jnp(self):
+        return DTYPES[self.act_dtype]
+
+    @property
+    def name(self) -> str:
+        n = self.weight_dtype
+        if self.act_dtype != "fp32":
+            n += f"+{self.act_dtype}"
+        if self.prune_heads:
+            n += f"-p{self.prune_heads}"
+        return n
+
+
+# the default candidate ladder the calibration gate walks, most
+# compressed first (quant.calibrate orders by actual compressed bytes)
+DEFAULT_CANDIDATES: Tuple[QuantSpec, ...] = (
+    QuantSpec("int8", "fp16", 1),
+    QuantSpec("int8", "fp16", 0),
+    QuantSpec("int8", "fp32", 0),
+    QuantSpec("fp16", "fp16", 0),
+)
+
+
+def quantize_vitdet_params(params, out_dtype=jnp.float32):
+    """Per-output-channel int8 QuantTensors for every linear weight of
+    the ViTDet tree (QKV / w_o / MLP / patch embed / pos-emb grid /
+    detection-head convs); biases and norm affines pass through."""
+    odt = jnp.dtype(out_dtype)
+
+    def qz(w):
+        return qt.quantize_weight(w, out_dtype=odt)
+
+    def conv(c):
+        return {**c, "w": qz(c["w"])}
+
+    blocks = []
+    for blk in params["blocks"]:
+        a = dict(blk["attn"])
+        for key in ("w_q", "w_k", "w_v", "w_o"):
+            a[key] = qz(a[key])
+        f = dict(blk["ffn"])
+        for key in ("w_up", "w_down", "w_gate"):
+            if key in f:
+                f[key] = qz(f[key])
+        blocks.append({**blk, "attn": a, "ffn": f})
+    head = dict(params["head"])
+    head["lateral"] = [conv(c) for c in head["lateral"]]
+    head["smooth"] = [conv(c) for c in head["smooth"]]
+    for key in ("tower", "cls", "box", "ctr"):
+        head[key] = conv(head[key])
+    return {
+        **params,
+        "patch_embed": {**params["patch_embed"],
+                        "w": qz(params["patch_embed"]["w"])},
+        "pos_emb": qz(params["pos_emb"]),
+        "blocks": blocks,
+        "head": head,
+    }
+
+
+def quantize_lm_params(params, out_dtype=jnp.float32):
+    """Generic tree walk for the LM serving lane: quantize the
+    projection weights every transformer block shares with the ViT
+    (attention + MLP matmuls route through qtensor.matmul there too);
+    embeddings and norms pass through (gathers don't dequantize).
+    3-D weights are scan-stacked ``(n_layers, K, N)`` blocks — they
+    quantize with per-layer scales shaped to survive ``lax.scan``
+    slicing (qtensor.quantize_weight stacked mode)."""
+    odt = jnp.dtype(out_dtype)
+    TARGETS = {"w_q", "w_k", "w_v", "w_o", "w_up", "w_down", "w_gate"}
+
+    def walk(node):
+        if isinstance(node, dict):
+            return {k: (qt.quantize_weight(v, out_dtype=odt,
+                                           stacked=v.ndim == 3)
+                        if k in TARGETS and getattr(v, "ndim", 0) in (2, 3)
+                        else walk(v))
+                    for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v) for v in node)
+        return node
+
+    return walk(params)
+
+
+def compress(cfg: ModelConfig, params, spec: QuantSpec,
+             calib_frames: Optional[Sequence[np.ndarray]] = None,
+             head_scores: Optional[np.ndarray] = None):
+    """Apply ``spec`` to a float ViTDet tree.
+
+    Returns ``(cfg, params, report)`` — cfg shrinks ``n_heads`` when
+    pruning, params carries QuantTensors / half casts, and the report
+    records bytes before/after, the compression ratio, and which heads
+    each layer dropped (for the dense-parity tests and the bench).
+    """
+    bytes0 = qt.tree_bytes(params)
+    report: Dict = {"spec": spec.name, "weight_dtype": spec.weight_dtype,
+                    "act_dtype": spec.act_dtype,
+                    "prune_heads": spec.prune_heads, "bytes_fp32": bytes0}
+    if spec.prune_heads:
+        from repro.quant import prune
+        scores = head_scores
+        if scores is None:
+            scores = (prune.score_heads(cfg, params, calib_frames)
+                      if calib_frames is not None and len(calib_frames)
+                      else prune.w_o_head_norms(cfg, params))
+        H = cfg.n_heads
+        cfg, params, kept = prune.prune_heads(cfg, params,
+                                              spec.prune_heads, scores)
+        report["kept_heads"] = kept
+        report["dropped_heads"] = [
+            sorted(set(range(H)) - set(ks)) for ks in kept]
+    adt = spec.act_jnp
+    if spec.weight_dtype == "int8":
+        params = quantize_vitdet_params(params, out_dtype=adt)
+        if adt != jnp.float32:
+            params = qt.cast_tree(params, adt)
+    elif spec.weight_dtype in ("fp16", "bf16"):
+        params = qt.cast_tree(params, DTYPES[spec.weight_dtype])
+    elif adt != jnp.float32:
+        params = qt.cast_tree(params, adt)
+    report["bytes"] = qt.tree_bytes(params)
+    report["ratio"] = bytes0 / max(report["bytes"], 1)
+    return cfg, params, report

@@ -1,0 +1,178 @@
+"""QuantTensor: the per-output-channel int8 weight container, and the
+quant-aware matmul every linear use-site routes through.
+
+A ``QuantTensor`` is a registered pytree (``q`` int8 codes + ``scale``
+f32 per-output-channel, with the target float dtype as static aux), so
+quantized parameter trees flow through ``jax.jit`` / ``tree_map`` /
+checkpoint utilities like any other params — ``forward_features``
+consumes them transparently because every matmul site calls
+:func:`matmul` instead of ``@``.
+
+Quantization is symmetric per OUTPUT channel (the last axis of a
+``(K, N)`` weight or the ``cout`` axis of an ``(k, k, cin, cout)`` conv
+weight): ``w ~= q * scale[None, :]`` with ``scale = max|w| / 127`` per
+column.  Activations are quantized dynamically per row at matmul time
+(``sx = max|x| / 127``), which keeps the lane calibration-free for
+activations — the accuracy gate (quant.calibrate) only has to pick the
+(weight dtype, pruning) point.
+
+Execution mode (kernels.dispatch.resolve_quant):
+
+  "native"   int8 x int8 -> int32 GEMM + dequant epilogue
+             (dispatch.int8_matmul: Pallas kernel / dot_general).
+  "dequant"  dequantize the weight and run the plain float GEMM — the
+             oracle lane for parity tests and a safe fallback.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import dispatch
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class QuantTensor:
+    """int8 codes + per-output-channel f32 scales for one weight.
+
+    ``q``: int8, any shape with the output channel LAST; ``scale``:
+    f32 (q.shape[-1],); ``out_dtype``: dtype NAME string (static aux —
+    strings hash/compare cleanly across jit cache keys) the dequantized
+    weight and matmul outputs are produced in.
+    """
+    q: jnp.ndarray
+    scale: jnp.ndarray
+    out_dtype: str = "float32"
+
+    def tree_flatten(self):
+        return (self.q, self.scale), (self.out_dtype,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux[0])
+
+    @property
+    def shape(self):
+        return self.q.shape
+
+    @property
+    def ndim(self):
+        return self.q.ndim
+
+    @property
+    def nbytes(self):
+        return self.q.nbytes + self.scale.nbytes
+
+    def dequant(self, dtype=None) -> jnp.ndarray:
+        """The float weight ``q * scale`` in ``dtype`` (default
+        ``out_dtype``)."""
+        w = self.q.astype(jnp.float32) * self.scale.astype(jnp.float32)
+        return w.astype(dtype if dtype is not None else self.out_dtype)
+
+
+WeightLike = Union[jnp.ndarray, QuantTensor]
+
+
+def quantize_weight(w, out_dtype=jnp.float32,
+                    stacked: bool = False) -> QuantTensor:
+    """Symmetric per-output-channel int8 quantization of a float weight
+    (output channel = last axis).  ``stacked``: the leading axis is a
+    scan-stacked layer axis — scales are per (layer, output channel),
+    kept broadcast-shaped (L, 1, ..., N) so ``lax.scan`` slices the
+    QuantTensor children layer-by-layer like any stacked param."""
+    w32 = jnp.asarray(w).astype(jnp.float32)
+    red = tuple(range(1 if stacked else 0, w32.ndim - 1))
+    amax = jnp.max(jnp.abs(w32), axis=red, keepdims=stacked)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(w32 / scale), -127, 127).astype(jnp.int8)
+    return QuantTensor(q, scale.astype(jnp.float32),
+                       jnp.dtype(out_dtype).name)
+
+
+def asarray(w: WeightLike, dtype=None) -> jnp.ndarray:
+    """Dequantize a QuantTensor; pass plain arrays through."""
+    if isinstance(w, QuantTensor):
+        return w.dequant(dtype)
+    return w if dtype is None else w.astype(dtype)
+
+
+def concat_out(ws: Sequence[WeightLike]) -> WeightLike:
+    """Concatenate weights along the OUTPUT axis (axis=1 of (K, N)) —
+    the fused-QKV helper.  Per-output-channel scales concatenate
+    losslessly, so the fused quantized GEMM stays column-for-column
+    identical to three separate ones."""
+    if any(isinstance(w, QuantTensor) for w in ws):
+        assert all(isinstance(w, QuantTensor) for w in ws), \
+            "cannot fuse quantized and unquantized weights"
+        return QuantTensor(jnp.concatenate([w.q for w in ws], axis=1),
+                           jnp.concatenate([w.scale for w in ws]),
+                           ws[0].out_dtype)
+    return jnp.concatenate(list(ws), axis=1)
+
+
+def _quantize_rows(x2: jnp.ndarray):
+    """Dynamic symmetric per-row int8 activation quantization."""
+    amax = jnp.max(jnp.abs(x2), axis=1)
+    sx = jnp.maximum(amax, 1e-12) / 127.0
+    xq = jnp.clip(jnp.round(x2 / sx[:, None]), -127, 127).astype(jnp.int8)
+    return xq, sx
+
+
+def matmul(x: jnp.ndarray, w: WeightLike, *,
+           mode: Optional[str] = None,
+           backend: Optional[str] = None) -> jnp.ndarray:
+    """``x @ w`` with quant-aware routing.
+
+    Plain float weights: the half-precision lane casts activations to
+    the weight dtype (so an fp16/bf16 parameter tree carries fp16
+    activations through the whole backbone); fp32 stays the exact
+    original ``x @ w``.  QuantTensor weights run the int8 lane (mode
+    "native") or the dequantized float GEMM (mode "dequant") — see
+    kernels.dispatch.resolve_quant for precedence.
+    """
+    if not isinstance(w, QuantTensor):
+        if w.dtype != x.dtype and w.dtype in (jnp.float16, jnp.bfloat16):
+            x = x.astype(w.dtype)
+        return x @ w
+    if dispatch.resolve_quant(mode) == "dequant":
+        wd = w.dequant()
+        return x.astype(wd.dtype) @ wd
+    lead = x.shape[:-1]
+    Kd = x.shape[-1]
+    xq, sx = _quantize_rows(x.reshape(-1, Kd).astype(jnp.float32))
+    # a scan-sliced stacked weight arrives as (K, N) codes with a
+    # broadcast-shaped (1, N) scale — flatten to the kernel's (N,)
+    y = dispatch.int8_matmul(xq, w.q, sx, w.scale.reshape(-1),
+                             out_dtype=jnp.dtype(w.out_dtype),
+                             backend=backend)
+    return y.reshape(*lead, w.q.shape[-1])
+
+
+def tree_bytes(tree) -> int:
+    """Total parameter bytes of a pytree (QuantTensor leaves count their
+    int8 codes + scales)."""
+    return int(sum(getattr(l, "nbytes", 0) or np.asarray(l).nbytes
+                   for l in jax.tree_util.tree_leaves(tree)))
+
+
+def cast_tree(tree, dtype):
+    """Cast every float leaf to ``dtype``.  QuantTensor leaves keep
+    their int8 codes and f32 scales (precision of the dequant epilogue)
+    but retarget their output dtype — this is how the activation-dtype
+    knob composes with the int8 weight lane."""
+    dt = jnp.dtype(dtype)
+
+    def cast(x):
+        if isinstance(x, QuantTensor):
+            return QuantTensor(x.q, x.scale, dt.name)
+        if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dt)
+        return x
+
+    return jax.tree_util.tree_map(
+        cast, tree, is_leaf=lambda x: isinstance(x, QuantTensor))

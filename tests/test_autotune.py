@@ -81,15 +81,25 @@ def test_tune_skips_invalid_and_failing_candidates(tmp_cache):
 
 
 def test_autotune_disabled_env(tmp_cache, monkeypatch):
+    """REPRO_AUTOTUNE is hoisted out of the hot path (read once at
+    import, same convention as kernels.dispatch), so monkeypatching the
+    env must be followed by refresh_from_env()."""
     autotune.record("fake4", "b=1", {"x": 9}, 1.0)
     monkeypatch.setenv(autotune.ENV_VAR, "0")
-    assert not autotune.enabled()
-    # disabled: lookups miss (defaults win) and sweeps are no-ops
-    assert autotune.lookup("fake4", "b=1") is None
-    assert autotune.block("fake4", "b=1", {"x": 0}) == {"x": 0}
-    assert autotune.tune("fake4", "b=2", ({"x": 1},),
-                         lambda p: (lambda: jnp.zeros((1,))),
-                         force=True) is None
+    assert autotune.enabled(), "cached: env flip alone must NOT apply"
+    autotune.refresh_from_env()
+    try:
+        assert not autotune.enabled()
+        # disabled: lookups miss (defaults win) and sweeps are no-ops
+        assert autotune.lookup("fake4", "b=1") is None
+        assert autotune.block("fake4", "b=1", {"x": 0}) == {"x": 0}
+        assert autotune.tune("fake4", "b=2", ({"x": 1},),
+                             lambda p: (lambda: jnp.zeros((1,))),
+                             force=True) is None
+    finally:
+        monkeypatch.delenv(autotune.ENV_VAR)
+        autotune.refresh_from_env()
+    assert autotune.enabled()
 
 
 def test_tune_window_end_to_end(tmp_cache):

@@ -1,0 +1,383 @@
+"""Quantized & head-pruned serving lane (repro.quant).
+
+Contracts pinned here:
+
+  * weight quantization roundtrips within the per-channel step size and
+    the int8 Pallas kernel (interpret mode) is BIT-exact against the
+    dot_general reference at padded and exact-tile shapes;
+  * the quant-aware matmul's native int8 lane tracks the dequant float
+    oracle, and mode precedence (env > arg > process > native) mirrors
+    the backend machinery;
+  * the int8 backbone forward stays within a stated atol of fp32 at
+    every beta, through jit, on padded and exact layouts, with
+    win_valid masking — and parameter bytes shrink >= 3.5x;
+  * a head-pruned forward is EXACTLY the dense forward with the dropped
+    heads' w_o rows zeroed (per-head additivity of attention);
+  * autotune buckets separate by operand dtype, so int8/fp16 sweeps
+    never reuse fp32 winners;
+  * ServerModel(quant=...) compiles the SAME executable grid as fp32
+    (no new keys) and serves with zero steady-state compiles.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.vitdet_l import SIM
+from repro.core import vit_backbone as vb
+from repro.core.partition import RegionPlan
+from repro.kernels import autotune, dispatch
+from repro.kernels.int8_matmul import ops as mm_ops
+from repro.kernels.int8_matmul import ref as mm_ref
+from repro.models import registry
+from repro.quant import (QuantSpec, QuantTensor, calibrate, prune, ptq,
+                         qtensor as qt)
+
+SIZE = SIM.vit.img_size[0]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = registry.init_params(SIM, jax.random.PRNGKey(0))
+    return SIM, params, vb.vit_partition(SIM)
+
+
+def _img(seed=0, n=1):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(0, 1, (n, SIZE, SIZE, 3))
+                       .astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# QuantTensor + weight quantization
+
+
+def test_quantize_weight_roundtrip():
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.standard_normal((64, 48)).astype(np.float32))
+    q = qt.quantize_weight(w)
+    assert isinstance(q, QuantTensor)
+    assert q.q.dtype == jnp.int8 and q.scale.shape == (48,)
+    # error bounded by half a per-channel quantization step
+    step = np.asarray(q.scale)
+    err = np.abs(np.asarray(q.dequant()) - np.asarray(w))
+    assert (err <= 0.5 * step[None, :] + 1e-7).all()
+    # ~4x smaller than fp32
+    assert q.nbytes < w.nbytes / 3.5
+
+
+def test_quant_tensor_is_a_pytree():
+    q = qt.quantize_weight(jnp.ones((8, 4)), out_dtype=jnp.float16)
+    leaves, treedef = jax.tree_util.tree_flatten(q)
+    assert len(leaves) == 2
+    q2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert q2.out_dtype == "float16"
+    # out_dtype is static aux: jit recompiles on it, not on the arrays
+    out = jax.jit(lambda t: t.dequant())(q)
+    assert out.dtype == jnp.float16
+
+
+def test_concat_out_matches_separate_quantization():
+    rng = np.random.default_rng(1)
+    ws = [jnp.asarray(rng.standard_normal((32, n)).astype(np.float32))
+          for n in (16, 8, 8)]
+    fused = qt.concat_out([qt.quantize_weight(w) for w in ws])
+    ref = jnp.concatenate([qt.quantize_weight(w).dequant() for w in ws],
+                          axis=1)
+    np.testing.assert_array_equal(np.asarray(fused.dequant()),
+                                  np.asarray(ref))
+    with pytest.raises(AssertionError):
+        qt.concat_out([qt.quantize_weight(ws[0]), ws[1]])
+
+
+def test_stacked_quantization_survives_scan_slicing():
+    """Scan-stacked (L, K, N) weights carry per-layer scales shaped so
+    lax.scan slices the QuantTensor children layer-by-layer."""
+    rng = np.random.default_rng(2)
+    w = jnp.asarray(rng.standard_normal((3, 16, 8)).astype(np.float32))
+    q = qt.quantize_weight(w, stacked=True)
+    assert q.scale.shape == (3, 1, 8)
+    x = jnp.asarray(rng.standard_normal((4, 16)).astype(np.float32))
+
+    def body(c, wl):
+        return c, qt.matmul(x, wl, mode="dequant")
+
+    _, outs = jax.lax.scan(body, None, q)
+    for l in range(3):
+        per_layer = qt.quantize_weight(w[l])
+        np.testing.assert_allclose(np.asarray(outs[l]),
+                                   np.asarray(x @ per_layer.dequant()),
+                                   atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# int8 GEMM kernel: Pallas (interpret) vs dot_general reference
+
+
+@pytest.mark.parametrize("M,N,K", [(8, 16, 32),       # tiny, padded
+                                   (128, 128, 128),   # exact tiles
+                                   (100, 65, 130)])   # ragged, padded
+def test_int8_kernel_bit_exact_vs_ref(M, N, K):
+    rng = np.random.default_rng(3)
+    xq = jnp.asarray(rng.integers(-127, 128, (M, K), dtype=np.int8))
+    wq = jnp.asarray(rng.integers(-127, 128, (K, N), dtype=np.int8))
+    sx = jnp.asarray(rng.uniform(0.01, 1, M).astype(np.float32))
+    sw = jnp.asarray(rng.uniform(0.01, 1, N).astype(np.float32))
+    out = mm_ops.int8_matmul(xq, wq, sx, sw, interpret=True)
+    ref = mm_ref.int8_matmul_ref(xq, wq, sx, sw)
+    # integer accumulation + identical f32 epilogue: bit-exact
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_int8_kernel_out_dtype():
+    rng = np.random.default_rng(4)
+    xq = jnp.asarray(rng.integers(-127, 128, (8, 16), dtype=np.int8))
+    wq = jnp.asarray(rng.integers(-127, 128, (16, 8), dtype=np.int8))
+    s = jnp.ones((8,), jnp.float32)
+    out = mm_ops.int8_matmul(xq, wq, s, s, out_dtype=jnp.float16,
+                             interpret=True)
+    assert out.dtype == jnp.float16
+
+
+def test_qt_matmul_native_tracks_dequant_oracle():
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.standard_normal((6, 10, 64)).astype(np.float32))
+    w = qt.quantize_weight(
+        jnp.asarray(rng.standard_normal((64, 32)).astype(np.float32)))
+    native = qt.matmul(x, w, mode="native")
+    oracle = qt.matmul(x, w, mode="dequant")
+    assert native.shape == oracle.shape == (6, 10, 32)
+    # native adds dynamic activation quantization on top of the weight
+    # quantization: per-row step ~ max|x|/127, accumulated over K=64
+    np.testing.assert_allclose(np.asarray(native), np.asarray(oracle),
+                               atol=0.3)
+    # plain float weights: exact passthrough
+    wf = w.dequant()
+    np.testing.assert_array_equal(np.asarray(qt.matmul(x, wf)),
+                                  np.asarray(x @ wf))
+
+
+def test_quant_mode_precedence(monkeypatch):
+    """env REPRO_QUANT (cached) > per-call arg > set_quant_mode >
+    native — and quant_scope restores on exit."""
+    assert dispatch.resolve_quant() == "native"
+    assert dispatch.resolve_quant("dequant") == "dequant"
+    with dispatch.quant_scope("dequant"):
+        assert dispatch.resolve_quant() == "dequant"
+        assert dispatch.resolve_quant("native") == "native"
+    assert dispatch.resolve_quant() == "native"
+    monkeypatch.setenv(dispatch.QUANT_ENV_VAR, "dequant")
+    assert dispatch.resolve_quant() == "native", "env is cached"
+    dispatch.refresh_from_env()
+    try:
+        assert dispatch.resolve_quant() == "dequant"
+        assert dispatch.resolve_quant("native") == "dequant", \
+            "cached env overrides the per-call arg"
+    finally:
+        monkeypatch.delenv(dispatch.QUANT_ENV_VAR)
+        dispatch.refresh_from_env()
+    with pytest.raises(ValueError):
+        dispatch.set_quant_mode("bogus")
+
+
+# ---------------------------------------------------------------------------
+# autotune: per-dtype bucket separation
+
+
+def test_matmul_bucket_separates_dtypes(tmp_path, monkeypatch):
+    monkeypatch.setenv(autotune.CACHE_ENV, str(tmp_path))
+    autotune.clear_memory_cache()
+    try:
+        b_int8 = autotune.matmul_bucket(64, 64, 64, jnp.int8, jnp.int8)
+        b_fp32 = autotune.matmul_bucket(64, 64, 64, jnp.float32,
+                                        jnp.float32)
+        assert b_int8 != b_fp32
+        autotune.record("int8_matmul", b_int8, {"bm": 256}, 1.0)
+        # an int8 winner never answers an fp32 lookup
+        assert autotune.lookup("int8_matmul", b_fp32) is None
+        assert autotune.lookup("int8_matmul", b_int8) == {"bm": 256}
+        # window/flash buckets carry the activation dtype too
+        assert autotune.window_bucket(1, 64, 4, 16, 4, jnp.float16) != \
+            autotune.window_bucket(1, 64, 4, 16, 4, jnp.float32)
+        assert autotune.flash_bucket(1, 64, 64, 4, 4, 16, False,
+                                     jnp.float16) != \
+            autotune.flash_bucket(1, 64, 64, 4, 4, 16, False, jnp.float32)
+    finally:
+        autotune.clear_memory_cache()
+
+
+def test_tune_matmul_records_per_dtype(tmp_path, monkeypatch):
+    monkeypatch.setenv(autotune.CACHE_ENV, str(tmp_path))
+    autotune.clear_memory_cache()
+    try:
+        won = autotune.tune_matmul(32, 32, 64, force=True)
+        assert won is not None and {"bm", "bn", "bk"} <= set(won)
+        bucket = autotune.matmul_bucket(32, 32, 64, jnp.int8, jnp.int8)
+        assert autotune.lookup("int8_matmul", bucket) == won
+    finally:
+        autotune.clear_memory_cache()
+
+
+# ---------------------------------------------------------------------------
+# compression: bytes, forward parity
+
+
+def test_compress_ratio_and_bytes(setup):
+    cfg, params, _ = setup
+    _, cp, rep = ptq.compress(cfg, params, QuantSpec("int8", "fp32", 0))
+    assert rep["ratio"] >= 3.5, rep
+    assert qt.tree_bytes(cp) == rep["bytes"]
+    _, cph, reph = ptq.compress(cfg, params, QuantSpec("int8", "fp16", 0))
+    assert reph["bytes"] < rep["bytes"]     # half biases/norms/scales...
+    _, _, rep16 = ptq.compress(cfg, params, QuantSpec("fp16", "fp16", 0))
+    assert 1.9 <= rep16["ratio"] <= 2.1
+
+
+@pytest.mark.parametrize("spec,atol", [
+    (QuantSpec("int8", "fp32", 0), 0.25),
+    (QuantSpec("int8", "fp16", 0), 0.25),
+    (QuantSpec("fp16", "fp16", 0), 0.05),
+])
+def test_quantized_forward_parity_full_res(setup, spec, atol):
+    cfg, params, _ = setup
+    img = _img()
+    ref = vb.forward_features(cfg, params, img)
+    ccfg, cp, _ = ptq.compress(cfg, params, spec)
+    out = vb.forward_features(ccfg, cp, img)
+    assert out.dtype == spec.act_jnp
+    err = float(jnp.max(jnp.abs(out.astype(jnp.float32) - ref)))
+    assert err <= atol, (spec.name, err)
+    # through jit: same executable-facing contract
+    jout = jax.jit(lambda p, i: vb.forward_features(ccfg, p, i))(cp, img)
+    jerr = float(jnp.max(jnp.abs(jout.astype(jnp.float32) - ref)))
+    assert jerr <= atol, (spec.name, jerr)
+
+
+@pytest.mark.parametrize("beta", [0, 1, 2])
+def test_quantized_forward_parity_every_beta(setup, beta):
+    """Mixed-resolution (legacy ids layout) forward: the int8 lane
+    tracks fp32 at every restoration point."""
+    cfg, params, part = setup
+    img = _img(1)
+    n_low = 4
+    low_ids = np.arange(n_low, dtype=np.int32)
+    full_ids = np.arange(n_low, part.n_regions, dtype=np.int32)
+    kw = dict(beta=beta, full_ids=jnp.asarray(full_ids),
+              low_ids=jnp.asarray(low_ids))
+    ref = vb.forward_features(cfg, params, img, **kw)
+    ccfg, cp, _ = ptq.compress(cfg, params, QuantSpec("int8", "fp32", 0))
+    out = vb.forward_features(ccfg, cp, img, **kw)
+    err = float(jnp.max(jnp.abs(out - ref)))
+    assert err <= 0.25, (beta, err)
+
+
+def test_quantized_forward_parity_padded_layout(setup):
+    """Padded PlanLayout path (the serving executables' shape) with
+    win_valid masking: pad windows stay deterministic on the int8 lane
+    and valid windows track fp32."""
+    from repro.core import partition as pt
+    cfg, params, part = setup
+    img = _img(2)
+    plan = RegionPlan.from_mask(
+        np.r_[np.ones(4, np.int32), np.zeros(part.n_regions - 4,
+                                             np.int32)])
+    lb = pt.length_bucket(pt.plan_n_windows(plan, part),
+                          pt.length_bucket_set(part, pt.N_LENGTH_BUCKETS))
+    arrays, _ = pt.stack_plan_layouts([pt.plan_layout(plan.states, lb,
+                                                      part)])
+    layout = {k: jnp.asarray(v) for k, v in arrays.items()}
+    ref = vb.forward_features(cfg, params, img, beta=2, layout=layout)
+    ccfg, cp, _ = ptq.compress(cfg, params, QuantSpec("int8", "fp32", 0))
+    out = vb.forward_features(ccfg, cp, img, beta=2, layout=layout)
+    assert out.shape == ref.shape
+    err = float(jnp.max(jnp.abs(out - ref)))
+    assert err <= 0.25, err
+
+
+# ---------------------------------------------------------------------------
+# head pruning
+
+
+def test_pruned_forward_equals_dense_with_heads_zeroed(setup):
+    cfg, params, _ = setup
+    img = _img(3)
+    scores = prune.score_heads(cfg, params, [np.asarray(img[0])])
+    assert scores.shape == (cfg.n_layers, cfg.n_heads)
+    assert (scores > 0).all()
+    cfg2, p2, kept = prune.prune_heads(cfg, params, 1, scores)
+    assert cfg2.n_heads == cfg.n_heads - 1
+    assert all(len(k) == cfg.n_heads - 1 for k in kept)
+    dropped = [sorted(set(range(cfg.n_heads)) - set(k)) for k in kept]
+    pz = prune.zero_heads(cfg, params, dropped)
+    a = vb.forward_features(cfg2, p2, img)
+    b = vb.forward_features(cfg, pz, img)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_prune_rejects_bad_k(setup):
+    cfg, params, _ = setup
+    with pytest.raises(AssertionError):
+        prune.prune_heads(cfg, params, cfg.n_heads)
+    gqa = cfg.replace(n_kv_heads=2)
+    with pytest.raises(AssertionError):
+        prune.prune_heads(gqa, params, 1)
+
+
+def test_prune_uses_w_o_norm_proxy_without_frames(setup):
+    cfg, params, _ = setup
+    cfg2, p2, kept = prune.prune_heads(cfg, params, 1)
+    proxy = prune.w_o_head_norms(cfg, params)
+    for l, k in enumerate(kept):
+        assert int(np.argmin(proxy[l])) not in k
+
+
+# ---------------------------------------------------------------------------
+# ServerModel integration: grid invariance, zero steady compiles
+
+
+@pytest.mark.slow
+def test_server_model_quantized_grid(setup):
+    cfg, params, part = setup
+    kw = dict(top_k=8, score_thresh=0.0, b_buckets=(1, 2))
+    from repro.offload.simulator import ServerModel
+    ref = ServerModel(cfg, params, **kw)
+    space = ref.default_plan_space(betas=(2,), reuse_edges=(0,),
+                                  captures=(0,))
+    ref.warmup(space)
+
+    spec = QuantSpec("int8", "fp16", 1)
+    s = ServerModel(cfg, params, quant=spec,
+                    calib_frames=np.asarray(_img(4, 2)), **kw)
+    assert s.act_dtype == jnp.float16
+    assert s.quant_report["ratio"] >= 3.5
+    s.warmup(space)
+    # the per-dtype lane adds NO executable keys beyond the fp32 grid
+    assert set(s._fns) == set(ref._fns)
+
+    frames = np.asarray(_img(5, 2))
+    mask = np.r_[np.ones(4, np.int32),
+                 np.zeros(part.n_regions - 4, np.int32)]
+    s.infer(frames[0])
+    s.infer(frames[0], mask, beta=2)
+    s.infer_wave(frames, [RegionPlan.from_mask(mask)] * 2, beta=2)
+    assert s.stats.steady_compiles == 0
+
+
+@pytest.mark.slow
+def test_calibration_gate_ships_within_bound(setup):
+    """The accuracy gate on SIM synthetic scenarios: the shipped point
+    holds the F1 delta bound on every scenario; candidates that ship
+    must really be the most compressed passing point."""
+    cfg, params, _ = setup
+    report = calibrate.calibrate(
+        cfg, params, scenarios=("parkS",), n_frames=2,
+        candidates=(QuantSpec("int8", "fp32", 0),),
+        server_kw=dict(top_k=8, score_thresh=0.0, b_buckets=(1,)))
+    assert len(report.points) == 1
+    pt_ = report.points[0]
+    assert set(pt_.deltas) == {"parkS"}
+    if report.shipped is not None:
+        assert pt_.passed
+        assert max(pt_.deltas.values()) <= report.bound
