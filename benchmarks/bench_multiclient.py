@@ -25,6 +25,14 @@ padded B-bucket slots — serve/scheduler.py), and ``sequential`` (one
 frame per wave) on the SAME workload.  The harness also cross-checks
 that all three modes' detections match box-for-box.
 
+A final slow-uplink section re-runs a reuse-heavy 4-client workload
+(3x parkS + driveN, rotating REUSE plans) over a compounded
+bufferbloat overlay (offload/faults.py) in three modes — barrier,
+continuous, and continuous+speculative — surfacing the speculative
+REUSE lane's telemetry (``spec_launched``/``spec_patched``/
+``spec_discarded`` and p50/p95 ``spec_hidden_s``, the transmission
+time hidden behind the spliced forward) in every row.
+
 Standalone:  python benchmarks/bench_multiclient.py [--smoke] [--out P]
 Harness:     picked up by benchmarks/run.py as the ``bench_multiclient``
 suite (smoke settings).
@@ -45,6 +53,8 @@ from repro.core import vit_backbone as vb
 from repro.data import synthetic_video as sv
 from repro.data.network_traces import make_trace
 from repro.models import registry
+from repro.offload.faults import FaultInjector, FaultSpec, FaultyTrace
+from repro.offload.optimizer import build_reuse_plan
 from repro.offload.simulator import Policy, Simulation
 from repro.serve.edge import (BatchedServerModel, EdgeConfig,
                               MultiClientSimulation)
@@ -84,6 +94,32 @@ class RotatingMaskPolicy(Policy):
         return {"mask": mask, "quality": 85, "beta": self.beta}
 
 
+class ReuseRotatingPolicy(Policy):
+    """Rotating low mask + motion-gated REUSE lift (offload/optimizer.py)
+    — the reuse-heavy workload the speculative lane targets."""
+    name = "reuse-rotating"
+    use_tracker = True
+    reuse_k = 4
+
+    def __init__(self, offset: int, n_low: int, n_regions: int,
+                 beta: int = 2):
+        self.offset = offset
+        self.n_low = n_low
+        self.n_regions = n_regions
+        self.beta = beta
+
+    def decide(self, sim: Simulation, frame_idx: int) -> Dict:
+        mask = np.zeros(self.n_regions, np.int32)
+        for k in range(self.n_low):
+            mask[(self.offset + k) % self.n_regions] = 1
+        cache = sim.feature_cache
+        elig = (cache.eligible(self.beta) if cache is not None
+                else np.zeros(self.n_regions, bool))
+        plan = build_reuse_plan(sim.part, mask, sim.m, elig)
+        return {"mask": mask, "quality": 85, "beta": self.beta,
+                "plan": plan, "capture_beta": self.beta}
+
+
 def _inf_delay_model():
     from repro.core import partition as pt
     from repro.offload.estimator import InferenceDelayModel
@@ -119,16 +155,50 @@ def make_clients(server: BatchedServerModel, n_clients: int,
     return clients
 
 
+# congested-cell uplink for the speculative lane: stacked bufferbloat
+# windows COMPOUND (offload/faults.py dents throughput to 70 % per
+# window), leaving ~3 % of the 4g uplink at ~4x RTT for the whole run —
+# the regime where transmission dominates Eq. (2)
+SLOW_UPLINK = FaultSpec(
+    bufferbloat=tuple((0.0, 3600.0, 1.15) for _ in range(10)))
+SLOW_VIDEOS = ("parkS", "parkS", "parkS", "driveN")
+
+
+def make_slow_clients(server: BatchedServerModel, n_clients: int,
+                      n_frames: int, gt_cache: Dict) -> List[Simulation]:
+    part = vb.vit_partition(SIM)
+    inf_delay = _inf_delay_model()
+    n_low = part.n_regions // 4
+    clients = []
+    for i in range(n_clients):
+        vname = SLOW_VIDEOS[i % len(SLOW_VIDEOS)]
+        key = (vname, n_frames)
+        if key not in gt_cache:
+            frames, _ = sv.make_clip(vname, n_frames, size=SIZE, seed=17)
+            gt_cache[key] = (frames, [server.infer(f) for f in frames])
+        frames, gt = gt_cache[key]
+        pol = ReuseRotatingPolicy(offset=i * n_low, n_low=n_low,
+                                  n_regions=part.n_regions)
+        trace = FaultyTrace(make_trace("4g", i, duration_s=240),
+                            FaultInjector(SLOW_UPLINK))
+        clients.append(Simulation(frames, gt, trace, pol, server, part,
+                                  PATCH, fps=FPS, inf_delay=inf_delay))
+    return clients
+
+
 def run_mode(server: BatchedServerModel, n_clients: int, n_frames: int,
              batched: bool, gt_cache: Dict,
-             scheduler: str = "barrier") -> Dict:
-    clients = make_clients(server, n_clients, n_frames, gt_cache)
+             scheduler: str = "barrier", speculate: bool = False,
+             clients_fn=None, videos: Sequence[str] = VIDEOS) -> Dict:
+    clients = (clients_fn or make_clients)(server, n_clients, n_frames,
+                                           gt_cache)
     mc = MultiClientSimulation(clients, server,
                                EdgeConfig(batched=batched,
                                           scheduler=scheduler,
+                                          speculate=speculate,
                                           keep_dets=True))
     t0 = time.perf_counter()
-    results = mc.run([VIDEOS[i % len(VIDEOS)] for i in range(n_clients)])
+    results = mc.run([videos[i % len(videos)] for i in range(n_clients)])
     wall = time.perf_counter() - t0
 
     e2e = np.array([x for r in results for x in r.e2e_latency], np.float64)
@@ -142,7 +212,8 @@ def run_mode(server: BatchedServerModel, n_clients: int, n_frames: int,
 
     return {
         "n_clients": n_clients,
-        "mode": ("continuous" if scheduler == "continuous"
+        "mode": ("continuous+speculative" if speculate
+                 else "continuous" if scheduler == "continuous"
                  else "batched" if batched else "sequential"),
         "offloads": int(e2e.size),
         "throughput_fps": float(e2e.size / sim_seconds),
@@ -155,6 +226,12 @@ def run_mode(server: BatchedServerModel, n_clients: int, n_frames: int,
         "device_idle_frac": mc.stats.device_idle_frac,
         "decode_hidden_s": mc.stats.decode_hidden_s,
         "mean_wave": mc.stats.mean_wave_size,
+        "spec_launched": mc.stats.spec_launched,
+        "spec_patched": mc.stats.spec_patched,
+        "spec_discarded": mc.stats.spec_discarded,
+        "spec_hidden_s": mc.stats.spec_hidden_s,
+        "p50_spec_hidden_s": mc.stats.spec_hidden_percentile(50),
+        "p95_spec_hidden_s": mc.stats.spec_hidden_percentile(95),
         "wall_s": wall,
         "_jobs": {f"{j['client']}:{j['frame']}": j["dets"]
                   for j in mc.stats.jobs},
@@ -171,6 +248,27 @@ def _dets_close(a: List[Dict], b: List[Dict], atol: float = 0.5) -> bool:
                            np.asarray(db["box"], np.float64), atol=atol):
             return False
     return True
+
+
+def run_slow_uplink(server: BatchedServerModel,
+                    n_frames: int) -> List[Dict]:
+    """Barrier vs continuous vs continuous+speculative on the same
+    reuse-heavy 4-client workload over the SLOW_UPLINK overlay — the
+    uplink-dominated regime where the speculative lane hides the
+    payload transit behind the spliced forward."""
+    gt_cache: Dict = {}
+    rows = []
+    for scheduler, speculate in (("barrier", False),
+                                 ("continuous", False),
+                                 ("continuous", True)):
+        row = run_mode(server, len(SLOW_VIDEOS), n_frames, batched=True,
+                       gt_cache=gt_cache, scheduler=scheduler,
+                       speculate=speculate, clients_fn=make_slow_clients,
+                       videos=SLOW_VIDEOS)
+        row.pop("_jobs")
+        row["uplink"] = "slow"
+        rows.append(row)
+    return rows
 
 
 def run_bench(smoke: bool = False, out: Path = DEFAULT_OUT,
@@ -203,6 +301,9 @@ def run_bench(smoke: bool = False, out: Path = DEFAULT_OUT,
         }
         rows.extend([row_b, row_c, row_s])
 
+    slow_rows = run_slow_uplink(server, max(n_frames, 40))
+    rows.extend(slow_rows)
+
     report = {
         "meta": {
             "config": "vitdet-l/SIM",
@@ -229,7 +330,9 @@ def run(ctx: dict) -> list:
                     client_counts=(1, 2))
     rows = []
     for r in rep["rows"]:
-        rows.append((f"bench_multiclient/{r['n_clients']}c/{r['mode']}",
+        tag = "/slow" if r.get("uplink") == "slow" else ""
+        rows.append((f"bench_multiclient/{r['n_clients']}c"
+                     f"/{r['mode']}{tag}",
                      r["throughput_fps"],
                      f"p95_e2e={r['p95_e2e_s']:.3f}s "
                      f"wave={r['mean_wave']:.2f}"))
@@ -249,11 +352,17 @@ def main(argv=None) -> int:
     counts = tuple(args.clients) if args.clients else CLIENT_COUNTS
     rep = run_bench(smoke=args.smoke, out=args.out, client_counts=counts)
     for r in rep["rows"]:
-        print(f"  {r['n_clients']}c {r['mode']:>10}: "
+        extra = ""
+        if r.get("uplink") == "slow":
+            extra = (f"  [slow uplink] spec L/P/D "
+                     f"{r['spec_launched']}/{r['spec_patched']}"
+                     f"/{r['spec_discarded']} "
+                     f"hidden p50 {r['p50_spec_hidden_s']:.3f}s")
+        print(f"  {r['n_clients']}c {r['mode']:>22}: "
               f"{r['throughput_fps']:6.2f} offloads/s  "
               f"p50 {r['p50_e2e_s']:.3f}s  p95 {r['p95_e2e_s']:.3f}s  "
               f"queue p50 {r['p50_queue_s']:.3f}s  "
-              f"wave {r['mean_wave']:.2f}")
+              f"wave {r['mean_wave']:.2f}{extra}")
     for n, m in rep["detections_match"].items():
         print(f"  {n}c detections batched==sequential: {m['all_match']} "
               f"({m['compared']} jobs)  "

@@ -22,6 +22,14 @@ Emits ``BENCH_serving.json`` with three sections:
                    without cross-bucket coalescing, plus rendering-F1
                    deltas on the parkS/driveN scenarios (promotion only
                    ever PADS the sequence, so the deltas must be 0.000);
+  * ``speculation`` — speculative REUSE execution on a slow uplink
+                   (stacked bufferbloat overlay): continuous vs.
+                   continuous+speculative on a 4-client parkS/driveN
+                   workload — speculation MUST cut p50 e2e, keep the
+                   rendering-F1 delta within 0.005 per scenario, add
+                   ZERO executable keys and steady compiles, launch and
+                   patch at least once, and a zero-tolerance probe MUST
+                   exercise the discard-and-rerun path;
   * ``scheduling`` — barrier vs. continuous wave scheduling
                    (``EdgeConfig(scheduler=...)``) on a contended
                    4-client workload against ONE pre-warmed replica:
@@ -56,6 +64,7 @@ from repro.data import synthetic_video as sv
 from repro.data.network_traces import make_trace
 from repro.models import registry
 from repro.offload.estimator import InferenceDelayModel
+from repro.offload.faults import FaultInjector, FaultSpec, FaultyTrace
 from repro.offload.optimizer import build_reuse_plan
 from repro.offload.simulator import Policy, ServerModel, Simulation
 from repro.serve.edge import (BatchedServerModel, EdgeConfig,
@@ -425,6 +434,113 @@ def bench_scheduling(n_frames: int) -> Dict:
 
 
 # ---------------------------------------------------------------------------
+# section 5: speculative REUSE execution on a slow uplink
+
+
+# The congested-cell overlay: bufferbloat windows from offload/faults.py
+# COMPOUND when stacked (each dents throughput to 70 % and inflates RTT
+# by its factor), so ten whole-run windows leave ~3 % of the uplink
+# (0.7^10) at ~4x RTT (1.15^10) — the regime where transmission, not
+# inference, dominates Eq. (2) and speculation has an uplink to hide in.
+SLOW_UPLINK = FaultSpec(
+    bufferbloat=tuple((0.0, 3600.0, 1.15) for _ in range(10)))
+
+
+def _reuse_clients(server, part, video_specs, n_frames, gt_cache):
+    inf_delay = _inf_delay_model()
+    clients = []
+    for i, (video, lows) in enumerate(video_specs):
+        key = (video, n_frames)
+        if key not in gt_cache:
+            frames, _ = sv.make_clip(video, n_frames, size=SIZE, seed=23)
+            gt_cache[key] = (frames, [server.infer(f) for f in frames])
+        frames, gt = gt_cache[key]
+        trace = FaultyTrace(make_trace("4g", i, duration_s=240),
+                            FaultInjector(SLOW_UPLINK))
+        clients.append(Simulation(
+            frames, gt, trace,
+            FixedReusePolicy(part.n_regions, lows=lows), server, part,
+            PATCH, fps=FPS, inf_delay=inf_delay))
+    return clients
+
+
+def _run_spec(server, part, video_specs, n_frames, gt_cache,
+              speculate, **spec_kw) -> Dict:
+    clients = _reuse_clients(server, part, video_specs, n_frames,
+                             gt_cache)
+    mc = MultiClientSimulation(clients, server,
+                               EdgeConfig(batched=True,
+                                          scheduler="continuous",
+                                          speculate=speculate, **spec_kw))
+    results = mc.run([v for v, _ in video_specs])
+    e2e = np.array([x for r in results for x in r.e2e_latency], np.float64)
+    rf1 = {}
+    for r in results:
+        rf1.setdefault(r.video, []).extend(r.rendering_f1)
+
+    def p(x, q):
+        return float(np.percentile(x, q)) if x.size else 0.0
+
+    return {
+        "speculate": speculate,
+        "offloads": int(e2e.size),
+        "p50_e2e_s": p(e2e, 50),
+        "p95_e2e_s": p(e2e, 95),
+        "p50_queue_s": p(np.asarray(mc.stats.queue_delays), 50),
+        "device_idle_frac": mc.stats.device_idle_frac,
+        "spec_launched": mc.stats.spec_launched,
+        "spec_patched": mc.stats.spec_patched,
+        "spec_discarded": mc.stats.spec_discarded,
+        "spec_hidden_s": mc.stats.spec_hidden_s,
+        "p50_spec_hidden_s": mc.stats.spec_hidden_percentile(50),
+        "p95_spec_hidden_s": mc.stats.spec_hidden_percentile(95),
+        "median_rendering_f1": {v: float(np.median(x))
+                                for v, x in rf1.items()},
+    }
+
+
+def bench_speculation(n_frames: int) -> Dict:
+    part = vb.vit_partition(SIM)
+    server = BatchedServerModel(SIM, _params(), top_k=8, score_thresh=0.0)
+    gt_cache: Dict = {}
+    # slow-uplink 4-client workload: three reuse-heavy parkS sessions
+    # (static scene -> high REUSE fraction + high prediction confidence
+    # -> speculation admits and converges) and one driveN session (real
+    # motion -> low confidence, the lane mostly stands down).  Ground
+    # truth before warmup, then warm the grid — speculation must add
+    # ZERO keys on top of it.
+    specs = [("parkS", range(4)), ("parkS", range(4, 8)),
+             ("parkS", range(8, 12)), ("driveN", range(4))]
+    for video, _ in specs:
+        key = (video, n_frames)
+        if key not in gt_cache:
+            frames, _ = sv.make_clip(video, n_frames, size=SIZE, seed=23)
+            gt_cache[key] = (frames, [server.infer(f) for f in frames])
+    server.warmup(server.default_plan_space(
+        betas=(BETA,), reuse_edges=(0, 4), captures=(0, BETA)))
+
+    cont = _run_spec(server, part, specs, n_frames, gt_cache, False)
+    keys0, compiles0 = set(server._fns), server.stats.compiles
+    spec = _run_spec(server, part, specs, n_frames, gt_cache, True)
+    new_keys = sorted(list(k) for k in set(server._fns) - keys0)
+    # discard probe: zero tolerance + zero patch budget turns every
+    # resolved speculation into a discard-and-rerun (codec noise always
+    # diverges a transmitted region at tol=0), pinning the discard path
+    # end to end on the real executor
+    probe = _run_spec(server, part, specs[:1], n_frames, gt_cache, True,
+                      spec_patch_tol=0.0, spec_max_patch_frac=0.0)
+    f1_delta = {v: spec["median_rendering_f1"][v]
+                - cont["median_rendering_f1"][v]
+                for v in cont["median_rendering_f1"]}
+    return {"continuous": cont, "speculative": spec,
+            "discard_probe": probe,
+            "steady_compiles": server.stats.steady_compiles,
+            "speculation_new_executables": new_keys,
+            "speculation_new_compiles": server.stats.compiles - compiles0,
+            "rendering_f1_delta": f1_delta}
+
+
+# ---------------------------------------------------------------------------
 
 
 def check(report: Dict,
@@ -490,6 +606,31 @@ def check(report: Dict,
     for v, d in s["rendering_f1_delta"].items():
         if abs(d) > 1e-12:
             errs.append(f"scheduler rendering-F1 delta on {v}: {d:+.4f}")
+    sp = report["speculation"]
+    if not (sp["speculative"]["p50_e2e_s"]
+            < sp["continuous"]["p50_e2e_s"]):
+        errs.append(f"speculation did not cut p50 e2e on the slow "
+                    f"uplink: {sp['speculative']['p50_e2e_s']:.3f}s >= "
+                    f"{sp['continuous']['p50_e2e_s']:.3f}s")
+    if sp["speculative"]["spec_launched"] <= 0 \
+            or sp["speculative"]["spec_patched"] <= 0:
+        errs.append(f"speculation lane idle: launched "
+                    f"{sp['speculative']['spec_launched']} patched "
+                    f"{sp['speculative']['spec_patched']}")
+    if sp["discard_probe"]["spec_discarded"] < 1:
+        errs.append("discard path never exercised (zero-tolerance probe "
+                    "produced no discards)")
+    for v, d in sp["rendering_f1_delta"].items():
+        if abs(d) > 0.005:
+            errs.append(f"speculation rendering-F1 delta on {v}: "
+                        f"{d:+.4f} (budget 0.005)")
+    if sp["steady_compiles"] != 0:
+        errs.append(f"speculation workload compiled in steady state: "
+                    f"{sp['steady_compiles']}")
+    if sp["speculation_new_executables"] or sp["speculation_new_compiles"]:
+        errs.append(f"speculation grew the executable grid: "
+                    f"+{sp['speculation_new_compiles']} compiles "
+                    f"{sp['speculation_new_executables']}")
     return errs
 
 
@@ -517,6 +658,9 @@ def run_bench(smoke: bool = False, out: Path = DEFAULT_OUT,
         "cache": bench_cache(n_frames),
         "coalesce": bench_coalesce(n_frames),
         "scheduling": bench_scheduling(n_frames),
+        # the slow uplink needs enough sim time for bootstrap + several
+        # speculative offloads per client even in smoke
+        "speculation": bench_speculation(max(n_frames, 40)),
     }
     errs = check(report, max_warmup_s=max_warmup_s)
     report["check"] = {"passed": not errs, "errors": errs}
@@ -560,6 +704,14 @@ def run(ctx: dict) -> list:
          f"{rep['scheduling']['continuous']['p50_queue_s']:.3f}s "
          f"idle {rep['scheduling']['barrier']['device_idle_frac']:.2f}->"
          f"{rep['scheduling']['continuous']['device_idle_frac']:.2f}"),
+        ("bench_serving/speculation",
+         rep["speculation"]["speculative"]["p50_e2e_s"] * 1e6,
+         f"e2e p50 {rep['speculation']['continuous']['p50_e2e_s']:.3f}s"
+         f"->{rep['speculation']['speculative']['p50_e2e_s']:.3f}s "
+         f"launched={rep['speculation']['speculative']['spec_launched']} "
+         f"patched={rep['speculation']['speculative']['spec_patched']} "
+         f"hidden p50="
+         f"{rep['speculation']['speculative']['p50_spec_hidden_s']:.3f}s"),
     ]
     ctx["bench_serving"] = rows
     return rows
@@ -613,6 +765,18 @@ def main(argv=None) -> int:
           f"{s['continuous']['decode_hidden_s']:.2f}s, new execs "
           f"{s['continuous_new_compiles']}, F1 deltas "
           f"{s['rendering_f1_delta']}")
+    sp = rep["speculation"]
+    print(f"  speculation: e2e p50 {sp['continuous']['p50_e2e_s']:.3f}s "
+          f"(continuous) -> {sp['speculative']['p50_e2e_s']:.3f}s "
+          f"(speculative), launched "
+          f"{sp['speculative']['spec_launched']}, patched "
+          f"{sp['speculative']['spec_patched']}, discarded "
+          f"{sp['speculative']['spec_discarded']} (+probe "
+          f"{sp['discard_probe']['spec_discarded']}), hidden p50/p95 "
+          f"{sp['speculative']['p50_spec_hidden_s']:.3f}/"
+          f"{sp['speculative']['p95_spec_hidden_s']:.3f}s, new execs "
+          f"{sp['speculation_new_compiles']}, F1 deltas "
+          f"{sp['rendering_f1_delta']}")
     print(f"  check: {'OK' if rep['check']['passed'] else 'FAILED'} "
           f"{rep['check']['errors']}")
     return 0 if rep["check"]["passed"] or not args.check else 1

@@ -1,118 +1,157 @@
-"""Render the §Dry-run / §Roofline sections of EXPERIMENTS.md from the
-dry-run artifacts.
+"""One-line-per-suite trajectory summary over the committed
+``BENCH_*.json`` artifacts at the repo root.
 
-  PYTHONPATH=src python -m benchmarks.report > /tmp/roofline.md
+Each benchmark suite writes a JSON report with its own schema; this
+renders the headline number(s) of every committed report on a single
+line so a CI log (ci.sh calls this last) or a quick terminal glance
+shows the whole perf trajectory — compile surface, serving latency,
+reuse savings, speculation wins — without opening the files.
+
+  PYTHONPATH=src python benchmarks/report.py [--root DIR]
+
+Unknown or future ``BENCH_*.json`` files degrade to a key listing
+instead of failing, so adding a new suite never breaks the summary.
 """
 from __future__ import annotations
 
+import argparse
 import json
-import sys
 from pathlib import Path
 
-ART = Path(__file__).resolve().parent / "artifacts" / "dryrun"
-
-ARCH_ORDER = ["mamba2-370m", "qwen3-4b", "mistral-nemo-12b",
-              "phi4-mini-3.8b", "deepseek-7b", "llava-next-mistral-7b",
-              "dbrx-132b", "deepseek-v2-236b", "zamba2-1.2b",
-              "whisper-medium"]
-SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ROOT = Path(__file__).resolve().parent.parent
 
 
-def load(arch, shape, mesh, opt="base"):
-    tag = f"{arch}__{shape}__{mesh}"
-    if opt != "base":
-        tag += f"__{opt}"
-    p = ART / f"{tag}.json"
-    if not p.exists():
+def _fmt_s(x) -> str:
+    return f"{x:.3f}s" if isinstance(x, (int, float)) else "n/a"
+
+
+def _backbone(d: dict) -> str:
+    rows = d.get("backbone", [])
+    full = [r for r in rows if r.get("workload") == "full"
+            and r.get("dtype") == "fp32"]
+    bits = [f"{len(rows)} rows"]
+    if full:
+        best = min(full, key=lambda r: r["us_per_call"])
+        bits.append(f"full fp32 {best['us_per_call']:.0f}us/call "
+                    f"({best.get('backend', '?')})")
+    si = d.get("server_infer", {})
+    if "speedup" in si:
+        bits.append(f"server jit {si['speedup']:.1f}x vs eager")
+    return "; ".join(bits)
+
+
+def _quant(d: dict) -> str:
+    cal, grid = d.get("calibration", {}), d.get("grid", {})
+    return (f"ships {cal.get('shipped', '?')} "
+            f"{grid.get('ratio', 0):.2f}x compression; "
+            f"grid keys match={grid.get('keys_match')} "
+            f"steady_compiles={grid.get('steady_compiles')}")
+
+
+def _multiclient(d: dict) -> str:
+    rows = d.get("rows", [])
+    if not rows:
+        return "no rows"
+    n = max(r.get("n_clients", 0) for r in rows)
+
+    def pick(mode, slow):
+        for r in rows:
+            if r.get("mode") == mode and r.get("n_clients") == n \
+                    and (r.get("uplink") == "slow") == slow:
+                return r
         return None
-    return json.loads(p.read_text())
+
+    bits = []
+    b, c = pick("batched", False), pick("continuous", False)
+    if b and c:
+        bits.append(f"{n}c p50 e2e continuous {_fmt_s(c['p50_e2e_s'])} "
+                    f"vs batched {_fmt_s(b['p50_e2e_s'])}")
+    cs, cc = pick("continuous+speculative", True), pick("continuous", True)
+    if cs and cc:
+        bits.append(f"slow-uplink spec {_fmt_s(cs['p50_e2e_s'])} vs "
+                    f"{_fmt_s(cc['p50_e2e_s'])} "
+                    f"(hidden p50 {_fmt_s(cs.get('p50_spec_hidden_s'))}, "
+                    f"L/P/D {cs.get('spec_launched')}/"
+                    f"{cs.get('spec_patched')}/{cs.get('spec_discarded')})")
+    return "; ".join(bits) or f"{len(rows)} rows"
 
 
-def _fix(rec):
-    r = rec["roofline"]
-    t_max = max(r["t_compute"], r["t_memory"], r["t_collective"])
-    return r["t_compute"] / t_max if t_max > 0 else 0.0
+def _reuse(d: dict) -> str:
+    red = d.get("reduction", {})
+    k = "parkS/single"
+    if k in red:
+        r = red[k]
+        return (f"{k}: -{r['bytes_reduction'] * 100:.0f}% bytes, "
+                f"-{r['e2e_reduction'] * 100:.0f}% e2e, "
+                f"F1 delta {r['rendering_f1_delta']:+.3f}")
+    return f"{len(red)} scenarios"
 
 
-def one_liner(rec) -> str:
-    """What would move the dominant term down."""
-    r = rec["roofline"]
-    b = r["bound"]
-    shape = rec["shape"]
-    if b == "memory":
-        if shape.startswith("decode") or shape.startswith("long"):
-            return ("KV/state reads dominate: quantize cache to int8 or "
-                    "shrink via MLA/GQA ratio")
-        return ("materialised attention + activation traffic: Pallas "
-                "flash/window kernels keep logits in VMEM (see §Perf)")
-    if b == "collective":
-        if rec["arch"].startswith("phi4"):
-            return ("24 heads % TP16 != 0: GSPMD full-tensor reshard per "
-                    "layer — fix: TP=8 (measured in §Perf)")
-        return ("TP activation all-reduce dominates: sequence-parallel "
-                "reduce-scatter layout (sp variant)")
-    return "MXU-bound: raise per-chip batch or quantise weights to int8"
+def _serving(d: dict) -> str:
+    w = d.get("warmup", {}).get("warmed", {})
+    bits = [f"{w.get('executables_total', '?')} executables, "
+            f"{w.get('steady_compiles', '?')} steady compiles"]
+    sp = d.get("speculation", {})
+    if sp:
+        s, c = sp.get("speculative", {}), sp.get("continuous", {})
+        bits.append(f"spec p50 e2e {_fmt_s(s.get('p50_e2e_s'))} vs "
+                    f"{_fmt_s(c.get('p50_e2e_s'))}, "
+                    f"hidden {_fmt_s(s.get('spec_hidden_s'))} total")
+    ck = d.get("check", {})
+    if ck:
+        bits.append(f"check {'OK' if ck.get('passed') else 'FAIL'}")
+    return "; ".join(bits)
 
 
-def roofline_table(mesh="pod1", opt="base") -> str:
-    lines = [
-        "| arch | shape | t_comp (ms) | t_mem (ms) | t_coll (ms) | bound "
-        "| frac | useful | note |",
-        "|---|---|---|---|---|---|---|---|---|",
-    ]
-    for arch in ARCH_ORDER:
-        for shape in SHAPE_ORDER:
-            rec = load(arch, shape, mesh, opt)
-            if rec is None:
-                lines.append(f"| {arch} | {shape} | - | - | - | missing "
-                             f"| - | - | |")
-                continue
-            if rec["status"] == "skipped":
-                lines.append(
-                    f"| {arch} | {shape} | — | — | — | SKIP | — | — | "
-                    f"{rec['reason'][:60]} |")
-                continue
-            if rec["status"] != "ok":
-                lines.append(f"| {arch} | {shape} | - | - | - | ERROR | "
-                             f"- | - | {rec.get('error', '')[:50]} |")
-                continue
-            r = rec["roofline"]
-            u = rec.get("useful_flop_ratio")
-            lines.append(
-                f"| {arch} | {shape} "
-                f"| {r['t_compute']*1e3:.1f} | {r['t_memory']*1e3:.1f} "
-                f"| {r['t_collective']*1e3:.1f} | {r['bound']} "
-                f"| {_fix(rec):.2f} "
-                f"| {(f'{u:.2f}' if u is not None else 'n/a')} "
-                f"| {one_liner(rec)} |")
-    return "\n".join(lines)
+def _robustness(d: dict) -> str:
+    ov, ck = d.get("overload", {}), d.get("check", {})
+    runs = d.get("fault_matrix", {}).get("runs", [])
+    return (f"{len(runs)} fault runs; overload shed "
+            f"{ov.get('shed_at_edge', '?')} / degraded "
+            f"{ov.get('degraded_at_edge', '?')}; "
+            f"check {'OK' if ck.get('passed') else 'FAIL'}")
 
 
-def memory_table(mesh="pod2") -> str:
-    lines = ["| arch | shape | status | mem/dev (GiB) | compile (s) |",
-             "|---|---|---|---|---|"]
-    for arch in ARCH_ORDER:
-        for shape in SHAPE_ORDER:
-            rec = load(arch, shape, mesh)
-            if rec is None:
-                lines.append(f"| {arch} | {shape} | missing | - | - |")
-            elif rec["status"] == "skipped":
-                lines.append(f"| {arch} | {shape} | skip | — | — |")
-            elif rec["status"] != "ok":
-                lines.append(f"| {arch} | {shape} | ERROR | - | - |")
-            else:
-                gib = rec["memory"]["total_with_donation"] / 2 ** 30
-                lines.append(f"| {arch} | {shape} | ok | {gib:.2f} "
-                             f"| {rec['compile_s']:.0f} |")
-    return "\n".join(lines)
+SUMMARIZERS = {
+    "BENCH_backbone.json": _backbone,
+    "BENCH_quant.json": _quant,
+    "BENCH_multiclient.json": _multiclient,
+    "BENCH_reuse.json": _reuse,
+    "BENCH_serving.json": _serving,
+    "BENCH_robustness.json": _robustness,
+}
 
 
-def main():
-    print("### Roofline table (single pod, 256 chips, base)\n")
-    print(roofline_table("pod1"))
-    print("\n### Multi-pod compile proof (512 chips)\n")
-    print(memory_table("pod2"))
+def summarize(path: Path) -> str:
+    try:
+        d = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        return f"unreadable ({e.__class__.__name__})"
+    fn = SUMMARIZERS.get(path.name)
+    try:
+        if fn is not None:
+            return fn(d)
+        return "keys: " + ", ".join(list(d)[:8])
+    except (KeyError, TypeError, ValueError) as e:
+        return f"schema drift ({e.__class__.__name__}: {e})"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--root", type=Path, default=ROOT,
+                    help="directory holding BENCH_*.json")
+    args = ap.parse_args(argv)
+    files = sorted(args.root.glob("BENCH_*.json"))
+    if not files:
+        print(f"[report] no BENCH_*.json under {args.root}")
+        return 0
+    width = max(len(p.name) for p in files)
+    print(f"[report] perf trajectory ({len(files)} committed reports)")
+    for p in files:
+        print(f"  {p.name:<{width}}  {summarize(p)}")
+    return 0
 
 
 if __name__ == "__main__":
+    import sys
     sys.exit(main())

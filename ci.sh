@@ -9,6 +9,31 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== fast test lane (pytest -m 'not slow') =="
 python -m pytest -x -q
 
+echo "== fast-lane marker audit (slow tests stay deselected) =="
+# pytest.ini pins addopts = -m "not slow"; this fails if the slow
+# closed-loop suite ever loses its markers (silently bloating the fast
+# lane) or a slow-marked test leaks into the fast selection
+python - <<'PY'
+import subprocess
+import sys
+
+
+def ids(expr):
+    r = subprocess.run(
+        [sys.executable, "-m", "pytest", "--collect-only", "-q",
+         "-m", expr, "-o", "addopts="],
+        capture_output=True, text=True)
+    return {ln for ln in r.stdout.splitlines() if "::" in ln}
+
+
+slow, fast = ids("slow"), ids("not slow")
+assert slow, "no tests carry @pytest.mark.slow -- closed-loop lane lost its marker"
+leak = slow & fast
+assert not leak, f"slow tests leak into the fast lane: {sorted(leak)[:5]}"
+print(f"[marker audit] fast lane {len(fast)} tests, "
+      f"slow lane {len(slow)} deselected")
+PY
+
 echo "== pallas parity lane (REPRO_BACKEND=pallas, interpret mode) =="
 # pins the env-var override end to end: every kernel/dispatch test must
 # pass with the whole process forced onto the Pallas lane (interpret
@@ -55,7 +80,13 @@ echo "== serving hot-path smoke (warmup / cache / coalesce / sched) =="
 # gates: continuous scheduling beats barrier on p50 queue delay AND
 # device_idle_frac on the contended 4-client workload, reuses the
 # warmed executable grid (zero new keys, zero steady-state compiles),
-# and moves only timestamps (rendering-F1 delta 0.000)
+# and moves only timestamps (rendering-F1 delta 0.000); plus the
+# speculation gates on the slow-uplink 4-client workload: speculative
+# continuous beats plain continuous on p50 e2e, the lane actually
+# launches AND patches, the zero-tolerance probe exercises >=1
+# discard-and-rerun, rendering-F1 deltas stay <= 0.005 on parkS and
+# driveN, and speculation adds ZERO executables / steady compiles on
+# top of the warmed grid
 python benchmarks/bench_serving.py --smoke --check --max-warmup-s 90 \
     --out benchmarks/artifacts/BENCH_serving.smoke.json
 
@@ -70,5 +101,8 @@ echo "== robustness fault-matrix smoke (faults / deadlines / epochs) =="
 # offload (the no-hang gate)
 python benchmarks/bench_robustness.py --smoke --check \
     --out benchmarks/artifacts/BENCH_robustness.smoke.json
+
+echo "== perf trajectory (committed BENCH_*.json) =="
+python benchmarks/report.py
 
 echo "CI OK"

@@ -86,6 +86,33 @@ def downsample_mask(region_types: np.ndarray, tau_d: int) -> np.ndarray:
     return (region_types <= 1).astype(np.int32)
 
 
+def prediction_confidence(m: np.ndarray, states: np.ndarray,
+                          m_f: float = 1.0,
+                          thresh: float = 0.02) -> float:
+    """Confidence that the previous decoded frame predicts the
+    IN-FLIGHT (transmitted FULL/LOW) regions of a plan (paper Eq. (2)
+    uplink-hiding: the speculative-REUSE admission signal).
+
+    ``m`` is the analyzer's per-region share of the frame's foreground
+    (it sums to 1 whenever ANY pixel moved, so it must be rescaled by
+    ``m_f`` — foreground / total pixels — to mean absolute motion
+    mass).  A transmitted region with high motion mass will diverge
+    from any motion-free prediction, so confidence decays with the
+    *worst* transmitted region: 1.0 when every in-flight region is
+    still, 0.0 once one region holds ``thresh`` of the FRAME's pixels
+    as foreground (a whole region is 1/n_regions).  Plans with nothing
+    in flight (all REUSE) predict trivially.
+    """
+    from repro.core.partition import REUSE
+    states = np.asarray(states).reshape(-1)
+    m = np.asarray(m, np.float64).reshape(-1)
+    sel = states != REUSE
+    if not sel.any():
+        return 1.0
+    worst = float(m[sel].max()) * float(m_f)
+    return float(np.clip(1.0 - worst / max(thresh, 1e-9), 0.0, 1.0))
+
+
 def region_density(boxes, part: Partition, patch_px: int) -> np.ndarray:
     """Task relevance rho_j: fraction of objects overlapping region j."""
     rpx = part.region * patch_px

@@ -24,7 +24,7 @@ import numpy as np
 from repro.core import mixed_res as mr
 from repro.core import partition as pt
 from repro.core import vit_backbone as vb
-from repro.core.partition import Partition, RegionPlan
+from repro.core.partition import LOW, REUSE, Partition, RegionPlan
 from repro.kernels import autotune, dispatch
 from repro.models import registry
 from repro.quant import qtensor as qt
@@ -665,6 +665,33 @@ class ServerModel:
                                  frame_ids[i], epoch=self.epoch)
 
     # ------------------------------------------------------------------
+    # speculative REUSE execution (the spliced forward starts before the
+    # payload lands; serve/scheduler.py owns admission and resolution)
+
+    def infer_speculative(self, pred_canvas: np.ndarray, plan: RegionPlan,
+                          beta: int, cache: FeatureCache,
+                          frame_idx: int) -> Tuple[List[Dict],
+                                                   FeatureCache]:
+        """Launch a plan's spliced forward on a PREDICTED canvas.
+
+        The canvas substitutes the in-flight LOW/FULL regions' pixels
+        with the session's prediction source (:func:`predict_canvas`);
+        REUSE regions splice from the cache exactly as the real forward
+        would.  Same plan, same length bucket, B=1 — the warmed
+        ``(lb, beta, beta, 1)`` executable, so speculation adds ZERO
+        grid keys.  Capture goes into a :meth:`FeatureCache.
+        speculative_clone`, never the live session: a discarded
+        speculation leaves the real cache byte-identical, and the epoch
+        guard applies to the clone exactly as to a real splice.
+        Returns ``(dets, clone)``; the scheduler patches or discards on
+        payload arrival and commits the clone only on success.
+        """
+        clone = cache.speculative_clone()
+        dets = self.infer_wave(pred_canvas[None], [plan], beta,
+                               caches=[clone], frame_ids=[frame_idx])
+        return dets[0], clone
+
+    # ------------------------------------------------------------------
     # N=1 conveniences (thin wrappers over infer_wave)
 
     def infer(self, frame: np.ndarray, mask: Optional[np.ndarray] = None,
@@ -689,6 +716,63 @@ class ServerModel:
             frame[None], [plan], beta,
             caches=None if cache is None else [cache],
             frame_ids=[frame_idx], capture_beta=capture_beta)[0]
+
+
+# ---------------------------------------------------------------------------
+# speculative-prediction helpers (host-side numpy; the scheduler drives
+# them around ServerModel.infer_speculative)
+
+
+def predict_canvas(part: Partition, region_px: int,
+                   pred_frame: np.ndarray,
+                   plan: RegionPlan) -> np.ndarray:
+    """The speculative forward's input: the session's prediction source
+    standing in for the in-flight LOW/FULL regions, REUSE regions filled
+    0.5 gray exactly as the codec fills them in a real decoded canvas
+    (their pixels never reach the splice — bit-faithful anyway)."""
+    canvas = np.asarray(pred_frame, np.float32).copy()
+    nRw = part.regions_w
+    for j in np.nonzero(np.asarray(plan.states) == REUSE)[0]:
+        ry, rx = divmod(int(j), nRw)
+        canvas[ry * region_px:(ry + 1) * region_px,
+               rx * region_px:(rx + 1) * region_px] = 0.5
+    return canvas
+
+
+def region_divergence(part: Partition, region_px: int,
+                      decoded: np.ndarray, predicted: np.ndarray,
+                      plan: RegionPlan) -> np.ndarray:
+    """(n_regions,) mean |decoded - predicted| per TRANSMITTED region
+    (REUSE rows stay 0 — nothing was predicted there).  The patch pass
+    recomputes only regions whose real decoded content diverged from
+    the speculative prediction beyond the tolerance."""
+    div = np.zeros((part.n_regions,), np.float32)
+    states = np.asarray(plan.states).reshape(-1)
+    nRw = part.regions_w
+    for j in np.nonzero(states != REUSE)[0]:
+        ry, rx = divmod(int(j), nRw)
+        sl = (slice(ry * region_px, (ry + 1) * region_px),
+              slice(rx * region_px, (rx + 1) * region_px))
+        div[j] = float(np.abs(np.asarray(decoded, np.float32)[sl]
+                              - predicted[sl]).mean())
+    return div
+
+
+def build_patch_plan(plan: RegionPlan,
+                     diverged: np.ndarray) -> RegionPlan:
+    """The cheap patch pass's plan: transmitted regions that CONVERGED
+    (prediction within tolerance) flip to REUSE — splicing the
+    speculative forward's captured tiles — and only diverged regions
+    stay LOW/FULL.  Window count can only shrink, so the patch runs at
+    an equal-or-smaller length bucket of the existing grid (zero new
+    executable keys).  Callers handle the all-converged case (no patch
+    compute at all) before building a plan, so at least one transmitted
+    window always remains."""
+    states = np.asarray(plan.states).copy()
+    diverged = np.asarray(diverged, bool).reshape(-1)
+    assert diverged.any(), "all-converged speculations need no patch"
+    states[(states != REUSE) & ~diverged] = REUSE
+    return RegionPlan(states.astype(np.int8))
 
 
 # ---------------------------------------------------------------------------
@@ -906,6 +990,18 @@ class Simulation:
             "t_inf": self._inf_delay_s(beta_eff, n_d, n_r),
             "done_at": float("inf"), "dets": None,
             "seq": self.offload_seq,
+            # plan-header metadata (ships ahead of the payload; the
+            # continuous scheduler's speculative-REUSE admission reads
+            # it before the LOW/FULL windows land): the REUSE +
+            # predicted-still-LOW fraction of the plan, and the motion
+            # analyzer's confidence that the previous decoded frame
+            # predicts the in-flight regions
+            "spec_frac": (plan.n_reuse
+                          + int(((plan.states == LOW)
+                                 & (self.m * self.m_f < 1e-3)).sum()))
+            / self.part.n_regions,
+            "spec_conf": mo.prediction_confidence(self.m, plan.states,
+                                                  m_f=self.m_f),
             # SLO-derived deadline: past it the client abandons the
             # offload and the LK tracker covers the gap
             "deadline": (now + self.robust.slo_s

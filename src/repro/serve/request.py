@@ -99,6 +99,16 @@ class FeatureCache:
     (ServerModel.epoch); a restart bumps the replica's generation, so a
     REUSE plan carrying an old epoch is refused (StaleCacheEpoch) and
     the client must :meth:`invalidate` and bootstrap FULL again.
+
+    Speculative REUSE execution additionally keeps a **prediction
+    source** per session: the last payload the edge decoded for this
+    client (``pred_frame`` at ``pred_frame_idx``, captured under
+    ``pred_epoch``).  A speculative forward substitutes the in-flight
+    LOW/FULL regions' pixels with this frame's; :meth:`pred_ok` gates
+    the substitution on the SAME staleness bound K (``max_age``, in
+    offloads — the prediction buffer refreshes once per served offload,
+    so offload count is its native clock) and on the epoch invariant —
+    a speculative result must never render from a stale epoch.
     """
     n_regions: int
     max_age: int = 4
@@ -108,6 +118,16 @@ class FeatureCache:
     frame: int = -1
     warm: bool = False
     epoch: int = 0
+    # speculative-prediction source (edge-side): the last decoded canvas
+    # served for this session + the replica generation that decoded it
+    pred_frame: Optional[np.ndarray] = None
+    pred_frame_idx: int = -1
+    pred_age: int = 0
+    pred_epoch: int = -1
+    # False on speculative clones: the tiles buffer is SHARED with the
+    # real session cache, so update() must not donate it to XLA (the
+    # clone owns its buffer again after its first refresh)
+    owns_tiles: bool = True
 
     def __post_init__(self):
         if self.age is None:
@@ -156,6 +176,65 @@ class FeatureCache:
         self.beta = -1
         self.frame = -1
         self.warm = False
+        self.pred_frame = None
+        self.pred_frame_idx = -1
+        self.pred_age = 0
+        self.pred_epoch = -1
+
+    # ------------------------------------------------------------------
+    # speculative-prediction source
+
+    def note_pred(self, frame: np.ndarray, frame_idx: int,
+                  epoch: int) -> None:
+        """Record a served offload's decoded canvas as the session's
+        prediction source (resets the prediction-staleness clock)."""
+        self.pred_frame = frame
+        self.pred_frame_idx = int(frame_idx)
+        self.pred_age = 0
+        self.pred_epoch = int(epoch)
+
+    def pred_ok(self, epoch: int) -> bool:
+        """May the stored prediction source seed a speculative forward?
+
+        Requires a source, the staleness bound K (``max_age`` offloads
+        since the source was decoded — the same K that bounds tile
+        reuse), and the epoch invariant: a source decoded by a dead
+        replica generation predicts nothing about the live one."""
+        return (self.pred_frame is not None
+                and self.pred_age < self.max_age
+                and self.pred_epoch == int(epoch))
+
+    def speculative_clone(self) -> "FeatureCache":
+        """A session clone for a speculative forward to capture into.
+
+        Shares the tile buffer (gathers never mutate it) but does NOT
+        own it — the clone's first refresh allocates instead of donating
+        the shared device buffer — so a discarded speculation leaves the
+        real session byte-identical.  Commit via
+        :meth:`commit_speculative`.
+        """
+        clone = FeatureCache(self.n_regions, max_age=self.max_age,
+                             beta=self.beta, tiles=self.tiles,
+                             age=self.age.copy(), frame=self.frame,
+                             warm=self.warm, epoch=self.epoch,
+                             owns_tiles=False)
+        return clone
+
+    def commit_speculative(self, clone: "FeatureCache",
+                           reuse_ids: np.ndarray, beta: int, frame: int,
+                           epoch: int) -> None:
+        """Adopt a resolved speculation's tiles into the real session.
+
+        ``reuse_ids``: the regions whose content derives from reuse or
+        from the (converged) prediction rather than freshly transmitted
+        pixels — their age advances by ONE from this cache's own
+        pre-speculation ages (the clone's intermediate refreshes during
+        the speculative and patch forwards are bookkeeping noise), so
+        prediction-derived regions burn the staleness budget exactly
+        like spliced ones and K still forces a real re-transmission.
+        """
+        self.tiles = clone.tiles
+        self.note(reuse_ids, beta, frame, epoch=epoch)
 
     # ------------------------------------------------------------------
     def note(self, reuse_ids: np.ndarray, beta: int, frame: int,
@@ -173,6 +252,11 @@ class FeatureCache:
         self.warm = True
         if epoch is not None:
             self.epoch = int(epoch)
+        if self.pred_frame is not None:
+            # prediction staleness advances per served offload; a
+            # subsequent note_pred (the serving path records the new
+            # decoded canvas right after the refresh) resets it
+            self.pred_age += 1
 
     def update(self, tiles, reuse_ids: np.ndarray,
                beta: int, frame: int, epoch: Optional[int] = None) -> None:
@@ -187,12 +271,17 @@ class FeatureCache:
         if isinstance(tiles, np.ndarray):
             self.tiles = tiles
         else:
-            if (self.tiles_on_device and self.tiles.shape == tiles.shape
+            if (self.owns_tiles and self.tiles_on_device
+                    and self.tiles.shape == tiles.shape
                     and self.tiles.dtype == tiles.dtype):
                 from repro.core import mixed_res as mr
                 self.tiles = mr.refresh_tiles(self.tiles, tiles)
             else:
+                # a speculative clone's first refresh: the stale buffer
+                # is shared with the real session, so allocate instead
+                # of donating it — the clone owns this one
                 self.tiles = tiles
+        self.owns_tiles = True
         self.note(reuse_ids, beta, frame, epoch=epoch)
 
 

@@ -56,7 +56,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core import vit_backbone as vb
-from repro.core.partition import FULL, LOW, RegionPlan
+from repro.core.partition import FULL, LOW, REUSE, RegionPlan
 from repro.offload.faults import FaultInjector
 from repro.serve.request import StaleCacheEpoch
 
@@ -167,6 +167,25 @@ class EdgeConfig:
     # crash-restart shortcut for benches: model the outage in sim time
     # but keep host-process executables warm (tests pin the real wipe)
     preserve_executables: bool = False
+    # speculative REUSE execution (continuous scheduler only): when a
+    # job's plan header — which ships ahead of the payload — shows a
+    # REUSE + predicted-still-LOW fraction of at least spec_min_frac
+    # AND a motion-prediction confidence of at least spec_min_conf,
+    # launch the spliced forward immediately with the in-flight LOW/FULL
+    # regions substituted from the session's prediction source
+    # (FeatureCache.pred_frame, gated by staleness bound K + epoch).
+    # On payload arrival a patch pass recomputes only regions whose
+    # decoded content diverges from the prediction by more than
+    # spec_patch_tol (mean |Δ| in [0,1] pixel units); when more than
+    # spec_max_patch_frac of the transmitted regions diverged, the
+    # speculation is discarded and the original plan reruns on the real
+    # frame.  Every path reuses the warmed (lb, beta, capture, B)
+    # executable grid — speculation adds zero keys.
+    speculate: bool = False
+    spec_min_frac: float = 0.5
+    spec_min_conf: float = 0.6
+    spec_patch_tol: float = 0.02
+    spec_max_patch_frac: float = 0.5
 
 
 @dataclass
@@ -201,6 +220,15 @@ class EdgeStats:
     compute_first: float = float("inf")
     compute_last: float = 0.0
     decode_hidden_s: float = 0.0
+    # speculative-REUSE lane telemetry (mirrors the queue_admit /
+    # queue_slot split): launches, how each resolved, and the uplink
+    # seconds each launch hid under speculative compute — per-job in
+    # ``spec_hidden`` for p50/p95, summed in ``spec_hidden_s``
+    spec_launched: int = 0
+    spec_patched: int = 0
+    spec_discarded: int = 0
+    spec_hidden_s: float = 0.0
+    spec_hidden: List[float] = field(default_factory=list)
 
     @property
     def mean_wave_size(self) -> float:
@@ -228,6 +256,10 @@ class EdgeStats:
     def queue_percentile(self, q: float) -> float:
         return (float(np.percentile(self.queue_delays, q))
                 if self.queue_delays else 0.0)
+
+    def spec_hidden_percentile(self, q: float) -> float:
+        return (float(np.percentile(self.spec_hidden, q))
+                if self.spec_hidden else 0.0)
 
 
 # ---------------------------------------------------------------------------
@@ -638,6 +670,9 @@ class ContinuousScheduler(WaveScheduler):
         super().__init__(*args, **kw)
         # one-deep executor pipeline: (wave, pending_dets, timing)
         self._exec_q: List[Tuple] = []
+        # in-flight speculations: launched spliced forwards awaiting
+        # their payload (patch / discard / NACK at resolution)
+        self._spec: List[Dict] = []
 
     # -- admission ------------------------------------------------------
 
@@ -670,6 +705,10 @@ class ContinuousScheduler(WaveScheduler):
         """
         self._reap_abandoned()
         try:
+            # resolve speculations whose payload has landed FIRST: a
+            # resolved patch frees (or occupies) the replica before the
+            # regular waves below price their compute start
+            self._resolve_spec(now)
             while self.pending:
                 head = self.pending[0]
                 hj = head[1]
@@ -704,7 +743,197 @@ class ContinuousScheduler(WaveScheduler):
                     j["_bound_at"] = max(bound_at, j["arrival"])
                 self.free_at = self._dispatch_wave(wave, c_start, hk)
         finally:
+            # speculation launches go LAST: every wave startable before
+            # ``now`` has been priced into free_at, so speculative
+            # compute only ever claims replica time that would otherwise
+            # idle under the uplink
+            if self.ec.speculate:
+                self._launch_spec(now)
+                # a payload may already be due (notably the end-of-run
+                # drain at now=inf): settle what just launched rather
+                # than strand it in the speculative lane
+                self._resolve_spec(now)
             self._flush_exec()
+
+    # -- speculative REUSE execution ------------------------------------
+    #
+    # State machine per offload (README "Speculative REUSE lane"):
+    #
+    #   header lands --admit--> LAUNCH (spliced forward on the predicted
+    #   canvas, capture into a session clone)
+    #     payload lands, diverged frac <= spec_max_patch_frac
+    #         --> PATCH (recompute only diverged windows at an equal-or-
+    #             smaller length bucket; commit the clone)
+    #     payload lands, diverged frac >  spec_max_patch_frac
+    #         --> DISCARD (rerun the original plan on the real frame;
+    #             drop the clone)
+    #     client deadline reaps the job mid-payload (e.g. blackout)
+    #         --> ABANDON (counted discarded; the degradation ladder
+    #             already engaged client-side; prediction never renders)
+    #     replica restarts between launch and patch
+    #         --> stale-epoch NACK (the clone's tiles died with the old
+    #             generation; the client invalidates and bootstraps FULL)
+
+    def _try_speculate(self, ci: int, job: Dict,
+                       now: float) -> Optional[Dict]:
+        """Admission + launch of one speculative spliced forward.
+
+        The plan header (frac/conf metadata) is on the wire as soon as
+        the encode finishes; the payload lands at ``arrival``.  Launch
+        requires thresholds cleared, a live warm session whose
+        prediction source passes the staleness bound K and the epoch
+        invariant, and replica idle time to hide the uplink in:
+        ``s_start = max(free_at, header_at)`` must fall before both
+        ``now`` and the payload's arrival."""
+        from repro.offload import simulator as sim
+        plan: RegionPlan = job["plan"]
+        cache = self.clients[ci].feature_cache
+        if (cache is None or job["beta"] < 1
+                or self.server.plan_length_bucket(plan) == 0
+                or job.get("spec_frac", 0.0) < self.ec.spec_min_frac
+                or job.get("spec_conf", 0.0) < self.ec.spec_min_conf):
+            return None
+        if not cache.pred_ok(self.server.epoch):
+            return None
+        if plan.n_reuse > 0 and not (cache.warm
+                                     and cache.epoch == self.server.epoch):
+            return None
+        header_at = job["submit"] + job["t_enc"]
+        s_start = max(self.free_at, header_at)
+        if s_start >= now or job["arrival"] <= s_start:
+            return None
+        part = self.server.part
+        region_px = part.region * self.clients[ci].analyzer.patch_px
+        predicted = sim.predict_canvas(part, region_px,
+                                       cache.pred_frame, plan)
+        dets, clone = self.server.infer_speculative(
+            predicted, plan, job["beta"], cache, job["frame"])
+        t_spec = self._wave_infer_s([(ci, job)], stall_at=s_start)
+        s_done = s_start + t_spec
+        self.free_at = max(self.free_at, s_done)
+        self.stats.note_compute(s_start, s_done)
+        self.stats.spec_launched += 1
+        return {"ci": ci, "job": job, "dets": dets, "clone": clone,
+                "predicted": predicted, "region_px": region_px,
+                "epoch": self.server.epoch,
+                "s_start": s_start, "s_done": s_done}
+
+    def _launch_spec(self, now: float) -> None:
+        """Move admissible pending jobs into the speculative lane."""
+        keep: List[Tuple[int, Dict]] = []
+        for ci, job in self.pending:
+            rec = self._try_speculate(ci, job, now)
+            if rec is None:
+                keep.append((ci, job))
+            else:
+                self._spec.append(rec)
+        self.pending = keep          # subsequence: arrival order kept
+
+    def _resolve_spec(self, now: float) -> None:
+        self._spec = [rec for rec in self._spec
+                      if not self._resolve_one(rec, now)]
+
+    def _resolve_one(self, rec: Dict, now: float) -> bool:
+        """Patch, discard, or refuse one landed speculation.  Returns
+        True once the record is settled."""
+        from repro.offload import simulator as sim
+        ci, job = rec["ci"], rec["job"]
+        if job.get("abandoned"):
+            # the client's deadline reaped the offload mid-payload
+            # (blackout): the speculation dies with it — the prediction
+            # is never rendered, and the client already climbed the
+            # degradation ladder when it abandoned
+            self.stats.spec_discarded += 1
+            return True
+        if rec["epoch"] != self.server.epoch:
+            # replica restarted between launch and patch: the clone's
+            # tiles (and the speculative result spliced from them)
+            # belong to a dead generation — stale-epoch refusal applies
+            # to speculative splices exactly as to real ones
+            if job["arrival"] >= now:
+                return False
+            job["stale_epoch"] = True
+            job["done_at"] = job["arrival"] + job["rtt"]
+            job["dets"] = []
+            self.server.stats.stale_epoch_rejects += 1
+            self.stats.stale_nacks += 1
+            self.stats.spec_discarded += 1
+            return True
+        r_start = max(self.free_at, job["arrival"] + job["t_dec"])
+        if r_start >= now:
+            return False
+        part = self.server.part
+        plan: RegionPlan = job["plan"]
+        cache = self.clients[ci].feature_cache
+        div = sim.region_divergence(part, rec["region_px"],
+                                    job["decoded"], rec["predicted"],
+                                    plan)
+        states = np.asarray(plan.states)
+        diverged = (states != REUSE) & (div > self.ec.spec_patch_tol)
+        n_tx = plan.n_regions - plan.n_reuse
+        stall = (self.faults.stall_extra(r_start)
+                 if self.faults is not None else 0.0)
+        t_inf_j = job.get("t_inf_exec", job["t_inf"])
+        if diverged.sum() / max(n_tx, 1) > self.ec.spec_max_patch_frac:
+            # gross mispredict: discard and rerun the original plan on
+            # the real decoded frame (the normal path — the REAL cache
+            # refreshes, the clone is dropped)
+            dets = self._infer(job["decoded"][None], [(ci, job)],
+                               [plan], [cache], 0,
+                               self._job_key(job))[0]
+            t_exec = t_inf_j + stall
+            job["speculation"] = "discarded"
+            self.stats.spec_discarded += 1
+        else:
+            if diverged.any():
+                # patch pass: only diverged windows recompute; converged
+                # transmitted regions splice the speculative capture —
+                # an equal-or-smaller length bucket on the warmed grid
+                patch_plan = sim.build_patch_plan(plan, diverged)
+                lb = self.server.plan_length_bucket(plan)
+                lb_p = self.server.plan_length_bucket(patch_plan)
+                dets = self.server.infer_wave(
+                    job["decoded"][None], [patch_plan], job["beta"],
+                    caches=[rec["clone"]], frame_ids=[job["frame"]])[0]
+                cfg = self.server.cfg
+                scale = (vb.backbone_flops_windows(cfg, lb_p, job["beta"])
+                         / vb.backbone_flops_windows(cfg, lb, job["beta"]))
+                t_exec = t_inf_j * scale + stall
+            else:
+                # every in-flight region converged: the speculative
+                # forward IS the answer; the patch pass is just the
+                # host-side divergence check
+                dets = rec["dets"]
+                t_exec = stall
+            # commit the clone: every region not freshly recomputed
+            # from real pixels derives from reuse/prediction and ages by
+            # one against the staleness bound K
+            cache.commit_speculative(rec["clone"],
+                                     np.nonzero(~diverged)[0],
+                                     job["beta"], job["frame"],
+                                     self.server.epoch)
+            job["speculation"] = "patched"
+            self.stats.spec_patched += 1
+        done = r_start + t_exec
+        self.free_at = max(self.free_at, done)
+        if t_exec > 0.0:
+            self.stats.note_compute(r_start, done)
+        # hidden transmission: the slice of the uplink the speculative
+        # compute overlapped — the Eq. (2) seconds this lane converts
+        # from queue/idle into useful work
+        hidden = max(0.0, min(rec["s_done"], job["arrival"])
+                     - rec["s_start"])
+        self.stats.spec_hidden.append(hidden)
+        self.stats.spec_hidden_s += hidden
+        cache.note_pred(job["decoded"], job["frame"], self.server.epoch)
+        q = max(r_start - job["arrival"] - job["t_dec"], 0.0)
+        self.clients[ci]._finish_offload(job, dets, queue_delay=q,
+                                         t_dec=job["t_dec"],
+                                         t_inf=t_exec)
+        # bound at launch, before the payload even landed: the whole
+        # queue residual is slot wait
+        self._record_job(ci, job, dets, 1, q, 0.0, q)
+        return True
 
     # -- execution ------------------------------------------------------
 
@@ -724,8 +953,32 @@ class ContinuousScheduler(WaveScheduler):
         imgs, plans, caches, want_cap = self._wave_inputs(wave, key)
         defer = bool(self.ec.stage_ahead)
         frames = (self.server.stage_frames(imgs) if defer else imgs)
-        dets = self._infer(frames, wave, plans, caches, want_cap, key,
-                           defer=defer)
+        try:
+            dets = self._infer(frames, wave, plans, caches, want_cap,
+                               key, defer=defer)
+        except Exception:
+            # deferred-dispatch failure after staging: drop the staged
+            # device buffers, flush the one-deep executor pipeline so
+            # the PREVIOUS wave's deferred decode still lands (its
+            # PendingWave slot must not wedge), and mark this wave's
+            # jobs lost so client deadlines reap them if the caller
+            # survives the re-raise
+            frames = None
+            self._flush_exec()
+            for _, job in wave:
+                job["lost"] = True
+                job["done_at"] = float("inf")
+            self.stats.lost_jobs += len(wave)
+            raise
+        if self.ec.speculate:
+            # record each session's decoded canvas as its prediction
+            # source AFTER the refresh inside infer_wave (note() aged
+            # it; note_pred resets the staleness clock)
+            for ci, job in wave:
+                cache = self.clients[ci].feature_cache
+                if cache is not None:
+                    cache.note_pred(job["decoded"], job["frame"],
+                                    self.server.epoch)
 
         B = len(wave)
         t_inf = self._wave_infer_s(wave, stall_at=t_start)

@@ -11,13 +11,15 @@ scheduler equivalence:
     pattern — only timestamps (queue/e2e) may differ, and its p50
     queue delay is no worse.
 """
+from types import SimpleNamespace
+
 import jax
 import numpy as np
 import pytest
 
 from repro.configs.vitdet_l import SIM
 from repro.core import vit_backbone as vb
-from repro.core.partition import RegionPlan
+from repro.core.partition import LOW, REUSE, Partition, RegionPlan
 from repro.data import synthetic_video as sv
 from repro.data.network_traces import make_trace
 from repro.models import registry
@@ -25,6 +27,7 @@ from repro.offload.faults import FaultInjector, FaultSpec
 from repro.offload.simulator import Policy, Simulation
 from repro.serve.edge import (BatchedServerModel, EdgeConfig,
                               MultiClientSimulation)
+from repro.serve.request import FeatureCache
 from repro.serve.scheduler import (BarrierScheduler, ContinuousScheduler,
                                    edge_restart_tick, form_wave,
                                    make_scheduler)
@@ -278,6 +281,241 @@ def test_solo_and_mc_restart_recovery_match(monkeypatch):
     # (frame 6 = 0.6 s > the 0.55 s crash)
     assert len(r_solo.e2e_latency) >= 2 and solo.cache_frame > 6
     assert len(r_mc.e2e_latency) >= 2 and mc.clients[0].cache_frame > 6
+
+
+# ---------------------------------------------------------------------------
+# speculative REUSE execution (fakes: modelled timeline, no model)
+
+
+# tiny geometry: 2x2 decision regions of 4x4 px (patch_px=1), so a
+# frame is 8x8x3 and region j covers rows/cols (j//2, j%2) * 4
+_SPART = Partition(grid_h=8, grid_w=8, window=2, downsample=2)
+
+
+class _SpecServer(_FakeServer):
+    part = _SPART
+    cfg = SIM
+
+    def plan_length_bucket(self, plan):
+        return _SPART.n_windows(plan.n_low, plan.n_reuse)
+
+    def infer_speculative(self, pred, plan, beta, cache, frame_idx):
+        clone = cache.speculative_clone()
+        return [{"box": (0.0, 0.0, 1.0, 1.0), "score": 1.0,
+                 "label": 0}], clone
+
+
+class _SpecClient(_FakeClient):
+    analyzer = SimpleNamespace(patch_px=1)
+
+    def __init__(self):
+        super().__init__()
+        self.feature_cache = FeatureCache(n_regions=4, max_age=4,
+                                          beta=2, warm=True, epoch=0)
+
+
+def _spec_job(decoded, t_up=1.0, **kw):
+    """A REUSE-heavy job: header lands at submit + t_enc = 0.05, the
+    payload at arrival = 0.05 + t_up."""
+    plan = RegionPlan(np.array([LOW, LOW, REUSE, REUSE], np.int8))
+    job = {"frame": 0, "_client": 0, "submit": 0.0, "t_enc": 0.05,
+           "t_up": t_up, "arrival": 0.05 + t_up, "t_dec": 0.1,
+           "t_inf": 0.5, "beta": 2, "plan": plan, "rtt": 0.0,
+           "decoded": decoded, "spec_frac": 0.75, "spec_conf": 1.0}
+    job.update(kw)
+    return job
+
+
+def _spec_sched(**ec_kw):
+    clients = [_SpecClient()]
+    ec_kw.setdefault("speculate", True)
+    sched = ContinuousScheduler(_SpecServer(), clients,
+                                EdgeConfig(**ec_kw))
+    pred = np.full((8, 8, 3), 0.25, np.float32)
+    clients[0].feature_cache.note_pred(pred, -1, 0)
+    return sched, clients, pred
+
+
+def test_speculation_hides_uplink_when_prediction_converges():
+    """Launch at header time, compute under the uplink, serve at
+    payload arrival with ZERO residual inference: e2e collapses to the
+    decode check, and the hidden seconds equal the spec compute."""
+    sched, clients, pred = _spec_sched()
+    job = _spec_job(pred.copy())
+    sched.enqueue(0, job)
+    sched.drain(0.5)                    # payload still in flight
+    assert sched.stats.spec_launched == 1
+    assert sched.pending == [] and len(sched._spec) == 1
+    assert sched.free_at == pytest.approx(0.55)     # 0.05 + t_inf
+    sched.drain(2.0)                    # payload landed at 1.05
+    assert sched.stats.spec_patched == 1
+    assert sched.stats.spec_discarded == 0
+    assert job["speculation"] == "patched"
+    done = clients[0].finished[0]
+    # all in-flight regions converged: no patch compute at all
+    assert done["parts"]["inf"] == 0.0
+    assert done["e2e"] == pytest.approx(0.1)        # t_dec only
+    assert done["done_at"] == pytest.approx(1.15)
+    # hidden transmission = spec compute overlapped with the uplink
+    assert sched.stats.spec_hidden_s == pytest.approx(0.5)
+    assert sched.stats.spec_hidden_percentile(50) == pytest.approx(0.5)
+    # committed: every region's content derives from reuse/prediction,
+    # so the whole frame burns one offload of the staleness budget K
+    cache = clients[0].feature_cache
+    np.testing.assert_array_equal(cache.age, [1, 1, 1, 1])
+    assert cache.pred_age == 0          # note_pred reset after commit
+
+
+def test_speculation_patches_only_diverged_regions():
+    sched, clients, pred = _spec_sched()
+    decoded = pred.copy()
+    decoded[:4, :4] += 0.5              # region 0 diverges (1 of 2 tx)
+    job = _spec_job(decoded)
+    sched.enqueue(0, job)
+    sched.drain(0.5)
+    sched.drain(2.0)
+    assert sched.stats.spec_patched == 1
+    assert job["speculation"] == "patched"
+    done = clients[0].finished[0]
+    # patch reruns ONE window of the original two: flops-scaled cost
+    # strictly inside (0, t_inf)
+    assert 0.0 < done["parts"]["inf"] < 0.5
+    # only the diverged region was recomputed from real pixels
+    np.testing.assert_array_equal(clients[0].feature_cache.age,
+                                  [0, 1, 1, 1])
+
+
+def test_speculation_discards_on_gross_mispredict():
+    sched, clients, pred = _spec_sched()
+    decoded = pred.copy()
+    decoded[:4, :] += 0.5               # regions 0 AND 1: 2/2 diverged
+    job = _spec_job(decoded)
+    sched.enqueue(0, job)
+    sched.drain(0.5)
+    sched.drain(2.0)
+    assert sched.stats.spec_discarded == 1
+    assert sched.stats.spec_patched == 0
+    assert job["speculation"] == "discarded"
+    done = clients[0].finished[0]
+    assert done["parts"]["inf"] == pytest.approx(0.5)   # full rerun
+    # the discarded clone never touched the session cache
+    np.testing.assert_array_equal(clients[0].feature_cache.age,
+                                  [0, 0, 0, 0])
+    # the REAL decoded frame becomes the next prediction source
+    assert clients[0].feature_cache.pred_frame is decoded
+
+
+def test_speculation_abandoned_mid_payload_never_renders():
+    """Blackout mid-payload: the client deadline reaps the offload and
+    climbs the degradation ladder; the speculation must die with it —
+    a prediction-only frame is NEVER rendered."""
+    sched, clients, pred = _spec_sched()
+    job = _spec_job(pred.copy())
+    sched.enqueue(0, job)
+    sched.drain(0.5)
+    assert sched.stats.spec_launched == 1
+    job["abandoned"] = True             # client reaped it at its SLO
+    sched.drain(float("inf"))
+    assert sched.stats.spec_discarded == 1
+    assert sched._spec == []
+    assert clients[0].finished == []    # nothing rendered
+    assert "speculation" not in job
+
+
+def test_speculation_stale_epoch_refusal():
+    """Edge restart between launch and patch: the clone's tiles died
+    with the old generation, so the resolution is a stale-epoch NACK —
+    exactly the refusal real splices get — not a render."""
+    sched, clients, pred = _spec_sched()
+    job = _spec_job(pred.copy())
+    sched.enqueue(0, job)
+    sched.drain(0.5)
+    sched.server.restart()              # epoch 0 -> 1 mid-flight
+    sched.drain(0.6)                    # payload not yet landed
+    assert len(sched._spec) == 1        # NACK waits for the payload
+    sched.drain(2.0)
+    assert job["stale_epoch"] and job["dets"] == []
+    assert job["done_at"] == pytest.approx(job["arrival"])
+    assert sched.stats.stale_nacks == 1
+    assert sched.stats.spec_discarded == 1
+    assert sched.server.stats.stale_epoch_rejects == 1
+    assert clients[0].finished == []    # completion path handles NACKs
+
+
+def test_speculation_admission_gates():
+    """No launch when confidence is low, when the prediction source is
+    stale (bound K) or from a dead epoch, or when the lane is off —
+    the job serves through the normal wave path instead."""
+    cases = [
+        dict(job_kw={"spec_conf": 0.2}),                # low confidence
+        dict(pred_age=4),                               # source too old
+        dict(ec_kw={"speculate": False}),
+        dict(job_kw={"spec_frac": 0.1}),                # not REUSE-heavy
+    ]
+    for case in cases:
+        sched, clients, pred = _spec_sched(**case.get("ec_kw", {}))
+        if "pred_age" in case:
+            clients[0].feature_cache.pred_age = case["pred_age"]
+        job = _spec_job(pred.copy(), **case.get("job_kw", {}))
+        sched.enqueue(0, job)
+        sched.drain(float("inf"))
+        assert sched.stats.spec_launched == 0, case
+        assert len(clients[0].finished) == 1, case      # normal path
+        assert "speculation" not in job
+
+
+def test_speculation_waits_for_replica_and_payload_window():
+    """s_start = max(free_at, header) must fall strictly before the
+    payload arrival: with the replica busy past the arrival there is
+    no uplink left to hide in, so the job stays in the normal lane."""
+    sched, clients, pred = _spec_sched()
+    sched.free_at = 2.0                 # busy replica past arrival=1.05
+    job = _spec_job(pred.copy())
+    sched.enqueue(0, job)
+    sched.drain(float("inf"))
+    assert sched.stats.spec_launched == 0
+    assert len(clients[0].finished) == 1
+
+
+# ---------------------------------------------------------------------------
+# deferred-dispatch error path (satellite: staged buffers must release)
+
+
+class _BoomServer(_FakeServer):
+    def __init__(self, boom_on=2):
+        super().__init__()
+        self.calls = 0
+        self.boom_on = boom_on
+
+    def infer_wave(self, frames, plans, beta, **kw):
+        self.calls += 1
+        if self.calls == self.boom_on:
+            raise RuntimeError("device OOM mid-dispatch")
+        return [[] for _ in plans]
+
+
+def test_deferred_dispatch_failure_releases_pipeline():
+    """infer_wave raising AFTER stage_frames must not wedge the
+    one-deep executor pipeline: the previous wave's deferred decode
+    still lands, the failed wave's jobs are marked lost (deadlines can
+    reap them), and the PendingWave slot is empty afterwards."""
+    clients = [_FakeClient(), _FakeClient()]
+    sched = ContinuousScheduler(_BoomServer(), clients,
+                                EdgeConfig(stage_ahead=True))
+    j0, j1 = _fake_job(0.0, ci=0), _fake_job(0.2, ci=1)
+    sched.enqueue(0, j0)
+    sched.enqueue(1, j1)
+    with pytest.raises(RuntimeError, match="mid-dispatch"):
+        sched.drain(0.7)                # wave A deferred, wave B raises
+    assert sched._exec_q == []          # pipeline flushed, not wedged
+    assert len(clients[0].finished) == 1            # wave A landed
+    assert j1["lost"] and j1["done_at"] == float("inf")
+    assert sched.stats.lost_jobs == 1
+    # the scheduler survives: a fresh job still serves normally
+    j2 = _fake_job(1.0, ci=0)
+    sched.enqueue(0, j2)
+    sched.drain(float("inf"))
+    assert len(clients[0].finished) == 2
 
 
 # ---------------------------------------------------------------------------
